@@ -1,0 +1,70 @@
+//! §4.5 adaptive-quantization workflow, end to end:
+//!
+//!   1. calibrate per-layer cosine similarity of SageAttn-vB vs -B on
+//!      representative inputs (synthetic layers here),
+//!   2. write the resulting per-layer plan to `plan.json`,
+//!   3. (offline) `make artifacts PLAN=plan.json` re-lowers the model with
+//!      the mixed plan as the `*_adaptive` artifacts,
+//!   4. if those artifacts exist, run them and verify parity.
+//!
+//! Run: `cargo run --release --example adaptive_calibration -- [n_layers]`
+
+use sageattention::adaptive::{calibrate, synth_layer_inputs, COS_THRESHOLD};
+use sageattention::bench::{pct, Table};
+use sageattention::runtime::Runtime;
+use sageattention::synth::Profile;
+
+fn main() -> anyhow::Result<()> {
+    let n_layers: usize = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(8);
+
+    // 1. calibrate on a mixed-severity synthetic model: shallow layers
+    //    benign, deep layers hostile — the regime where adaptivity pays
+    let profile = Profile::diffusion_like().with_severity(2.0);
+    let layers = synth_layer_inputs(n_layers, [1, 4, 384, 64], profile, 17);
+    let (plan, detail) = calibrate(&layers, false);
+
+    let mut t = Table::new(&["layer", "cos(-vB)", "cos(-B)", "selected kernel"]);
+    for d in &detail {
+        t.row(&[
+            d.layer.to_string(),
+            pct(d.cos_vb as f64),
+            pct(d.cos_b as f64),
+            d.choice.to_string(),
+        ]);
+    }
+    t.print(&format!(
+        "per-layer calibration (select -vB where cos ≥ {:.1}%)",
+        COS_THRESHOLD * 100.0
+    ));
+
+    // 2. persist the plan
+    let path = "plan.json";
+    std::fs::write(path, plan.to_json())?;
+    let n_vb = plan.0.iter().filter(|s| s.as_str() == "SageAttn-vB").count();
+    println!(
+        "\nwrote {path}: {n_vb}/{n_layers} layers on -vB, estimated attention \
+         speedup {:.1}% over all--B",
+        (plan.speedup_estimate() - 1.0) * 100.0
+    );
+    println!("\nnext: make artifacts PLAN={path}   # emits <config>_*_adaptive artifacts");
+
+    // 4. if adaptive artifacts are already present, prove they serve
+    if let Ok(rt) = Runtime::open(Runtime::default_dir()) {
+        let adaptive: Vec<String> = rt
+            .manifest
+            .entries
+            .keys()
+            .filter(|n| n.contains("_adaptive"))
+            .cloned()
+            .collect();
+        if adaptive.is_empty() {
+            println!("(no *_adaptive artifacts in the store yet)");
+        } else {
+            println!("adaptive artifacts available: {adaptive:?}");
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,124 @@
+//! End-to-end serving driver (the repo's system-level validation):
+//! loads the AOT transformer, then pushes a Poisson-arrival synthetic
+//! workload through the full coordinator — router → batcher → paged-KV
+//! admission → continuous-batching engine → PJRT decode — once with
+//! full-precision attention and once with SageAttention, reporting
+//! latency/throughput and output agreement.
+//!
+//! Run: `cargo run --release --example serve_llm -- [config] [n_requests]`
+
+use std::time::Instant;
+
+use sageattention::bench::{f1, Table};
+use sageattention::coordinator::{
+    BatchPolicy, Batcher, Engine, GenParams, KvCacheManager, Request, Scheduler,
+};
+use sageattention::runtime::Runtime;
+use sageattention::synth::WorkloadGen;
+
+fn run_plan(
+    rt: &Runtime,
+    config: &str,
+    plan: &str,
+    n_req: usize,
+    seed: u64,
+) -> anyhow::Result<(sageattention::coordinator::SchedulerReport, f64, Vec<Vec<i32>>)> {
+    let engine = Engine::new(rt, config, plan, seed)?;
+    let cfg = &rt.manifest.configs[config];
+    let slots = engine.batch_slots();
+    let mut gen = WorkloadGen::new(seed, cfg.vocab, 40.0, engine.prefill_sizes(), 24);
+    let requests = gen.generate(n_req);
+
+    let kv = KvCacheManager::new(slots * cfg.max_seq / 16, 16);
+    let mut sched = Scheduler::new(Batcher::new(BatchPolicy::SkipSmall { window: 2 }), kv, engine);
+
+    // open-loop arrival replay: submit when due, tick in between
+    let t0 = Instant::now();
+    let mut pending = requests.into_iter().enumerate().peekable();
+    while pending.peek().is_some() || sched.has_work() {
+        let now_ms = t0.elapsed().as_secs_f64() * 1e3;
+        while let Some((i, r)) = pending.peek() {
+            if r.arrival_ms <= now_ms {
+                let (i, r) = (*i, pending.next().unwrap().1);
+                sched.submit(Request::new(
+                    i as u64,
+                    r.prompt,
+                    GenParams { max_new_tokens: r.max_new_tokens, ..Default::default() },
+                ));
+            } else {
+                break;
+            }
+        }
+        if sched.has_work() {
+            sched.tick()?;
+        } else if let Some((_, r)) = pending.peek() {
+            // idle until the next arrival
+            let wait = (r.arrival_ms - t0.elapsed().as_secs_f64() * 1e3).max(0.0);
+            std::thread::sleep(std::time::Duration::from_micros((wait * 1000.0) as u64));
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let occupancy = sched.engine.stats.mean_occupancy();
+    let report = sched.into_report(wall);
+    let mut outs: Vec<Vec<i32>> = Vec::new();
+    let mut sorted = report.responses.clone();
+    sorted.sort_by_key(|r| r.id);
+    for r in &sorted {
+        outs.push(r.tokens.clone());
+    }
+    println!(
+        "[{plan:>4}] {} req, {} tokens, wall {:.2}s, occupancy {:.0}%",
+        report.responses.len(),
+        report.tokens_out,
+        wall,
+        occupancy * 100.0
+    );
+    Ok((report, occupancy, outs))
+}
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let config = args.first().map(String::as_str).unwrap_or("small").to_owned();
+    let n_req: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(16);
+
+    let rt = Runtime::open(Runtime::default_dir())?;
+    println!(
+        "serving config '{config}' ({} params) on {}\n",
+        rt.manifest.configs[&config].n_params,
+        rt.platform()
+    );
+
+    let (fp, _, out_fp) = run_plan(&rt, &config, "fp", n_req, 1)?;
+    let (sage, _, out_sage) = run_plan(&rt, &config, "sage", n_req, 1)?;
+
+    let mut t = Table::new(&[
+        "plan", "tok/s", "TTFT p50 (ms)", "TTFT p99", "TPOT p50", "TPOT p99", "e2e p50",
+    ]);
+    for (name, r) in [("full-precision", &fp), ("SageAttention", &sage)] {
+        t.row(&[
+            name.into(),
+            f1(r.throughput_tok_s()),
+            f1(r.ttft.percentile(50.0)),
+            f1(r.ttft.percentile(99.0)),
+            f1(r.tpot.percentile(50.0)),
+            f1(r.tpot.percentile(99.0)),
+            f1(r.e2e.percentile(50.0)),
+        ]);
+    }
+    t.print("serving telemetry: full-precision vs SageAttention (plug-and-play swap)");
+
+    // plug-and-play check: greedy outputs under identical weights/workload
+    let mut agree = 0usize;
+    let mut total = 0usize;
+    for (a, b) in out_fp.iter().zip(&out_sage) {
+        total += a.len().max(b.len());
+        agree += a.iter().zip(b).filter(|(x, y)| x == y).count();
+    }
+    println!(
+        "\ngreedy token agreement fp vs sage: {agree}/{total} ({:.1}%)",
+        agree as f64 / total.max(1) as f64 * 100.0
+    );
+    println!("(random-weight logits are near-ties, so disagreements cascade after");
+    println!(" the first divergence — trained weights agree far more; see e2e_train_eval)");
+    Ok(())
+}

@@ -1,0 +1,225 @@
+"""AOT pipeline: lower L1/L2 computations to HLO text for the rust runtime.
+
+Interchange format is **HLO text**, not a serialized ``HloModuleProto``:
+jax ≥ 0.5 emits protos with 64-bit instruction ids which xla_extension
+0.5.1 (the version behind the published ``xla`` 0.1.6 crate) rejects;
+the text parser reassigns ids and round-trips cleanly.
+
+Artifacts written to ``artifacts/``:
+  * ``attn_<impl>[_causal]_<B>x<H>x<N>x<D>.hlo.txt`` — standalone attention
+    computations (q, k, v) → O for the kernel benches and integration tests.
+  * ``<config>_{train_step,eval_loss,prefill,decode_step}_<plan>.hlo.txt``
+    — the transformer artifacts driven by the rust coordinator.
+  * ``manifest.json`` — every entry's input/output shapes + dtypes, the
+    parameter spec (name/shape/init-std) and model config, so rust can
+    construct inputs without touching python.
+
+Python runs once (`make artifacts`); nothing here is on the request path.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+from typing import Dict, List, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as model_lib
+from .configs import MODEL_CONFIGS, ModelConfig
+from .kernels import ref
+
+ATTN_IMPLS: Dict[str, str] = {
+    "exact": "exact",
+    "sage_t": "SageAttn-T",
+    "sage_b": "SageAttn-B",
+    "sage_vt": "SageAttn-vT",
+    "sage_vb": "SageAttn-vB",
+}
+
+# Standalone attention artifact shapes: (batch, heads, seq, head_dim).
+# Modest sizes — the CPU PJRT backend executes these in tests/benches;
+# paper-scale shapes (N up to 32k) are covered by the rust-native
+# implementations and the perf model.
+ATTN_SHAPES = (
+    (1, 2, 256, 64),
+    (2, 4, 512, 64),
+    (1, 4, 512, 128),
+    (2, 8, 1024, 64),
+)
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo → XlaComputation → HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _dtype_name(dtype) -> str:
+    return jnp.dtype(dtype).name
+
+
+class Writer:
+    def __init__(self, out_dir: str):
+        self.out_dir = out_dir
+        self.entries: Dict[str, dict] = {}
+        os.makedirs(out_dir, exist_ok=True)
+
+    def emit(self, name: str, fn, arg_specs: Sequence, meta: dict | None = None):
+        lowered = jax.jit(fn).lower(*arg_specs)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(self.out_dir, fname), "w") as f:
+            f.write(text)
+        out_specs = jax.eval_shape(fn, *arg_specs)
+        flat_out, _ = jax.tree.flatten(out_specs)
+        self.entries[name] = {
+            "file": fname,
+            "inputs": [{"shape": list(s.shape), "dtype": _dtype_name(s.dtype)}
+                       for s in arg_specs],
+            "outputs": [{"shape": list(s.shape), "dtype": _dtype_name(s.dtype)}
+                        for s in flat_out],
+            **(meta or {}),
+        }
+        print(f"  wrote {fname} ({len(text)} chars, "
+              f"{len(arg_specs)} in / {len(flat_out)} out)")
+
+
+def emit_attention(w: Writer, shapes=ATTN_SHAPES):
+    for (b, h, n, d) in shapes:
+        specs = [_spec((b, h, n, d))] * 3
+        for tag, impl in ATTN_IMPLS.items():
+            for causal in (False, True):
+                cname = "_causal" if causal else ""
+                name = f"attn_{tag}{cname}_{b}x{h}x{n}x{d}"
+
+                def fn(q, k, v, impl=impl, causal=causal):
+                    return (model_lib._attention(q, k, v, impl, causal=causal),)
+
+                w.emit(name, fn, specs,
+                       meta={"kind": "attention", "impl": impl,
+                             "causal": causal, "shape": [b, h, n, d]})
+
+
+def emit_model(w: Writer, cfg: ModelConfig, plans: Dict[str, List[str]],
+               batch: int):
+    spec = model_lib.param_spec(cfg)
+    p_specs = [_spec(shape) for _, shape, _ in spec]
+    n_p = len(p_specs)
+    tok_train = _spec((batch, cfg.max_seq), jnp.int32)
+    step_spec = _spec((), jnp.int32)
+
+    # train_step is always full-precision (post-training quantization).
+    fp_plan = ["exact"] * cfg.n_layers
+
+    def tstep(*args):
+        flat_p = args[:n_p]
+        flat_m = args[n_p:2 * n_p]
+        flat_v = args[2 * n_p:3 * n_p]
+        step, tokens = args[3 * n_p], args[3 * n_p + 1]
+        return model_lib.train_step(cfg, fp_plan, flat_p, flat_m, flat_v,
+                                    step, tokens)
+
+    w.emit(f"{cfg.name}_train_step", tstep,
+           p_specs * 3 + [step_spec, tok_train],
+           meta={"kind": "train_step", "config": cfg.name, "batch": batch})
+
+    kv_spec = _spec((cfg.n_layers, batch, cfg.n_heads, cfg.max_seq, cfg.d_head))
+    for plan_name, plan in plans.items():
+        def eloss(*args, plan=plan):
+            return (model_lib.loss_fn(cfg, model_lib.params_from_list(cfg, args[:n_p]),
+                                      args[n_p], plan),)
+
+        w.emit(f"{cfg.name}_eval_loss_{plan_name}", eloss, p_specs + [tok_train],
+               meta={"kind": "eval_loss", "config": cfg.name,
+                     "plan": plan, "batch": batch})
+
+        # Prefill runs per-request (batch 1, vLLM-style): the coordinator
+        # prefills each arriving prompt separately and splices its KV into
+        # a free slot of the continuous decode batch. One artifact per
+        # supported prompt length (powers of two up to half the context).
+        n_prompt = 8
+        while n_prompt <= cfg.max_seq // 2:
+            tok_prompt = _spec((1, n_prompt), jnp.int32)
+
+            def pfill(*args, plan=plan):
+                return model_lib.prefill(cfg, plan, args[:n_p], args[n_p])
+
+            w.emit(f"{cfg.name}_prefill_{plan_name}_{n_prompt}", pfill,
+                   p_specs + [tok_prompt],
+                   meta={"kind": "prefill", "config": cfg.name, "plan": plan,
+                         "batch": 1, "n_prompt": n_prompt})
+            n_prompt *= 2
+
+        def dstep(*args, plan=plan):
+            flat_p = args[:n_p]
+            kc, vc, token, pos = args[n_p:n_p + 4]
+            return model_lib.decode_step(cfg, plan, flat_p, kc, vc, token, pos)
+
+        w.emit(f"{cfg.name}_decode_step_{plan_name}", dstep,
+               p_specs + [kv_spec, kv_spec, _spec((batch,), jnp.int32),
+                          _spec((batch,), jnp.int32)],
+               meta={"kind": "decode_step", "config": cfg.name, "plan": plan,
+                     "batch": batch})
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--config", default="small", choices=list(MODEL_CONFIGS))
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--plan-file", default=None,
+                    help="JSON list of per-layer impls from `repro calibrate` "
+                         "— emitted as the '<config>_*_adaptive' artifacts")
+    ap.add_argument("--skip-attn", action="store_true")
+    ap.add_argument("--tiny-only", action="store_true",
+                    help="only the tiny config + one attention shape (CI)")
+    args = ap.parse_args()
+
+    w = Writer(args.out)
+    if args.tiny_only:
+        emit_attention(w, shapes=((1, 2, 256, 64),))
+        emit_model(w, MODEL_CONFIGS["tiny"],
+                   {"fp": ["exact"] * 2, "sage": ["SageAttn-B"] * 2}, batch=2)
+    else:
+        if not args.skip_attn:
+            emit_attention(w)
+        cfg = MODEL_CONFIGS[args.config]
+        plans = {"fp": ["exact"] * cfg.n_layers,
+                 "sage": ["SageAttn-B"] * cfg.n_layers}
+        if args.plan_file:
+            with open(args.plan_file) as f:
+                plan = json.load(f)
+            assert len(plan) == cfg.n_layers and all(
+                p in model_lib.ATTN_IMPLS for p in plan), plan
+            plans["adaptive"] = plan
+        emit_model(w, cfg, plans, batch=args.batch)
+        # tiny config always included for the rust integration tests
+        emit_model(w, MODEL_CONFIGS["tiny"],
+                   {"fp": ["exact"] * 2, "sage": ["SageAttn-B"] * 2}, batch=2)
+
+    cfgs = {}
+    for name, cfg in MODEL_CONFIGS.items():
+        cfgs[name] = {
+            **cfg._asdict(),
+            "n_params": cfg.n_params,
+            "param_spec": [{"name": n, "shape": list(s), "init_std": std}
+                           for n, s, std in model_lib.param_spec(cfg)],
+        }
+    manifest = {"entries": w.entries, "configs": cfgs}
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"manifest: {len(w.entries)} entries -> {args.out}/manifest.json")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,81 @@
+"""Model and workload configurations.
+
+Two kinds of configs live here:
+
+  * :class:`ModelConfig` — GPT-style transformer configs used for the AOT
+    artifacts (tests, E2E training and serving).
+  * :data:`PAPER_WORKLOADS` — the attention shapes of the paper's Table 7
+    model zoo, used by the kernel benches and the perf model so every
+    speed table sweeps exactly the shapes the paper measured.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+
+class ModelConfig(NamedTuple):
+    name: str
+    vocab: int
+    d_model: int
+    n_layers: int
+    n_heads: int
+    d_head: int
+    d_ff: int
+    max_seq: int
+    rope_base: float = 10000.0
+
+    @property
+    def n_params(self) -> int:
+        """Approximate parameter count."""
+        emb = self.vocab * self.d_model
+        per_layer = (4 * self.d_model * self.n_heads * self.d_head
+                     + 3 * self.d_model * self.d_ff + 2 * self.d_model)
+        return emb * 2 + self.n_layers * per_layer + self.d_model
+
+
+# Tiny: fast enough for pytest and rust integration tests.
+TINY = ModelConfig("tiny", vocab=256, d_model=128, n_layers=2,
+                   n_heads=2, d_head=64, d_ff=256, max_seq=128)
+
+# Small: the end-to-end train/serve driver (examples/serve_llm,
+# examples/e2e_train_eval). ~6M params — sized so a few hundred CPU
+# training steps finish in minutes (DESIGN.md §3 substitution for the
+# paper's 7B-class models; GPT_100M below is the full-scale config).
+SMALL = ModelConfig("small", vocab=1024, d_model=256, n_layers=4,
+                    n_heads=4, d_head=64, d_ff=1024, max_seq=256)
+
+# The ~100M-parameter config (GPT-2-small-shaped, headdim 64 like the
+# paper's kernels). Lowerable with the same code path; not used for the
+# recorded CPU runs because a few hundred steps would take hours on the
+# CPU PJRT backend.
+GPT_100M = ModelConfig("gpt-100m", vocab=32000, d_model=768, n_layers=12,
+                       n_heads=12, d_head=64, d_ff=3072, max_seq=1024)
+
+MODEL_CONFIGS = {c.name: c for c in (TINY, SMALL, GPT_100M)}
+
+
+class AttnWorkload(NamedTuple):
+    """One row of the paper's Table 7: a model's attention shape."""
+
+    model: str
+    batch: int
+    heads: int
+    seq: int
+    head_dim: int
+    causal: bool
+    baseline: str  # what the paper compared against for this model
+
+
+# Table 7 / Table 19 shapes, verbatim from the paper.
+PAPER_WORKLOADS = (
+    AttnWorkload("CogvideoX", 2, 30, 17776, 64, False, "FlashAttn2"),
+    AttnWorkload("Llama2", 4, 32, 1536, 128, True, "FlashAttn2"),
+    AttnWorkload("UltraPixel", 2, 32, 7285, 64, False, "FlashAttn2"),
+    AttnWorkload("Unidiffuser", 4, 24, 1105, 64, False, "xformers"),
+    AttnWorkload("TIMM", 12, 64, 197, 64, False, "Torch"),
+)
+
+# Sequence-length sweep of Figures 6–9.
+FIGURE_SEQ_LENS = (1024, 2048, 4096, 8192, 16384, 32768)
+FIGURE_HEAD_DIMS = (64, 128)

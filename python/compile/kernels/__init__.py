@@ -1,0 +1,21 @@
+"""L1: SageAttention Pallas kernels, quantizers, and correctness oracles.
+
+Public surface:
+  * :mod:`quant`      — INT8/FP8 quantizers, smooth-K, fused quantize_qk
+  * :mod:`fp16_sim`   — tensor-core accumulator-precision simulation
+  * :mod:`sage_attn`  — the Pallas FlashAttention-style quantized kernel
+  * :mod:`rope_quant` — fused RoPE + smooth-K + INT8 quantization kernel
+  * :mod:`ref`        — pure-jnp oracles and the Table-6 variant registry
+  * :mod:`synth`      — Figure-4 synthetic QKV distribution generators
+"""
+
+from . import fp16_sim, quant, ref, rope_quant, sage_attn, synth
+from .ref import (SAGE_ATTN_B, SAGE_ATTN_T, SAGE_ATTN_VB, SAGE_ATTN_VT,
+                  VARIANTS, Variant)
+from .sage_attn import sage_attention, sage_attention_quantized
+
+__all__ = [
+    "quant", "fp16_sim", "ref", "rope_quant", "sage_attn", "synth",
+    "Variant", "VARIANTS", "SAGE_ATTN_T", "SAGE_ATTN_B", "SAGE_ATTN_VT",
+    "SAGE_ATTN_VB", "sage_attention", "sage_attention_quantized",
+]

@@ -1,0 +1,70 @@
+"""Bit-faithful simulation of tensor-core accumulator precision (paper §4.4).
+
+The paper's fast P·V path uses mma(f16.f16.f16.f16): FP16 inputs *and* an
+FP16 accumulator, which on RTX4090/3090 runs at 2× the FP32-accumulator
+rate. XLA on CPU always accumulates matmuls in fp32, so to reproduce the
+*numerics* of an FP16 accumulator we chunk the contraction axis and round
+the running sum to fp16 after every chunk — the same rounding cadence a
+tensor-core HMMA pipeline applies (one round per mma issue, k=16).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+# One HMMA instruction contracts k=16 on Ampere/Ada; rounding the
+# accumulator at this granularity matches hardware behaviour.
+MMA_K = 16
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def matmul_fp16_accum(a: jax.Array, b: jax.Array, chunk: int = MMA_K) -> jax.Array:
+    """C = A @ B with fp16 inputs and a simulated fp16 accumulator.
+
+    A: (..., m, k), B: (..., k, n). Inputs are rounded to fp16 (tensor-core
+    operand precision), partial products are computed per k-chunk and the
+    running accumulator is kept in fp16 throughout. Returns fp16.
+    """
+    a16 = a.astype(jnp.float16)
+    b16 = b.astype(jnp.float16)
+    k = a.shape[-1]
+    pad = (-k) % chunk
+    if pad:
+        a16 = jnp.pad(a16, [(0, 0)] * (a.ndim - 1) + [(0, pad)])
+        b16 = jnp.pad(b16, [(0, 0)] * (b.ndim - 2) + [(0, pad), (0, 0)])
+    nchunk = (k + pad) // chunk
+
+    # (..., m, nchunk, chunk) x (..., nchunk, chunk, n) partials.
+    def body(i, acc):
+        asl = jax.lax.dynamic_slice_in_dim(a16, i * chunk, chunk, axis=a.ndim - 1)
+        bsl = jax.lax.dynamic_slice_in_dim(b16, i * chunk, chunk, axis=b.ndim - 2)
+        # Each mma's internal dot is exact-ish (products in fp16 multiplied
+        # into an fp16 adder tree); model it as an fp16 dot.
+        part = jnp.matmul(asl, bsl, preferred_element_type=jnp.float16)
+        return (acc + part).astype(jnp.float16)
+
+    m, n = a.shape[-2], b.shape[-1]
+    batch = jnp.broadcast_shapes(a.shape[:-2], b.shape[:-2])
+    acc0 = jnp.zeros(batch + (m, n), jnp.float16)
+    return jax.lax.fori_loop(0, nchunk, body, acc0)
+
+
+def matmul_fp32_accum(a: jax.Array, b: jax.Array) -> jax.Array:
+    """C = A @ B with fp16 inputs and an FP32 accumulator (the baseline
+    mma(f16.f16.f32.f32) path). Returns fp32."""
+    a16 = a.astype(jnp.float16)
+    b16 = b.astype(jnp.float16)
+    return jnp.matmul(a16.astype(jnp.float32), b16.astype(jnp.float32))
+
+
+def matmul_int8(a_q: jax.Array, b_q: jax.Array) -> jax.Array:
+    """INT8 × INT8 → INT32 matmul — the mma(u8.u8.s32) path. Exact."""
+    return jax.lax.dot_general(
+        a_q, b_q,
+        dimension_numbers=(((a_q.ndim - 1,), (b_q.ndim - 2,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    ) if a_q.ndim == 2 else jnp.matmul(
+        a_q.astype(jnp.int32), b_q.astype(jnp.int32))

@@ -1,0 +1,177 @@
+"""INT8 / FP8 quantizers and the smooth-K transform (paper §3.2, §4.2, §4.3).
+
+All quantizers operate on arrays laid out as ``(..., N, d)`` where ``N`` is
+the token axis and ``d`` the channel (head-dim) axis, matching the paper's
+formulation. Each returns ``(q, scale)`` such that ``q * scale ≈ x``.
+
+Granularities (paper §3.2):
+  * per-tensor : one scale for the whole array
+  * per-token  : one scale per row  (axis -2), shape (..., N, 1)
+  * per-channel: one scale per col  (axis -1), shape (..., 1, d)
+  * per-block  : one scale per block of ``block`` consecutive tokens,
+                 broadcast back to per-token shape (..., N, 1) so downstream
+                 kernels are granularity-agnostic.
+
+FP8 "quantizers" simulate E4M3/E5M2 tensor-core matmuls (the FlashAttention3
+recipe, Table 1/2/3/17/18 baselines) by casting through jax's native
+float8 dtypes with a per-token scale to the format's max normal.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+INT8_MAX = 127.0
+# Max representable normals of the two FP8 formats (OCP FP8 spec).
+E4M3_MAX = 448.0
+E5M2_MAX = 57344.0
+
+_EPS = 1e-8
+
+
+class Quantized(NamedTuple):
+    """A quantized tensor together with its dequantization scale."""
+
+    q: jax.Array      # low-precision payload (int8 or float8_*)
+    scale: jax.Array  # broadcastable against q: q * scale ≈ original
+
+
+def _amax(x: jax.Array, axis, keepdims: bool) -> jax.Array:
+    return jnp.maximum(jnp.max(jnp.abs(x), axis=axis, keepdims=keepdims), _EPS)
+
+
+def _to_int8(x: jax.Array, scale: jax.Array) -> jax.Array:
+    q = jnp.round(x / scale)
+    return jnp.clip(q, -INT8_MAX, INT8_MAX).astype(jnp.int8)
+
+
+def quant_int8_per_tensor(x: jax.Array) -> Quantized:
+    """δ = max|x| / 127 for the whole tensor (paper §3.2)."""
+    scale = _amax(x, axis=None, keepdims=True) / INT8_MAX
+    return Quantized(_to_int8(x, scale), scale.astype(jnp.float32))
+
+
+def quant_int8_per_token(x: jax.Array) -> Quantized:
+    """One scale per token (row of the (..., N, d) layout)."""
+    scale = _amax(x, axis=-1, keepdims=True) / INT8_MAX
+    return Quantized(_to_int8(x, scale), scale.astype(jnp.float32))
+
+
+def quant_int8_per_channel(x: jax.Array) -> Quantized:
+    """One scale per channel (column). Used for V in the -vT/-vB kernels."""
+    scale = _amax(x, axis=-2, keepdims=True) / INT8_MAX
+    return Quantized(_to_int8(x, scale), scale.astype(jnp.float32))
+
+
+def quant_int8_per_block(x: jax.Array, block: int) -> Quantized:
+    """One scale per ``block`` consecutive tokens (paper's per-block ψ).
+
+    The scale is broadcast back to per-token shape (..., N, 1): within a
+    block all rows share a value, so kernels consuming per-token scales work
+    unchanged. ``N`` need not divide ``block``; the tail block is shorter.
+    """
+    n = x.shape[-2]
+    pad = (-n) % block
+    xp = jnp.pad(x, [(0, 0)] * (x.ndim - 2) + [(0, pad), (0, 0)])
+    blocked = xp.reshape(*x.shape[:-2], (n + pad) // block, block, x.shape[-1])
+    scale_b = _amax(blocked, axis=(-1, -2), keepdims=True) / INT8_MAX  # (..., nb, 1, 1)
+    scale = jnp.broadcast_to(scale_b, blocked.shape[:-1] + (1,))
+    scale = scale.reshape(*x.shape[:-2], n + pad, 1)[..., :n, :]
+    return Quantized(_to_int8(x, scale), scale.astype(jnp.float32))
+
+
+def dequant(qx: Quantized) -> jax.Array:
+    """ψ⁻¹: elementwise rescale back to fp32."""
+    return qx.q.astype(jnp.float32) * qx.scale
+
+
+# ---------------------------------------------------------------------------
+# FP8 simulation (FlashAttention3-style quantization, used as a baseline)
+# ---------------------------------------------------------------------------
+
+_FP8_DTYPES = {
+    "e4m3": (jnp.float8_e4m3fn, E4M3_MAX),
+    "e5m2": (jnp.float8_e5m2, E5M2_MAX),
+}
+
+
+def quant_fp8_per_token(x: jax.Array, fmt: str) -> Quantized:
+    """Scale each token to the format's max normal, then cast to FP8.
+
+    The cast itself performs round-to-nearest-even into the 8-bit mantissa
+    grid, which is exactly the error a real FP8 tensor-core input takes.
+    """
+    dtype, fmax = _FP8_DTYPES[fmt]
+    scale = _amax(x, axis=-1, keepdims=True) / fmax
+    q = (x / scale).astype(dtype)
+    return Quantized(q, scale.astype(jnp.float32))
+
+
+def quant_fp8_per_tensor(x: jax.Array, fmt: str) -> Quantized:
+    dtype, fmax = _FP8_DTYPES[fmt]
+    scale = _amax(x, axis=None, keepdims=True) / fmax
+    q = (x / scale).astype(dtype)
+    return Quantized(q, scale.astype(jnp.float32))
+
+
+def fake_quant(x: jax.Array, kind: str, block: int = 128) -> jax.Array:
+    """Quantize-dequantize in one step — the numeric effect without the
+    packed payload. ``kind`` ∈ {int8_token, int8_block, int8_tensor,
+    int8_channel, e4m3, e5m2, fp16, none}."""
+    if kind == "none":
+        return x
+    if kind == "fp16":
+        return x.astype(jnp.float16).astype(jnp.float32)
+    if kind == "int8_token":
+        return dequant(quant_int8_per_token(x))
+    if kind == "int8_block":
+        return dequant(quant_int8_per_block(x, block))
+    if kind == "int8_tensor":
+        return dequant(quant_int8_per_tensor(x))
+    if kind == "int8_channel":
+        return dequant(quant_int8_per_channel(x))
+    if kind in ("e4m3", "e5m2"):
+        return dequant(quant_fp8_per_token(x, kind))
+    raise ValueError(f"unknown fake-quant kind: {kind}")
+
+
+# ---------------------------------------------------------------------------
+# Smooth K (paper §4.2)
+# ---------------------------------------------------------------------------
+
+def smooth_k(k: jax.Array) -> jax.Array:
+    """γ(K) = K − mean(K) along the token axis.
+
+    K's channel outliers are a bias shared by all tokens (Figure 4);
+    removing the mean leaves the small token-wise signal, which quantizes
+    accurately. Attention is invariant: σ(q(K−mean)ᵀ) = σ(qKᵀ) because the
+    subtracted term is constant within each softmax row.
+    """
+    return k - jnp.mean(k, axis=-2, keepdims=True)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("granularity", "block", "do_smooth_k"))
+def quantize_qk(q: jax.Array, k: jax.Array, *, granularity: str = "token",
+                block: int = 128, do_smooth_k: bool = True):
+    """ψ_Q(Q/√d) and φ_K(K)=ψ_K∘γ from Eq. (4), as one fused step.
+
+    Folds the 1/√d softmax temperature into Q before quantization
+    (fusion trick, §4.6). Returns ((q_i8, q_scale), (k_i8, k_scale)).
+    """
+    d = q.shape[-1]
+    qs = q.astype(jnp.float32) * (1.0 / jnp.sqrt(jnp.float32(d)))
+    ks = k.astype(jnp.float32)
+    if do_smooth_k:
+        ks = smooth_k(ks)
+    if granularity == "token":
+        return quant_int8_per_token(qs), quant_int8_per_token(ks)
+    if granularity == "block":
+        return quant_int8_per_block(qs, block), quant_int8_per_block(ks, block)
+    if granularity == "tensor":
+        return quant_int8_per_tensor(qs), quant_int8_per_tensor(ks)
+    raise ValueError(f"unknown granularity: {granularity}")

@@ -1,0 +1,154 @@
+"""Pure-jnp correctness oracles for the SageAttention kernels.
+
+Three tiers:
+  * ``attention_ref``        — exact fp32 attention (the gold standard the
+                                paper measures CosSim / L1 / RMSE against).
+  * ``attention_online_ref`` — fp32 FlashAttention-2 tiling + online softmax
+                                (validates the tiling/recurrence alone).
+  * ``sage_attention_ref``   — straight-line (non-Pallas) quantized
+                                attention implementing Eq. (4)–(5) for every
+                                kernel variant; the oracle the Pallas kernel
+                                must match bit-for-bit up to reassociation.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from . import quant
+from .fp16_sim import matmul_fp16_accum, matmul_int8
+
+
+class Variant(NamedTuple):
+    """One row of the paper's Table 6."""
+
+    name: str
+    qk_granularity: str   # "token" | "block" | "tensor"
+    pv_dtype: str         # "fp16" (FP16 accumulator) | "int8"
+
+
+SAGE_ATTN_T = Variant("SageAttn-T", "token", "fp16")
+SAGE_ATTN_B = Variant("SageAttn-B", "block", "fp16")
+SAGE_ATTN_VT = Variant("SageAttn-vT", "token", "int8")
+SAGE_ATTN_VB = Variant("SageAttn-vB", "block", "int8")
+VARIANTS = {v.name: v for v in
+            (SAGE_ATTN_T, SAGE_ATTN_B, SAGE_ATTN_VT, SAGE_ATTN_VB)}
+
+
+def _causal_mask(n_q: int, n_k: int, dtype=jnp.float32) -> jax.Array:
+    """Lower-triangular mask aligned to the *end* of the KV sequence, so a
+    query at position i attends to keys [0, i + n_k - n_q]."""
+    q_pos = jnp.arange(n_q)[:, None] + (n_k - n_q)
+    k_pos = jnp.arange(n_k)[None, :]
+    return jnp.where(k_pos <= q_pos, 0.0, -jnp.inf).astype(dtype)
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                  causal: bool = False) -> jax.Array:
+    """Exact attention in fp32. q,k,v: (..., N, d)."""
+    q = q.astype(jnp.float32)
+    k = k.astype(jnp.float32)
+    v = v.astype(jnp.float32)
+    s = jnp.matmul(q, jnp.swapaxes(k, -1, -2)) / jnp.sqrt(jnp.float32(q.shape[-1]))
+    if causal:
+        s = s + _causal_mask(q.shape[-2], k.shape[-2])
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.matmul(p, v)
+
+
+def attention_online_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                         causal: bool = False,
+                         block_q: int = 128, block_kv: int = 64) -> jax.Array:
+    """FlashAttention-2 recurrence (Eq. 1–2) in fp32, block-by-block.
+
+    Numerically equivalent to ``attention_ref`` up to fp reassociation;
+    exists to validate the tiling before quantization enters the picture.
+    """
+    q = q.astype(jnp.float32)
+    k = k.astype(jnp.float32)
+    v = v.astype(jnp.float32)
+    n_q, d = q.shape[-2], q.shape[-1]
+    n_k = k.shape[-2]
+    scale = 1.0 / jnp.sqrt(jnp.float32(d))
+
+    pad_q = (-n_q) % block_q
+    pad_k = (-n_k) % block_kv
+    qp = jnp.pad(q, [(0, 0)] * (q.ndim - 2) + [(0, pad_q), (0, 0)])
+    kp = jnp.pad(k, [(0, 0)] * (k.ndim - 2) + [(0, pad_k), (0, 0)])
+    vp = jnp.pad(v, [(0, 0)] * (v.ndim - 2) + [(0, pad_k), (0, 0)])
+    nqb, nkb = qp.shape[-2] // block_q, kp.shape[-2] // block_kv
+
+    mask_full = None
+    if causal:
+        mask_full = _causal_mask(n_q, n_k)
+        mask_full = jnp.pad(mask_full, [(0, pad_q), (0, pad_k)],
+                            constant_values=-jnp.inf)
+    # mask out padded kv columns for every query
+    if pad_k and mask_full is None:
+        mask_full = jnp.zeros((n_q + pad_q, n_k + pad_k))
+        mask_full = mask_full.at[:, n_k:].set(-jnp.inf)
+
+    out = jnp.zeros_like(qp)
+    for i in range(nqb):
+        qi = jax.lax.dynamic_slice_in_dim(qp, i * block_q, block_q, axis=-2)
+        m = jnp.full(qi.shape[:-1] + (1,), -jnp.inf)
+        l = jnp.zeros(qi.shape[:-1] + (1,))
+        o = jnp.zeros_like(qi)
+        for j in range(nkb):
+            kj = jax.lax.dynamic_slice_in_dim(kp, j * block_kv, block_kv, axis=-2)
+            vj = jax.lax.dynamic_slice_in_dim(vp, j * block_kv, block_kv, axis=-2)
+            s = jnp.matmul(qi, jnp.swapaxes(kj, -1, -2)) * scale
+            if mask_full is not None:
+                s = s + mask_full[i * block_q:(i + 1) * block_q,
+                                  j * block_kv:(j + 1) * block_kv]
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1, keepdims=True))
+            m_new = jnp.maximum(m_new, -1e30)  # keep exp() finite on all-masked rows
+            p = jnp.exp(s - m_new)
+            alpha = jnp.exp(m - m_new)
+            l = alpha * l + jnp.sum(p, axis=-1, keepdims=True)
+            o = alpha * o + jnp.matmul(p, vj)
+            m = m_new
+        out = jax.lax.dynamic_update_slice_in_dim(
+            out, o / jnp.maximum(l, 1e-30), i * block_q, axis=-2)
+    return out[..., :n_q, :]
+
+
+def sage_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                       variant: Variant = SAGE_ATTN_B,
+                       causal: bool = False,
+                       do_smooth_k: bool = True,
+                       block_q: int = 128, block_kv: int = 64) -> jax.Array:
+    """Straight-line SageAttention (Eq. 4–5) — the Pallas kernel's oracle.
+
+    Quantizes Q,K to INT8 at the variant's granularity (after smooth-K and
+    folding 1/√d into Q), computes S in INT32, dequantizes, runs exact
+    softmax, then either the FP16-accumulator P·V path or the INT8 P·V path
+    (P per-block with the static 1/127 scale, V per-channel).
+    """
+    v32 = v.astype(jnp.float32)
+    (q_q, q_s), (k_q, k_s) = quant.quantize_qk(
+        q, k, granularity=variant.qk_granularity,
+        block=block_q, do_smooth_k=do_smooth_k)
+    # S = ψ⁻¹(Q̂ K̂ᵀ): int32 matmul, then scale rows by δ_Q and cols by δ_K.
+    s_int = matmul_int8(q_q, jnp.swapaxes(k_q, -1, -2))
+    s = s_int.astype(jnp.float32) * q_s * jnp.swapaxes(k_s, -1, -2)
+    if causal:
+        s = s + _causal_mask(q.shape[-2], k.shape[-2])
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m)  # P̃: row max == 1 by construction
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    if variant.pv_dtype == "fp16":
+        o = matmul_fp16_accum(p.astype(jnp.float16), v32.astype(jnp.float16))
+        o = o.astype(jnp.float32)
+    elif variant.pv_dtype == "int8":
+        # P̃ ∈ [0,1] ⇒ static per-block scale 1/127 (paper §4.3 point (2)).
+        p_q = jnp.clip(jnp.round(p * quant.INT8_MAX), -127, 127).astype(jnp.int8)
+        v_q, v_s = quant.quant_int8_per_channel(v32)
+        o_int = matmul_int8(p_q, v_q)
+        o = o_int.astype(jnp.float32) * (1.0 / quant.INT8_MAX) * v_s
+    else:
+        raise ValueError(variant.pv_dtype)
+    return o / l

@@ -1,0 +1,229 @@
+"""SageAttention as a Pallas FlashAttention-style kernel (paper §4, Alg. 1).
+
+The kernel follows the paper's tiling: Q-blocks of 128, K/V-blocks of 64
+(Table 12), with the FlashAttention-2 online-softmax recurrence (Eq. 1–2)
+and the quantized matmuls of Eq. (4)–(5):
+
+  * S-tile  = (Q̂_i · K̂_jᵀ) in INT8×INT8→INT32, dequantized with the row
+    scale δ_Q and column scale δ_K (per-token and per-block granularities
+    share one kernel: per-block scales are materialized per-token, constant
+    within a block, so the kernel is granularity-agnostic).
+  * P·V     = either FP16×FP16 with an FP16 accumulator (SageAttn-T/-B;
+    simulated by keeping the O accumulator in fp16 — see fp16_sim.py) or
+    INT8×INT8→INT32 with the static 1/127 scale for P̃ and per-channel
+    scales for V (SageAttn-vT/-vB).
+  * online softmax stays in fp32 (paper keeps it full-precision).
+
+TPU adaptation (DESIGN.md §2): the paper's Triton thread-block tiling maps
+to `pl.BlockSpec`s scheduling HBM→VMEM copies; the mma(u8.u8.s32) /
+mma(f16.f16.f16.f16) tensor-core paths map to int8→int32 and fp16-accum
+dots on the MXU. Kernels run with ``interpret=True`` — real-TPU lowering
+emits Mosaic custom-calls the CPU PJRT plugin cannot execute.
+
+Quantization of Q and K happens *outside* this kernel: the paper fuses it
+into the preceding RoPE kernel (§4.6, see rope_quant.py); `sage_attention`
+below does it inline with jnp ops so the whole thing lowers into one HLO.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from . import quant
+from .ref import (SAGE_ATTN_B, SAGE_ATTN_T, SAGE_ATTN_VB, SAGE_ATTN_VT,
+                  VARIANTS, Variant)
+
+# Paper Table 12: block size 128 for Q, 64 for K and V.
+DEFAULT_BLOCK_Q = 128
+DEFAULT_BLOCK_KV = 64
+
+_NEG_BIG = -1e30  # stand-in for -inf that keeps exp() finite
+
+
+def _sage_kernel(q_ref, qs_ref, k_ref, ks_ref, v_ref, vs_ref,
+                 o_ref, m_ref, l_ref, acc_ref,
+                 *, pv_int8: bool, causal: bool,
+                 n_q_valid: int, n_kv_valid: int,
+                 block_q: int, block_kv: int, n_kv_blocks: int):
+    """Grid = (batch*heads, n_q_blocks, n_kv_blocks); the kv axis is the
+    innermost (sequential) axis, with m/l/acc carried in scratch VMEM."""
+    i = pl.program_id(1)          # q-block index
+    j = pl.program_id(2)          # kv-block index (sequential)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG_BIG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_i8 = q_ref[0]               # (block_q, d) int8
+    k_i8 = k_ref[0]               # (block_kv, d) int8
+    q_s = qs_ref[0]               # (block_q, 1) f32
+    k_s = ks_ref[0]               # (block_kv, 1) f32
+
+    # --- S tile: mma(u8.u8.s32) then dequantize (Eq. 5). 1/√d is already
+    # folded into δ_Q by the quantization step (§4.6 fusion trick).
+    s_int = jax.lax.dot_general(
+        q_i8, k_i8,
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.int32)
+    s = s_int.astype(jnp.float32) * q_s * k_s.reshape(1, block_kv)
+
+    # --- masking: kv padding + causal (static shapes, data-free predicate)
+    q_pos = i * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_kv), 0)
+    k_pos = j * block_kv + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_kv), 1)
+    mask = k_pos < n_kv_valid
+    if causal:
+        # queries are aligned to the END of the kv sequence (decode layout)
+        mask &= k_pos <= q_pos + (n_kv_valid - n_q_valid)
+    s = jnp.where(mask, s, _NEG_BIG)
+
+    # --- online softmax (fp32, full precision)
+    m_prev = m_ref[...]                                   # (block_q, 1)
+    m_cur = jnp.max(s, axis=-1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    alpha = jnp.exp(m_prev - m_new)                       # (block_q, 1)
+    p = jnp.exp(s - m_new)                                # P̃ ∈ [0, 1]
+    p = jnp.where(mask, p, 0.0)
+    l_ref[...] = alpha * l_ref[...] + jnp.sum(p, axis=-1, keepdims=True)
+    m_ref[...] = m_new
+
+    if pv_int8:
+        # --- SageAttn-v*: ψ_P per-block with static δ_P = 1/127 (row max of
+        # P̃ is ≤1), ψ_V per-channel INT8; mma(u8.u8.s32) accumulate.
+        p_i8 = jnp.round(p * quant.INT8_MAX).astype(jnp.int8)
+        v_i8 = v_ref[0]                                   # (block_kv, d) int8
+        v_s = vs_ref[0]                                   # (1, d) f32
+        pv = jax.lax.dot_general(
+            p_i8, v_i8,
+            dimension_numbers=(((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.int32)
+        pv = pv.astype(jnp.float32) * (1.0 / quant.INT8_MAX) * v_s
+        acc_ref[...] = alpha * acc_ref[...] + pv
+    else:
+        # --- SageAttn-T/-B: FP16 P, FP16 V, FP16 accumulator. The scratch
+        # accumulator itself is fp16, so every block's partial sum is
+        # rounded to fp16 — the numeric effect of mma(f16.f16.f16.f16).
+        p16 = p.astype(jnp.float16)
+        v16 = v_ref[0]                                    # (block_kv, d) f16
+        pv = jax.lax.dot_general(
+            p16, v16,
+            dimension_numbers=(((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float16)
+        acc_ref[...] = (alpha.astype(jnp.float16) * acc_ref[...] + pv
+                        ).astype(acc_ref.dtype)
+
+    @pl.when(j == n_kv_blocks - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, :, :] = (acc_ref[...].astype(jnp.float32) / l).astype(o_ref.dtype)
+
+
+def _pad_tokens(x: jax.Array, block: int) -> jax.Array:
+    pad = (-x.shape[-2]) % block
+    if pad == 0:
+        return x
+    return jnp.pad(x, [(0, 0)] * (x.ndim - 2) + [(0, pad), (0, 0)])
+
+
+def sage_attention_quantized(
+        q_i8: jax.Array, q_scale: jax.Array,
+        k_i8: jax.Array, k_scale: jax.Array,
+        v: jax.Array, v_scale: Optional[jax.Array],
+        *, pv_int8: bool, causal: bool = False,
+        n_q_valid: Optional[int] = None, n_kv_valid: Optional[int] = None,
+        block_q: int = DEFAULT_BLOCK_Q, block_kv: int = DEFAULT_BLOCK_KV,
+        interpret: bool = True) -> jax.Array:
+    """Run the Pallas kernel on pre-quantized inputs.
+
+    Args:
+      q_i8/k_i8: (B, H, N, d) int8 with 1/√d and smooth-K already applied.
+      q_scale/k_scale: (B, H, N, 1) f32 per-token (or block-constant) scales.
+      v: (B, H, N, d) — fp16 when ``pv_int8=False``, int8 otherwise.
+      v_scale: (B, H, 1, d) f32 per-channel scales (int8 PV only).
+      n_q_valid/n_kv_valid: original lengths before padding.
+    Returns: (B, H, N_q, d) f32 attention output.
+    """
+    b, h, n_q, d = q_i8.shape
+    n_kv = k_i8.shape[-2]
+    n_q_valid = n_q if n_q_valid is None else n_q_valid
+    n_kv_valid = n_kv if n_kv_valid is None else n_kv_valid
+
+    block_q = min(block_q, max(8, 1 << (n_q - 1).bit_length()) if n_q < block_q else block_q)
+    block_kv = min(block_kv, max(8, 1 << (n_kv - 1).bit_length()) if n_kv < block_kv else block_kv)
+
+    q_i8 = _pad_tokens(q_i8, block_q).reshape(b * h, -1, d)
+    q_scale = _pad_tokens(q_scale, block_q).reshape(b * h, -1, 1)
+    k_i8 = _pad_tokens(k_i8, block_kv).reshape(b * h, -1, d)
+    k_scale = _pad_tokens(k_scale, block_kv).reshape(b * h, -1, 1)
+    v = _pad_tokens(v, block_kv).reshape(b * h, -1, d)
+    n_qp, n_kvp = q_i8.shape[1], k_i8.shape[1]
+    nqb, nkb = n_qp // block_q, n_kvp // block_kv
+
+    if pv_int8:
+        assert v_scale is not None
+        vs = v_scale.reshape(b * h, 1, d)
+    else:
+        # dummy scale input keeps the kernel signature uniform
+        vs = jnp.ones((b * h, 1, d), jnp.float32)
+
+    kernel = functools.partial(
+        _sage_kernel, pv_int8=pv_int8, causal=causal,
+        n_q_valid=n_q_valid, n_kv_valid=n_kv_valid,
+        block_q=block_q, block_kv=block_kv, n_kv_blocks=nkb)
+
+    acc_dtype = jnp.float32 if pv_int8 else jnp.float16
+    out = pl.pallas_call(
+        kernel,
+        grid=(b * h, nqb, nkb),
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda bh, i, j: (bh, i, 0)),
+            pl.BlockSpec((1, block_q, 1), lambda bh, i, j: (bh, i, 0)),
+            pl.BlockSpec((1, block_kv, d), lambda bh, i, j: (bh, j, 0)),
+            pl.BlockSpec((1, block_kv, 1), lambda bh, i, j: (bh, j, 0)),
+            pl.BlockSpec((1, block_kv, d), lambda bh, i, j: (bh, j, 0)),
+            pl.BlockSpec((1, 1, d), lambda bh, i, j: (bh, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), lambda bh, i, j: (bh, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, n_qp, d), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),   # m: running row max
+            pltpu.VMEM((block_q, 1), jnp.float32),   # l: running row sum
+            pltpu.VMEM((block_q, d), acc_dtype),     # O accumulator
+        ],
+        interpret=interpret,
+    )(q_i8, q_scale, k_i8, k_scale, v, vs)
+
+    return out.reshape(b, h, n_qp, d)[:, :, :n_q, :]
+
+
+def sage_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                   variant: Variant | str = SAGE_ATTN_B,
+                   *, causal: bool = False, do_smooth_k: bool = True,
+                   block_q: int = DEFAULT_BLOCK_Q,
+                   block_kv: int = DEFAULT_BLOCK_KV,
+                   interpret: bool = True) -> jax.Array:
+    """Full SageAttention: quantize (Q, K[, V]) then run the Pallas kernel.
+
+    q, k, v: (B, H, N, d) float. Returns f32 (B, H, N, d).
+    """
+    if isinstance(variant, str):
+        variant = VARIANTS[variant]
+    (q_q, q_s), (k_q, k_s) = quant.quantize_qk(
+        q, k, granularity=variant.qk_granularity,
+        block=block_q, do_smooth_k=do_smooth_k)
+    if variant.pv_dtype == "int8":
+        v_q, v_s = quant.quant_int8_per_channel(v.astype(jnp.float32))
+        return sage_attention_quantized(
+            q_q, q_s, k_q, k_s, v_q, v_s, pv_int8=True, causal=causal,
+            block_q=block_q, block_kv=block_kv, interpret=interpret)
+    return sage_attention_quantized(
+        q_q, q_s, k_q, k_s, v.astype(jnp.float16), None, pv_int8=False,
+        causal=causal, block_q=block_q, block_kv=block_kv,
+        interpret=interpret)

@@ -1,0 +1,80 @@
+"""Synthetic Q/K/V generators reproducing the paper's Figure-4 distributions.
+
+The whole SageAttention design hinges on one distributional fact: **K has
+channel-wise outliers that are a shared bias** — every token's key is
+``large per-channel bias + small token-wise signal`` — while Q is broadly
+spread and V has mild channel structure. Real-model tensors (Llama2,
+Unidiffuser, CogVideoX) are substituted by this generator (DESIGN.md §3);
+the ``profile`` presets bracket the regimes the paper's accuracy tables
+sweep over, from benign (Llama-like, quantizes fine without smoothing) to
+hostile (diffusion-like, unusable without smooth-K).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class QKVProfile(NamedTuple):
+    """Distribution knobs. All magnitudes are per-channel std multipliers."""
+
+    name: str
+    k_bias_scale: float      # channel-bias magnitude in K (the outlier)
+    k_signal_scale: float    # token-wise signal magnitude in K
+    q_scale: float           # spread of Q
+    q_bias_scale: float      # channel bias in Q (paper: "Q is also affected")
+    v_channel_scale: float   # per-channel magnitude variation in V
+    heavy_tail: float        # 0 = gaussian; >0 mixes in a t-like tail
+
+
+# Llama-like: fairly uniform — quantization is easy even per-tensor (§A.6).
+LLAMA_LIKE = QKVProfile("llama-like", 2.0, 1.0, 1.0, 0.5, 1.0, 0.0)
+# Diffusion-like (Unidiffuser/CogVideoX): strong shared channel bias in K —
+# the regime where unsmoothed INT8 collapses (Figure 3 / Table 18).
+DIFFUSION_LIKE = QKVProfile("diffusion-like", 12.0, 0.6, 1.5, 2.0, 3.0, 0.3)
+# ViT-like (TIMM): moderate outliers, short sequences.
+VIT_LIKE = QKVProfile("vit-like", 5.0, 0.8, 1.2, 1.0, 2.0, 0.1)
+
+PROFILES = {p.name: p for p in (LLAMA_LIKE, DIFFUSION_LIKE, VIT_LIKE)}
+
+
+def make_qkv(key: jax.Array, shape: Tuple[int, int, int, int],
+             profile: QKVProfile = DIFFUSION_LIKE,
+             dtype=jnp.float32) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Draw (Q, K, V) of shape (B, H, N, d) with the profile's structure."""
+    b, h, n, d = shape
+    ks = jax.random.split(key, 8)
+    k_bias = jax.random.normal(ks[0], (b, h, 1, d)) * profile.k_bias_scale
+    k_sig = jax.random.normal(ks[1], (b, h, n, d)) * profile.k_signal_scale
+    k = k_bias + k_sig
+    q_bias = jax.random.normal(ks[2], (b, h, 1, d)) * profile.q_bias_scale
+    q = jax.random.normal(ks[3], (b, h, n, d)) * profile.q_scale + q_bias
+    v_chan = jnp.exp(jax.random.normal(ks[4], (b, h, 1, d))
+                     * jnp.log1p(profile.v_channel_scale) * 0.5)
+    v = jax.random.normal(ks[5], (b, h, n, d)) * v_chan
+    if profile.heavy_tail > 0:
+        # sprinkle rare large activations (heavy-tailed mixture)
+        spike_mask = jax.random.bernoulli(ks[6], 0.002, (b, h, n, d))
+        spikes = jax.random.normal(ks[7], (b, h, n, d)) * 10.0
+        q = q + spike_mask * spikes * profile.heavy_tail
+        v = v + spike_mask * spikes * profile.heavy_tail
+    return q.astype(dtype), k.astype(dtype), v.astype(dtype)
+
+
+def layer_sweep(key: jax.Array, n_layers: int,
+                shape: Tuple[int, int, int, int],
+                profile: QKVProfile = DIFFUSION_LIKE):
+    """Yield per-layer (Q, K, V) with layer-dependent severity — deeper
+    layers get progressively stronger outliers, mimicking the paper's
+    "worst accuracy across all layers" experiments (Tables 3/5)."""
+    for layer in range(n_layers):
+        sev = 0.25 + 1.5 * layer / max(n_layers - 1, 1)
+        p = profile._replace(
+            k_bias_scale=profile.k_bias_scale * sev,
+            v_channel_scale=profile.v_channel_scale * sev,
+            heavy_tail=profile.heavy_tail * sev)
+        key, sub = jax.random.split(key)
+        yield layer, make_qkv(sub, shape, p)

@@ -1,0 +1,313 @@
+"""L2: GPT-style transformer whose attention is SageAttention (build-time JAX).
+
+Pure-jnp (no flax/optax) so everything lowers into a single clean HLO
+module for the rust runtime. The attention implementation is selectable
+per layer — "exact" (fp32 reference), or any Table-6 variant — which is
+what the adaptive-quantization plan (§4.5) toggles.
+
+Artifacts lowered from this module (see aot.py):
+  * ``train_step``  — fused AdamW + loss for the E2E training driver
+  * ``eval_loss``   — next-token loss for perplexity evaluation
+  * ``prefill``     — logits + dense KV caches for serving
+  * ``decode_step`` — single-token incremental decode against the caches
+
+Decode-time attention uses the straight-line quantized path (q_len = 1 is
+a GEMV — the paper's tiled kernel targets the prefill/training shapes);
+the KV cache is re-smoothed and re-quantized against the *valid* prefix
+each step, with dynamic-length masking.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .configs import ModelConfig
+from .kernels import quant, ref, sage_attn
+from .kernels.rope_quant import apply_rope, rope_tables
+
+Params = Dict[str, Any]
+
+ATTN_IMPLS = ("exact",) + tuple(ref.VARIANTS)
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+
+def param_spec(cfg: ModelConfig) -> List[Tuple[str, Tuple[int, ...], float]]:
+    """Flat (name, shape, init_std) list — the manifest contract with rust.
+
+    Rust initializes parameters itself from this spec (normal(0, std), or
+    ones for std < 0 which marks norm gains), so no weights cross the
+    python/rust boundary.
+    """
+    d, h, dh, f = cfg.d_model, cfg.n_heads, cfg.d_head, cfg.d_ff
+    spec: List[Tuple[str, Tuple[int, ...], float]] = [
+        ("embed", (cfg.vocab, d), 0.02),
+    ]
+    for i in range(cfg.n_layers):
+        p = f"layer{i}."
+        spec += [
+            (p + "ln1", (d,), -1.0),
+            (p + "wq", (d, h * dh), 0.02),
+            (p + "wk", (d, h * dh), 0.02),
+            (p + "wv", (d, h * dh), 0.02),
+            (p + "wo", (h * dh, d), 0.02 / (2 * cfg.n_layers) ** 0.5),
+            (p + "ln2", (d,), -1.0),
+            (p + "w_gate", (d, f), 0.02),
+            (p + "w_up", (d, f), 0.02),
+            (p + "w_down", (f, d), 0.02 / (2 * cfg.n_layers) ** 0.5),
+        ]
+    spec += [("ln_f", (d,), -1.0), ("unembed", (d, cfg.vocab), 0.02)]
+    return spec
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> Params:
+    params = {}
+    for name, shape, std in param_spec(cfg):
+        if std < 0:
+            params[name] = jnp.ones(shape, jnp.float32)
+        else:
+            key, sub = jax.random.split(key)
+            params[name] = jax.random.normal(sub, shape) * std
+    return params
+
+
+def params_to_list(cfg: ModelConfig, params: Params) -> List[jax.Array]:
+    return [params[name] for name, _, _ in param_spec(cfg)]
+
+
+def params_from_list(cfg: ModelConfig, flat: Sequence[jax.Array]) -> Params:
+    return {name: arr for (name, _, _), arr in zip(param_spec(cfg), flat)}
+
+
+# ---------------------------------------------------------------------------
+# Building blocks
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x: jax.Array, gain: jax.Array, eps: float = 1e-5) -> jax.Array:
+    ms = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(ms + eps) * gain
+
+
+def _split_heads(x: jax.Array, n_heads: int, d_head: int) -> jax.Array:
+    b, n, _ = x.shape
+    return x.reshape(b, n, n_heads, d_head).transpose(0, 2, 1, 3)
+
+
+def _merge_heads(x: jax.Array) -> jax.Array:
+    b, h, n, dh = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(b, n, h * dh)
+
+
+def _attention(q: jax.Array, k: jax.Array, v: jax.Array, impl: str,
+               *, causal: bool, interpret: bool = True) -> jax.Array:
+    """Dispatch on the per-layer attention implementation."""
+    if impl == "exact":
+        return ref.attention_ref(q, k, v, causal=causal)
+    return sage_attn.sage_attention(q, k, v, ref.VARIANTS[impl],
+                                    causal=causal, interpret=interpret)
+
+
+def _decode_attention(q1: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                      n_valid: jax.Array, impl: str) -> jax.Array:
+    """Single-query attention over a dense cache with dynamic valid
+    lengths. Straight-line quantized path (Eq. 4–5) — no tiling at q_len=1.
+
+    q1: (B, H, 1, d); caches: (B, H, max_len, d); n_valid: (B,) int32 —
+    per-slot live prefix length (continuous batching: slots decode at
+    different positions).
+    """
+    max_len = k_cache.shape[-2]
+    d = q1.shape[-1]
+    valid = (jnp.arange(max_len)[None, :] < n_valid[:, None])[:, None, :, None]
+    if impl == "exact":
+        s = jnp.matmul(q1, jnp.swapaxes(k_cache, -1, -2)) / jnp.sqrt(jnp.float32(d))
+        s = jnp.where(jnp.swapaxes(valid, -1, -2), s, -1e30)
+        return jnp.matmul(jax.nn.softmax(s, axis=-1), v_cache)
+
+    variant = ref.VARIANTS[impl]
+    nf = jnp.maximum(n_valid.astype(jnp.float32), 1.0)[:, None, None, None]
+    k_mean = jnp.sum(jnp.where(valid, k_cache, 0.0), axis=-2, keepdims=True) / nf
+    k_sm = jnp.where(valid, k_cache - k_mean, 0.0)
+    q_q, q_s = quant.quant_int8_per_token(q1 / jnp.sqrt(jnp.float32(d)))
+    k_q, k_s = quant.quant_int8_per_token(k_sm)
+    s = jnp.matmul(q_q.astype(jnp.int32), jnp.swapaxes(k_q, -1, -2).astype(jnp.int32))
+    s = s.astype(jnp.float32) * q_s * jnp.swapaxes(k_s, -1, -2)
+    s = jnp.where(jnp.swapaxes(valid, -1, -2), s, -1e30)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    if variant.pv_dtype == "int8":
+        p_q = jnp.round(p * quant.INT8_MAX).astype(jnp.int8)
+        vm = jnp.where(valid, v_cache, 0.0)
+        v_q, v_s = quant.quant_int8_per_channel(vm)
+        o = jnp.matmul(p_q.astype(jnp.int32), v_q.astype(jnp.int32))
+        o = o.astype(jnp.float32) * (1.0 / quant.INT8_MAX) * v_s
+    else:
+        p16 = p.astype(jnp.float16)
+        v16 = jnp.where(valid, v_cache, 0.0).astype(jnp.float16)
+        o = jnp.matmul(p16, v16, preferred_element_type=jnp.float16)
+        o = o.astype(jnp.float32)
+    return o / jnp.maximum(l, 1e-30)
+
+
+# ---------------------------------------------------------------------------
+# Forward passes
+# ---------------------------------------------------------------------------
+
+def forward(cfg: ModelConfig, params: Params, tokens: jax.Array,
+            attn_plan: Sequence[str], *, interpret: bool = True) -> jax.Array:
+    """Training/eval forward: tokens (B, N) int32 → logits (B, N, vocab).
+
+    ``attn_plan[i]`` names layer i's attention implementation — the
+    adaptive-quantization plan (§4.5) materialized as a static argument.
+    """
+    assert len(attn_plan) == cfg.n_layers
+    b, n = tokens.shape
+    x = params["embed"][tokens]
+    cos, sin = rope_tables(n, cfg.d_head, base=cfg.rope_base)
+    for i in range(cfg.n_layers):
+        p = f"layer{i}."
+        h = rmsnorm(x, params[p + "ln1"])
+        q = _split_heads(h @ params[p + "wq"], cfg.n_heads, cfg.d_head)
+        k = _split_heads(h @ params[p + "wk"], cfg.n_heads, cfg.d_head)
+        v = _split_heads(h @ params[p + "wv"], cfg.n_heads, cfg.d_head)
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+        o = _attention(q, k, v, attn_plan[i], causal=True, interpret=interpret)
+        x = x + _merge_heads(o) @ params[p + "wo"]
+        h = rmsnorm(x, params[p + "ln2"])
+        x = x + (jax.nn.silu(h @ params[p + "w_gate"])
+                 * (h @ params[p + "w_up"])) @ params[p + "w_down"]
+    return rmsnorm(x, params["ln_f"]) @ params["unembed"]
+
+
+def loss_fn(cfg: ModelConfig, params: Params, tokens: jax.Array,
+            attn_plan: Sequence[str], *, interpret: bool = True) -> jax.Array:
+    """Mean next-token cross-entropy over (B, N) token batches."""
+    logits = forward(cfg, params, tokens[:, :-1], attn_plan, interpret=interpret)
+    targets = tokens[:, 1:]
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)
+    return jnp.mean(nll)
+
+
+# ---------------------------------------------------------------------------
+# Training (fused AdamW step)
+# ---------------------------------------------------------------------------
+
+def train_step(cfg: ModelConfig, attn_plan: Sequence[str],
+               flat_params: Sequence[jax.Array],
+               flat_m: Sequence[jax.Array], flat_v: Sequence[jax.Array],
+               step: jax.Array, tokens: jax.Array,
+               lr: float = 3e-4, beta1: float = 0.9, beta2: float = 0.95,
+               eps: float = 1e-8, wd: float = 0.01):
+    """One AdamW step. All state flat (manifest order) for the rust driver.
+
+    Training uses the *exact* attention path: the paper's method is
+    post-training (plug-and-play at inference); we train full-precision and
+    quantize at serve time, exactly as the paper deploys it.
+    """
+    params = params_from_list(cfg, flat_params)
+
+    def loss_of(p):
+        return loss_fn(cfg, p, tokens, attn_plan)
+
+    loss, grads = jax.value_and_grad(loss_of)(params)
+    g_flat = params_to_list(cfg, grads)
+    t = step.astype(jnp.float32) + 1.0
+    bc1 = 1.0 - beta1 ** t
+    bc2 = 1.0 - beta2 ** t
+    new_p, new_m, new_v = [], [], []
+    for p, g, m, v in zip(flat_params, g_flat, flat_m, flat_v):
+        m2 = beta1 * m + (1 - beta1) * g
+        v2 = beta2 * v + (1 - beta2) * jnp.square(g)
+        upd = (m2 / bc1) / (jnp.sqrt(v2 / bc2) + eps)
+        new_p.append(p - lr * (upd + wd * p))
+        new_m.append(m2)
+        new_v.append(v2)
+    return (loss, step + 1) + tuple(new_p) + tuple(new_m) + tuple(new_v)
+
+
+# ---------------------------------------------------------------------------
+# Serving: prefill + decode
+# ---------------------------------------------------------------------------
+
+def prefill(cfg: ModelConfig, attn_plan: Sequence[str],
+            flat_params: Sequence[jax.Array], tokens: jax.Array,
+            *, interpret: bool = True):
+    """Process a prompt: tokens (B, N) → (last-position logits,
+    k_caches (L, B, H, max_seq, d), v_caches (L, B, H, max_seq, d)).
+    """
+    params = params_from_list(cfg, flat_params)
+    b, n = tokens.shape
+    x = params["embed"][tokens]
+    cos, sin = rope_tables(n, cfg.d_head, base=cfg.rope_base)
+    k_caches, v_caches = [], []
+    for i in range(cfg.n_layers):
+        p = f"layer{i}."
+        h = rmsnorm(x, params[p + "ln1"])
+        q = _split_heads(h @ params[p + "wq"], cfg.n_heads, cfg.d_head)
+        k = _split_heads(h @ params[p + "wk"], cfg.n_heads, cfg.d_head)
+        v = _split_heads(h @ params[p + "wv"], cfg.n_heads, cfg.d_head)
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+        pad = cfg.max_seq - n
+        k_caches.append(jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0))))
+        v_caches.append(jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0))))
+        o = _attention(q, k, v, attn_plan[i], causal=True, interpret=interpret)
+        x = x + _merge_heads(o) @ params[p + "wo"]
+        h = rmsnorm(x, params[p + "ln2"])
+        x = x + (jax.nn.silu(h @ params[p + "w_gate"])
+                 * (h @ params[p + "w_up"])) @ params[p + "w_down"]
+    logits = rmsnorm(x[:, -1:, :], params["ln_f"]) @ params["unembed"]
+    return (logits[:, 0, :], jnp.stack(k_caches), jnp.stack(v_caches))
+
+
+def decode_step(cfg: ModelConfig, attn_plan: Sequence[str],
+                flat_params: Sequence[jax.Array],
+                k_caches: jax.Array, v_caches: jax.Array,
+                token: jax.Array, pos: jax.Array):
+    """One incremental decode step over a continuous batch.
+
+    token: (B,) int32 — each slot's token at its own position.
+    pos:   (B,) int32 — each slot's 0-based position (continuous batching:
+           slots are at different depths; idle slots can pass pos 0).
+    Returns (next-token logits (B, vocab), k_caches', v_caches').
+    """
+    params = params_from_list(cfg, flat_params)
+    max_len = k_caches.shape[-2]
+    x = params["embed"][token][:, None, :]   # (B, 1, d_model)
+    half = cfg.d_head // 2
+    inv_freq = 1.0 / (cfg.rope_base ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = pos.astype(jnp.float32)[:, None] * inv_freq[None, :]   # (B, half)
+    cos = jnp.cos(ang)[:, None, None, :]     # (B, 1, 1, half)
+    sin = jnp.sin(ang)[:, None, None, :]
+    # one-hot over the cache axis for the per-slot scatter
+    onehot = (jnp.arange(max_len)[None, :] == pos[:, None]
+              ).astype(jnp.float32)[:, None, :, None]   # (B, 1, max, 1)
+    new_k, new_v = [], []
+    for i in range(cfg.n_layers):
+        p = f"layer{i}."
+        h = rmsnorm(x, params[p + "ln1"])
+        q = _split_heads(h @ params[p + "wq"], cfg.n_heads, cfg.d_head)
+        k = _split_heads(h @ params[p + "wk"], cfg.n_heads, cfg.d_head)
+        v = _split_heads(h @ params[p + "wv"], cfg.n_heads, cfg.d_head)
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+        kc = k_caches[i] * (1.0 - onehot) + k * onehot
+        vc = v_caches[i] * (1.0 - onehot) + v * onehot
+        new_k.append(kc)
+        new_v.append(vc)
+        o = _decode_attention(q, kc, vc, pos.astype(jnp.int32) + 1, attn_plan[i])
+        x = x + _merge_heads(o) @ params[p + "wo"]
+        h = rmsnorm(x, params[p + "ln2"])
+        x = x + (jax.nn.silu(h @ params[p + "w_gate"])
+                 * (h @ params[p + "w_up"])) @ params[p + "w_down"]
+    logits = rmsnorm(x, params["ln_f"]) @ params["unembed"]
+    return (logits[:, 0, :], jnp.stack(new_k), jnp.stack(new_v))

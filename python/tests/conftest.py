@@ -1,0 +1,22 @@
+"""Shared pytest fixtures: deterministic keys and synthetic QKV factories."""
+
+import jax
+import pytest
+
+from compile.kernels import synth
+
+
+@pytest.fixture
+def key():
+    return jax.random.PRNGKey(0)
+
+
+@pytest.fixture
+def qkv_diffusion(key):
+    """Hostile Figure-4 distribution: channel-bias outliers in K."""
+    return synth.make_qkv(key, (2, 3, 256, 64), synth.DIFFUSION_LIKE)
+
+
+@pytest.fixture
+def qkv_llama(key):
+    return synth.make_qkv(key, (2, 3, 256, 64), synth.LLAMA_LIKE)

@@ -1,0 +1,86 @@
+"""Accumulator-precision simulation tests (paper §4.4 / Tables 4–5)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import fp16_sim
+
+
+class TestFp16Accum:
+    def test_matches_fp32_for_small_problems(self, key):
+        a = jax.random.normal(key, (16, 32)) * 0.5
+        b = jax.random.normal(jax.random.fold_in(key, 1), (32, 16)) * 0.5
+        c16 = fp16_sim.matmul_fp16_accum(a, b)
+        c32 = a @ b
+        np.testing.assert_allclose(
+            np.asarray(c16, dtype=np.float32), np.asarray(c32), rtol=0.02, atol=0.05)
+
+    def test_accumulator_rounding_visible_at_long_k(self, key):
+        # adding many tiny values into a large fp16 accumulator loses them;
+        # an fp32 accumulator does not
+        k_dim = 4096
+        a = jnp.ones((1, k_dim)) * 0.001
+        b = jnp.ones((k_dim, 1))
+        exact = float((a @ b)[0, 0])
+        c16 = float(fp16_sim.matmul_fp16_accum(a, b)[0, 0])
+        # the fp16 result is close but visibly quantized
+        assert abs(c16 - exact) / exact < 0.05
+        assert c16 != exact
+
+    def test_attention_pv_regime_no_accuracy_loss(self, key):
+        # the paper's claim: for P ∈ [0,1], V ~ O(1), fp16 accumulation is
+        # as accurate as fp32 (Tables 4, 5: identical metrics)
+        kp, kv = jax.random.split(key)
+        p = jax.nn.softmax(jax.random.normal(kp, (128, 64)) * 3.0, axis=-1)
+        p = p / jnp.max(p, axis=-1, keepdims=True)  # P̃ style, max 1
+        v = jax.random.normal(kv, (64, 64))
+        o16 = fp16_sim.matmul_fp16_accum(p, v).astype(jnp.float32)
+        o32 = fp16_sim.matmul_fp32_accum(p, v)
+        csim = float(jnp.sum(o16 * o32)
+                     / jnp.sqrt(jnp.sum(o16 * o16) * jnp.sum(o32 * o32)))
+        assert csim > 0.9999
+
+    def test_batched_shapes(self, key):
+        a = jax.random.normal(key, (2, 3, 8, 32))
+        b = jax.random.normal(jax.random.fold_in(key, 1), (2, 3, 32, 8))
+        c = fp16_sim.matmul_fp16_accum(a, b)
+        assert c.shape == (2, 3, 8, 8)
+
+    def test_unaligned_k_dimension(self, key):
+        # k not a multiple of the 16-wide mma chunk
+        a = jax.random.normal(key, (4, 37))
+        b = jax.random.normal(jax.random.fold_in(key, 1), (37, 4))
+        c = fp16_sim.matmul_fp16_accum(a, b).astype(jnp.float32)
+        np.testing.assert_allclose(np.asarray(c), np.asarray(a @ b), atol=0.1)
+
+    @settings(max_examples=15, deadline=None)
+    @given(m=st.integers(1, 32), k=st.integers(1, 128), n=st.integers(1, 32),
+           seed=st.integers(0, 2**31 - 1))
+    def test_property_close_to_fp32(self, m, k, n, seed):
+        ka, kb = jax.random.split(jax.random.PRNGKey(seed))
+        a = jax.random.normal(ka, (m, k)) * 0.3
+        b = jax.random.normal(kb, (k, n)) * 0.3
+        c16 = np.asarray(fp16_sim.matmul_fp16_accum(a, b), dtype=np.float32)
+        c32 = np.asarray(a @ b)
+        scale = max(1e-3, float(np.abs(c32).max()))
+        assert np.max(np.abs(c16 - c32)) / scale < 0.05
+
+
+class TestInt8Matmul:
+    def test_exact_within_range(self):
+        a = jnp.array([[1, -2], [127, 0]], dtype=jnp.int8)
+        b = jnp.array([[3, 4], [-5, 6]], dtype=jnp.int8)
+        c = fp16_sim.matmul_int8(a, b)
+        assert c.dtype == jnp.int32
+        np.testing.assert_array_equal(
+            np.asarray(c), np.array([[13, -8], [381, 508]], dtype=np.int32))
+
+    def test_no_overflow_at_max_values(self):
+        # 127*127*K must not overflow int32 for realistic K
+        k_dim = 128
+        a = jnp.full((1, k_dim), 127, dtype=jnp.int8)
+        b = jnp.full((k_dim, 1), 127, dtype=jnp.int8)
+        c = int(fp16_sim.matmul_int8(a, b)[0, 0])
+        assert c == 127 * 127 * k_dim

@@ -1,0 +1,157 @@
+"""L2 transformer tests: shapes, training signal, prefill/decode parity,
+and the plug-and-play property (swapping attention impls barely moves
+outputs)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile.configs import TINY
+
+FP_PLAN = ["exact"] * TINY.n_layers
+SAGE_PLAN = ["SageAttn-B"] * TINY.n_layers
+
+
+@pytest.fixture(scope="module")
+def params():
+    return M.init_params(TINY, jax.random.PRNGKey(0))
+
+
+@pytest.fixture(scope="module")
+def tokens():
+    return jax.random.randint(jax.random.PRNGKey(1), (2, 32), 0, TINY.vocab)
+
+
+class TestForward:
+    def test_logit_shape(self, params, tokens):
+        logits = M.forward(TINY, params, tokens, FP_PLAN)
+        assert logits.shape == (2, 32, TINY.vocab)
+
+    def test_causality(self, params, tokens):
+        # perturbing a late token must not change earlier logits
+        logits1 = M.forward(TINY, params, tokens, FP_PLAN)
+        t2 = tokens.at[:, -1].set((tokens[:, -1] + 1) % TINY.vocab)
+        logits2 = M.forward(TINY, params, t2, FP_PLAN)
+        np.testing.assert_allclose(
+            np.asarray(logits1[:, :-1]), np.asarray(logits2[:, :-1]), atol=1e-5)
+
+    def test_plug_and_play_sage_attention(self, params, tokens):
+        # the paper's core claim at the model level: swapping in quantized
+        # attention changes outputs only marginally
+        lf = M.forward(TINY, params, tokens, FP_PLAN)
+        ls = M.forward(TINY, params, tokens, SAGE_PLAN)
+        cs = float(jnp.sum(lf * ls) / jnp.sqrt(jnp.sum(lf * lf) * jnp.sum(ls * ls)))
+        assert cs > 0.999
+
+    def test_mixed_adaptive_plan(self, params, tokens):
+        plan = ["SageAttn-vB", "SageAttn-B"]
+        logits = M.forward(TINY, params, tokens, plan)
+        assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+class TestTraining:
+    def test_loss_finite_and_near_uniform_at_init(self, params, tokens):
+        loss = M.loss_fn(TINY, params, tokens, FP_PLAN)
+        assert bool(jnp.isfinite(loss))
+        assert abs(float(loss) - jnp.log(TINY.vocab)) < 1.0
+
+    def test_train_step_descends(self, params):
+        # a few steps on a repeating batch must reduce loss
+        flat = M.params_to_list(TINY, params)
+        m = [jnp.zeros_like(p) for p in flat]
+        v = [jnp.zeros_like(p) for p in flat]
+        tokens = jax.random.randint(jax.random.PRNGKey(3), (2, TINY.max_seq), 0,
+                                    TINY.vocab)
+        step = jnp.int32(0)
+        fn = jax.jit(lambda *a: M.train_step(TINY, FP_PLAN, a[:len(flat)],
+                                             a[len(flat):2 * len(flat)],
+                                             a[2 * len(flat):3 * len(flat)],
+                                             a[-2], a[-1], lr=1e-3))
+        first = None
+        for _ in range(5):
+            out = fn(*flat, *m, *v, step, tokens)
+            loss, step = out[0], out[1]
+            n = len(flat)
+            flat = list(out[2:2 + n])
+            m = list(out[2 + n:2 + 2 * n])
+            v = list(out[2 + 2 * n:2 + 3 * n])
+            if first is None:
+                first = float(loss)
+        assert float(loss) < first - 0.05, (first, float(loss))
+
+    def test_param_spec_matches_init(self, params):
+        spec = M.param_spec(TINY)
+        assert set(p[0] for p in spec) == set(params)
+        for name, shape, _ in spec:
+            assert params[name].shape == tuple(shape)
+
+
+class TestServing:
+    def test_prefill_then_decode_matches_forward(self, params):
+        """Greedy decode via prefill+decode_step must agree with running
+        the full forward on the concatenated sequence."""
+        flat = M.params_to_list(TINY, params)
+        prompt = jax.random.randint(jax.random.PRNGKey(5), (1, 8), 0, TINY.vocab)
+        logits0, kc, vc = M.prefill(TINY, FP_PLAN, flat, prompt)
+        tok = jnp.argmax(logits0, axis=-1).astype(jnp.int32)
+        seq = [int(prompt[0, i]) for i in range(8)] + [int(tok[0])]
+        # two more steps
+        pos = jnp.array([8], jnp.int32)
+        for _ in range(2):
+            logits, kc, vc = M.decode_step(TINY, FP_PLAN, flat, kc, vc, tok, pos)
+            tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            seq.append(int(tok[0]))
+            pos = pos + 1
+        # reference: teacher-forced full forward over seq[:-1]
+        full = jnp.array([seq[:-1]], jnp.int32)
+        ref_logits = M.forward(TINY, params, full, FP_PLAN)
+        ref_next = int(jnp.argmax(ref_logits[0, -1]))
+        assert ref_next == seq[-1]
+
+    def test_decode_step_slots_independent(self, params):
+        """Continuous batching: a token fed to slot 0 must not affect
+        slot 1's logits."""
+        flat = M.params_to_list(TINY, params)
+        b = 2
+        kv_shape = (TINY.n_layers, b, TINY.n_heads, TINY.max_seq, TINY.d_head)
+        kc = jnp.zeros(kv_shape)
+        vc = jnp.zeros(kv_shape)
+        tok = jnp.array([5, 9], jnp.int32)
+        pos = jnp.array([0, 3], jnp.int32)
+        l1, _, _ = M.decode_step(TINY, FP_PLAN, flat, kc, vc, tok, pos)
+        tok2 = jnp.array([6, 9], jnp.int32)  # only slot 0 changed
+        l2, _, _ = M.decode_step(TINY, FP_PLAN, flat, kc, vc, tok2, pos)
+        np.testing.assert_allclose(np.asarray(l1[1]), np.asarray(l2[1]), atol=1e-5)
+        assert float(jnp.max(jnp.abs(l1[0] - l2[0]))) > 1e-3
+
+    def test_decode_scatter_writes_correct_position(self, params):
+        flat = M.params_to_list(TINY, params)
+        b = 2
+        kv_shape = (TINY.n_layers, b, TINY.n_heads, TINY.max_seq, TINY.d_head)
+        kc = jnp.zeros(kv_shape)
+        vc = jnp.zeros(kv_shape)
+        tok = jnp.array([1, 2], jnp.int32)
+        pos = jnp.array([0, 5], jnp.int32)
+        _, kc2, _ = M.decode_step(TINY, FP_PLAN, flat, kc, vc, tok, pos)
+        kc2 = np.asarray(kc2)
+        # slot 0 wrote position 0 only; slot 1 wrote position 5 only
+        assert np.abs(kc2[0, 0, :, 0]).max() > 0
+        assert np.abs(kc2[0, 0, :, 1:]).max() == 0
+        assert np.abs(kc2[0, 1, :, 5]).max() > 0
+        assert np.abs(kc2[0, 1, :, :5]).max() == 0
+
+    def test_sage_decode_close_to_fp_decode(self, params):
+        flat = M.params_to_list(TINY, params)
+        prompt = jax.random.randint(jax.random.PRNGKey(7), (1, 16), 0, TINY.vocab)
+        lf, kcf, vcf = M.prefill(TINY, FP_PLAN, flat, prompt)
+        ls, kcs, vcs = M.prefill(TINY, SAGE_PLAN, flat, prompt)
+        cs = float(jnp.sum(lf * ls) / jnp.sqrt(jnp.sum(lf * lf) * jnp.sum(ls * ls)))
+        assert cs > 0.995
+        tok = jnp.argmax(lf, axis=-1).astype(jnp.int32)
+        pos = jnp.array([16], jnp.int32)
+        df, _, _ = M.decode_step(TINY, FP_PLAN, flat, kcf, vcf, tok, pos)
+        ds, _, _ = M.decode_step(TINY, SAGE_PLAN, flat, kcs, vcs, tok, pos)
+        cs2 = float(jnp.sum(df * ds) / jnp.sqrt(jnp.sum(df * df) * jnp.sum(ds * ds)))
+        assert cs2 > 0.99

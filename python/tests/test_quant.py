@@ -1,0 +1,131 @@
+"""Quantizer unit + property tests (hypothesis sweeps shapes/dtypes)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import quant
+
+
+def _rand(key, shape, scale=3.0):
+    return jax.random.normal(key, shape) * scale
+
+
+class TestInt8Quantizers:
+    def test_per_token_roundtrip_bound(self, key):
+        x = _rand(key, (37, 64))
+        q = quant.quant_int8_per_token(x)
+        deq = quant.dequant(q)
+        # error per element bounded by half a quantization step of its row
+        err = jnp.abs(x - deq)
+        bound = 0.5 * q.scale + 1e-6
+        assert bool(jnp.all(err <= bound))
+
+    def test_per_token_scale_shape(self, key):
+        q = quant.quant_int8_per_token(_rand(key, (2, 3, 17, 8)))
+        assert q.scale.shape == (2, 3, 17, 1)
+        assert q.q.dtype == jnp.int8
+
+    def test_per_channel_scale_shape(self, key):
+        q = quant.quant_int8_per_channel(_rand(key, (2, 3, 17, 8)))
+        assert q.scale.shape == (2, 3, 1, 8)
+
+    def test_per_tensor_single_scale(self, key):
+        q = quant.quant_int8_per_tensor(_rand(key, (5, 6)))
+        assert q.scale.size == 1
+
+    def test_per_block_scales_block_constant(self, key):
+        x = _rand(key, (100, 16))
+        q = quant.quant_int8_per_block(x, block=32)
+        s = np.asarray(q.scale)[:, 0]
+        for r in range(100):
+            assert s[r] == s[(r // 32) * 32]
+
+    def test_per_block_equals_per_token_when_block_1(self, key):
+        x = _rand(key, (13, 8))
+        qb = quant.quant_int8_per_block(x, block=1)
+        qt = quant.quant_int8_per_token(x)
+        np.testing.assert_array_equal(np.asarray(qb.q), np.asarray(qt.q))
+        np.testing.assert_allclose(np.asarray(qb.scale), np.asarray(qt.scale), rtol=1e-6)
+
+    def test_int8_payload_range(self, key):
+        q = quant.quant_int8_per_token(_rand(key, (64, 64), scale=100.0))
+        assert int(jnp.max(jnp.abs(q.q.astype(jnp.int32)))) <= 127
+
+    def test_zero_input_safe(self):
+        q = quant.quant_int8_per_token(jnp.zeros((4, 4)))
+        assert bool(jnp.all(q.q == 0))
+        assert bool(jnp.all(jnp.isfinite(quant.dequant(q))))
+
+    @settings(max_examples=25, deadline=None)
+    @given(rows=st.integers(1, 65), cols=st.sampled_from([8, 16, 64, 128]),
+           block=st.sampled_from([1, 16, 128]), seed=st.integers(0, 2**31 - 1))
+    def test_property_roundtrip_all_granularities(self, rows, cols, block, seed):
+        x = jax.random.normal(jax.random.PRNGKey(seed), (rows, cols)) * 5.0
+        for fn in (quant.quant_int8_per_token,
+                   quant.quant_int8_per_tensor,
+                   quant.quant_int8_per_channel,
+                   lambda a: quant.quant_int8_per_block(a, block)):
+            deq = quant.dequant(fn(x))
+            # dequantization must stay within one step of the max magnitude
+            assert float(jnp.max(jnp.abs(x - deq))) <= float(jnp.max(jnp.abs(x))) / 127 + 1e-5
+
+
+class TestFp8:
+    def test_e4m3_exact_on_grid(self):
+        for v in [1.0, 1.125, 448.0, -3.5, 0.015625]:
+            q = quant.quant_fp8_per_tensor(jnp.array([[abs(v), -448.0]]), "e4m3")
+            deq = quant.dequant(q)
+            # 448 scale maps grid values onto themselves
+            assert np.isfinite(np.asarray(deq)).all()
+
+    def test_fp8_formats_distinct_precision(self, key):
+        x = _rand(key, (64, 64), scale=1.0)
+        d43 = quant.dequant(quant.quant_fp8_per_token(x, "e4m3"))
+        d52 = quant.dequant(quant.quant_fp8_per_token(x, "e5m2"))
+        e43 = float(jnp.mean(jnp.abs(x - d43)))
+        e52 = float(jnp.mean(jnp.abs(x - d52)))
+        assert e43 < e52  # e4m3 has one more mantissa bit
+
+    def test_int8_beats_fp8_for_qk_style_data(self, key):
+        # Table 17's ordering: INT8 > E4M3 > E5M2 for per-token quantization
+        x = _rand(key, (128, 64), scale=2.0)
+        e_int8 = float(jnp.mean(jnp.abs(x - quant.fake_quant(x, "int8_token"))))
+        e_e4m3 = float(jnp.mean(jnp.abs(x - quant.fake_quant(x, "e4m3"))))
+        e_e5m2 = float(jnp.mean(jnp.abs(x - quant.fake_quant(x, "e5m2"))))
+        assert e_int8 < e_e4m3 < e_e5m2
+
+
+class TestSmoothK:
+    def test_removes_channel_mean(self, qkv_diffusion):
+        _, k, _ = qkv_diffusion
+        sm = quant.smooth_k(k)
+        mean = jnp.mean(sm, axis=-2)
+        assert float(jnp.max(jnp.abs(mean))) < 1e-4
+
+    def test_attention_scores_invariant(self, key):
+        # softmax(q (K - mean)ᵀ) == softmax(q Kᵀ) (paper §4.2)
+        kq, kk = jax.random.split(key)
+        q = _rand(kq, (1, 1, 32, 16))
+        k = _rand(kk, (1, 1, 32, 16)) + 7.0
+        s1 = jax.nn.softmax(q @ jnp.swapaxes(k, -1, -2), axis=-1)
+        s2 = jax.nn.softmax(q @ jnp.swapaxes(quant.smooth_k(k), -1, -2), axis=-1)
+        np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), atol=1e-5)
+
+    def test_smoothing_shrinks_quant_error(self, qkv_diffusion):
+        _, k, _ = qkv_diffusion
+        raw_err = float(jnp.mean(jnp.abs(k - quant.fake_quant(k, "int8_token"))))
+        sm = quant.smooth_k(k)
+        sm_err = float(jnp.mean(jnp.abs(sm - quant.fake_quant(sm, "int8_token"))))
+        assert sm_err < 0.3 * raw_err
+
+    def test_quantize_qk_folds_sqrt_d(self, key):
+        kq, kk = jax.random.split(key)
+        q = _rand(kq, (1, 1, 16, 64))
+        k = _rand(kk, (1, 1, 16, 64))
+        (qq, qs), _ = quant.quantize_qk(q, k, granularity="token")
+        deq = qq.astype(jnp.float32) * qs
+        np.testing.assert_allclose(
+            np.asarray(deq), np.asarray(q / jnp.sqrt(64.0)), atol=0.05)

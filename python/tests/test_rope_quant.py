@@ -1,0 +1,101 @@
+"""Fused RoPE+quantization kernel tests (paper §4.6 fusion trick)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import quant, ref, rope_quant, sage_attn, synth
+
+
+class TestRopeTables:
+    def test_rotation_preserves_norm(self, key):
+        x = jax.random.normal(key, (1, 1, 32, 64))
+        cos, sin = rope_quant.rope_tables(32, 64)
+        r = rope_quant.apply_rope(x, cos, sin)
+        np.testing.assert_allclose(
+            np.asarray(jnp.linalg.norm(r, axis=-1)),
+            np.asarray(jnp.linalg.norm(x, axis=-1)),
+            rtol=1e-5)
+
+    def test_position_zero_is_identity(self, key):
+        x = jax.random.normal(key, (1, 1, 1, 16))
+        cos, sin = rope_quant.rope_tables(1, 16)
+        r = rope_quant.apply_rope(x, cos, sin)
+        np.testing.assert_allclose(np.asarray(r), np.asarray(x), atol=1e-6)
+
+    def test_relative_position_property(self, key):
+        # <rope(q, m), rope(k, n)> depends only on m - n
+        d = 32
+        kq, kk = jax.random.split(key)
+        q = jax.random.normal(kq, (1, 1, 1, d))
+        k = jax.random.normal(kk, (1, 1, 1, d))
+        def dot_at(m, n):
+            cq = rope_quant.rope_tables(1, d, offset=m)
+            ck = rope_quant.rope_tables(1, d, offset=n)
+            rq = rope_quant.apply_rope(q, *cq)
+            rk = rope_quant.apply_rope(k, *ck)
+            return float(jnp.sum(rq * rk))
+        assert abs(dot_at(5, 3) - dot_at(12, 10)) < 1e-4
+
+    def test_offset_continuation(self):
+        cos_full, sin_full = rope_quant.rope_tables(64, 32)
+        cos_tail, sin_tail = rope_quant.rope_tables(16, 32, offset=48)
+        np.testing.assert_allclose(np.asarray(cos_full[48:]), np.asarray(cos_tail), atol=1e-6)
+        np.testing.assert_allclose(np.asarray(sin_full[48:]), np.asarray(sin_tail), atol=1e-6)
+
+
+class TestFusedKernel:
+    def test_matches_unfused_path_exactly(self, key):
+        q, k, _ = synth.make_qkv(key, (2, 2, 150, 64), synth.DIFFUSION_LIKE)
+        cos, sin = rope_quant.rope_tables(150, 64)
+        qr = rope_quant.apply_rope(q, cos, sin)
+        kr = rope_quant.apply_rope(k, cos, sin)
+        (qq_f, qs_f), (kq_f, ks_f) = rope_quant.rope_quantize_qk(q, k)
+        (qq, qs), (kq, ks) = quant.quantize_qk(qr, kr, granularity="token")
+        np.testing.assert_array_equal(np.asarray(qq_f), np.asarray(qq))
+        np.testing.assert_array_equal(np.asarray(kq_f), np.asarray(kq))
+        np.testing.assert_allclose(np.asarray(qs_f), np.asarray(qs), rtol=1e-5)
+        np.testing.assert_allclose(np.asarray(ks_f), np.asarray(ks), rtol=1e-5)
+
+    def test_end_to_end_through_attention(self, key):
+        q, k, v = synth.make_qkv(key, (1, 2, 128, 64), synth.DIFFUSION_LIKE)
+        cos, sin = rope_quant.rope_tables(128, 64)
+        qr = rope_quant.apply_rope(q, cos, sin)
+        kr = rope_quant.apply_rope(k, cos, sin)
+        gold = ref.attention_ref(qr, kr, v)
+        (qq, qs), (kq, ks) = rope_quant.rope_quantize_qk(q, k)
+        o = sage_attn.sage_attention_quantized(
+            qq, qs, kq, ks, v.astype(jnp.float16), None, pv_int8=False)
+        c = float(jnp.sum(o * gold) / jnp.sqrt(jnp.sum(o * o) * jnp.sum(gold * gold)))
+        # RoPE's rotation mixes channels position-by-position, so the
+        # post-RoPE K bias is no longer perfectly token-constant and
+        # smooth-K removes slightly less of it than in the un-roped case
+        assert c > 0.995
+
+    def test_no_smooth_mode(self, key):
+        q, k, _ = synth.make_qkv(key, (1, 1, 64, 32), synth.LLAMA_LIKE)
+        (_, _), (kq, ks) = rope_quant.rope_quantize_qk(q, k, do_smooth_k=False)
+        cos, sin = rope_quant.rope_tables(64, 32)
+        kr = rope_quant.apply_rope(k, cos, sin)
+        deq = kq.astype(jnp.float32) * ks
+        np.testing.assert_allclose(
+            np.asarray(deq), np.asarray(kr),
+            atol=float(jnp.max(jnp.abs(kr))) / 100)
+
+    @settings(max_examples=10, deadline=None)
+    @given(n=st.integers(8, 200), d=st.sampled_from([32, 64, 128]),
+           seed=st.integers(0, 2**31 - 1))
+    def test_property_fused_equals_unfused(self, n, d, seed):
+        key = jax.random.PRNGKey(seed)
+        q, k, _ = synth.make_qkv(key, (1, 2, n, d), synth.VIT_LIKE)
+        cos, sin = rope_quant.rope_tables(n, d)
+        qr = rope_quant.apply_rope(q, cos, sin)
+        kr = rope_quant.apply_rope(k, cos, sin)
+        (qq_f, _), (kq_f, _) = rope_quant.rope_quantize_qk(q, k)
+        (qq, _), (kq, _) = quant.quantize_qk(qr, kr, granularity="token")
+        # int8 payloads may differ by 1 ulp from fp reassociation; bound it
+        dq = np.abs(np.asarray(qq_f, np.int32) - np.asarray(qq, np.int32))
+        dk = np.abs(np.asarray(kq_f, np.int32) - np.asarray(kq, np.int32))
+        assert dq.max() <= 1 and dk.max() <= 1
+        assert (dq > 0).mean() < 0.01 and (dk > 0).mean() < 0.01

@@ -1,0 +1,64 @@
+"""Synthetic distribution generator tests: the Figure-4 structure must
+actually hold, since every accuracy table rests on it."""
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import quant, synth
+
+
+class TestProfiles:
+    def test_k_channel_bias_dominates_in_diffusion_profile(self, key):
+        _, k, _ = synth.make_qkv(key, (1, 1, 512, 64), synth.DIFFUSION_LIKE)
+        mean = jnp.mean(k, axis=-2)       # (1, 1, 64) per-channel bias
+        resid = k - mean[..., None, :]
+        ratio = float(jnp.mean(jnp.abs(mean))) / float(jnp.std(resid))
+        assert ratio > 3.0, f"bias/signal ratio {ratio}"
+
+    def test_llama_profile_is_benign(self, key):
+        _, k, _ = synth.make_qkv(key, (1, 1, 512, 64), synth.LLAMA_LIKE)
+        mean = jnp.mean(k, axis=-2)
+        resid = k - mean[..., None, :]
+        ratio = float(jnp.mean(jnp.abs(mean))) / float(jnp.std(resid))
+        assert ratio < 3.0
+
+    def test_v_has_channel_structure(self, key):
+        _, _, v = synth.make_qkv(key, (1, 1, 512, 64), synth.DIFFUSION_LIKE)
+        chan_std = jnp.std(v, axis=-2)[0, 0]     # (64,)
+        spread = float(jnp.max(chan_std) / jnp.min(chan_std))
+        assert spread > 3.0, f"V channel spread {spread}"
+
+    def test_quant_error_ordering_matches_figure3(self, key):
+        """Unsmoothed per-token INT8 K-quantization must drown the useful
+        (token-varying) signal on the diffusion profile but not on the
+        llama profile — the distributional fact behind Figure 3 / Table 18.
+
+        The right denominator is the *centered* signal: the shared channel
+        bias cancels inside softmax, so what matters is quantization noise
+        (whose step scales with the large biased magnitudes) relative to
+        the small residual that actually carries attention information.
+        """
+        def signal_to_noise(profile):
+            _, k, _ = synth.make_qkv(key, (1, 1, 256, 64), profile)
+            noise = k - quant.fake_quant(k, "int8_token")
+            signal = k - jnp.mean(k, axis=-2, keepdims=True)
+            return float(jnp.std(signal) / jnp.std(noise))
+        assert signal_to_noise(synth.LLAMA_LIKE) > 3.0 * signal_to_noise(
+            synth.DIFFUSION_LIKE)
+
+    def test_layer_sweep_increasing_severity(self, key):
+        shapes = []
+        errs = []
+        for _, (q, k, v) in synth.layer_sweep(key, 6, (1, 1, 128, 64)):
+            deq = quant.fake_quant(k, "int8_token")
+            errs.append(float(jnp.mean(jnp.abs(k - deq))))
+            shapes.append(k.shape)
+        assert all(s == (1, 1, 128, 64) for s in shapes)
+        # later layers (stronger outliers) quantize worse on average
+        assert sum(errs[3:]) > sum(errs[:3])
+
+    def test_deterministic(self, key):
+        a = synth.make_qkv(key, (1, 1, 16, 16), synth.VIT_LIKE)
+        b = synth.make_qkv(key, (1, 1, 16, 16), synth.VIT_LIKE)
+        for x, y in zip(a, b):
+            assert bool(jnp.all(x == y))

@@ -1,0 +1,43 @@
+//! Figure 2 reproduction: share of end-to-end layer latency spent in
+//! attention vs linear layers as sequence length grows (Llama-7B-shaped
+//! transformer layer, RTX4090 cost model).
+//!
+//! Paper's point: past ~8k tokens attention dominates everything else,
+//! which is why quantizing only the linear layers stops helping.
+
+use sageattention::bench::{f1, Table};
+use sageattention::perfmodel::{predict, AttnKernel, Workpoint, RTX4090};
+
+fn main() {
+    // Llama2-7B layer: d_model 4096, 32 heads × 128, d_ff 11008
+    let (d_model, heads, d_head, d_ff) = (4096.0f64, 32, 128, 11008.0f64);
+    let batch = 1;
+
+    let mut t = Table::new(&[
+        "seq",
+        "attn_ms",
+        "linear_ms",
+        "attn_share",
+        "attn_share(FA2)",
+    ]);
+    for n in [1024usize, 2048, 4096, 8192, 16384, 32768, 65536, 131072] {
+        let wp = Workpoint::square(batch, heads, n, d_head, true);
+        let attn_naive = predict(&RTX4090, AttnKernel::TorchNaive, wp).total_s * 1e3;
+        let attn_fa2 = predict(&RTX4090, AttnKernel::FlashAttention2, wp).total_s * 1e3;
+        // linear layers: qkv+out proj (4·d²) + mlp (3·d·d_ff) per token,
+        // fp16 tensor cores at FA2-like efficiency
+        let flops = 2.0 * n as f64 * (4.0 * d_model * d_model + 3.0 * d_model * d_ff);
+        let linear_ms = flops / (RTX4090.fp16_fp32acc_tflops * 1e12 * 0.75) * 1e3;
+        let share = attn_naive / (attn_naive + linear_ms) * 100.0;
+        let share_fa2 = attn_fa2 / (attn_fa2 + linear_ms) * 100.0;
+        t.row(&[
+            n.to_string(),
+            f1(attn_naive),
+            f1(linear_ms),
+            f1(share) + "%",
+            f1(share_fa2) + "%",
+        ]);
+    }
+    t.print("Figure 2: attention latency share per transformer layer (RTX4090 model)");
+    println!("\npaper shape check: attention share must dominate (>50%) by 8k-16k");
+}

@@ -1,0 +1,89 @@
+//! Hot-path micro-benchmarks (the §Perf instrument): rust-native kernel
+//! planes, quantizers, PJRT artifact dispatch, and the serving engine's
+//! decode step. Run before/after every optimization; numbers land in
+//! EXPERIMENTS.md §Perf.
+
+use sageattention::attn::{attention, AttnImpl, SAGE_B, SAGE_VB};
+use sageattention::bench::{bench_budget, Table};
+use sageattention::coordinator::{Engine, GenParams, Request};
+use sageattention::quant::{self, Granularity};
+use sageattention::runtime::{Runtime, Value};
+use sageattention::synth::{make_qkv, Profile};
+use std::time::Duration;
+
+fn main() {
+    let budget = Duration::from_secs(3);
+    let mut t = Table::new(&["case", "median", "p90", "iters"]);
+    let mut push = |s: sageattention::bench::Sample| {
+        t.row(&[
+            s.name.clone(),
+            format!("{:.3} ms", s.median_s() * 1e3),
+            format!("{:.3} ms", s.p90.as_secs_f64() * 1e3),
+            s.iters.to_string(),
+        ]);
+    };
+
+    // --- L3-native kernels ---
+    let (q, k, v) = make_qkv(1, [1, 8, 2048, 64], Profile::diffusion_like());
+    push(bench_budget("attn/online-fp32 1x8x2048x64", budget, 3, || {
+        std::hint::black_box(attention(&q, &k, &v, AttnImpl::OnlineFp32, false));
+    }));
+    push(bench_budget("attn/sage-B 1x8x2048x64", budget, 3, || {
+        std::hint::black_box(attention(&q, &k, &v, SAGE_B, false));
+    }));
+    push(bench_budget("attn/sage-vB 1x8x2048x64", budget, 3, || {
+        std::hint::black_box(attention(&q, &k, &v, SAGE_VB, false));
+    }));
+
+    // --- quantizers ---
+    let plane = q.head(0, 0).to_vec();
+    push(bench_budget("quant/per-token 2048x64", budget, 20, || {
+        std::hint::black_box(quant::quantize(&plane, 2048, 64, Granularity::PerToken));
+    }));
+    push(bench_budget("quant/per-block 2048x64", budget, 20, || {
+        std::hint::black_box(quant::quantize(&plane, 2048, 64, Granularity::PerBlock(128)));
+    }));
+    push(bench_budget("quant/smooth-k 2048x64", budget, 20, || {
+        std::hint::black_box(quant::smooth_k(&plane, 2048, 64));
+    }));
+
+    // --- PJRT dispatch + serving engine ---
+    match Runtime::open(Runtime::default_dir()) {
+        Ok(rt) => {
+            if let Ok(art) = rt.load("attn_sage_b_1x2x256x64") {
+                let (q, k, v) = make_qkv(2, [1, 2, 256, 64], Profile::llama_like());
+                let inputs = [
+                    Value::from_tensor(&q),
+                    Value::from_tensor(&k),
+                    Value::from_tensor(&v),
+                ];
+                push(bench_budget("pjrt/attn artifact 1x2x256x64", budget, 5, || {
+                    std::hint::black_box(art.run(&inputs).unwrap());
+                }));
+            }
+            if let Ok(mut engine) = Engine::new(&rt, "tiny", "sage", 1) {
+                let sizes = engine.prefill_sizes();
+                let mut next_id = 0u64;
+                let mut refill = |engine: &mut Engine| {
+                    while engine.free_slots() > 0 {
+                        let _ = engine.add_request(&Request::new(
+                            next_id,
+                            vec![1; sizes[0]],
+                            GenParams { max_new_tokens: 64, ..Default::default() },
+                        ));
+                        next_id += 1;
+                    }
+                };
+                refill(&mut engine);
+                push(bench_budget("engine/decode-step tiny b2", budget, 5, || {
+                    // keep the decode batch full so every step is full-width
+                    std::hint::black_box(engine.step().unwrap());
+                    refill(&mut engine);
+                }));
+            }
+        }
+        Err(e) => println!("(artifacts unavailable: {e})"),
+    }
+
+    t.print("hot-path micro-benchmarks");
+}

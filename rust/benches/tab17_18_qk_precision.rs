@@ -1,0 +1,78 @@
+//! Tables 17 & 18 reproduction.
+//!
+//! Table 17: precision of the raw Q·Kᵀ product under per-token INT8 /
+//! E4M3 / E5M2 quantization (outlier-heavy activations, "layer 24 of
+//! Unidiffuser" — our deepest-severity synthetic layer).
+//!
+//! Table 18: full-attention error with vs without smooth-K for the three
+//! Q/K granularities, against the FlashAttention3-quantized baseline.
+
+use sageattention::attn::{attention, attention_dtype_sim, qk_product_dtype_sim, AttnImpl, Fmt};
+use sageattention::bench::{f3, pct, sci, Table};
+use sageattention::metrics::{accuracy, cos_sim, rel_l1};
+use sageattention::quant::{Fp8Format, Granularity};
+use sageattention::synth::{make_qkv, Profile};
+
+fn main() {
+    // ---- Table 17: Q·K product precision ----
+    // "layer 24" regime: strongest outliers in the sweep
+    let profile = Profile::diffusion_like().with_severity(4.0);
+    let (q, k, _) = make_qkv(24, [1, 1, 512, 64], profile);
+    let (n, d) = (512, 64);
+    let qp = q.head(0, 0);
+    let kp = k.head(0, 0);
+    // smooth-K first — Table 17 measures the quantization format alone
+    // paper Table 17 measures the raw (unsmoothed) activations of the layer
+    let exact = qk_product_dtype_sim(qp, kp, n, n, d, Fmt::Fp32);
+    let mut t = Table::new(&["data type", "CosSim", "Relative L1"]);
+    for fmt in [Fmt::Int8, Fmt::E4M3, Fmt::E5M2] {
+        let s = qk_product_dtype_sim(qp, kp, n, n, d, fmt);
+        t.row(&[
+            fmt.name().into(),
+            pct(cos_sim(&exact, &s) as f64),
+            f3(rel_l1(&exact, &s) as f64),
+        ]);
+    }
+    t.print("Table 17: Q·K precision under per-token quantization (outlier layer)");
+    println!("paper: INT8 99.54%/0.084 > E4M3 92.83%/0.342 > E5M2 77.95%/0.681");
+
+    // ---- Table 18: smooth-K ablation over granularities ----
+    let (q, k, v) = make_qkv(18, [1, 4, 512, 64], Profile::diffusion_like().with_severity(4.0));
+    let gold = attention(&q, &k, &v, AttnImpl::Exact, false);
+    let mut t = Table::new(&["quantization", "smooth K", "CosSim", "RelL1", "RMSE"]);
+    for (label, gran) in [
+        ("Per-token (SageAttn-T)", Granularity::PerToken),
+        ("Per-block (SageAttn-B)", Granularity::PerBlock(128)),
+        ("Per-tensor", Granularity::PerTensor),
+    ] {
+        for smooth in [false, true] {
+            let o = attention_dtype_sim(&q, &k, &v, Fmt::Int8, gran, Fmt::Fp16, smooth, false);
+            let a = accuracy(&gold.data, &o.data);
+            t.row(&[
+                label.into(),
+                if smooth { "with" } else { "without" }.into(),
+                pct(a.cos_sim as f64),
+                f3(a.rel_l1 as f64),
+                sci(a.rmse as f64),
+            ]);
+        }
+    }
+    let fa3 = attention(
+        &q,
+        &k,
+        &v,
+        AttnImpl::Fp8 { qk: Fp8Format::E4M3, pv: Fp8Format::E4M3 },
+        false,
+    );
+    let a = accuracy(&gold.data, &fa3.data);
+    t.row(&[
+        "FlashAttention-3 (quantized)".into(),
+        "-".into(),
+        pct(a.cos_sim as f64),
+        f3(a.rel_l1 as f64),
+        sci(a.rmse as f64),
+    ]);
+    t.print("Table 18: quantized attention error, with vs without smooth-K");
+    println!("\npaper shape: 'without' rows collapse (cos 30–62%), 'with' rows >98%;");
+    println!("FA3-quant lands near the collapsed rows on outlier data (26.76%).");
+}

@@ -1,0 +1,225 @@
+//! Numeric-format sweep attention (Tables 2, 3, 17, 18): run attention
+//! with (Q,K) and (P̃,V) independently forced through a chosen storage
+//! format, everything else in fp32. This isolates *format* error from
+//! kernel/tiling error, matching the paper's methodology ("accuracy using
+//! different data types across all layers").
+
+use crate::quant::{FakeQuant, Granularity};
+use crate::tensor::{default_threads, parallel_map, Tensor};
+
+/// Storage format for a matrix pair in the sweep.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Fmt {
+    Int8,
+    E4M3,
+    E5M2,
+    Fp16,
+    Fp32,
+}
+
+impl Fmt {
+    pub fn name(self) -> &'static str {
+        match self {
+            Fmt::Int8 => "INT8",
+            Fmt::E4M3 => "E4M3",
+            Fmt::E5M2 => "E5M2",
+            Fmt::Fp16 => "FP16",
+            Fmt::Fp32 => "FP32",
+        }
+    }
+
+    fn to_fake(self, granularity: Granularity) -> FakeQuant {
+        match self {
+            Fmt::Int8 => FakeQuant::Int8(granularity),
+            Fmt::E4M3 => FakeQuant::Fp8(crate::quant::Fp8Format::E4M3),
+            Fmt::E5M2 => FakeQuant::Fp8(crate::quant::Fp8Format::E5M2),
+            Fmt::Fp16 => FakeQuant::Fp16,
+            Fmt::Fp32 => FakeQuant::None,
+        }
+    }
+}
+
+/// Attention with (Q,K) in `qk_fmt` (at `qk_gran`, after optional
+/// smooth-K) and (P̃,V) in `pv_fmt` (P̃ per-block static scale semantics,
+/// V per-channel for INT8; per-token scaling for FP8 — mirroring §4.3's
+/// feasible-granularity table). Softmax in fp32.
+pub fn attention_dtype_sim(
+    q: &Tensor,
+    k: &Tensor,
+    v: &Tensor,
+    qk_fmt: Fmt,
+    qk_gran: Granularity,
+    pv_fmt: Fmt,
+    smooth_k: bool,
+    causal: bool,
+) -> Tensor {
+    let (b, h, n_q, d) = q.dims4();
+    let (_, _, n_kv, _) = k.dims4();
+    let planes = parallel_map(b * h, default_threads(), |idx| {
+        let (bi, hi) = (idx / h, idx % h);
+        plane_dtype_sim(
+            q.head(bi, hi),
+            k.head(bi, hi),
+            v.head(bi, hi),
+            n_q,
+            n_kv,
+            d,
+            qk_fmt,
+            qk_gran,
+            pv_fmt,
+            smooth_k,
+            causal,
+        )
+    });
+    let mut out = Tensor::zeros(&[b, h, n_q, d]);
+    for (idx, plane) in planes.into_iter().enumerate() {
+        out.head_mut(idx / h, idx % h).copy_from_slice(&plane);
+    }
+    out
+}
+
+/// Error of the Q·Kᵀ product alone under a format (Table 17).
+pub fn qk_product_dtype_sim(
+    q: &[f32],
+    k: &[f32],
+    n_q: usize,
+    n_kv: usize,
+    d: usize,
+    fmt: Fmt,
+) -> Vec<f32> {
+    let qf = crate::quant::fake_quant(q, n_q, d, fmt.to_fake(Granularity::PerToken));
+    let kf = crate::quant::fake_quant(k, n_kv, d, fmt.to_fake(Granularity::PerToken));
+    let mut s = vec![0.0f32; n_q * n_kv];
+    for i in 0..n_q {
+        for j in 0..n_kv {
+            s[i * n_kv + j] = qf[i * d..(i + 1) * d]
+                .iter()
+                .zip(&kf[j * d..(j + 1) * d])
+                .map(|(a, b)| a * b)
+                .sum();
+        }
+    }
+    s
+}
+
+#[allow(clippy::too_many_arguments)]
+fn plane_dtype_sim(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    n_q: usize,
+    n_kv: usize,
+    d: usize,
+    qk_fmt: Fmt,
+    qk_gran: Granularity,
+    pv_fmt: Fmt,
+    smooth_k: bool,
+    causal: bool,
+) -> Vec<f32> {
+    use crate::quant;
+    let scale = 1.0 / (d as f32).sqrt();
+    let q_scaled: Vec<f32> = q.iter().map(|&x| x * scale).collect();
+    let k_src = if smooth_k {
+        quant::smooth_k(k, n_kv, d).0
+    } else {
+        k.to_vec()
+    };
+    let qf = quant::fake_quant(&q_scaled, n_q, d, qk_fmt.to_fake(qk_gran));
+    let kf = quant::fake_quant(&k_src, n_kv, d, qk_fmt.to_fake(qk_gran));
+    // V: per-channel for INT8 (§4.3 point 3), per-token scaling otherwise
+    let v_kind = match pv_fmt {
+        Fmt::Int8 => FakeQuant::Int8(Granularity::PerChannel),
+        other => other.to_fake(Granularity::PerToken),
+    };
+    let vf = quant::fake_quant(v, n_kv, d, v_kind);
+
+    let mut out = vec![0.0f32; n_q * d];
+    let mut s = vec![0.0f32; n_kv];
+    for i in 0..n_q {
+        let limit = if causal { (i + n_kv - n_q + 1).min(n_kv) } else { n_kv };
+        let qi = &qf[i * d..(i + 1) * d];
+        let mut m = -1e30f32;
+        for (j, sj) in s.iter_mut().enumerate().take(limit) {
+            *sj = qi
+                .iter()
+                .zip(&kf[j * d..(j + 1) * d])
+                .map(|(a, b)| a * b)
+                .sum();
+            m = m.max(*sj);
+        }
+        // P̃ = exp(s - m) ∈ [0,1]; force through the P format
+        let mut l = 0.0f32;
+        for sj in s.iter_mut().take(limit) {
+            let p = (*sj - m).exp();
+            *sj = match pv_fmt {
+                Fmt::Int8 => (p * 127.0).round() / 127.0, // static 1/127 scale
+                Fmt::E4M3 => crate::quant::Fp8Format::E4M3.round(p),
+                Fmt::E5M2 => crate::quant::Fp8Format::E5M2.round(p),
+                Fmt::Fp16 => crate::util::f16::round_f16(p),
+                Fmt::Fp32 => p,
+            };
+            l += *sj;
+        }
+        let o = &mut out[i * d..(i + 1) * d];
+        for (j, &p) in s.iter().enumerate().take(limit) {
+            if p == 0.0 {
+                continue;
+            }
+            for (oc, &vc) in o.iter_mut().zip(&vf[j * d..(j + 1) * d]) {
+                *oc += p * vc;
+            }
+        }
+        let inv = 1.0 / l.max(1e-30);
+        for oc in o.iter_mut() {
+            *oc *= inv;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attn::{attention, AttnImpl};
+    use crate::metrics::cos_sim;
+    use crate::synth::{make_qkv, Profile};
+
+    #[test]
+    fn fp32_everything_matches_exact() {
+        let (q, k, v) = make_qkv(1, [1, 2, 96, 32], Profile::diffusion_like());
+        let a = attention_dtype_sim(
+            &q, &k, &v, Fmt::Fp32, Granularity::PerToken, Fmt::Fp32, false, false);
+        let b = attention(&q, &k, &v, AttnImpl::Exact, false);
+        assert!(cos_sim(&a.data, &b.data) > 0.99999);
+    }
+
+    #[test]
+    fn table2_ordering_int8_qk_beats_fp8() {
+        // Table 2: with (P,V) fixed, INT8 (Q,K) > E4M3 > E5M2
+        let (q, k, v) = make_qkv(2, [1, 2, 192, 64], Profile::diffusion_like());
+        let gold = attention(&q, &k, &v, AttnImpl::Exact, false);
+        let mut cs = Vec::new();
+        for fmt in [Fmt::Int8, Fmt::E4M3, Fmt::E5M2] {
+            let o = attention_dtype_sim(
+                &q, &k, &v, fmt, Granularity::PerToken, Fmt::Fp16, true, false);
+            cs.push(cos_sim(&gold.data, &o.data));
+        }
+        assert!(cs[0] >= cs[1] && cs[1] >= cs[2], "{cs:?}");
+    }
+
+    #[test]
+    fn fp16_pv_beats_int8_pv() {
+        // Table 3's punchline: FP16 (P,V) is far more robust than INT8
+        let (q, k, v) = make_qkv(
+            3,
+            [1, 2, 192, 64],
+            Profile::diffusion_like().with_severity(3.0),
+        );
+        let gold = attention(&q, &k, &v, AttnImpl::Exact, false);
+        let fp16 = attention_dtype_sim(
+            &q, &k, &v, Fmt::Int8, Granularity::PerToken, Fmt::Fp16, true, false);
+        let int8 = attention_dtype_sim(
+            &q, &k, &v, Fmt::Int8, Granularity::PerToken, Fmt::Int8, true, false);
+        assert!(cos_sim(&gold.data, &fp16.data) >= cos_sim(&gold.data, &int8.data));
+    }
+}

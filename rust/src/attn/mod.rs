@@ -1,0 +1,262 @@
+//! Rust-native attention implementations: the fp32 references and the four
+//! SageAttention variants (paper Table 6), numerically mirroring the Pallas
+//! kernels in `python/compile/kernels/`. These power the accuracy tables,
+//! the adaptive-quantization calibrator and the CPU-side benches without
+//! paying PJRT dispatch overhead.
+//!
+//! Layout: tensors are (B, H, N, d); per-(batch, head) planes are processed
+//! independently (parallelized with scoped threads).
+
+pub mod dtype_sim;
+mod plane;
+
+pub use dtype_sim::{attention_dtype_sim, qk_product_dtype_sim, Fmt};
+pub use plane::{exact_plane, online_plane, sage_plane};
+
+use crate::quant::{Fp8Format, Granularity};
+use crate::tensor::{default_threads, parallel_map, Tensor};
+
+/// P·V computation mode (paper §4.3–§4.4).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PvMode {
+    /// FP16 operands + FP16 accumulator — mma(f16.f16.f16.f16), the paper's
+    /// accurate-and-fast choice (2× the FP32-accumulator rate on RTX4090).
+    Fp16Accum,
+    /// FP16 operands + FP32 accumulator — mma(f16.f16.f32.f32) baseline.
+    Fp32Accum,
+    /// INT8 P̃ (static δ=1/127 per block) × per-channel INT8 V.
+    Int8,
+}
+
+/// One attention kernel configuration (a row of Table 6, or a baseline).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum AttnImpl {
+    /// Exact fp32 softmax(QKᵀ/√d)V — the accuracy gold standard.
+    Exact,
+    /// FlashAttention-2 tiling in fp32 (online softmax) — speed baseline's
+    /// numerics.
+    OnlineFp32,
+    /// A SageAttention variant: INT8 Q/K at the given granularity plus a
+    /// P·V mode. `smooth_k` toggles §4.2.
+    Sage { qk: Granularity, pv: PvMode, smooth_k: bool },
+    /// FlashAttention3-style FP8: all four matrices quantized per-token to
+    /// the given formats ((Q,K) fmt, (P,V) fmt), fp32 accumulators.
+    Fp8 { qk: Fp8Format, pv: Fp8Format },
+}
+
+pub const SAGE_T: AttnImpl = AttnImpl::Sage {
+    qk: Granularity::PerToken,
+    pv: PvMode::Fp16Accum,
+    smooth_k: true,
+};
+pub const SAGE_B: AttnImpl = AttnImpl::Sage {
+    qk: Granularity::PerBlock(BLOCK_Q),
+    pv: PvMode::Fp16Accum,
+    smooth_k: true,
+};
+pub const SAGE_VT: AttnImpl = AttnImpl::Sage {
+    qk: Granularity::PerToken,
+    pv: PvMode::Int8,
+    smooth_k: true,
+};
+pub const SAGE_VB: AttnImpl = AttnImpl::Sage {
+    qk: Granularity::PerBlock(BLOCK_Q),
+    pv: PvMode::Int8,
+    smooth_k: true,
+};
+
+/// Paper Table 12: Q-block 128, K/V-block 64.
+pub const BLOCK_Q: usize = 128;
+pub const BLOCK_KV: usize = 64;
+
+impl AttnImpl {
+    pub fn by_name(name: &str) -> Option<AttnImpl> {
+        Some(match name {
+            "exact" => AttnImpl::Exact,
+            "online" => AttnImpl::OnlineFp32,
+            "SageAttn-T" => SAGE_T,
+            "SageAttn-B" => SAGE_B,
+            "SageAttn-vT" => SAGE_VT,
+            "SageAttn-vB" => SAGE_VB,
+            "fa3-fp8" => AttnImpl::Fp8 { qk: Fp8Format::E4M3, pv: Fp8Format::E4M3 },
+            _ => return None,
+        })
+    }
+
+    pub fn name(&self) -> String {
+        match self {
+            AttnImpl::Exact => "exact".into(),
+            AttnImpl::OnlineFp32 => "online".into(),
+            AttnImpl::Fp8 { qk, pv } => format!("fp8({},{})", qk.name(), pv.name()),
+            AttnImpl::Sage { qk, pv, smooth_k } => {
+                let g = match qk {
+                    Granularity::PerToken => "T",
+                    Granularity::PerBlock(_) => "B",
+                    Granularity::PerTensor => "tensor",
+                    Granularity::PerChannel => "chan",
+                };
+                let p = match pv {
+                    PvMode::Fp16Accum => "",
+                    PvMode::Fp32Accum => "+fp32acc",
+                    PvMode::Int8 => "v",
+                };
+                let s = if *smooth_k { "" } else { "-nosmooth" };
+                format!("SageAttn-{p}{g}{s}")
+            }
+        }
+    }
+}
+
+/// Multi-head attention over (B, H, N, d) tensors. `n_kv_valid` masks a
+/// padded KV suffix (serving: dense cache longer than the live prefix).
+pub fn attention(q: &Tensor, k: &Tensor, v: &Tensor, imp: AttnImpl, causal: bool) -> Tensor {
+    let (b, h, n_q, d) = q.dims4();
+    let (_, _, n_kv, _) = k.dims4();
+    assert_eq!(k.dims4().3, d);
+    assert_eq!(v.dims4(), k.dims4());
+
+    let planes = parallel_map(b * h, default_threads(), |idx| {
+        let (bi, hi) = (idx / h, idx % h);
+        run_plane(
+            q.head(bi, hi),
+            k.head(bi, hi),
+            v.head(bi, hi),
+            n_q,
+            n_kv,
+            d,
+            imp,
+            causal,
+        )
+    });
+    let mut out = Tensor::zeros(&[b, h, n_q, d]);
+    for (idx, plane) in planes.into_iter().enumerate() {
+        let (bi, hi) = (idx / h, idx % h);
+        out.head_mut(bi, hi).copy_from_slice(&plane);
+    }
+    out
+}
+
+#[allow(clippy::too_many_arguments)]
+fn run_plane(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    n_q: usize,
+    n_kv: usize,
+    d: usize,
+    imp: AttnImpl,
+    causal: bool,
+) -> Vec<f32> {
+    match imp {
+        AttnImpl::Exact => exact_plane(q, k, v, n_q, n_kv, d, causal),
+        AttnImpl::OnlineFp32 => online_plane(q, k, v, n_q, n_kv, d, causal),
+        AttnImpl::Sage { qk, pv, smooth_k } => {
+            sage_plane(q, k, v, n_q, n_kv, d, qk, pv, smooth_k, causal)
+        }
+        AttnImpl::Fp8 { qk, pv } => plane::fp8_plane(q, k, v, n_q, n_kv, d, qk, pv, causal),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::cos_sim;
+    use crate::synth::{make_qkv, Profile};
+
+    fn gen(seed: u64, shape: [usize; 4], profile: Profile) -> (Tensor, Tensor, Tensor) {
+        make_qkv(seed, shape, profile)
+    }
+
+    #[test]
+    fn online_matches_exact() {
+        let (q, k, v) = gen(1, [1, 2, 300, 64], Profile::diffusion_like());
+        let a = attention(&q, &k, &v, AttnImpl::Exact, false);
+        let b = attention(&q, &k, &v, AttnImpl::OnlineFp32, false);
+        let err = a
+            .data
+            .iter()
+            .zip(&b.data)
+            .map(|(x, y)| (x - y).abs())
+            .fold(0.0f32, f32::max);
+        assert!(err < 1e-4, "max err {err}");
+    }
+
+    #[test]
+    fn online_matches_exact_causal() {
+        let (q, k, v) = gen(2, [2, 2, 200, 64], Profile::llama_like());
+        let a = attention(&q, &k, &v, AttnImpl::Exact, true);
+        let b = attention(&q, &k, &v, AttnImpl::OnlineFp32, true);
+        let err = a
+            .data
+            .iter()
+            .zip(&b.data)
+            .map(|(x, y)| (x - y).abs())
+            .fold(0.0f32, f32::max);
+        assert!(err < 1e-4, "max err {err}");
+    }
+
+    #[test]
+    fn sage_variants_track_exact() {
+        let (q, k, v) = gen(3, [1, 2, 256, 64], Profile::diffusion_like());
+        let gold = attention(&q, &k, &v, AttnImpl::Exact, false);
+        for (imp, min_cos) in [
+            (SAGE_T, 0.999),
+            (SAGE_B, 0.999),
+            (SAGE_VT, 0.99),
+            (SAGE_VB, 0.99),
+        ] {
+            let o = attention(&q, &k, &v, imp, false);
+            let c = cos_sim(&gold.data, &o.data);
+            assert!(c > min_cos, "{}: cos {c}", imp.name());
+        }
+    }
+
+    #[test]
+    fn smoothing_matters_under_outliers() {
+        let (q, k, v) = gen(4, [1, 2, 256, 64], Profile::diffusion_like());
+        let gold = attention(&q, &k, &v, AttnImpl::Exact, false);
+        let with = attention(&q, &k, &v, SAGE_T, false);
+        let without = attention(
+            &q,
+            &k,
+            &v,
+            AttnImpl::Sage {
+                qk: Granularity::PerToken,
+                pv: PvMode::Fp16Accum,
+                smooth_k: false,
+            },
+            false,
+        );
+        let cw = cos_sim(&gold.data, &with.data);
+        let cwo = cos_sim(&gold.data, &without.data);
+        assert!(cw > cwo, "smooth {cw} vs raw {cwo}");
+        assert!(cw > 0.999);
+    }
+
+    #[test]
+    fn causal_upper_triangle_ignored() {
+        // output at query i must not depend on keys > i
+        let (q, k, v) = gen(5, [1, 1, 64, 32], Profile::llama_like());
+        let o1 = attention(&q, &k, &v, SAGE_T, true);
+        let mut k2 = k.clone();
+        let mut v2 = v.clone();
+        // perturb the last key/value; first-row output must be unchanged
+        let n = 64 * 32;
+        for c in 0..32 {
+            k2.data[n - 32 + c] += 100.0;
+            v2.data[n - 32 + c] -= 50.0;
+        }
+        let o2 = attention(&q, &k2, &v2, SAGE_T, true);
+        // Per-token quantization of K changes only the last row's scale;
+        // smooth-K's mean shift cancels in softmax. First query row should
+        // be (nearly) identical.
+        for c in 0..32 {
+            assert!(
+                (o1.data[c] - o2.data[c]).abs() < 2e-2,
+                "leak at col {c}: {} vs {}",
+                o1.data[c],
+                o2.data[c]
+            );
+        }
+    }
+}

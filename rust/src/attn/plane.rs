@@ -1,0 +1,413 @@
+//! Per-(batch, head) attention kernels over contiguous (N, d) planes.
+//! These mirror the Pallas kernels' numerics exactly: FlashAttention-2
+//! tiling (Q-block 128, KV-block 64), INT8 S-tile with row/col scale
+//! dequantization, fp32 online softmax, and either the simulated-FP16
+//! accumulator or the INT8 P·V path.
+
+use crate::quant::{self, Fp8Format, Granularity};
+use crate::util::f16::{round_f16, round_f16_slice};
+
+use super::{PvMode, BLOCK_KV, BLOCK_Q};
+
+const NEG_BIG: f32 = -1e30;
+
+/// Exact fp32 attention — softmax(QKᵀ/√d)V with a numerically stable
+/// row-wise softmax.
+pub fn exact_plane(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    n_q: usize,
+    n_kv: usize,
+    d: usize,
+    causal: bool,
+) -> Vec<f32> {
+    let scale = 1.0 / (d as f32).sqrt();
+    let mut out = vec![0.0f32; n_q * d];
+    let mut s = vec![0.0f32; n_kv];
+    for i in 0..n_q {
+        let qi = &q[i * d..(i + 1) * d];
+        let limit = causal_limit(i, n_q, n_kv, causal);
+        let mut m = NEG_BIG;
+        for (j, sj) in s.iter_mut().enumerate().take(limit) {
+            let kj = &k[j * d..(j + 1) * d];
+            let dot: f32 = qi.iter().zip(kj).map(|(a, b)| a * b).sum();
+            *sj = dot * scale;
+            m = m.max(*sj);
+        }
+        let mut l = 0.0f32;
+        for sj in s.iter_mut().take(limit) {
+            *sj = (*sj - m).exp();
+            l += *sj;
+        }
+        let o = &mut out[i * d..(i + 1) * d];
+        for (j, &p) in s.iter().enumerate().take(limit) {
+            let vj = &v[j * d..(j + 1) * d];
+            for (oc, &vc) in o.iter_mut().zip(vj) {
+                *oc += p * vc;
+            }
+        }
+        let inv = 1.0 / l.max(1e-30);
+        for oc in o.iter_mut() {
+            *oc *= inv;
+        }
+    }
+    out
+}
+
+/// Highest attendable key index + 1 for query `i` (queries aligned to the
+/// end of the KV sequence, the decode convention).
+#[inline]
+fn causal_limit(i: usize, n_q: usize, n_kv: usize, causal: bool) -> usize {
+    if causal {
+        (i + n_kv - n_q + 1).min(n_kv)
+    } else {
+        n_kv
+    }
+}
+
+/// FlashAttention-2 fp32 tiling (Eq. 1–2) — validates the online-softmax
+/// recurrence and serves as the full-precision speed baseline's numerics.
+pub fn online_plane(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    n_q: usize,
+    n_kv: usize,
+    d: usize,
+    causal: bool,
+) -> Vec<f32> {
+    let scale = 1.0 / (d as f32).sqrt();
+    let mut out = vec![0.0f32; n_q * d];
+    let mut s = vec![0.0f32; BLOCK_Q * BLOCK_KV];
+
+    let mut i0 = 0;
+    while i0 < n_q {
+        let iq = (i0 + BLOCK_Q).min(n_q);
+        let bq = iq - i0;
+        let mut m = vec![NEG_BIG; bq];
+        let mut l = vec![0.0f32; bq];
+        let mut acc = vec![0.0f32; bq * d];
+        let mut j0 = 0;
+        while j0 < n_kv {
+            let jk = (j0 + BLOCK_KV).min(n_kv);
+            let bk = jk - j0;
+            // S tile
+            for bi in 0..bq {
+                let limit = causal_limit(i0 + bi, n_q, n_kv, causal);
+                let qi = &q[(i0 + bi) * d..(i0 + bi + 1) * d];
+                for bj in 0..bk {
+                    let s_val = if j0 + bj < limit {
+                        let kj = &k[(j0 + bj) * d..(j0 + bj + 1) * d];
+                        qi.iter().zip(kj).map(|(a, b)| a * b).sum::<f32>() * scale
+                    } else {
+                        NEG_BIG
+                    };
+                    s[bi * BLOCK_KV + bj] = s_val;
+                }
+            }
+            // online softmax update
+            for bi in 0..bq {
+                let row = &mut s[bi * BLOCK_KV..bi * BLOCK_KV + bk];
+                let m_cur = row.iter().fold(NEG_BIG, |a, &b| a.max(b));
+                let m_new = m[bi].max(m_cur);
+                let alpha = (m[bi] - m_new).exp();
+                let mut row_sum = 0.0;
+                for p in row.iter_mut() {
+                    *p = (*p - m_new).exp();
+                    row_sum += *p;
+                }
+                l[bi] = alpha * l[bi] + row_sum;
+                m[bi] = m_new;
+                let o = &mut acc[bi * d..(bi + 1) * d];
+                for oc in o.iter_mut() {
+                    *oc *= alpha;
+                }
+                for (bj, &p) in row.iter().enumerate() {
+                    if p == 0.0 {
+                        continue;
+                    }
+                    let vj = &v[(j0 + bj) * d..(j0 + bj + 1) * d];
+                    for (oc, &vc) in o.iter_mut().zip(vj) {
+                        *oc += p * vc;
+                    }
+                }
+            }
+            j0 = jk;
+        }
+        for bi in 0..bq {
+            let inv = 1.0 / l[bi].max(1e-30);
+            let o = &mut out[(i0 + bi) * d..(i0 + bi + 1) * d];
+            for (oc, &ac) in o.iter_mut().zip(&acc[bi * d..(bi + 1) * d]) {
+                *oc = ac * inv;
+            }
+        }
+        i0 = iq;
+    }
+    out
+}
+
+/// SageAttention plane (Alg. 1): INT8 QKᵀ + fp32 online softmax + the
+/// selected P·V mode. Mirrors `python/compile/kernels/sage_attn.py`.
+#[allow(clippy::too_many_arguments)]
+pub fn sage_plane(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    n_q: usize,
+    n_kv: usize,
+    d: usize,
+    qk_gran: Granularity,
+    pv: PvMode,
+    smooth: bool,
+    causal: bool,
+) -> Vec<f32> {
+    assert!(d <= 256, "head_dim > 256 unsupported by the native sage kernel");
+    // ---- quantize Q (with folded 1/√d) and K (after smooth-K) ----
+    let scale = 1.0 / (d as f32).sqrt();
+    let q_scaled: Vec<f32> = q.iter().map(|&x| x * scale).collect();
+    let k_sm;
+    let k_src: &[f32] = if smooth {
+        let (sm, _) = quant::smooth_k(k, n_kv, d);
+        k_sm = sm;
+        &k_sm
+    } else {
+        k
+    };
+    let qq = quant::quantize(&q_scaled, n_q, d, qk_gran);
+    let kq = quant::quantize(k_src, n_kv, d, qk_gran);
+
+    // ---- quantize / round V per P·V mode ----
+    let (v_i8, v_chan_scale, v_f16): (Vec<i8>, Vec<f32>, Vec<f32>) = match pv {
+        PvMode::Int8 => {
+            let vq = quant::quant_per_channel(v, n_kv, d);
+            (vq.data, vq.scales, Vec::new())
+        }
+        _ => (
+            Vec::new(),
+            Vec::new(),
+            v.iter().map(|&x| round_f16(x)).collect(),
+        ),
+    };
+
+    let mut out = vec![0.0f32; n_q * d];
+    let mut s = vec![0.0f32; BLOCK_Q * BLOCK_KV];
+    let mut p_i8 = vec![0i8; BLOCK_Q * BLOCK_KV];
+
+    let mut i0 = 0;
+    while i0 < n_q {
+        let iq = (i0 + BLOCK_Q).min(n_q);
+        let bq = iq - i0;
+        let mut m = vec![NEG_BIG; bq];
+        let mut l = vec![0.0f32; bq];
+        let mut acc = vec![0.0f32; bq * d]; // held as fp16 values when Fp16Accum
+        let mut j0 = 0;
+        while j0 < n_kv {
+            let jk = (j0 + BLOCK_KV).min(n_kv);
+            let bk = jk - j0;
+            // ---- S tile: mma(u8.u8.s32) + dequant ----
+            for bi in 0..bq {
+                let limit = causal_limit(i0 + bi, n_q, n_kv, causal);
+                let qi = &qq.data[(i0 + bi) * d..(i0 + bi + 1) * d];
+                let qs = qq.scales[i0 + bi];
+                for bj in 0..bk {
+                    let s_val = if j0 + bj < limit {
+                        let kj = &kq.data[(j0 + bj) * d..(j0 + bj + 1) * d];
+                        let dot = dot_i8(qi, kj);
+                        dot as f32 * qs * kq.scales[j0 + bj]
+                    } else {
+                        NEG_BIG
+                    };
+                    s[bi * BLOCK_KV + bj] = s_val;
+                }
+            }
+            // ---- online softmax (fp32) + P·V ----
+            for bi in 0..bq {
+                let row = &mut s[bi * BLOCK_KV..bi * BLOCK_KV + bk];
+                let m_cur = row.iter().fold(NEG_BIG, |a, &b| a.max(b));
+                let m_new = m[bi].max(m_cur);
+                let alpha = (m[bi] - m_new).exp();
+                let mut row_sum = 0.0;
+                for p in row.iter_mut() {
+                    *p = (*p - m_new).exp();
+                    row_sum += *p;
+                }
+                l[bi] = alpha * l[bi] + row_sum;
+                m[bi] = m_new;
+                let o = &mut acc[bi * d..(bi + 1) * d];
+                match pv {
+                    PvMode::Int8 => {
+                        // P̃ ∈ [0,1]: static per-block scale 1/127 (§4.3)
+                        let prow = &mut p_i8[..bk];
+                        for (pq, &p) in prow.iter_mut().zip(row.iter()) {
+                            *pq = (p * quant::INT8_MAX).round() as i8;
+                        }
+                        for oc in o.iter_mut() {
+                            *oc *= alpha;
+                        }
+                        // int32 accumulate over the block (row-major V
+                        // walk — contiguous loads vectorize), dequant once
+                        let mut acc_i32 = [0i32; 256];
+                        let acc_i32 = &mut acc_i32[..d];
+                        for (bj, &pq) in prow.iter().enumerate() {
+                            if pq == 0 {
+                                continue;
+                            }
+                            let p32 = pq as i32;
+                            let vrow = &v_i8[(j0 + bj) * d..(j0 + bj + 1) * d];
+                            for (a, &vc) in acc_i32.iter_mut().zip(vrow) {
+                                *a += p32 * vc as i32;
+                            }
+                        }
+                        for (oc, (&a, &vs)) in
+                            o.iter_mut().zip(acc_i32.iter().zip(&v_chan_scale[..d]))
+                        {
+                            *oc += a as f32 * (1.0 / quant::INT8_MAX) * vs;
+                        }
+                    }
+                    PvMode::Fp16Accum => {
+                        // rescale in registers, store rounded to fp16
+                        for oc in o.iter_mut() {
+                            *oc *= alpha;
+                        }
+                        round_f16_slice(o);
+                        // fp16 operands (P̃ rounded once per row, not per
+                        // output channel); accumulator rounded every
+                        // MMA_K=16 contraction steps (matches fp16_sim.py).
+                        // All roundings go through the F16C-vectorized
+                        // slice helper.
+                        let mut p16 = [0.0f32; BLOCK_KV];
+                        p16[..bk].copy_from_slice(&row[..bk]);
+                        round_f16_slice(&mut p16[..bk]);
+                        let mut part = [0.0f32; 256];
+                        let part = &mut part[..d];
+                        let mut bj = 0;
+                        while bj < bk {
+                            let je = (bj + 16).min(bk);
+                            part.fill(0.0);
+                            for t in bj..je {
+                                let p = p16[t];
+                                if p == 0.0 {
+                                    continue;
+                                }
+                                let vrow = &v_f16[(j0 + t) * d..(j0 + t + 1) * d];
+                                for (pc, &vc) in part.iter_mut().zip(vrow) {
+                                    *pc += p * vc;
+                                }
+                            }
+                            round_f16_slice(part);
+                            for (oc, &pc) in o.iter_mut().zip(part.iter()) {
+                                *oc += pc;
+                            }
+                            round_f16_slice(o);
+                            bj = je;
+                        }
+                    }
+                    PvMode::Fp32Accum => {
+                        for oc in o.iter_mut() {
+                            *oc *= alpha;
+                        }
+                        let mut p16 = [0.0f32; BLOCK_KV];
+                        p16[..bk].copy_from_slice(&row[..bk]);
+                        round_f16_slice(&mut p16[..bk]);
+                        for (bj, &p) in p16[..bk].iter().enumerate() {
+                            if p == 0.0 {
+                                continue;
+                            }
+                            let vrow = &v_f16[(j0 + bj) * d..(j0 + bj + 1) * d];
+                            for (oc, &vc) in o.iter_mut().zip(vrow) {
+                                *oc += p * vc;
+                            }
+                        }
+                    }
+                }
+            }
+            j0 = jk;
+        }
+        for bi in 0..bq {
+            let inv = 1.0 / l[bi].max(1e-30);
+            let o = &mut out[(i0 + bi) * d..(i0 + bi + 1) * d];
+            for (oc, &ac) in o.iter_mut().zip(&acc[bi * d..(bi + 1) * d]) {
+                *oc = ac * inv;
+            }
+        }
+        i0 = iq;
+    }
+    out
+}
+
+/// FlashAttention3-FP8-style plane: Q,K and P,V all FP8 per-token scaled,
+/// no smoothing, fp32 accumulation (the Hopper FP8 path's numerics).
+#[allow(clippy::too_many_arguments)]
+pub fn fp8_plane(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    n_q: usize,
+    n_kv: usize,
+    d: usize,
+    qk_fmt: Fp8Format,
+    pv_fmt: Fp8Format,
+    causal: bool,
+) -> Vec<f32> {
+    use crate::quant::FakeQuant;
+    let qf = quant::fake_quant(q, n_q, d, FakeQuant::Fp8(qk_fmt));
+    let kf = quant::fake_quant(k, n_kv, d, FakeQuant::Fp8(qk_fmt));
+    // V quantized per-token to FP8; P̃ rounded to FP8 inside the loop.
+    let vf = quant::fake_quant(v, n_kv, d, FakeQuant::Fp8(pv_fmt));
+    let scale = 1.0 / (d as f32).sqrt();
+    let mut out = vec![0.0f32; n_q * d];
+    let mut s = vec![0.0f32; n_kv];
+    for i in 0..n_q {
+        let qi = &qf[i * d..(i + 1) * d];
+        let limit = causal_limit(i, n_q, n_kv, causal);
+        let mut m = NEG_BIG;
+        for (j, sj) in s.iter_mut().enumerate().take(limit) {
+            let kj = &kf[j * d..(j + 1) * d];
+            let dot: f32 = qi.iter().zip(kj).map(|(a, b)| a * b).sum();
+            *sj = dot * scale;
+            m = m.max(*sj);
+        }
+        let mut l = 0.0f32;
+        for sj in s.iter_mut().take(limit) {
+            *sj = pv_fmt.round((*sj - m).exp());
+            l += *sj;
+        }
+        let o = &mut out[i * d..(i + 1) * d];
+        for (j, &p) in s.iter().enumerate().take(limit) {
+            if p == 0.0 {
+                continue;
+            }
+            let vj = &vf[j * d..(j + 1) * d];
+            for (oc, &vc) in o.iter_mut().zip(vj) {
+                *oc += p * vc;
+            }
+        }
+        let inv = 1.0 / l.max(1e-30);
+        for oc in o.iter_mut() {
+            *oc *= inv;
+        }
+    }
+    out
+}
+
+/// INT8 dot product with i32 accumulation — the mma(u8.u8.s32) primitive.
+/// Eight independent accumulator lanes let LLVM vectorize the i8→i32
+/// widening MACs (pmaddwd-shaped codegen on x86).
+#[inline]
+pub fn dot_i8(a: &[i8], b: &[i8]) -> i32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut lanes = [0i32; 8];
+    let mut ca = a.chunks_exact(8);
+    let mut cb = b.chunks_exact(8);
+    for (xa, xb) in ca.by_ref().zip(cb.by_ref()) {
+        for i in 0..8 {
+            lanes[i] += xa[i] as i32 * xb[i] as i32;
+        }
+    }
+    let mut acc: i32 = lanes.iter().sum();
+    for (x, y) in ca.remainder().iter().zip(cb.remainder()) {
+        acc += *x as i32 * *y as i32;
+    }
+    acc
+}

@@ -1,0 +1,164 @@
+//! Micro-benchmark harness (substrate for the unavailable criterion crate):
+//! warmup + timed iterations with median/p10/p90 reporting, plus table
+//! formatting shared by every paper-table bench.
+
+use std::time::{Duration, Instant};
+
+/// Timing summary for one benchmark case.
+#[derive(Clone, Debug)]
+pub struct Sample {
+    pub name: String,
+    pub iters: usize,
+    pub median: Duration,
+    pub p10: Duration,
+    pub p90: Duration,
+    pub mean: Duration,
+}
+
+impl Sample {
+    pub fn median_s(&self) -> f64 {
+        self.median.as_secs_f64()
+    }
+}
+
+/// Run `f` with warmup, then time `iters` iterations (min 3).
+pub fn bench(name: &str, warmup: usize, iters: usize, mut f: impl FnMut()) -> Sample {
+    for _ in 0..warmup {
+        f();
+    }
+    let iters = iters.max(3);
+    let mut times: Vec<Duration> = (0..iters)
+        .map(|_| {
+            let t0 = Instant::now();
+            f();
+            t0.elapsed()
+        })
+        .collect();
+    times.sort();
+    let mean = times.iter().sum::<Duration>() / iters as u32;
+    Sample {
+        name: name.to_owned(),
+        iters,
+        median: times[iters / 2],
+        p10: times[iters / 10],
+        p90: times[(iters * 9) / 10],
+        mean,
+    }
+}
+
+/// Adaptive variant: keep iterating until `budget` wall time is spent
+/// (at least `min_iters`). Good for cases whose cost varies 1000×.
+pub fn bench_budget(name: &str, budget: Duration, min_iters: usize, mut f: impl FnMut()) -> Sample {
+    f(); // warmup
+    let mut times = Vec::new();
+    let start = Instant::now();
+    while times.len() < min_iters || (start.elapsed() < budget && times.len() < 1000) {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed());
+    }
+    times.sort();
+    let n = times.len();
+    let mean = times.iter().sum::<Duration>() / n as u32;
+    Sample {
+        name: name.to_owned(),
+        iters: n,
+        median: times[n / 2],
+        p10: times[n / 10],
+        p90: times[(n * 9) / 10],
+        mean,
+    }
+}
+
+/// Fixed-width table printer for paper-style outputs.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Table {
+        Table { headers: headers.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len());
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn print(&self, title: &str) {
+        println!("\n=== {title} ===");
+        let mut widths: Vec<usize> = self.headers.iter().map(String::len).collect();
+        for row in &self.rows {
+            for (w, c) in widths.iter_mut().zip(row) {
+                *w = (*w).max(c.len());
+            }
+        }
+        let line = |cells: &[String]| {
+            cells
+                .iter()
+                .zip(&widths)
+                .map(|(c, w)| format!("{c:>w$}"))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        println!("{}", line(&self.headers));
+        println!("{}", "-".repeat(widths.iter().sum::<usize>() + 2 * (widths.len() - 1)));
+        for row in &self.rows {
+            println!("{}", line(row));
+        }
+    }
+}
+
+/// Convenience: `f64 -> "123.4"`.
+pub fn f1(x: f64) -> String {
+    format!("{x:.1}")
+}
+
+pub fn f2(x: f64) -> String {
+    format!("{x:.2}")
+}
+
+pub fn f3(x: f64) -> String {
+    format!("{x:.3}")
+}
+
+pub fn f4(x: f64) -> String {
+    format!("{x:.4}")
+}
+
+pub fn sci(x: f64) -> String {
+    format!("{x:.2e}")
+}
+
+/// Percentage with 2 decimals: 0.9987 -> "99.87%".
+pub fn pct(x: f64) -> String {
+    format!("{:.2}%", x * 100.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_reports_ordered_percentiles() {
+        let s = bench("noop", 1, 25, || {
+            std::hint::black_box(42);
+        });
+        assert!(s.p10 <= s.median && s.median <= s.p90);
+        assert_eq!(s.iters, 25);
+    }
+
+    #[test]
+    fn table_roundtrip() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(&["1".into(), "2".into()]);
+        t.print("test"); // smoke: must not panic
+    }
+
+    #[test]
+    fn formatters() {
+        assert_eq!(f2(1.234), "1.23");
+        assert_eq!(pct(0.9987), "99.87%");
+    }
+}

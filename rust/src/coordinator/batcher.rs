@@ -1,0 +1,133 @@
+//! Admission queue + batching policy (continuous batching front-end).
+//!
+//! Arriving requests wait in a FIFO; the scheduler asks the batcher which
+//! requests to admit given the free decode slots and the KV accountant's
+//! capacity. Policies trade head-of-line fairness against utilization.
+
+use std::collections::VecDeque;
+
+use super::kv_cache::KvCacheManager;
+use super::request::Request;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BatchPolicy {
+    /// Strict FIFO: never admit request i+1 before request i.
+    Fifo,
+    /// FIFO with a skip window: if the head doesn't fit (KV capacity),
+    /// later small requests may be admitted (bounded reordering).
+    SkipSmall { window: usize },
+}
+
+/// Queue of pending requests with admission logic.
+#[derive(Debug)]
+pub struct Batcher {
+    queue: VecDeque<Request>,
+    policy: BatchPolicy,
+    pub admitted: u64,
+    pub enqueued: u64,
+}
+
+impl Batcher {
+    pub fn new(policy: BatchPolicy) -> Batcher {
+        Batcher { queue: VecDeque::new(), policy, admitted: 0, enqueued: 0 }
+    }
+
+    pub fn push(&mut self, req: Request) {
+        self.enqueued += 1;
+        self.queue.push_back(req);
+    }
+
+    pub fn pending(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.queue.is_empty()
+    }
+
+    /// Admit up to `free_slots` requests that fit in `kv`'s free capacity,
+    /// reserving their KV budget. Returns admitted requests in queue order.
+    pub fn admit(&mut self, free_slots: usize, kv: &mut KvCacheManager) -> Vec<Request> {
+        let mut admitted = Vec::new();
+        let window = match self.policy {
+            BatchPolicy::Fifo => 0,
+            BatchPolicy::SkipSmall { window } => window,
+        };
+        let mut i = 0;
+        while admitted.len() < free_slots && i < self.queue.len() {
+            let fits = kv.can_admit(self.queue[i].max_tokens());
+            if fits {
+                let req = self.queue.remove(i).unwrap();
+                kv.allocate(req.id, req.max_tokens())
+                    .expect("can_admit checked");
+                admitted.push(req);
+                // do not advance i: the next element shifted into place
+            } else if i < window {
+                i += 1; // skip the stuck head within the window
+            } else {
+                break; // head-of-line blocks further admission
+            }
+        }
+        self.admitted += admitted.len() as u64;
+        admitted
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::request::GenParams;
+
+    fn req(id: u64, prompt_len: usize, max_new: usize) -> Request {
+        Request::new(
+            id,
+            vec![0; prompt_len],
+            GenParams { max_new_tokens: max_new, ..Default::default() },
+        )
+    }
+
+    #[test]
+    fn fifo_admits_in_order() {
+        let mut b = Batcher::new(BatchPolicy::Fifo);
+        let mut kv = KvCacheManager::new(100, 16);
+        for i in 0..5 {
+            b.push(req(i, 16, 16));
+        }
+        let admitted = b.admit(3, &mut kv);
+        assert_eq!(admitted.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 1, 2]);
+        assert_eq!(b.pending(), 2);
+        assert_eq!(kv.live_sequences(), 3);
+    }
+
+    #[test]
+    fn fifo_blocks_on_big_head() {
+        let mut b = Batcher::new(BatchPolicy::Fifo);
+        let mut kv = KvCacheManager::new(4, 16); // 64 tokens capacity
+        b.push(req(0, 64, 64)); // needs 8 blocks -> never fits
+        b.push(req(1, 8, 8)); // would fit
+        let admitted = b.admit(2, &mut kv);
+        assert!(admitted.is_empty(), "FIFO must not leapfrog the head");
+    }
+
+    #[test]
+    fn skip_small_leapfrogs_within_window() {
+        let mut b = Batcher::new(BatchPolicy::SkipSmall { window: 2 });
+        let mut kv = KvCacheManager::new(4, 16);
+        b.push(req(0, 64, 64)); // stuck head
+        b.push(req(1, 8, 8));
+        let admitted = b.admit(2, &mut kv);
+        assert_eq!(admitted.iter().map(|r| r.id).collect::<Vec<_>>(), vec![1]);
+        assert_eq!(b.pending(), 1); // head still waiting
+    }
+
+    #[test]
+    fn admit_respects_slot_count() {
+        let mut b = Batcher::new(BatchPolicy::Fifo);
+        let mut kv = KvCacheManager::new(100, 16);
+        for i in 0..10 {
+            b.push(req(i, 8, 8));
+        }
+        assert_eq!(b.admit(4, &mut kv).len(), 4);
+        assert_eq!(b.admit(0, &mut kv).len(), 0);
+    }
+}

@@ -1,0 +1,225 @@
+//! Paged KV-cache accountant: fixed-size token blocks, per-sequence block
+//! tables, ref-counted blocks (prefix sharing-ready), and admission
+//! control. The physical cache inside the AOT artifacts is a dense
+//! (L, B, H, max_seq, d) tensor per slot; this manager owns the *logical*
+//! capacity decisions — which requests may occupy a slot and when memory
+//! is exhausted — the way vLLM's block manager fronts its GPU allocator.
+
+use std::collections::HashMap;
+
+use crate::coordinator::request::RequestId;
+
+pub type BlockId = u32;
+
+/// Errors are admission decisions, not failures.
+#[derive(Debug, PartialEq, Eq)]
+pub enum AllocError {
+    /// Not enough free blocks right now.
+    OutOfBlocks,
+    /// Sequence unknown.
+    UnknownSequence,
+}
+
+#[derive(Clone, Debug)]
+struct SeqState {
+    blocks: Vec<BlockId>,
+    tokens: usize,
+}
+
+/// Block-granular KV accounting.
+#[derive(Debug)]
+pub struct KvCacheManager {
+    block_size: usize,
+    free: Vec<BlockId>,
+    ref_counts: Vec<u32>,
+    seqs: HashMap<RequestId, SeqState>,
+}
+
+impl KvCacheManager {
+    pub fn new(total_blocks: usize, block_size: usize) -> Self {
+        assert!(block_size > 0 && total_blocks > 0);
+        KvCacheManager {
+            block_size,
+            free: (0..total_blocks as BlockId).rev().collect(),
+            ref_counts: vec![0; total_blocks],
+            seqs: HashMap::new(),
+        }
+    }
+
+    pub fn block_size(&self) -> usize {
+        self.block_size
+    }
+
+    pub fn total_blocks(&self) -> usize {
+        self.ref_counts.len()
+    }
+
+    pub fn free_blocks(&self) -> usize {
+        self.free.len()
+    }
+
+    pub fn blocks_for(&self, tokens: usize) -> usize {
+        tokens.div_ceil(self.block_size)
+    }
+
+    /// Can a sequence of `tokens` total tokens be admitted right now?
+    pub fn can_admit(&self, tokens: usize) -> bool {
+        self.blocks_for(tokens) <= self.free.len()
+    }
+
+    /// Register a sequence and reserve blocks for `tokens` tokens.
+    pub fn allocate(&mut self, id: RequestId, tokens: usize) -> Result<(), AllocError> {
+        let need = self.blocks_for(tokens.max(1));
+        if need > self.free.len() {
+            return Err(AllocError::OutOfBlocks);
+        }
+        let mut blocks = Vec::with_capacity(need);
+        for _ in 0..need {
+            let b = self.free.pop().unwrap();
+            debug_assert_eq!(self.ref_counts[b as usize], 0);
+            self.ref_counts[b as usize] = 1;
+            blocks.push(b);
+        }
+        self.seqs.insert(id, SeqState { blocks, tokens });
+        Ok(())
+    }
+
+    /// Extend a sequence by `extra` tokens, acquiring blocks as needed.
+    pub fn extend(&mut self, id: RequestId, extra: usize) -> Result<(), AllocError> {
+        let seq = self.seqs.get_mut(&id).ok_or(AllocError::UnknownSequence)?;
+        let new_tokens = seq.tokens + extra;
+        let need_total = new_tokens.div_ceil(self.block_size);
+        let need_extra = need_total.saturating_sub(seq.blocks.len());
+        if need_extra > self.free.len() {
+            return Err(AllocError::OutOfBlocks);
+        }
+        for _ in 0..need_extra {
+            let b = self.free.pop().unwrap();
+            self.ref_counts[b as usize] = 1;
+            seq.blocks.push(b);
+        }
+        seq.tokens = new_tokens;
+        Ok(())
+    }
+
+    /// Release all blocks of a sequence (decrement refs; shared blocks
+    /// survive until their last reference drops).
+    pub fn release(&mut self, id: RequestId) -> Result<(), AllocError> {
+        let seq = self.seqs.remove(&id).ok_or(AllocError::UnknownSequence)?;
+        for b in seq.blocks {
+            let rc = &mut self.ref_counts[b as usize];
+            debug_assert!(*rc > 0);
+            *rc -= 1;
+            if *rc == 0 {
+                self.free.push(b);
+            }
+        }
+        Ok(())
+    }
+
+    /// Fork: share all of `src`'s blocks with a new sequence (prefix
+    /// sharing / beam search). Copy-on-write is the caller's concern at
+    /// the physical layer; here it is pure ref-counting.
+    pub fn fork(&mut self, src: RequestId, dst: RequestId) -> Result<(), AllocError> {
+        let state = self.seqs.get(&src).ok_or(AllocError::UnknownSequence)?.clone();
+        for &b in &state.blocks {
+            self.ref_counts[b as usize] += 1;
+        }
+        self.seqs.insert(dst, state);
+        Ok(())
+    }
+
+    pub fn seq_tokens(&self, id: RequestId) -> Option<usize> {
+        self.seqs.get(&id).map(|s| s.tokens)
+    }
+
+    pub fn seq_blocks(&self, id: RequestId) -> Option<&[BlockId]> {
+        self.seqs.get(&id).map(|s| s.blocks.as_slice())
+    }
+
+    pub fn live_sequences(&self) -> usize {
+        self.seqs.len()
+    }
+
+    /// Internal consistency check (used by the property tests): every
+    /// block is either free with rc 0 or referenced rc times in total.
+    pub fn check_invariants(&self) -> Result<(), String> {
+        let mut refs = vec![0u32; self.ref_counts.len()];
+        for seq in self.seqs.values() {
+            for &b in &seq.blocks {
+                refs[b as usize] += 1;
+            }
+        }
+        for (i, (&actual, &expected)) in self.ref_counts.iter().zip(&refs).enumerate() {
+            if actual != expected {
+                return Err(format!("block {i}: rc {actual} but {expected} references"));
+            }
+        }
+        let mut seen = vec![false; self.ref_counts.len()];
+        for &b in &self.free {
+            if seen[b as usize] {
+                return Err(format!("block {b} on free list twice"));
+            }
+            seen[b as usize] = true;
+            if self.ref_counts[b as usize] != 0 {
+                return Err(format!("free block {b} has rc {}", self.ref_counts[b as usize]));
+            }
+        }
+        for (i, &rc) in self.ref_counts.iter().enumerate() {
+            if rc == 0 && !seen[i] {
+                return Err(format!("block {i} leaked (rc 0, not free)"));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn allocate_extend_release_cycle() {
+        let mut kv = KvCacheManager::new(8, 16);
+        assert!(kv.can_admit(100)); // 7 blocks
+        kv.allocate(1, 33).unwrap(); // 3 blocks
+        assert_eq!(kv.free_blocks(), 5);
+        kv.extend(1, 15).unwrap(); // 48 total -> still 3 blocks
+        assert_eq!(kv.free_blocks(), 5);
+        kv.extend(1, 1).unwrap(); // 49 -> 4 blocks
+        assert_eq!(kv.free_blocks(), 4);
+        kv.release(1).unwrap();
+        assert_eq!(kv.free_blocks(), 8);
+        kv.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn admission_control() {
+        let mut kv = KvCacheManager::new(4, 16);
+        kv.allocate(1, 64).unwrap(); // all 4 blocks
+        assert_eq!(kv.allocate(2, 1), Err(AllocError::OutOfBlocks));
+        assert!(!kv.can_admit(1));
+        kv.release(1).unwrap();
+        assert!(kv.can_admit(64));
+    }
+
+    #[test]
+    fn fork_shares_blocks() {
+        let mut kv = KvCacheManager::new(4, 16);
+        kv.allocate(1, 32).unwrap(); // 2 blocks
+        kv.fork(1, 2).unwrap();
+        assert_eq!(kv.free_blocks(), 2); // shared, not copied
+        kv.release(1).unwrap();
+        assert_eq!(kv.free_blocks(), 2); // still referenced by 2
+        kv.release(2).unwrap();
+        assert_eq!(kv.free_blocks(), 4);
+        kv.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn unknown_sequence_errors() {
+        let mut kv = KvCacheManager::new(2, 8);
+        assert_eq!(kv.release(9), Err(AllocError::UnknownSequence));
+        assert_eq!(kv.extend(9, 1), Err(AllocError::UnknownSequence));
+    }
+}

@@ -1,0 +1,24 @@
+//! L3 serving coordinator (the system side of the reproduction).
+//!
+//! SageAttention is a serving-acceleration paper, so the coordinator is a
+//! vLLM-router-shaped stack: requests flow through admission/batching into
+//! per-replica engines that drive the AOT transformer artifacts with
+//! continuous batching over a fixed slot set, backed by a paged KV-cache
+//! accountant. The attention implementation inside the artifacts — full
+//! precision vs SageAttention vs an adaptive per-layer plan (§4.5) — is
+//! the experiment knob; everything else stays identical, which is exactly
+//! the paper's plug-and-play claim.
+
+pub mod batcher;
+pub mod engine;
+pub mod kv_cache;
+pub mod request;
+pub mod router;
+pub mod scheduler;
+
+pub use batcher::{BatchPolicy, Batcher};
+pub use engine::{Engine, EngineStats};
+pub use kv_cache::{BlockId, KvCacheManager};
+pub use request::{FinishReason, GenParams, Request, RequestId, Response};
+pub use router::{Replica, Router, RoutingPolicy};
+pub use scheduler::{Scheduler, SchedulerReport};

@@ -1,0 +1,79 @@
+//! Request/response types flowing through the serving stack.
+
+use std::time::Instant;
+
+pub type RequestId = u64;
+
+/// Sampling parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct GenParams {
+    pub max_new_tokens: usize,
+    /// 0.0 = greedy; otherwise softmax temperature sampling.
+    pub temperature: f32,
+    /// Stop token (model-dependent); `None` = run to max_new_tokens.
+    pub stop_token: Option<i32>,
+    pub seed: u64,
+}
+
+impl Default for GenParams {
+    fn default() -> Self {
+        GenParams { max_new_tokens: 32, temperature: 0.0, stop_token: None, seed: 0 }
+    }
+}
+
+/// An inference request.
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub id: RequestId,
+    pub prompt: Vec<i32>,
+    pub params: GenParams,
+    pub arrival: Instant,
+}
+
+impl Request {
+    pub fn new(id: RequestId, prompt: Vec<i32>, params: GenParams) -> Request {
+        Request { id, prompt, params, arrival: Instant::now() }
+    }
+
+    /// Total KV footprint this request may need (prompt + generation).
+    pub fn max_tokens(&self) -> usize {
+        self.prompt.len() + self.params.max_new_tokens
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FinishReason {
+    MaxTokens,
+    StopToken,
+    /// Evicted: would not fit (admission failure surfaced to the caller).
+    Rejected,
+}
+
+/// A finished request with serving telemetry.
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub id: RequestId,
+    pub tokens: Vec<i32>,
+    pub finish: FinishReason,
+    /// Time to first token (prefill + queueing), ms.
+    pub ttft_ms: f64,
+    /// Mean time per output token after the first, ms.
+    pub tpot_ms: f64,
+    /// End-to-end latency, ms.
+    pub e2e_ms: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn max_tokens_budget() {
+        let r = Request::new(
+            1,
+            vec![1, 2, 3],
+            GenParams { max_new_tokens: 5, ..Default::default() },
+        );
+        assert_eq!(r.max_tokens(), 8);
+    }
+}

@@ -1,0 +1,170 @@
+//! Request router over model replicas (the multi-engine front door,
+//! vllm-project/router-shaped). Replicas expose a load score; policies
+//! pick a target. The router is generic over [`Replica`] so it is testable
+//! without PJRT and reusable for heterogeneous backends.
+
+use super::request::Request;
+
+/// Anything that can accept routed requests.
+pub trait Replica {
+    fn id(&self) -> usize;
+    /// Current load score (higher = busier). Units are implementation-
+    /// defined but must be comparable across replicas of one router.
+    fn load(&self) -> f64;
+    /// Hand the request over. Returns false if the replica must refuse
+    /// (e.g. admission queue full) so the router can try elsewhere.
+    fn submit(&mut self, req: Request) -> bool;
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RoutingPolicy {
+    RoundRobin,
+    LeastLoaded,
+    /// Least-loaded among the `k` next round-robin candidates — the
+    /// "power of two choices" compromise.
+    PowerOfK(usize),
+}
+
+/// Stateless-per-request router with per-replica counters.
+pub struct Router {
+    policy: RoutingPolicy,
+    next: usize,
+    pub routed: Vec<u64>,
+}
+
+impl Router {
+    pub fn new(policy: RoutingPolicy, n_replicas: usize) -> Router {
+        Router { policy, next: 0, routed: vec![0; n_replicas] }
+    }
+
+    /// Route one request (clone-on-try: replicas may refuse and the
+    /// router falls through to the next candidate).
+    pub fn route<R: Replica>(
+        &mut self,
+        replicas: &mut [R],
+        req: &Request,
+    ) -> Option<usize> {
+        let n = replicas.len();
+        if n == 0 {
+            return None;
+        }
+        let order: Vec<usize> = match self.policy {
+            RoutingPolicy::RoundRobin => (0..n).map(|i| (self.next + i) % n).collect(),
+            RoutingPolicy::LeastLoaded => {
+                let mut idx: Vec<usize> = (0..n).collect();
+                idx.sort_by(|&a, &b| {
+                    replicas[a].load().partial_cmp(&replicas[b].load()).unwrap()
+                });
+                idx
+            }
+            RoutingPolicy::PowerOfK(k) => {
+                let k = k.clamp(1, n);
+                let mut cand: Vec<usize> = (0..k).map(|i| (self.next + i) % n).collect();
+                cand.sort_by(|&a, &b| {
+                    replicas[a].load().partial_cmp(&replicas[b].load()).unwrap()
+                });
+                cand.extend((k..n).map(|i| (self.next + i) % n));
+                cand
+            }
+        };
+        self.next = (self.next + 1) % n;
+        for &i in &order {
+            if replicas[i].submit(req.clone()) {
+                self.routed[i] += 1;
+                return Some(i);
+            }
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::request::GenParams;
+
+    struct Mock {
+        id: usize,
+        load: f64,
+        cap: usize,
+        accepted: Vec<u64>,
+    }
+
+    impl Replica for Mock {
+        fn id(&self) -> usize {
+            self.id
+        }
+        fn load(&self) -> f64 {
+            self.load
+        }
+        fn submit(&mut self, req: Request) -> bool {
+            if self.accepted.len() >= self.cap {
+                return false;
+            }
+            self.accepted.push(req.id);
+            self.load += 1.0;
+            true
+        }
+    }
+
+    fn mocks(loads: &[f64]) -> Vec<Mock> {
+        loads
+            .iter()
+            .enumerate()
+            .map(|(id, &load)| Mock { id, load, cap: usize::MAX, accepted: vec![] })
+            .collect()
+    }
+
+    fn req(id: u64) -> Request {
+        Request::new(id, vec![1], GenParams::default())
+    }
+
+    #[test]
+    fn round_robin_cycles() {
+        let mut r = Router::new(RoutingPolicy::RoundRobin, 3);
+        let mut reps = mocks(&[0.0, 0.0, 0.0]);
+        let picks: Vec<usize> =
+            (0..6).map(|i| r.route(&mut reps, &req(i)).unwrap()).collect();
+        assert_eq!(picks, vec![0, 1, 2, 0, 1, 2]);
+    }
+
+    #[test]
+    fn least_loaded_picks_min() {
+        let mut r = Router::new(RoutingPolicy::LeastLoaded, 3);
+        let mut reps = mocks(&[5.0, 1.0, 3.0]);
+        assert_eq!(r.route(&mut reps, &req(1)).unwrap(), 1);
+        // replica 1 now at 2.0, still least
+        assert_eq!(r.route(&mut reps, &req(2)).unwrap(), 1);
+        // at 3.0, ties broken by sort stability -> 1 or 2 acceptable
+        let third = r.route(&mut reps, &req(3)).unwrap();
+        assert!(third == 1 || third == 2);
+    }
+
+    #[test]
+    fn refusal_falls_through() {
+        let mut r = Router::new(RoutingPolicy::RoundRobin, 2);
+        let mut reps = mocks(&[0.0, 0.0]);
+        reps[0].cap = 0; // always refuses
+        for i in 0..4 {
+            assert_eq!(r.route(&mut reps, &req(i)).unwrap(), 1);
+        }
+        assert_eq!(reps[1].accepted.len(), 4);
+    }
+
+    #[test]
+    fn all_refuse_returns_none() {
+        let mut r = Router::new(RoutingPolicy::LeastLoaded, 2);
+        let mut reps = mocks(&[0.0, 0.0]);
+        reps[0].cap = 0;
+        reps[1].cap = 0;
+        assert!(r.route(&mut reps, &req(1)).is_none());
+    }
+
+    #[test]
+    fn power_of_k_prefers_lighter_of_window() {
+        let mut r = Router::new(RoutingPolicy::PowerOfK(2), 3);
+        let mut reps = mocks(&[9.0, 1.0, 5.0]);
+        // window {0,1}: picks 1
+        assert_eq!(r.route(&mut reps, &req(1)).unwrap(), 1);
+    }
+}

@@ -1,0 +1,101 @@
+//! Prefill/decode scheduler: ties batcher + KV accountant + engine into
+//! the serving loop. One `tick()` = admit what fits, prefill admissions,
+//! advance the decode batch one token, release finished sequences.
+
+use anyhow::Result;
+
+use crate::metrics::LatencyStats;
+
+use super::batcher::Batcher;
+use super::engine::Engine;
+use super::kv_cache::KvCacheManager;
+use super::request::{Request, Response};
+
+/// Serving telemetry for one run.
+#[derive(Debug, Default)]
+pub struct SchedulerReport {
+    pub responses: Vec<Response>,
+    pub ttft: LatencyStats,
+    pub tpot: LatencyStats,
+    pub e2e: LatencyStats,
+    pub wall_s: f64,
+    pub tokens_out: u64,
+}
+
+impl SchedulerReport {
+    pub fn throughput_tok_s(&self) -> f64 {
+        if self.wall_s == 0.0 {
+            0.0
+        } else {
+            self.tokens_out as f64 / self.wall_s
+        }
+    }
+}
+
+/// The serving loop driver.
+pub struct Scheduler {
+    pub batcher: Batcher,
+    pub kv: KvCacheManager,
+    pub engine: Engine,
+    report: SchedulerReport,
+}
+
+impl Scheduler {
+    pub fn new(batcher: Batcher, kv: KvCacheManager, engine: Engine) -> Scheduler {
+        Scheduler { batcher, kv, engine, report: SchedulerReport::default() }
+    }
+
+    pub fn submit(&mut self, req: Request) {
+        self.batcher.push(req);
+    }
+
+    pub fn has_work(&self) -> bool {
+        !self.batcher.is_empty() || self.engine.live_slots() > 0
+    }
+
+    /// One scheduling round. Returns responses that finished this tick.
+    pub fn tick(&mut self) -> Result<Vec<Response>> {
+        // 1. admission: fill free decode slots from the queue, gated by
+        //    both slot availability and KV block capacity
+        let free = self.engine.free_slots();
+        if free > 0 && !self.batcher.is_empty() {
+            for req in self.batcher.admit(free, &mut self.kv) {
+                let ok = self.engine.add_request(&req)?;
+                debug_assert!(ok, "engine slot accounting diverged from batcher");
+            }
+        }
+        // 2. decode step for the live batch
+        let done = self.engine.step()?;
+        // 3. release finished sequences' KV blocks
+        for resp in &done {
+            let _ = self.kv.release(resp.id);
+            self.report.ttft.record(std::time::Duration::from_micros(
+                (resp.ttft_ms * 1000.0) as u64,
+            ));
+            self.report.tpot.record(std::time::Duration::from_micros(
+                (resp.tpot_ms.max(0.0) * 1000.0) as u64,
+            ));
+            self.report.e2e.record(std::time::Duration::from_micros(
+                (resp.e2e_ms * 1000.0) as u64,
+            ));
+            self.report.tokens_out += resp.tokens.len() as u64;
+        }
+        self.report.responses.extend(done.iter().cloned());
+        Ok(done)
+    }
+
+    /// Drive to completion and return the report.
+    pub fn run_to_completion(mut self) -> Result<SchedulerReport> {
+        let t0 = std::time::Instant::now();
+        while self.has_work() {
+            self.tick()?;
+        }
+        self.report.wall_s = t0.elapsed().as_secs_f64();
+        Ok(self.report)
+    }
+
+    pub fn into_report(mut self, wall_s: f64) -> SchedulerReport {
+        self.report.wall_s = wall_s;
+        std::mem::take(&mut self.report)
+    }
+}

@@ -1,0 +1,31 @@
+//! # SageAttention reproduction
+//!
+//! Production-style reproduction of *SageAttention: Accurate 8-Bit
+//! Attention for Plug-and-play Inference Acceleration* (ICLR 2025) as a
+//! three-layer Rust + JAX + Pallas stack:
+//!
+//! * **L1** (`python/compile/kernels/`) — the quantized FlashAttention-style
+//!   Pallas kernel (INT8 QKᵀ, smooth-K, FP16-accumulator P·V).
+//! * **L2** (`python/compile/model.py`) — a GPT-style transformer calling
+//!   the kernel, AOT-lowered to HLO text artifacts.
+//! * **L3** (this crate) — the serving coordinator: PJRT runtime, request
+//!   router, continuous batcher, paged KV cache, prefill/decode scheduler,
+//!   plus the adaptive-quantization calibrator (§4.5), a GPU cost model
+//!   regenerating the paper's speed figures, and rust-native mirrors of
+//!   the kernels for accuracy experiments.
+//!
+//! Python never runs on the request path: artifacts are compiled once by
+//! `make artifacts` and executed through the PJRT C API.
+
+pub mod adaptive;
+pub mod attn;
+pub mod bench;
+pub mod coordinator;
+pub mod metrics;
+pub mod perfmodel;
+pub mod quant;
+pub mod runtime;
+pub mod synth;
+pub mod tensor;
+pub mod testing;
+pub mod util;

@@ -1,0 +1,217 @@
+//! `sage` — CLI for the SageAttention reproduction stack.
+//!
+//! Subcommands:
+//!   smoke                         artifact round-trip sanity check
+//!   serve [--plan sage] [...]     run the serving coordinator on a
+//!                                 synthetic workload and print telemetry
+//!   calibrate [--out plan.json]   §4.5 adaptive-quantization calibration
+//!   accuracy [--profile P]        kernel accuracy vs full precision
+//!   speed [--device 4090]         cost-model kernel speed sweep
+//!
+//! (arg parsing is hand-rolled: clap is unavailable offline)
+
+use std::collections::HashMap;
+
+use anyhow::{Context, Result};
+
+use sageattention::adaptive;
+use sageattention::attn::{attention, AttnImpl, SAGE_B, SAGE_T, SAGE_VB, SAGE_VT};
+use sageattention::bench::{f2, pct, sci, Table};
+use sageattention::coordinator::{
+    BatchPolicy, Batcher, Engine, GenParams, KvCacheManager, Request, Scheduler,
+};
+use sageattention::metrics::accuracy;
+use sageattention::perfmodel::{predict_tops, AttnKernel, DeviceSpec, Workpoint};
+use sageattention::runtime::{Runtime, Value};
+use sageattention::synth::{make_qkv, Profile, WorkloadGen};
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let (cmd, flags) = parse(&args);
+    let result = match cmd.as_deref() {
+        Some("smoke") => smoke(&flags),
+        Some("serve") => serve(&flags),
+        Some("calibrate") => calibrate(&flags),
+        Some("accuracy") => accuracy_cmd(&flags),
+        Some("speed") => speed(&flags),
+        _ => {
+            eprintln!(
+                "usage: sage <smoke|serve|calibrate|accuracy|speed> [--key value]..."
+            );
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn parse(args: &[String]) -> (Option<String>, HashMap<String, String>) {
+    let mut flags = HashMap::new();
+    let mut cmd = None;
+    let mut i = 0;
+    while i < args.len() {
+        if let Some(key) = args[i].strip_prefix("--") {
+            let val = args.get(i + 1).cloned().unwrap_or_default();
+            flags.insert(key.to_owned(), val);
+            i += 2;
+        } else {
+            if cmd.is_none() {
+                cmd = Some(args[i].clone());
+            }
+            i += 1;
+        }
+    }
+    (cmd, flags)
+}
+
+fn flag<'a>(flags: &'a HashMap<String, String>, key: &str, default: &'a str) -> &'a str {
+    flags.get(key).map(String::as_str).unwrap_or(default)
+}
+
+/// Load one attention artifact, run it against synthetic QKV, and compare
+/// with the rust-native exact implementation.
+fn smoke(flags: &HashMap<String, String>) -> Result<()> {
+    let rt = Runtime::open(Runtime::default_dir())?;
+    println!("platform: {}", rt.platform());
+    let name = flag(flags, "artifact", "attn_sage_b_1x2x256x64");
+    let art = rt.load(name)?;
+    let shape = art.spec.shape.clone().context("attention artifact missing shape")?;
+    let [b, h, n, d] = [shape[0], shape[1], shape[2], shape[3]];
+    let (q, k, v) = make_qkv(42, [b, h, n, d], Profile::diffusion_like());
+    let out = art.run(&[
+        Value::from_tensor(&q),
+        Value::from_tensor(&k),
+        Value::from_tensor(&v),
+    ])?;
+    let gold = attention(&q, &k, &v, AttnImpl::Exact, art.spec.causal.unwrap_or(false));
+    let acc = accuracy(&gold.data, out[0].as_f32()?);
+    println!("{name}: {acc}");
+    anyhow::ensure!(acc.cos_sim > 0.99, "artifact output diverged from reference");
+    println!("smoke OK");
+    Ok(())
+}
+
+/// Serve a synthetic workload through the full coordinator.
+fn serve(flags: &HashMap<String, String>) -> Result<()> {
+    let rt = Runtime::open(Runtime::default_dir())?;
+    let config = flag(flags, "config", "small");
+    let plan = flag(flags, "plan", "sage");
+    let n_req: usize = flag(flags, "requests", "16").parse()?;
+    let seed: u64 = flag(flags, "seed", "1").parse()?;
+    let engine = Engine::new(&rt, config, plan, seed)?;
+    let cfg = &rt.manifest.configs[config];
+    let vocab = cfg.vocab;
+    let max_seq = cfg.max_seq;
+    let slots = engine.batch_slots();
+
+    let mut gen = WorkloadGen::new(seed, vocab, 50.0, engine.prefill_sizes(), 24);
+    let kv = KvCacheManager::new(slots * max_seq / 16, 16);
+    let mut sched = Scheduler::new(Batcher::new(BatchPolicy::Fifo), kv, engine);
+    for (i, r) in gen.generate(n_req).into_iter().enumerate() {
+        sched.submit(Request::new(
+            i as u64,
+            r.prompt,
+            GenParams { max_new_tokens: r.max_new_tokens, ..Default::default() },
+        ));
+    }
+    let report = sched.run_to_completion()?;
+    println!(
+        "served {} requests, {} tokens in {:.2}s ({:.1} tok/s)",
+        report.responses.len(),
+        report.tokens_out,
+        report.wall_s,
+        report.throughput_tok_s()
+    );
+    println!(
+        "TTFT p50/p99: {:.1}/{:.1} ms   TPOT p50/p99: {:.1}/{:.1} ms",
+        report.ttft.percentile(50.0),
+        report.ttft.percentile(99.0),
+        report.tpot.percentile(50.0),
+        report.tpot.percentile(99.0)
+    );
+    Ok(())
+}
+
+/// §4.5 calibration: choose -vB vs -B per layer, write the plan JSON that
+/// `aot.py --plan-file` consumes.
+fn calibrate(flags: &HashMap<String, String>) -> Result<()> {
+    let n_layers: usize = flag(flags, "layers", "4").parse()?;
+    let profile = Profile::by_name(flag(flags, "profile", "diffusion-like"))
+        .context("unknown profile")?;
+    let out = flag(flags, "out", "plan.json");
+    let seed: u64 = flag(flags, "seed", "7").parse()?;
+    let layers = adaptive::synth_layer_inputs(n_layers, [1, 4, 256, 64], profile, seed);
+    let (plan, detail) = adaptive::calibrate(&layers, false);
+    let mut t = Table::new(&["layer", "cos(-vB)", "cos(-B)", "choice"]);
+    for d in &detail {
+        t.row(&[
+            d.layer.to_string(),
+            pct(d.cos_vb as f64),
+            pct(d.cos_b as f64),
+            d.choice.to_string(),
+        ]);
+    }
+    t.print("adaptive calibration (threshold 99.8%)");
+    std::fs::write(out, plan.to_json())?;
+    println!(
+        "\nwrote {out}; estimated attention speedup over all--B: {:.1}%",
+        (plan.speedup_estimate() - 1.0) * 100.0
+    );
+    Ok(())
+}
+
+/// Kernel accuracy vs full precision on a synthetic profile (Table 9 style).
+fn accuracy_cmd(flags: &HashMap<String, String>) -> Result<()> {
+    let profile = Profile::by_name(flag(flags, "profile", "diffusion-like"))
+        .context("unknown profile")?;
+    let n: usize = flag(flags, "seq", "512").parse()?;
+    let d: usize = flag(flags, "headdim", "64").parse()?;
+    let (q, k, v) = make_qkv(3, [2, 4, n, d], profile);
+    let gold = attention(&q, &k, &v, AttnImpl::Exact, false);
+    let mut t = Table::new(&["kernel", "CosSim", "RelL1", "RMSE"]);
+    for imp in [SAGE_T, SAGE_B, SAGE_VT, SAGE_VB] {
+        let o = attention(&q, &k, &v, imp, false);
+        let a = accuracy(&gold.data, &o.data);
+        t.row(&[
+            imp.name(),
+            pct(a.cos_sim as f64),
+            f2(a.rel_l1 as f64 * 100.0) + "e-2",
+            sci(a.rmse as f64),
+        ]);
+    }
+    t.print(&format!("kernel accuracy ({} profile, N={n}, d={d})", profile.name));
+    Ok(())
+}
+
+/// Cost-model speed sweep (Figures 6–9 style) on one device.
+fn speed(flags: &HashMap<String, String>) -> Result<()> {
+    let dev: &DeviceSpec =
+        DeviceSpec::by_name(flag(flags, "device", "4090")).context("unknown device")?;
+    let d: usize = flag(flags, "headdim", "64").parse()?;
+    let causal = flags.contains_key("causal");
+    let kernels = [
+        AttnKernel::TorchNaive,
+        AttnKernel::Xformers,
+        AttnKernel::FlashAttention2,
+        AttnKernel::SageAttnB,
+        AttnKernel::SageAttnVB,
+    ];
+    let mut t =
+        Table::new(&["seq", "Torch", "xformers", "FlashAttn2", "SageAttn-B", "SageAttn-vB"]);
+    for n in [1024usize, 2048, 4096, 8192, 16384, 32768] {
+        let wp = Workpoint::square(4, 32, n, d, causal);
+        let mut row = vec![n.to_string()];
+        for k in kernels {
+            row.push(f2(predict_tops(dev, k, wp)));
+        }
+        t.row(&row);
+    }
+    t.print(&format!(
+        "predicted TOPS, {} headdim={d}{}",
+        dev.name,
+        if causal { " causal" } else { "" }
+    ));
+    Ok(())
+}

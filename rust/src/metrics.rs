@@ -1,0 +1,227 @@
+//! Accuracy metrics (paper §4.3: CosSim, Relative L1, RMSE), latency
+//! statistics, and TOPS accounting used by every experiment harness.
+
+/// Cosine similarity of flattened tensors: Σxy / (√Σx² √Σy²).
+pub fn cos_sim(a: &[f32], b: &[f32]) -> f32 {
+    assert_eq!(a.len(), b.len());
+    let (mut xy, mut xx, mut yy) = (0f64, 0f64, 0f64);
+    for (&x, &y) in a.iter().zip(b) {
+        xy += x as f64 * y as f64;
+        xx += x as f64 * x as f64;
+        yy += y as f64 * y as f64;
+    }
+    (xy / (xx.sqrt() * yy.sqrt()).max(1e-30)) as f32
+}
+
+/// Relative L1: Σ|x−y| / Σ|x| (x = reference).
+pub fn rel_l1(reference: &[f32], other: &[f32]) -> f32 {
+    assert_eq!(reference.len(), other.len());
+    let (mut num, mut den) = (0f64, 0f64);
+    for (&x, &y) in reference.iter().zip(other) {
+        num += (x - y).abs() as f64;
+        den += x.abs() as f64;
+    }
+    (num / den.max(1e-30)) as f32
+}
+
+/// Root-mean-square error.
+pub fn rmse(a: &[f32], b: &[f32]) -> f32 {
+    assert_eq!(a.len(), b.len());
+    let sum: f64 = a
+        .iter()
+        .zip(b)
+        .map(|(&x, &y)| {
+            let d = (x - y) as f64;
+            d * d
+        })
+        .sum();
+    ((sum / a.len() as f64).sqrt()) as f32
+}
+
+/// The paper's three-metric bundle against a full-precision reference.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Accuracy {
+    pub cos_sim: f32,
+    pub rel_l1: f32,
+    pub rmse: f32,
+}
+
+pub fn accuracy(reference: &[f32], other: &[f32]) -> Accuracy {
+    Accuracy {
+        cos_sim: cos_sim(reference, other),
+        rel_l1: rel_l1(reference, other),
+        rmse: rmse(reference, other),
+    }
+}
+
+impl std::fmt::Display for Accuracy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "CosSim {:.4} | RelL1 {:.4} | RMSE {:.3e}",
+            self.cos_sim, self.rel_l1, self.rmse
+        )
+    }
+}
+
+/// Running mean/min/max accumulator (Welford) for layer sweeps —
+/// "average accuracy" and "worst accuracy" across all layers (Tables 2–5).
+#[derive(Clone, Debug, Default)]
+pub struct Welford {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Welford {
+    pub fn new() -> Self {
+        Welford { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let delta = x - self.mean;
+        self.mean += delta / self.n as f64;
+        self.m2 += delta * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+
+    pub fn std(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            (self.m2 / (self.n - 1) as f64).sqrt()
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+}
+
+/// Latency sample sink with percentile queries (serving benches).
+#[derive(Clone, Debug, Default)]
+pub struct LatencyStats {
+    samples_us: Vec<u64>,
+}
+
+impl LatencyStats {
+    pub fn record(&mut self, dur: std::time::Duration) {
+        self.samples_us.push(dur.as_micros() as u64);
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples_us.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples_us.is_empty()
+    }
+
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.samples_us.is_empty() {
+            return 0.0;
+        }
+        let mut sorted = self.samples_us.clone();
+        sorted.sort_unstable();
+        let rank = (p / 100.0 * (sorted.len() - 1) as f64).round() as usize;
+        sorted[rank.min(sorted.len() - 1)] as f64 / 1000.0 // ms
+    }
+
+    pub fn mean_ms(&self) -> f64 {
+        if self.samples_us.is_empty() {
+            return 0.0;
+        }
+        self.samples_us.iter().sum::<u64>() as f64 / self.samples_us.len() as f64 / 1000.0
+    }
+}
+
+/// Attention FLOP/OP count: 2 matmuls of N_q×N_kv×d, 2 ops per MAC
+/// (the convention behind the paper's TOPS numbers).
+pub fn attention_ops(batch: usize, heads: usize, n_q: usize, n_kv: usize, d: usize, causal: bool) -> f64 {
+    let full = 2.0 * 2.0 * (batch * heads) as f64 * n_q as f64 * n_kv as f64 * d as f64;
+    if causal {
+        full / 2.0
+    } else {
+        full
+    }
+}
+
+/// ops + seconds → TOPS.
+pub fn tops(ops: f64, seconds: f64) -> f64 {
+    ops / seconds / 1e12
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cos_sim_identity_and_orthogonal() {
+        let a = [1.0, 2.0, 3.0];
+        assert!((cos_sim(&a, &a) - 1.0).abs() < 1e-6);
+        let b = [0.0, 0.0, 1.0];
+        let c = [0.0, 1.0, 0.0];
+        assert!(cos_sim(&b, &c).abs() < 1e-6);
+        let d = [-1.0, -2.0, -3.0];
+        assert!((cos_sim(&a, &d) + 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn rel_l1_scales() {
+        let a = [1.0, 1.0, 1.0, 1.0];
+        let b = [1.1, 0.9, 1.1, 0.9];
+        assert!((rel_l1(&a, &b) - 0.1).abs() < 1e-6);
+    }
+
+    #[test]
+    fn rmse_known() {
+        let a = [0.0, 0.0];
+        let b = [3.0, 4.0];
+        assert!((rmse(&a, &b) - (12.5f32).sqrt()).abs() < 1e-6);
+    }
+
+    #[test]
+    fn welford_tracks_extremes_and_mean() {
+        let mut w = Welford::new();
+        for x in [1.0, 2.0, 3.0, 4.0] {
+            w.push(x);
+        }
+        assert_eq!(w.mean(), 2.5);
+        assert_eq!(w.min(), 1.0);
+        assert_eq!(w.max(), 4.0);
+        assert_eq!(w.count(), 4);
+    }
+
+    #[test]
+    fn latency_percentiles() {
+        let mut l = LatencyStats::default();
+        for ms in 1..=100u64 {
+            l.record(std::time::Duration::from_millis(ms));
+        }
+        assert!((l.percentile(50.0) - 50.0).abs() <= 1.0);
+        assert!((l.percentile(99.0) - 99.0).abs() <= 1.0);
+    }
+
+    #[test]
+    fn causal_halves_ops() {
+        let full = attention_ops(1, 1, 1024, 1024, 64, false);
+        let causal = attention_ops(1, 1, 1024, 1024, 64, true);
+        assert_eq!(causal * 2.0, full);
+    }
+}

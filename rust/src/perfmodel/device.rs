@@ -1,0 +1,70 @@
+//! Published device specifications for the paper's two testbeds.
+//!
+//! Rates are *dense* tensor-core throughputs (no sparsity doubling), in
+//! tera-ops/s; bandwidths in GB/s. Sources: NVIDIA Ada/Ampere whitepapers.
+//! The key ratios the paper exploits hold on both cards:
+//!   int8 = 4 × fp16-with-fp32-acc,  fp16-with-fp16-acc = 2 × fp16-with-fp32-acc.
+
+/// Tensor-core and memory characteristics of one GPU.
+#[derive(Clone, Debug)]
+pub struct DeviceSpec {
+    pub name: &'static str,
+    /// mma(f16.f16.f32.f32) dense rate, TFLOPS.
+    pub fp16_fp32acc_tflops: f64,
+    /// mma(f16.f16.f16.f16) dense rate, TFLOPS (2× on consumer cards).
+    pub fp16_fp16acc_tflops: f64,
+    /// mma(u8.u8.s32) dense rate, TOPS.
+    pub int8_tops: f64,
+    /// FP8 tensor rate, TOPS (0 where the arch has no FP8 MMA — Ada has
+    /// FP8 only via Hopper-class transformer engines; RTX4090 FP8 ==
+    /// INT8-rate/2 per the paper's "INT8 two times faster than FP8").
+    pub fp8_tops: f64,
+    /// CUDA-core fp32 vector rate (softmax / exp / rescale work), TFLOPS.
+    pub fp32_vector_tflops: f64,
+    /// DRAM bandwidth, GB/s.
+    pub dram_gbps: f64,
+    /// Usable device memory for activations, GiB (Table 16 OOM modeling).
+    pub mem_gib: f64,
+    /// Number of SMs (occupancy / wave quantization modeling).
+    pub sms: usize,
+    /// Kernel launch + tail latency floor, microseconds.
+    pub launch_us: f64,
+}
+
+/// NVIDIA GeForce RTX 4090 (Ada, AD102).
+pub const RTX4090: DeviceSpec = DeviceSpec {
+    name: "RTX4090",
+    fp16_fp32acc_tflops: 165.2,
+    fp16_fp16acc_tflops: 330.3,
+    int8_tops: 660.6,
+    fp8_tops: 330.3,
+    fp32_vector_tflops: 82.6,
+    dram_gbps: 1008.0,
+    mem_gib: 24.0,
+    sms: 128,
+    launch_us: 6.0,
+};
+
+/// NVIDIA GeForce RTX 3090 (Ampere, GA102).
+pub const RTX3090: DeviceSpec = DeviceSpec {
+    name: "RTX3090",
+    fp16_fp32acc_tflops: 71.0,
+    fp16_fp16acc_tflops: 142.0,
+    int8_tops: 284.0,
+    fp8_tops: 142.0,
+    fp32_vector_tflops: 35.6,
+    dram_gbps: 936.0,
+    mem_gib: 24.0,
+    sms: 82,
+    launch_us: 6.0,
+};
+
+impl DeviceSpec {
+    pub fn by_name(name: &str) -> Option<&'static DeviceSpec> {
+        match name {
+            "RTX4090" | "rtx4090" | "4090" => Some(&RTX4090),
+            "RTX3090" | "rtx3090" | "3090" => Some(&RTX3090),
+            _ => None,
+        }
+    }
+}

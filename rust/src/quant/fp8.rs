@@ -1,0 +1,144 @@
+//! FP8 rounding simulation (OCP E4M3 and E5M2), used to reproduce the
+//! paper's FlashAttention3-FP8 baseline rows (Tables 1, 2, 3, 17, 18).
+//!
+//! `round()` maps an f32 to the nearest representable value of the format
+//! (round-to-nearest-even), saturating at the max finite value the way
+//! tensor-core conversions with saturation do.
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Fp8Format {
+    /// E4M3 (fn variant): 4 exponent bits, 3 mantissa bits, bias 7,
+    /// max normal 448, no infinity.
+    E4M3,
+    /// E5M2: 5 exponent bits, 2 mantissa bits, bias 15, max normal 57344.
+    E5M2,
+}
+
+impl Fp8Format {
+    pub fn max_value(self) -> f32 {
+        match self {
+            Fp8Format::E4M3 => 448.0,
+            Fp8Format::E5M2 => 57344.0,
+        }
+    }
+
+    fn mantissa_bits(self) -> i32 {
+        match self {
+            Fp8Format::E4M3 => 3,
+            Fp8Format::E5M2 => 2,
+        }
+    }
+
+    /// Minimum normal exponent (unbiased).
+    fn min_exp(self) -> i32 {
+        match self {
+            Fp8Format::E4M3 => -6,
+            Fp8Format::E5M2 => -14,
+        }
+    }
+
+    /// Round an f32 to the nearest value representable in this format.
+    pub fn round(self, x: f32) -> f32 {
+        if x == 0.0 || x.is_nan() {
+            return x;
+        }
+        let sign = x.signum();
+        let a = x.abs();
+        let fmax = self.max_value();
+        if a >= fmax {
+            return sign * fmax; // saturate
+        }
+        let mbits = self.mantissa_bits();
+        // exponent of the value's binade, clamped at the subnormal floor
+        let e = (a.log2().floor() as i32).max(self.min_exp());
+        // spacing between representable values in this binade
+        let quantum = (e - mbits) as f32;
+        let q = f32::powi(2.0, quantum as i32);
+        let n = a / q;
+        // round half to even
+        let r = n.round();
+        let rounded = if (n - n.floor() - 0.5).abs() < 1e-6 {
+            let fl = n.floor();
+            if (fl as i64) % 2 == 0 {
+                fl
+            } else {
+                fl + 1.0
+            }
+        } else {
+            r
+        };
+        (sign * rounded * q).clamp(-fmax, fmax)
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Fp8Format::E4M3 => "E4M3",
+            Fp8Format::E5M2 => "E5M2",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn e4m3_known_grid() {
+        let f = Fp8Format::E4M3;
+        // values exactly representable must be fixed points
+        for v in [1.0f32, 1.125, 1.25, 1.875, 2.0, 448.0, 0.015625, -3.5] {
+            assert_eq!(f.round(v), v, "{v} should be representable");
+        }
+        // 1.0625 is halfway between 1.0 and 1.125 -> ties-to-even -> 1.0
+        assert_eq!(f.round(1.0625), 1.0);
+        assert_eq!(f.round(1.07), 1.125);
+    }
+
+    #[test]
+    fn e5m2_known_grid() {
+        let f = Fp8Format::E5M2;
+        for v in [1.0f32, 1.25, 1.5, 1.75, 2.0, 57344.0, -6.0] {
+            assert_eq!(f.round(v), v, "{v} should be representable");
+        }
+        assert_eq!(f.round(1.1), 1.0);
+        assert_eq!(f.round(1.4), 1.5);
+    }
+
+    #[test]
+    fn saturation() {
+        assert_eq!(Fp8Format::E4M3.round(1e9), 448.0);
+        assert_eq!(Fp8Format::E4M3.round(-1e9), -448.0);
+        assert_eq!(Fp8Format::E5M2.round(1e9), 57344.0);
+    }
+
+    #[test]
+    fn subnormals() {
+        // E4M3 smallest subnormal = 2^-9 = 0.001953125
+        let f = Fp8Format::E4M3;
+        let tiny = f32::powi(2.0, -9);
+        assert_eq!(f.round(tiny), tiny);
+        assert_eq!(f.round(tiny * 0.4), 0.0);
+    }
+
+    #[test]
+    fn monotone_rounding() {
+        let f = Fp8Format::E4M3;
+        let mut prev = f.round(-500.0);
+        let mut x = -500.0f32;
+        while x < 500.0 {
+            let r = f.round(x);
+            assert!(r >= prev - 1e-6, "non-monotone at {x}: {prev} -> {r}");
+            prev = r;
+            x += 0.37;
+        }
+    }
+
+    #[test]
+    fn e4m3_coarser_than_e5m2_near_max_range() {
+        // E5M2 has wider range; E4M3 more mantissa precision at moderate values
+        let f43 = Fp8Format::E4M3;
+        let f52 = Fp8Format::E5M2;
+        let x = 3.3f32;
+        assert!((f43.round(x) - x).abs() <= (f52.round(x) - x).abs());
+    }
+}

@@ -1,0 +1,361 @@
+//! Rust mirror of the paper's quantizers (§3.2, §4.3), the smooth-K
+//! transform (§4.2), and FP8 (E4M3/E5M2) rounding simulation for the
+//! FlashAttention3-style baselines. Operates on (rows, cols) row-major
+//! slabs — one (batch, head) plane of a (B, H, N, d) tensor.
+
+pub mod fp8;
+
+pub use fp8::Fp8Format;
+
+pub const INT8_MAX: f32 = 127.0;
+/// INT4 range (paper §6 future work / SageAttention2): [-7, +7].
+pub const INT4_MAX: f32 = 7.0;
+const EPS: f32 = 1e-8;
+
+/// Quantization granularity for Q/K (paper Table 6 rows).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Granularity {
+    PerTensor,
+    PerToken,
+    PerBlock(usize),
+    PerChannel,
+}
+
+/// An INT8-quantized (rows, cols) plane with per-row scales (per-channel
+/// quantization stores per-column scales instead; see `scale_axis`).
+#[derive(Clone, Debug)]
+pub struct QuantizedPlane {
+    pub data: Vec<i8>,
+    /// Per-row scales (len = rows) for token/block/tensor granularity
+    /// (tensor granularity stores the same value in every slot), or
+    /// per-column scales (len = cols) for `Granularity::PerChannel`.
+    pub scales: Vec<f32>,
+    pub rows: usize,
+    pub cols: usize,
+    pub granularity: Granularity,
+}
+
+impl QuantizedPlane {
+    /// Dequantize back to f32 (ψ⁻¹).
+    pub fn dequant(&self) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.rows * self.cols];
+        match self.granularity {
+            Granularity::PerChannel => {
+                for r in 0..self.rows {
+                    for c in 0..self.cols {
+                        out[r * self.cols + c] =
+                            self.data[r * self.cols + c] as f32 * self.scales[c];
+                    }
+                }
+            }
+            _ => {
+                for r in 0..self.rows {
+                    let s = self.scales[r];
+                    for c in 0..self.cols {
+                        out[r * self.cols + c] = self.data[r * self.cols + c] as f32 * s;
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+fn amax(xs: &[f32]) -> f32 {
+    xs.iter().fold(0.0f32, |m, &x| m.max(x.abs())).max(EPS)
+}
+
+fn quantize_rows(x: &[f32], rows: usize, cols: usize, row_scale: &[f32]) -> Vec<i8> {
+    let mut out = vec![0i8; rows * cols];
+    for r in 0..rows {
+        let inv = 1.0 / row_scale[r];
+        for c in 0..cols {
+            let q = (x[r * cols + c] * inv).round();
+            out[r * cols + c] = q.clamp(-INT8_MAX, INT8_MAX) as i8;
+        }
+    }
+    out
+}
+
+/// ψ per-token: one scale per row (δ = max|row| / 127).
+pub fn quant_per_token(x: &[f32], rows: usize, cols: usize) -> QuantizedPlane {
+    let scales: Vec<f32> =
+        (0..rows).map(|r| amax(&x[r * cols..(r + 1) * cols]) / INT8_MAX).collect();
+    QuantizedPlane {
+        data: quantize_rows(x, rows, cols, &scales),
+        scales,
+        rows,
+        cols,
+        granularity: Granularity::PerToken,
+    }
+}
+
+/// ψ per-block: one scale per `block` consecutive rows, materialized
+/// per-row (block-constant) so consumers are granularity-agnostic.
+pub fn quant_per_block(x: &[f32], rows: usize, cols: usize, block: usize) -> QuantizedPlane {
+    let mut scales = vec![0.0f32; rows];
+    let mut r0 = 0;
+    while r0 < rows {
+        let r1 = (r0 + block).min(rows);
+        let s = amax(&x[r0 * cols..r1 * cols]) / INT8_MAX;
+        scales[r0..r1].fill(s);
+        r0 = r1;
+    }
+    QuantizedPlane {
+        data: quantize_rows(x, rows, cols, &scales),
+        scales,
+        rows,
+        cols,
+        granularity: Granularity::PerBlock(block),
+    }
+}
+
+/// ψ per-tensor: a single scale (stored per-row for uniform consumption).
+pub fn quant_per_tensor(x: &[f32], rows: usize, cols: usize) -> QuantizedPlane {
+    let s = amax(x) / INT8_MAX;
+    QuantizedPlane {
+        data: quantize_rows(x, rows, cols, &vec![s; rows]),
+        scales: vec![s; rows],
+        rows,
+        cols,
+        granularity: Granularity::PerTensor,
+    }
+}
+
+/// ψ per-channel: one scale per column (V in the -vT/-vB kernels).
+pub fn quant_per_channel(x: &[f32], rows: usize, cols: usize) -> QuantizedPlane {
+    let mut scales = vec![EPS; cols];
+    for r in 0..rows {
+        for c in 0..cols {
+            scales[c] = scales[c].max(x[r * cols + c].abs());
+        }
+    }
+    for s in scales.iter_mut() {
+        *s /= INT8_MAX;
+    }
+    let mut data = vec![0i8; rows * cols];
+    for r in 0..rows {
+        for c in 0..cols {
+            let q = (x[r * cols + c] / scales[c]).round();
+            data[r * cols + c] = q.clamp(-INT8_MAX, INT8_MAX) as i8;
+        }
+    }
+    QuantizedPlane { data, scales, rows, cols, granularity: Granularity::PerChannel }
+}
+
+pub fn quantize(x: &[f32], rows: usize, cols: usize, g: Granularity) -> QuantizedPlane {
+    match g {
+        Granularity::PerTensor => quant_per_tensor(x, rows, cols),
+        Granularity::PerToken => quant_per_token(x, rows, cols),
+        Granularity::PerBlock(b) => quant_per_block(x, rows, cols, b),
+        Granularity::PerChannel => quant_per_channel(x, rows, cols),
+    }
+}
+
+/// γ(K) = K − mean(K): subtract the per-channel mean over the token axis
+/// (paper §4.2). Returns the smoothed plane and the removed mean (len cols).
+pub fn smooth_k(k: &[f32], rows: usize, cols: usize) -> (Vec<f32>, Vec<f32>) {
+    let mut mean = vec![0.0f32; cols];
+    for r in 0..rows {
+        for c in 0..cols {
+            mean[c] += k[r * cols + c];
+        }
+    }
+    for m in mean.iter_mut() {
+        *m /= rows as f32;
+    }
+    let mut out = vec![0.0f32; rows * cols];
+    for r in 0..rows {
+        for c in 0..cols {
+            out[r * cols + c] = k[r * cols + c] - mean[c];
+        }
+    }
+    (out, mean)
+}
+
+/// Quantize-dequantize through a numeric format (the accuracy-table sweeps).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FakeQuant {
+    None,
+    Fp16,
+    Int8(Granularity),
+    /// 4-bit signed integers — the paper's future-work direction
+    /// (SageAttention2 ships this with per-thread granularity + Q
+    /// smoothing; here it quantifies how far plain INT4 falls short).
+    Int4(Granularity),
+    Fp8(Fp8Format), // per-token scaled to the format's max, like FA3
+}
+
+pub fn fake_quant(x: &[f32], rows: usize, cols: usize, kind: FakeQuant) -> Vec<f32> {
+    match kind {
+        FakeQuant::None => x.to_vec(),
+        FakeQuant::Fp16 => x.iter().map(|&v| crate::util::f16::round_f16(v)).collect(),
+        FakeQuant::Int8(g) => quantize(x, rows, cols, g).dequant(),
+        FakeQuant::Int4(g) => {
+            // reuse the int8 machinery with a 4-bit clamp: scale by
+            // max/7, round, clamp to [-7, 7]
+            let q8 = quantize(x, rows, cols, g);
+            let rescale = INT4_MAX / INT8_MAX;
+            let mut out = q8.dequant();
+            match q8.granularity {
+                Granularity::PerChannel => {
+                    for r in 0..rows {
+                        for c in 0..cols {
+                            let s4 = q8.scales[c] / rescale;
+                            out[r * cols + c] =
+                                (x[r * cols + c] / s4).round().clamp(-INT4_MAX, INT4_MAX)
+                                    * s4;
+                        }
+                    }
+                }
+                _ => {
+                    for r in 0..rows {
+                        let s4 = q8.scales[r] / rescale;
+                        for c in 0..cols {
+                            out[r * cols + c] =
+                                (x[r * cols + c] / s4).round().clamp(-INT4_MAX, INT4_MAX)
+                                    * s4;
+                        }
+                    }
+                }
+            }
+            out
+        }
+        FakeQuant::Fp8(fmt) => {
+            let fmax = fmt.max_value();
+            let mut out = vec![0.0f32; rows * cols];
+            for r in 0..rows {
+                let row = &x[r * cols..(r + 1) * cols];
+                let scale = amax(row) / fmax;
+                for (c, &v) in row.iter().enumerate() {
+                    out[r * cols + c] = fmt.round(v / scale) * scale;
+                }
+            }
+            out
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn make_plane(rows: usize, cols: usize, seed: u64) -> Vec<f32> {
+        let mut rng = crate::util::rng::Pcg32::seeded(seed);
+        (0..rows * cols).map(|_| rng.normal() * 3.0).collect()
+    }
+
+    #[test]
+    fn per_token_roundtrip_error_bounded() {
+        let (rows, cols) = (37, 64);
+        let x = make_plane(rows, cols, 1);
+        let q = quant_per_token(&x, rows, cols);
+        let deq = q.dequant();
+        for r in 0..rows {
+            let scale = q.scales[r];
+            for c in 0..cols {
+                let err = (x[r * cols + c] - deq[r * cols + c]).abs();
+                assert!(err <= 0.5 * scale + 1e-6, "err {err} scale {scale}");
+            }
+        }
+    }
+
+    #[test]
+    fn per_block_scales_block_constant() {
+        let (rows, cols) = (100, 16);
+        let x = make_plane(rows, cols, 2);
+        let q = quant_per_block(&x, rows, cols, 32);
+        for r in 0..rows {
+            assert_eq!(q.scales[r], q.scales[(r / 32) * 32]);
+        }
+    }
+
+    #[test]
+    fn per_channel_outlier_isolated() {
+        // a huge channel must not degrade other channels' precision
+        let (rows, cols) = (64, 8);
+        let mut x = make_plane(rows, cols, 3);
+        for r in 0..rows {
+            x[r * cols] = 1000.0 + r as f32; // channel 0 outlier
+        }
+        let q = quant_per_channel(&x, rows, cols);
+        let deq = q.dequant();
+        for r in 0..rows {
+            for c in 1..cols {
+                let err = (x[r * cols + c] - deq[r * cols + c]).abs();
+                assert!(err <= 0.5 * q.scales[c] + 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn per_tensor_single_scale() {
+        let x = make_plane(10, 10, 4);
+        let q = quant_per_tensor(&x, 10, 10);
+        assert!(q.scales.iter().all(|&s| s == q.scales[0]));
+    }
+
+    #[test]
+    fn smooth_k_removes_mean() {
+        let (rows, cols) = (50, 16);
+        let mut x = make_plane(rows, cols, 5);
+        for r in 0..rows {
+            for c in 0..cols {
+                x[r * cols + c] += (c as f32) * 10.0; // strong channel bias
+            }
+        }
+        let (sm, mean) = smooth_k(&x, rows, cols);
+        for c in 0..cols {
+            let col_mean: f32 = (0..rows).map(|r| sm[r * cols + c]).sum::<f32>() / rows as f32;
+            assert!(col_mean.abs() < 1e-3, "col {c} mean {col_mean}");
+            assert!((mean[c] - (c as f32) * 10.0).abs() < 1.0);
+        }
+    }
+
+    #[test]
+    fn int4_coarser_than_int8() {
+        let x = make_plane(64, 64, 9);
+        let d8 = fake_quant(&x, 64, 64, FakeQuant::Int8(Granularity::PerToken));
+        let d4 = fake_quant(&x, 64, 64, FakeQuant::Int4(Granularity::PerToken));
+        let err = |d: &[f32]| {
+            x.iter().zip(d).map(|(a, b)| (a - b).abs()).sum::<f32>() / x.len() as f32
+        };
+        let (e8, e4) = (err(&d8), err(&d4));
+        // one quant step is 127/7 ≈ 18x coarser
+        assert!(e4 > 8.0 * e8, "int4 {e4} vs int8 {e8}");
+        // but still bounded by half an int4 step
+        let q = super::quantize(&x, 64, 64, Granularity::PerToken);
+        let max_step = q.scales.iter().cloned().fold(0.0f32, f32::max) * 127.0 / 7.0;
+        for (a, b) in x.iter().zip(&d4) {
+            assert!((a - b).abs() <= 0.5 * max_step + 1e-5);
+        }
+    }
+
+    #[test]
+    fn smoothing_shrinks_quant_error_under_channel_bias() {
+        let (rows, cols) = (128, 64);
+        let mut rng = crate::util::rng::Pcg32::seeded(6);
+        let mut x = vec![0.0f32; rows * cols];
+        let bias: Vec<f32> = (0..cols).map(|_| rng.normal() * 20.0).collect();
+        for r in 0..rows {
+            for c in 0..cols {
+                x[r * cols + c] = bias[c] + rng.normal() * 0.5;
+            }
+        }
+        let rms = |v: &[f32], w: &[f32]| {
+            (v.iter().zip(w).map(|(a, b)| (a - b) * (a - b)).sum::<f32>() / v.len() as f32)
+                .sqrt()
+        };
+        let raw = quant_per_token(&x, rows, cols).dequant();
+        let (sm, mean) = smooth_k(&x, rows, cols);
+        let smq = quant_per_token(&sm, rows, cols).dequant();
+        // add mean back for apples-to-apples reconstruction error
+        let mut rec = smq;
+        for r in 0..rows {
+            for c in 0..cols {
+                rec[r * cols + c] += mean[c];
+            }
+        }
+        assert!(rms(&rec, &x) < 0.2 * rms(&raw, &x));
+    }
+}

@@ -1,0 +1,234 @@
+//! Typed view of `artifacts/manifest.json` (written by aot.py): artifact
+//! entry specs and model configurations including the parameter-init spec
+//! that lets rust construct model weights without python.
+
+use std::collections::BTreeMap;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn parse(j: &Json) -> Result<TensorSpec> {
+        Ok(TensorSpec {
+            shape: j.get("shape").and_then(Json::as_usize_vec).context("shape")?,
+            dtype: j.get("dtype").and_then(Json::as_str).context("dtype")?.to_owned(),
+        })
+    }
+}
+
+/// One artifact entry: file + I/O contract + experiment metadata.
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub file: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+    pub kind: Option<String>,
+    pub config: Option<String>,
+    pub plan: Option<Vec<String>>,
+    pub batch: Option<usize>,
+    pub n_prompt: Option<usize>,
+    pub causal: Option<bool>,
+    pub impl_name: Option<String>,
+    pub shape: Option<Vec<usize>>,
+}
+
+/// One parameter of the transformer: name, shape, init std
+/// (std < 0 marks a norm gain initialized to ones).
+#[derive(Clone, Debug)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub init_std: f32,
+}
+
+/// A model configuration (mirrors python `configs.ModelConfig`).
+#[derive(Clone, Debug)]
+pub struct ModelCfg {
+    pub name: String,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_head: usize,
+    pub d_ff: usize,
+    pub max_seq: usize,
+    pub n_params: usize,
+    pub param_spec: Vec<ParamSpec>,
+}
+
+#[derive(Debug, Default)]
+pub struct Manifest {
+    pub entries: BTreeMap<String, ArtifactSpec>,
+    pub configs: BTreeMap<String, ModelCfg>,
+}
+
+impl Manifest {
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let root = Json::parse(text).context("parsing manifest.json")?;
+        let mut entries = BTreeMap::new();
+        for (name, e) in root.get("entries").and_then(Json::as_obj).context("entries")? {
+            let inputs = e
+                .get("inputs")
+                .and_then(Json::as_arr)
+                .context("inputs")?
+                .iter()
+                .map(TensorSpec::parse)
+                .collect::<Result<_>>()?;
+            let outputs = e
+                .get("outputs")
+                .and_then(Json::as_arr)
+                .context("outputs")?
+                .iter()
+                .map(TensorSpec::parse)
+                .collect::<Result<_>>()?;
+            entries.insert(
+                name.clone(),
+                ArtifactSpec {
+                    file: e.get("file").and_then(Json::as_str).context("file")?.to_owned(),
+                    inputs,
+                    outputs,
+                    kind: e.get("kind").and_then(Json::as_str).map(str::to_owned),
+                    config: e.get("config").and_then(Json::as_str).map(str::to_owned),
+                    plan: e.get("plan").and_then(Json::as_str_vec),
+                    batch: e.get("batch").and_then(Json::as_usize),
+                    n_prompt: e.get("n_prompt").and_then(Json::as_usize),
+                    causal: e.get("causal").and_then(Json::as_bool),
+                    impl_name: e.get("impl").and_then(Json::as_str).map(str::to_owned),
+                    shape: e.get("shape").and_then(Json::as_usize_vec),
+                },
+            );
+        }
+        let mut configs = BTreeMap::new();
+        if let Some(cfgs) = root.get("configs").and_then(Json::as_obj) {
+            for (name, c) in cfgs {
+                let get = |k: &str| c.get(k).and_then(Json::as_usize).context(k.to_owned());
+                let param_spec = c
+                    .get("param_spec")
+                    .and_then(Json::as_arr)
+                    .context("param_spec")?
+                    .iter()
+                    .map(|p| {
+                        Ok(ParamSpec {
+                            name: p.get("name").and_then(Json::as_str).context("name")?.to_owned(),
+                            shape: p.get("shape").and_then(Json::as_usize_vec).context("shape")?,
+                            init_std: p
+                                .get("init_std")
+                                .and_then(Json::as_f64)
+                                .context("init_std")? as f32,
+                        })
+                    })
+                    .collect::<Result<Vec<_>>>()?;
+                configs.insert(
+                    name.clone(),
+                    ModelCfg {
+                        name: name.clone(),
+                        vocab: get("vocab")?,
+                        d_model: get("d_model")?,
+                        n_layers: get("n_layers")?,
+                        n_heads: get("n_heads")?,
+                        d_head: get("d_head")?,
+                        d_ff: get("d_ff")?,
+                        max_seq: get("max_seq")?,
+                        n_params: get("n_params")?,
+                        param_spec,
+                    },
+                );
+            }
+        }
+        Ok(Manifest { entries, configs })
+    }
+}
+
+impl ModelCfg {
+    /// Initialize flat parameters per the spec (normal(0, std), ones for
+    /// std < 0) with a deterministic seed — the rust-side `init_params`.
+    pub fn init_params(&self, seed: u64) -> Vec<crate::runtime::Value> {
+        let mut rng = crate::util::rng::Pcg32::seeded(seed);
+        self.param_spec
+            .iter()
+            .map(|p| {
+                let n = p.shape.iter().product();
+                let data = if p.init_std < 0.0 {
+                    vec![1.0f32; n]
+                } else {
+                    let mut v = vec![0.0f32; n];
+                    rng.fill_normal(&mut v, p.init_std);
+                    v
+                };
+                crate::runtime::Value::F32 { data, shape: p.shape.clone() }
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "entries": {
+        "attn_exact_1x2x256x64": {
+          "file": "attn_exact_1x2x256x64.hlo.txt",
+          "inputs": [{"shape": [1,2,256,64], "dtype": "float32"}],
+          "outputs": [{"shape": [1,2,256,64], "dtype": "float32"}],
+          "kind": "attention", "impl": "exact", "causal": false,
+          "shape": [1,2,256,64]
+        }
+      },
+      "configs": {
+        "tiny": {
+          "name": "tiny", "vocab": 256, "d_model": 128, "n_layers": 2,
+          "n_heads": 2, "d_head": 64, "d_ff": 256, "max_seq": 128,
+          "rope_base": 10000.0, "n_params": 12345,
+          "param_spec": [
+            {"name": "embed", "shape": [256, 128], "init_std": 0.02},
+            {"name": "layer0.ln1", "shape": [128], "init_std": -1.0}
+          ]
+        }
+      }
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        let e = &m.entries["attn_exact_1x2x256x64"];
+        assert_eq!(e.inputs[0].shape, vec![1, 2, 256, 64]);
+        assert_eq!(e.kind.as_deref(), Some("attention"));
+        assert_eq!(e.impl_name.as_deref(), Some("exact"));
+        let c = &m.configs["tiny"];
+        assert_eq!(c.vocab, 256);
+        assert_eq!(c.param_spec.len(), 2);
+    }
+
+    #[test]
+    fn init_params_respects_spec() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        let params = m.configs["tiny"].init_params(42);
+        assert_eq!(params.len(), 2);
+        // embed: normal with std 0.02
+        if let crate::runtime::Value::F32 { data, shape } = &params[0] {
+            assert_eq!(shape, &vec![256, 128]);
+            let std = (data.iter().map(|x| x * x).sum::<f32>() / data.len() as f32).sqrt();
+            assert!((std - 0.02).abs() < 0.002, "std {std}");
+        } else {
+            panic!("wrong dtype");
+        }
+        // ln gain: all ones
+        if let crate::runtime::Value::F32 { data, .. } = &params[1] {
+            assert!(data.iter().all(|&x| x == 1.0));
+        } else {
+            panic!("wrong dtype");
+        }
+    }
+}

@@ -1,0 +1,144 @@
+//! Host-side tensor values crossing the PJRT boundary.
+
+use anyhow::{bail, Result};
+
+use super::manifest::TensorSpec;
+
+/// A host tensor: the only dtypes crossing the artifact ABI are f32
+/// (activations, params, caches) and i32 (tokens, step/pos counters).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    F32 { data: Vec<f32>, shape: Vec<usize> },
+    I32 { data: Vec<i32>, shape: Vec<usize> },
+}
+
+impl Value {
+    pub fn f32(data: Vec<f32>, shape: &[usize]) -> Value {
+        assert_eq!(data.len(), shape.iter().product::<usize>());
+        Value::F32 { data, shape: shape.to_vec() }
+    }
+
+    pub fn i32(data: Vec<i32>, shape: &[usize]) -> Value {
+        assert_eq!(data.len(), shape.iter().product::<usize>());
+        Value::I32 { data, shape: shape.to_vec() }
+    }
+
+    pub fn scalar_i32(v: i32) -> Value {
+        Value::I32 { data: vec![v], shape: vec![] }
+    }
+
+    pub fn zeros_f32(shape: &[usize]) -> Value {
+        Value::F32 { data: vec![0.0; shape.iter().product()], shape: shape.to_vec() }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            Value::F32 { shape, .. } | Value::I32 { shape, .. } => shape,
+        }
+    }
+
+    pub fn dtype_name(&self) -> &'static str {
+        match self {
+            Value::F32 { .. } => "float32",
+            Value::I32 { .. } => "int32",
+        }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.shape().iter().product()
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            Value::F32 { data, .. } => Ok(data),
+            _ => bail!("expected f32 value, got {}", self.dtype_name()),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            Value::I32 { data, .. } => Ok(data),
+            _ => bail!("expected i32 value, got {}", self.dtype_name()),
+        }
+    }
+
+    pub fn scalar_f32(&self) -> Result<f32> {
+        let d = self.as_f32()?;
+        if d.len() != 1 {
+            bail!("expected scalar, shape {:?}", self.shape());
+        }
+        Ok(d[0])
+    }
+
+    /// Into an attention-layout tensor for the native numerics code.
+    pub fn to_tensor(&self) -> Result<crate::tensor::Tensor> {
+        Ok(crate::tensor::Tensor::new(self.as_f32()?.to_vec(), self.shape()))
+    }
+
+    pub fn from_tensor(t: &crate::tensor::Tensor) -> Value {
+        Value::F32 { data: t.data.clone(), shape: t.shape.clone() }
+    }
+
+    /// Marshal into an XLA literal (one host copy).
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let lit = match self {
+            Value::F32 { data, shape } => {
+                let bytes: &[u8] = unsafe {
+                    std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4)
+                };
+                xla::Literal::create_from_shape_and_untyped_data(
+                    xla::ElementType::F32,
+                    shape,
+                    bytes,
+                )?
+            }
+            Value::I32 { data, shape } => {
+                let bytes: &[u8] = unsafe {
+                    std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4)
+                };
+                xla::Literal::create_from_shape_and_untyped_data(
+                    xla::ElementType::S32,
+                    shape,
+                    bytes,
+                )?
+            }
+        };
+        Ok(lit)
+    }
+
+    /// Unmarshal from an XLA literal per the manifest spec (one host copy).
+    pub fn from_literal(lit: &xla::Literal, spec: &TensorSpec) -> Result<Value> {
+        match spec.dtype.as_str() {
+            "float32" => Ok(Value::F32 { data: lit.to_vec::<f32>()?, shape: spec.shape.clone() }),
+            "int32" => Ok(Value::I32 { data: lit.to_vec::<i32>()?, shape: spec.shape.clone() }),
+            other => bail!("unsupported artifact dtype {other}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn value_shape_dtype() {
+        let v = Value::f32(vec![1.0, 2.0, 3.0, 4.0], &[2, 2]);
+        assert_eq!(v.shape(), &[2, 2]);
+        assert_eq!(v.dtype_name(), "float32");
+        assert_eq!(v.numel(), 4);
+        assert!(v.as_i32().is_err());
+    }
+
+    #[test]
+    fn scalar_roundtrip() {
+        let v = Value::scalar_i32(7);
+        assert_eq!(v.shape(), &[] as &[usize]);
+        assert_eq!(v.as_i32().unwrap(), &[7]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn shape_mismatch_panics() {
+        Value::f32(vec![0.0; 3], &[2, 2]);
+    }
+}

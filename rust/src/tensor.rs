@@ -1,0 +1,122 @@
+//! Minimal row-major tensor used by the rust-native numerics substrate
+//! (quantizers, attention references, synthetic generators). This is not a
+//! general autodiff array — just contiguous f32 storage with shape
+//! bookkeeping and the handful of views the attention kernels need.
+
+use std::fmt;
+
+#[derive(Clone, PartialEq)]
+pub struct Tensor {
+    pub data: Vec<f32>,
+    pub shape: Vec<usize>,
+}
+
+impl Tensor {
+    pub fn new(data: Vec<f32>, shape: &[usize]) -> Self {
+        assert_eq!(
+            data.len(),
+            shape.iter().product::<usize>(),
+            "data len {} != shape {:?}",
+            data.len(),
+            shape
+        );
+        Tensor { data, shape: shape.to_vec() }
+    }
+
+    pub fn zeros(shape: &[usize]) -> Self {
+        Tensor { data: vec![0.0; shape.iter().product()], shape: shape.to_vec() }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    /// (B, H, N, d) accessors used throughout the attention code.
+    pub fn dims4(&self) -> (usize, usize, usize, usize) {
+        assert_eq!(self.shape.len(), 4, "expected 4-D, got {:?}", self.shape);
+        (self.shape[0], self.shape[1], self.shape[2], self.shape[3])
+    }
+
+    /// Contiguous (N, d) slab for one (batch, head) pair of a 4-D tensor.
+    pub fn head(&self, b: usize, h: usize) -> &[f32] {
+        let (_, nh, n, d) = self.dims4();
+        let off = (b * nh + h) * n * d;
+        &self.data[off..off + n * d]
+    }
+
+    pub fn head_mut(&mut self, b: usize, h: usize) -> &mut [f32] {
+        let (_, nh, n, d) = self.dims4();
+        let off = (b * nh + h) * n * d;
+        &mut self.data[off..off + n * d]
+    }
+
+    pub fn map(&self, f: impl Fn(f32) -> f32) -> Tensor {
+        Tensor {
+            data: self.data.iter().map(|&x| f(x)).collect(),
+            shape: self.shape.clone(),
+        }
+    }
+}
+
+impl fmt::Debug for Tensor {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Tensor{:?}[{} elems]", self.shape, self.data.len())
+    }
+}
+
+/// Scoped-thread parallel map over `0..n` chunks — substrate for the
+/// unavailable rayon. `f(i)` must be independent per index. Results are
+/// returned in order.
+pub fn parallel_map<T: Send>(n: usize, threads: usize, f: impl Fn(usize) -> T + Sync) -> Vec<T> {
+    let threads = threads.clamp(1, n.max(1));
+    if threads <= 1 || n <= 1 {
+        return (0..n).map(f).collect();
+    }
+    let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
+    let next = std::sync::atomic::AtomicUsize::new(0);
+    let slots: Vec<std::sync::Mutex<&mut Option<T>>> =
+        out.iter_mut().map(std::sync::Mutex::new).collect();
+    std::thread::scope(|s| {
+        for _ in 0..threads {
+            s.spawn(|| loop {
+                let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let v = f(i);
+                **slots[i].lock().unwrap() = Some(v);
+            });
+        }
+    });
+    out.into_iter().map(|v| v.unwrap()).collect()
+}
+
+/// Default worker count for data-parallel numerics.
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn head_slicing() {
+        let t = Tensor::new((0..24).map(|x| x as f32).collect(), &[2, 3, 2, 2]);
+        assert_eq!(t.head(0, 0), &[0.0, 1.0, 2.0, 3.0]);
+        assert_eq!(t.head(1, 2), &[20.0, 21.0, 22.0, 23.0]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn shape_mismatch_panics() {
+        Tensor::new(vec![0.0; 5], &[2, 3]);
+    }
+
+    #[test]
+    fn parallel_map_matches_serial() {
+        let serial: Vec<usize> = (0..100).map(|i| i * i).collect();
+        let par = parallel_map(100, 8, |i| i * i);
+        assert_eq!(serial, par);
+    }
+}

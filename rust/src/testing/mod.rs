@@ -1,0 +1,97 @@
+//! Property-testing mini-harness (substrate for the unavailable proptest
+//! crate): seeded random case generation with failing-seed reporting, so
+//! invariant tests get randomized coverage while staying reproducible.
+
+use crate::util::rng::Pcg32;
+
+/// Run `cases` randomized executions of `body`. Each case gets its own
+/// deterministically-derived RNG; on panic the harness reports the case
+/// seed so the failure replays with `check_with_seed`.
+pub fn check(name: &str, cases: usize, body: impl Fn(&mut Pcg32) + std::panic::RefUnwindSafe) {
+    let base = fnv1a(name.as_bytes());
+    for case in 0..cases {
+        let seed = base.wrapping_add(case as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let result = std::panic::catch_unwind(|| {
+            let mut rng = Pcg32::seeded(seed);
+            body(&mut rng);
+        });
+        if let Err(e) = result {
+            eprintln!("property '{name}' failed on case {case} (seed {seed:#x})");
+            eprintln!("replay: testing::check_with_seed(\"{name}\", {seed:#x}, body)");
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+/// Replay a single failing case.
+pub fn check_with_seed(_name: &str, seed: u64, body: impl Fn(&mut Pcg32)) {
+    let mut rng = Pcg32::seeded(seed);
+    body(&mut rng);
+}
+
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    h
+}
+
+/// Shrink-lite helpers: draw structured values from an RNG.
+pub mod gen {
+    use crate::util::rng::Pcg32;
+
+    /// Uniform usize in [lo, hi].
+    pub fn usize_in(rng: &mut Pcg32, lo: usize, hi: usize) -> usize {
+        lo + rng.below((hi - lo + 1) as u32) as usize
+    }
+
+    /// A plausible attention shape: (batch, heads, seq, head_dim).
+    pub fn attn_shape(rng: &mut Pcg32) -> [usize; 4] {
+        let b = usize_in(rng, 1, 3);
+        let h = usize_in(rng, 1, 4);
+        let n = usize_in(rng, 1, 320);
+        let d = *[16, 32, 64, 128].get(rng.below(4) as usize).unwrap();
+        [b, h, n, d]
+    }
+
+    /// Vector of f32 in [-scale, scale].
+    pub fn f32_vec(rng: &mut Pcg32, len: usize, scale: f32) -> Vec<f32> {
+        (0..len).map(|_| rng.range_f32(-scale, scale)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn check_runs_all_cases() {
+        let count = std::sync::atomic::AtomicUsize::new(0);
+        check("counter", 17, |_| {
+            count.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        });
+        assert_eq!(count.load(std::sync::atomic::Ordering::Relaxed), 17);
+    }
+
+    #[test]
+    #[should_panic]
+    fn check_propagates_failure() {
+        check("fails", 10, |rng| {
+            assert!(rng.uniform() < 2.0); // always true
+            assert!(rng.uniform() >= 0.0);
+            panic!("boom");
+        });
+    }
+
+    #[test]
+    fn gen_shapes_in_bounds() {
+        let mut rng = Pcg32::seeded(5);
+        for _ in 0..100 {
+            let [b, h, n, d] = gen::attn_shape(&mut rng);
+            assert!(b >= 1 && b <= 3 && h <= 4 && n >= 1 && n <= 320);
+            assert!([16, 32, 64, 128].contains(&d));
+        }
+    }
+}

@@ -1,0 +1,189 @@
+//! IEEE 754 binary16 ("half") conversions, used to simulate the paper's
+//! mma(f16.f16.f16.f16) tensor-core path (§4.4): FP16 operands and an FP16
+//! accumulator. Round-to-nearest-even, matching hardware.
+//!
+//! Substrate note: the `half` crate is unavailable offline; this is a
+//! standalone implementation with exhaustive round-trip tests.
+
+/// A binary16 value stored as its bit pattern.
+#[derive(Clone, Copy, PartialEq, Debug, Default)]
+pub struct F16(pub u16);
+
+impl F16 {
+    pub const ZERO: F16 = F16(0);
+    /// Largest finite f16 (65504).
+    pub const MAX: F16 = F16(0x7BFF);
+
+    #[inline]
+    pub fn from_f32(x: f32) -> F16 {
+        F16(f32_to_f16_bits(x))
+    }
+
+    #[inline]
+    pub fn to_f32(self) -> f32 {
+        f16_bits_to_f32(self.0)
+    }
+}
+
+/// Convert f32 to f16 bits with round-to-nearest-even and proper
+/// overflow-to-infinity / subnormal handling.
+pub fn f32_to_f16_bits(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xFF) as i32;
+    let mant = bits & 0x007F_FFFF;
+
+    if exp == 0xFF {
+        // inf / nan
+        let payload = if mant != 0 { 0x0200 } else { 0 };
+        return sign | 0x7C00 | payload;
+    }
+    // unbiased exponent
+    let e = exp - 127;
+    if e > 15 {
+        return sign | 0x7C00; // overflow -> inf
+    }
+    if e >= -14 {
+        // normal f16
+        let mut m = mant >> 13; // 10 bits
+        let rem = mant & 0x1FFF;
+        // round to nearest even
+        if rem > 0x1000 || (rem == 0x1000 && (m & 1) == 1) {
+            m += 1;
+        }
+        let mut he = (e + 15) as u32;
+        if m == 0x400 {
+            m = 0;
+            he += 1;
+            if he >= 0x1F {
+                return sign | 0x7C00;
+            }
+        }
+        return sign | ((he as u16) << 10) | (m as u16);
+    }
+    if e >= -25 {
+        // subnormal f16
+        let full = mant | 0x0080_0000; // implicit leading 1
+        let shift = (-14 - e) as u32 + 13;
+        let m = full >> shift;
+        let rem = full & ((1u32 << shift) - 1);
+        let half = 1u32 << (shift - 1);
+        let mut m = m;
+        if rem > half || (rem == half && (m & 1) == 1) {
+            m += 1;
+        }
+        return sign | (m as u16);
+    }
+    sign // underflow to zero
+}
+
+/// Convert f16 bits to f32 exactly.
+pub fn f16_bits_to_f32(h: u16) -> f32 {
+    let sign = ((h as u32) & 0x8000) << 16;
+    let exp = ((h >> 10) & 0x1F) as u32;
+    let mant = (h & 0x03FF) as u32;
+    let bits = if exp == 0x1F {
+        sign | 0x7F80_0000 | (mant << 13)
+    } else if exp == 0 {
+        if mant == 0 {
+            sign
+        } else {
+            // subnormal: value = mant * 2^-24; normalize into f32.
+            // MSB position p of mant gives value 2^(p-24) * (1.frac)
+            let p = 31 - mant.leading_zeros(); // 0..=9
+            let m = (mant << (10 - p)) & 0x03FF; // drop implicit 1, align to 10 bits
+            let e = 127 - 24 + p;
+            sign | (e << 23) | (m << 13)
+        }
+    } else {
+        sign | ((exp + 127 - 15) << 23) | (mant << 13)
+    };
+    f32::from_bits(bits)
+}
+
+/// Round an f32 through f16 precision (quantize-dequantize).
+#[inline]
+pub fn round_f16(x: f32) -> f32 {
+    f16_bits_to_f32(f32_to_f16_bits(x))
+}
+
+/// Round a whole slice through f16 precision in place. Uses the x86 F16C
+/// conversion instructions (8 lanes per op) when available — the software
+/// fallback is bit-identical (§Perf: the fp16-accumulator simulation is
+/// the native sage kernel's hot spot).
+pub fn round_f16_slice(xs: &mut [f32]) {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if std::arch::is_x86_feature_detected!("f16c") {
+            // SAFETY: feature checked above.
+            unsafe { round_f16_slice_f16c(xs) };
+            return;
+        }
+    }
+    for x in xs.iter_mut() {
+        *x = round_f16(*x);
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "f16c", enable = "avx")]
+unsafe fn round_f16_slice_f16c(xs: &mut [f32]) {
+    use std::arch::x86_64::*;
+    let mut chunks = xs.chunks_exact_mut(8);
+    for c in chunks.by_ref() {
+        // round-to-nearest-even, matching f32_to_f16_bits
+        let v = _mm256_loadu_ps(c.as_ptr());
+        let h = _mm256_cvtps_ph::<_MM_FROUND_TO_NEAREST_INT>(v);
+        let back = _mm256_cvtph_ps(h);
+        _mm256_storeu_ps(c.as_mut_ptr(), back);
+    }
+    for x in chunks.into_remainder() {
+        *x = round_f16(*x);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_all_f16_values() {
+        // every finite f16 bit pattern must round-trip exactly
+        for bits in 0u16..=0xFFFF {
+            let exp = (bits >> 10) & 0x1F;
+            if exp == 0x1F {
+                continue; // inf/nan
+            }
+            let f = f16_bits_to_f32(bits);
+            let back = f32_to_f16_bits(f);
+            assert_eq!(bits, back, "bits {bits:#06x} -> {f} -> {back:#06x}");
+        }
+    }
+
+    #[test]
+    fn known_values() {
+        assert_eq!(f32_to_f16_bits(1.0), 0x3C00);
+        assert_eq!(f32_to_f16_bits(-2.0), 0xC000);
+        assert_eq!(f32_to_f16_bits(65504.0), 0x7BFF);
+        assert_eq!(f32_to_f16_bits(65520.0), 0x7C00); // rounds to inf
+        assert_eq!(f16_bits_to_f32(0x3C00), 1.0);
+        assert_eq!(f16_bits_to_f32(0x0001), 5.960_464_5e-8); // smallest subnormal
+    }
+
+    #[test]
+    fn round_to_nearest_even() {
+        // 1 + 2^-11 is exactly halfway between 1.0 and the next f16; ties to even
+        let halfway = 1.0 + f32::powi(2.0, -11);
+        assert_eq!(f32_to_f16_bits(halfway), 0x3C00);
+        let above = 1.0 + f32::powi(2.0, -11) + f32::powi(2.0, -20);
+        assert_eq!(f32_to_f16_bits(above), 0x3C01);
+    }
+
+    #[test]
+    fn nan_and_inf() {
+        assert!(f16_bits_to_f32(0x7E00).is_nan());
+        assert_eq!(f16_bits_to_f32(0x7C00), f32::INFINITY);
+        assert_eq!(f32_to_f16_bits(f32::NAN) & 0x7C00, 0x7C00);
+        assert_ne!(f32_to_f16_bits(f32::NAN) & 0x03FF, 0);
+    }
+}

@@ -1,0 +1,13 @@
+//! Self-contained substrates standing in for unavailable ecosystem crates
+//! (offline image, DESIGN.md §3): IEEE half-precision conversion, a PCG
+//! random generator, and a JSON parser/writer for the artifact manifest.
+
+pub mod f16;
+pub mod json;
+pub mod rng;
+
+/// Ceil-division.
+#[inline]
+pub fn ceil_div(a: usize, b: usize) -> usize {
+    a.div_ceil(b)
+}

@@ -1,0 +1,132 @@
+//! Failure-injection tests: the runtime and coordinator must fail loudly
+//! and cleanly on corrupt artifacts, bad manifests, and over-budget
+//! requests — never with a wrong answer.
+
+use sageattention::coordinator::{Engine, GenParams, Request};
+use sageattention::runtime::{Manifest, Runtime, Value};
+
+#[test]
+fn missing_artifact_dir_errors() {
+    assert!(Runtime::open("/nonexistent/path").is_err());
+}
+
+#[test]
+fn corrupt_manifest_rejected() {
+    let dir = std::env::temp_dir().join(format!("sage_corrupt_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(dir.join("manifest.json"), "{not json").unwrap();
+    assert!(Runtime::open(&dir).is_err());
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn manifest_with_missing_fields_rejected() {
+    for bad in [
+        r#"{"entries": {"x": {"file": "x.hlo.txt"}}}"#, // no inputs/outputs
+        r#"{"entries": {"x": {"inputs": [], "outputs": []}}}"#, // no file
+        r#"{"entries": 42}"#,
+    ] {
+        assert!(Manifest::parse(bad).is_err(), "accepted: {bad}");
+    }
+    // entries may be empty — that parses
+    assert!(Manifest::parse(r#"{"entries": {}}"#).is_ok());
+}
+
+#[test]
+fn truncated_hlo_file_fails_at_load_not_at_run() {
+    let rt = Runtime::open(Runtime::default_dir()).unwrap();
+    // copy the manifest but point an entry at a garbage HLO file
+    let dir = std::env::temp_dir().join(format!("sage_badhlo_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let manifest = r#"{
+      "entries": {
+        "bad": {
+          "file": "bad.hlo.txt",
+          "inputs": [{"shape": [2], "dtype": "float32"}],
+          "outputs": [{"shape": [2], "dtype": "float32"}]
+        }
+      },
+      "configs": {}
+    }"#;
+    std::fs::write(dir.join("manifest.json"), manifest).unwrap();
+    std::fs::write(dir.join("bad.hlo.txt"), "HloModule trash\nENTRY oops {").unwrap();
+    let rt2 = Runtime::open(&dir).unwrap();
+    assert!(rt2.load("bad").is_err(), "garbage HLO must fail to parse/compile");
+    assert!(rt2.load("nonexistent").is_err());
+    drop(rt);
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn engine_rejects_unknown_config_and_plan() {
+    let rt = Runtime::open(Runtime::default_dir()).unwrap();
+    assert!(Engine::new(&rt, "no-such-config", "sage", 1).is_err());
+    assert!(Engine::new(&rt, "tiny", "no-such-plan", 1).is_err());
+}
+
+#[test]
+fn engine_rejects_over_budget_requests() {
+    let rt = Runtime::open(Runtime::default_dir()).unwrap();
+    let mut engine = Engine::new(&rt, "tiny", "fp", 1).unwrap();
+    // empty prompt
+    assert!(engine
+        .add_request(&Request::new(1, vec![], GenParams::default()))
+        .is_err());
+    // prompt longer than the largest prefill artifact
+    let too_long = vec![1i32; 100_000];
+    assert!(engine
+        .add_request(&Request::new(2, too_long, GenParams::default()))
+        .is_err());
+    // prompt + generation overflowing the context window
+    let sizes = engine.prefill_sizes();
+    let max = *sizes.last().unwrap();
+    assert!(engine
+        .add_request(&Request::new(
+            3,
+            vec![1; max],
+            GenParams { max_new_tokens: 1_000_000, ..Default::default() },
+        ))
+        .is_err());
+    // engine state untouched by the failures
+    assert_eq!(engine.free_slots(), engine.batch_slots());
+}
+
+#[test]
+fn engine_refuses_when_full_without_error() {
+    let rt = Runtime::open(Runtime::default_dir()).unwrap();
+    let mut engine = Engine::new(&rt, "tiny", "fp", 2).unwrap();
+    let sizes = engine.prefill_sizes();
+    let mk = |id| {
+        Request::new(id, vec![1; sizes[0]], GenParams { max_new_tokens: 4, ..Default::default() })
+    };
+    for id in 0..engine.batch_slots() as u64 {
+        assert!(engine.add_request(&mk(id)).unwrap());
+    }
+    // full: polite refusal, not an error
+    assert!(!engine.add_request(&mk(99)).unwrap());
+}
+
+#[test]
+fn set_params_validates_shapes() {
+    let rt = Runtime::open(Runtime::default_dir()).unwrap();
+    let mut engine = Engine::new(&rt, "tiny", "fp", 3).unwrap();
+    // wrong count
+    assert!(engine.set_params(vec![Value::zeros_f32(&[1])]).is_err());
+    // right count, wrong shapes
+    let cfg = &rt.manifest.configs["tiny"];
+    let bad: Vec<Value> =
+        cfg.param_spec.iter().map(|_| Value::zeros_f32(&[3, 3])).collect();
+    assert!(engine.set_params(bad).is_err());
+    // correct params accepted
+    let good = cfg.init_params(9);
+    assert!(engine.set_params(good).is_ok());
+}
+
+#[test]
+fn value_dtype_confusion_rejected_at_run() {
+    let rt = Runtime::open(Runtime::default_dir()).unwrap();
+    let art = rt.load("attn_exact_1x2x256x64").unwrap();
+    let f = Value::zeros_f32(&[1, 2, 256, 64]);
+    let i = Value::i32(vec![0; 1 * 2 * 256 * 64], &[1, 2, 256, 64]);
+    assert!(art.run(&[f.clone(), f.clone(), i]).is_err(), "dtype mismatch must fail");
+}

@@ -1,0 +1,212 @@
+//! Integration tests over the PJRT runtime + AOT artifacts: the rust side
+//! executes the jax-lowered computations and checks them against the
+//! rust-native numerics substrate. Requires `make artifacts` to have run.
+
+use sageattention::attn::{attention, AttnImpl};
+use sageattention::coordinator::{
+    BatchPolicy, Batcher, Engine, GenParams, KvCacheManager, Request, Scheduler,
+};
+use sageattention::metrics::accuracy;
+use sageattention::runtime::{Runtime, Value};
+use sageattention::synth::{make_qkv, Profile};
+
+fn runtime() -> Runtime {
+    Runtime::open(Runtime::default_dir()).expect("artifacts missing — run `make artifacts`")
+}
+
+#[test]
+fn attention_artifacts_match_native_reference() {
+    let rt = runtime();
+    for (name, imp, min_cos) in [
+        ("attn_exact_1x2x256x64", AttnImpl::Exact, 0.99999),
+        ("attn_sage_t_1x2x256x64", AttnImpl::by_name("SageAttn-T").unwrap(), 0.999),
+        ("attn_sage_b_1x2x256x64", AttnImpl::by_name("SageAttn-B").unwrap(), 0.999),
+        ("attn_sage_vt_1x2x256x64", AttnImpl::by_name("SageAttn-vT").unwrap(), 0.995),
+        ("attn_sage_vb_1x2x256x64", AttnImpl::by_name("SageAttn-vB").unwrap(), 0.995),
+    ] {
+        let art = rt.load(name).unwrap();
+        let (q, k, v) = make_qkv(7, [1, 2, 256, 64], Profile::diffusion_like());
+        let out = art
+            .run(&[Value::from_tensor(&q), Value::from_tensor(&k), Value::from_tensor(&v)])
+            .unwrap();
+        let native = attention(&q, &k, &v, imp, false);
+        let acc = accuracy(&native.data, out[0].as_f32().unwrap());
+        assert!(
+            acc.cos_sim > min_cos,
+            "{name}: pallas-artifact vs rust-native cos {}",
+            acc.cos_sim
+        );
+    }
+}
+
+#[test]
+fn causal_artifacts_respect_masking() {
+    let rt = runtime();
+    let art = rt.load("attn_sage_b_causal_1x2x256x64").unwrap();
+    let (q, k, v) = make_qkv(8, [1, 2, 256, 64], Profile::llama_like());
+    let out = art
+        .run(&[Value::from_tensor(&q), Value::from_tensor(&k), Value::from_tensor(&v)])
+        .unwrap();
+    let gold = attention(&q, &k, &v, AttnImpl::Exact, true);
+    let acc = accuracy(&gold.data, out[0].as_f32().unwrap());
+    assert!(acc.cos_sim > 0.999, "causal cos {}", acc.cos_sim);
+}
+
+#[test]
+fn artifact_rejects_wrong_arity_and_shape() {
+    let rt = runtime();
+    let art = rt.load("attn_exact_1x2x256x64").unwrap();
+    let (q, k, _) = make_qkv(9, [1, 2, 256, 64], Profile::llama_like());
+    assert!(art.run(&[Value::from_tensor(&q), Value::from_tensor(&k)]).is_err());
+    let bad = Value::zeros_f32(&[1, 2, 128, 64]);
+    assert!(art
+        .run(&[bad.clone(), bad.clone(), bad])
+        .is_err());
+}
+
+#[test]
+fn train_step_descends_via_artifact() {
+    let rt = runtime();
+    let art = rt.load("tiny_train_step").unwrap();
+    let cfg = &rt.manifest.configs["tiny"];
+    let params = cfg.init_params(1);
+    let zeros: Vec<Value> = params
+        .iter()
+        .map(|p| Value::zeros_f32(p.shape()))
+        .collect();
+    let batch = art.spec.batch.unwrap_or(2);
+    let mut corpus = sageattention::synth::Corpus::new(cfg.vocab, 3);
+    let tokens = Value::i32(corpus.batch(batch, cfg.max_seq), &[batch, cfg.max_seq]);
+
+    let mut inputs: Vec<Value> = params.clone();
+    inputs.extend(zeros.iter().cloned());
+    inputs.extend(zeros.iter().cloned());
+    inputs.push(Value::scalar_i32(0));
+    inputs.push(tokens.clone());
+
+    let mut first_loss = None;
+    let n_p = params.len();
+    for _ in 0..8 {
+        let out = art.run(&inputs).unwrap();
+        let loss = out[0].scalar_f32().unwrap();
+        assert!(loss.is_finite());
+        first_loss.get_or_insert(loss);
+        // thread state: params' m' v' step' back into inputs
+        for i in 0..n_p {
+            inputs[i] = out[2 + i].clone();
+            inputs[n_p + i] = out[2 + n_p + i].clone();
+            inputs[2 * n_p + i] = out[2 + 2 * n_p + i].clone();
+        }
+        inputs[3 * n_p] = out[1].clone();
+    }
+    let final_loss = {
+        let out = art.run(&inputs).unwrap();
+        out[0].scalar_f32().unwrap()
+    };
+    assert!(
+        final_loss < first_loss.unwrap() - 0.05,
+        "loss did not descend: {first_loss:?} -> {final_loss}"
+    );
+}
+
+#[test]
+fn eval_loss_fp_vs_sage_close() {
+    // the paper's Table 8 property at tiny scale: swapping in quantized
+    // attention leaves the language-model loss essentially unchanged
+    let rt = runtime();
+    let fp = rt.load("tiny_eval_loss_fp").unwrap();
+    let sage = rt.load("tiny_eval_loss_sage").unwrap();
+    let cfg = &rt.manifest.configs["tiny"];
+    let params = cfg.init_params(5);
+    let batch = fp.spec.batch.unwrap_or(2);
+    let mut corpus = sageattention::synth::Corpus::new(cfg.vocab, 11);
+    let tokens = Value::i32(corpus.batch(batch, cfg.max_seq), &[batch, cfg.max_seq]);
+    let mut inputs = params;
+    inputs.push(tokens);
+    let l_fp = fp.run(&inputs).unwrap()[0].scalar_f32().unwrap();
+    let l_sage = sage.run(&inputs).unwrap()[0].scalar_f32().unwrap();
+    assert!((l_fp - l_sage).abs() < 0.02 * l_fp.abs().max(1.0),
+            "fp {l_fp} vs sage {l_sage}");
+}
+
+#[test]
+fn engine_serves_and_respects_budgets() {
+    let rt = runtime();
+    let mut engine = Engine::new(&rt, "tiny", "sage", 2).unwrap();
+    let sizes = engine.prefill_sizes();
+    assert!(!sizes.is_empty());
+    let req = Request::new(
+        1,
+        vec![3; sizes[0]],
+        GenParams { max_new_tokens: 4, ..Default::default() },
+    );
+    assert!(engine.add_request(&req).unwrap());
+    assert_eq!(engine.live_slots(), 1);
+    let mut responses = Vec::new();
+    for _ in 0..10 {
+        responses.extend(engine.step().unwrap());
+        if !responses.is_empty() {
+            break;
+        }
+    }
+    assert_eq!(responses.len(), 1);
+    let r = &responses[0];
+    assert_eq!(r.id, 1);
+    assert_eq!(r.tokens.len(), 4);
+    assert!(engine.free_slots() == engine.batch_slots());
+}
+
+#[test]
+fn scheduler_end_to_end_fifo() {
+    let rt = runtime();
+    let engine = Engine::new(&rt, "tiny", "fp", 7).unwrap();
+    let slots = engine.batch_slots();
+    let sizes = engine.prefill_sizes();
+    let cfg = &rt.manifest.configs["tiny"];
+    let kv = KvCacheManager::new(slots * cfg.max_seq / 16, 16);
+    let mut sched = Scheduler::new(Batcher::new(BatchPolicy::Fifo), kv, engine);
+    for i in 0..5u64 {
+        sched.submit(Request::new(
+            i,
+            vec![(i as i32 + 1) % cfg.vocab as i32; sizes[0]],
+            GenParams { max_new_tokens: 3, ..Default::default() },
+        ));
+    }
+    let report = sched.run_to_completion().unwrap();
+    assert_eq!(report.responses.len(), 5);
+    assert_eq!(report.tokens_out, 15);
+    // all KV must be returned
+    assert!(report.responses.iter().all(|r| r.e2e_ms >= 0.0));
+}
+
+#[test]
+fn plug_and_play_same_params_same_greedy_tokens() {
+    // the paper's end-to-end claim, at serving granularity: with identical
+    // weights and greedy sampling, sage vs fp decode should mostly agree
+    let rt = runtime();
+    let mut e_fp = Engine::new(&rt, "tiny", "fp", 21).unwrap();
+    let mut e_sage = Engine::new(&rt, "tiny", "sage", 21).unwrap();
+    let sizes = e_fp.prefill_sizes();
+    let req = Request::new(
+        1,
+        vec![7; sizes[0]],
+        GenParams { max_new_tokens: 8, ..Default::default() },
+    );
+    e_fp.add_request(&req).unwrap();
+    e_sage.add_request(&req).unwrap();
+    let run = |e: &mut Engine| -> Vec<i32> {
+        loop {
+            let done = e.step().unwrap();
+            if let Some(r) = done.into_iter().next() {
+                return r.tokens;
+            }
+        }
+    };
+    let t_fp = run(&mut e_fp);
+    let t_sage = run(&mut e_sage);
+    let agree = t_fp.iter().zip(&t_sage).filter(|(a, b)| a == b).count();
+    assert!(
+        agree * 2 >= t_fp.len(),
+        "greedy decode diverged early: fp {t_fp:?} sage {t_sage:?}"
+    );
+}

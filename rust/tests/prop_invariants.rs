@@ -1,0 +1,228 @@
+//! Randomized invariant tests over the coordinator substrates (the
+//! proptest-shaped suite; see `sageattention::testing` for the harness).
+
+use sageattention::attn::{attention, AttnImpl, SAGE_B, SAGE_T, SAGE_VB, SAGE_VT};
+use sageattention::coordinator::kv_cache::KvCacheManager;
+use sageattention::coordinator::{BatchPolicy, Batcher, GenParams, Request};
+use sageattention::metrics::cos_sim;
+use sageattention::quant::{self, Granularity};
+use sageattention::synth::{make_qkv, Profile};
+use sageattention::testing::{check, gen};
+use sageattention::util::f16::{f16_bits_to_f32, f32_to_f16_bits, round_f16};
+
+#[test]
+fn prop_kv_cache_invariants_under_random_ops() {
+    check("kv-random-ops", 50, |rng| {
+        let total = gen::usize_in(rng, 4, 64);
+        let bs = gen::usize_in(rng, 1, 32);
+        let mut kv = KvCacheManager::new(total, bs);
+        let mut live: Vec<u64> = Vec::new();
+        let mut next_id = 0u64;
+        for _ in 0..200 {
+            match rng.below(4) {
+                0 => {
+                    let tokens = gen::usize_in(rng, 1, bs * 8);
+                    if kv.allocate(next_id, tokens).is_ok() {
+                        live.push(next_id);
+                    }
+                    next_id += 1;
+                }
+                1 if !live.is_empty() => {
+                    let idx = gen::usize_in(rng, 0, live.len() - 1);
+                    let id = live.swap_remove(idx);
+                    kv.release(id).unwrap();
+                }
+                2 if !live.is_empty() => {
+                    let idx = gen::usize_in(rng, 0, live.len() - 1);
+                    let _ = kv.extend(live[idx], gen::usize_in(rng, 1, bs * 2));
+                }
+                3 if !live.is_empty() => {
+                    let idx = gen::usize_in(rng, 0, live.len() - 1);
+                    if kv.fork(live[idx], next_id).is_ok() {
+                        live.push(next_id);
+                    }
+                    next_id += 1;
+                }
+                _ => {}
+            }
+            kv.check_invariants().unwrap();
+            assert!(kv.free_blocks() <= kv.total_blocks());
+        }
+        for id in live {
+            kv.release(id).unwrap();
+        }
+        assert_eq!(kv.free_blocks(), kv.total_blocks(), "blocks leaked");
+        kv.check_invariants().unwrap();
+    });
+}
+
+#[test]
+fn prop_batcher_conserves_requests() {
+    check("batcher-conservation", 40, |rng| {
+        let policy = if rng.bernoulli(0.5) {
+            BatchPolicy::Fifo
+        } else {
+            BatchPolicy::SkipSmall { window: gen::usize_in(rng, 1, 4) }
+        };
+        let mut b = Batcher::new(policy);
+        let mut kv = KvCacheManager::new(gen::usize_in(rng, 8, 64), 16);
+        let n = gen::usize_in(rng, 1, 40);
+        for i in 0..n {
+            b.push(Request::new(
+                i as u64,
+                vec![0; gen::usize_in(rng, 1, 64)],
+                GenParams {
+                    max_new_tokens: gen::usize_in(rng, 1, 64),
+                    ..Default::default()
+                },
+            ));
+        }
+        let mut admitted_total = 0usize;
+        let mut seen = std::collections::HashSet::new();
+        for _ in 0..20 {
+            let slots = gen::usize_in(rng, 0, 8);
+            let admitted = b.admit(slots, &mut kv);
+            assert!(admitted.len() <= slots);
+            for r in &admitted {
+                assert!(seen.insert(r.id), "request {} admitted twice", r.id);
+                // every admitted request has KV reserved
+                assert!(kv.seq_tokens(r.id).is_some());
+            }
+            admitted_total += admitted.len();
+            // randomly finish some admitted requests to free capacity
+            if rng.bernoulli(0.6) {
+                let ids: Vec<u64> = seen.iter().copied().collect();
+                for id in ids {
+                    if rng.bernoulli(0.3) && kv.seq_tokens(id).is_some() {
+                        kv.release(id).unwrap();
+                    }
+                }
+            }
+            kv.check_invariants().unwrap();
+        }
+        assert_eq!(admitted_total + b.pending(), n, "requests lost or duplicated");
+    });
+}
+
+#[test]
+fn prop_quantizer_roundtrip_bounds() {
+    check("quant-roundtrip", 60, |rng| {
+        let rows = gen::usize_in(rng, 1, 80);
+        let cols = gen::usize_in(rng, 1, 96);
+        let scale = rng.range_f32(0.01, 50.0);
+        let x = gen::f32_vec(rng, rows * cols, scale);
+        for g in [
+            Granularity::PerTensor,
+            Granularity::PerToken,
+            Granularity::PerBlock(gen::usize_in(rng, 1, 64)),
+            Granularity::PerChannel,
+        ] {
+            let q = quant::quantize(&x, rows, cols, g);
+            let deq = q.dequant();
+            let max_scale = q.scales.iter().cloned().fold(0.0f32, f32::max);
+            for (a, b) in x.iter().zip(&deq) {
+                assert!(
+                    (a - b).abs() <= 0.5 * max_scale + 1e-6,
+                    "roundtrip error {} > step {}",
+                    (a - b).abs(),
+                    max_scale
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_smooth_k_preserves_softmax() {
+    // σ(q·(K−mean)ᵀ) == σ(q·Kᵀ) for every q — checked through the full
+    // attention (exact impl) rather than algebra
+    check("smooth-softmax-invariance", 20, |rng| {
+        let [b, h, n, d] = gen::attn_shape(rng);
+        let n = n.max(2);
+        let (q, k, v) = make_qkv(rng.next_u64(), [b, h, n, d], Profile::diffusion_like());
+        let o1 = attention(&q, &k, &v, AttnImpl::Exact, false);
+        // smooth every (b,h) plane of K, then run exact attention
+        let mut k2 = k.clone();
+        for bi in 0..b {
+            for hi in 0..h {
+                let (sm, _) = quant::smooth_k(k.head(bi, hi), n, d);
+                k2.head_mut(bi, hi).copy_from_slice(&sm);
+            }
+        }
+        let o2 = attention(&q, &k2, &v, AttnImpl::Exact, false);
+        let c = cos_sim(&o1.data, &o2.data);
+        assert!(c > 0.99999, "smoothing changed attention: cos {c}");
+    });
+}
+
+#[test]
+fn prop_sage_variants_finite_and_close_over_shapes() {
+    check("sage-shape-sweep", 15, |rng| {
+        let [b, h, n, d] = gen::attn_shape(rng);
+        let n = n.max(4);
+        let causal = rng.bernoulli(0.5);
+        let (q, k, v) = make_qkv(rng.next_u64(), [b, h, n, d], Profile::vit_like());
+        let gold = attention(&q, &k, &v, AttnImpl::Exact, causal);
+        for imp in [SAGE_T, SAGE_B, SAGE_VT, SAGE_VB] {
+            let o = attention(&q, &k, &v, imp, causal);
+            assert!(o.data.iter().all(|x| x.is_finite()), "{}", imp.name());
+            let c = cos_sim(&gold.data, &o.data);
+            assert!(c > 0.97, "{} cos {c} at {:?}", imp.name(), [b, h, n, d]);
+        }
+    });
+}
+
+#[test]
+fn prop_f16_roundtrip_monotone_and_bounded() {
+    check("f16-roundtrip", 50, |rng| {
+        let mut prev_in = f32::NEG_INFINITY;
+        let mut prev_out = f32::NEG_INFINITY;
+        let mut vals: Vec<f32> = (0..200)
+            .map(|_| rng.range_f32(-70000.0, 70000.0))
+            .collect();
+        vals.sort_by(f32::total_cmp);
+        for x in vals {
+            let r = round_f16(x);
+            // monotone
+            assert!(x >= prev_in);
+            assert!(r >= prev_out, "non-monotone: f16({x}) = {r} < {prev_out}");
+            prev_in = x;
+            prev_out = r;
+            // relative error bounded by 2^-11 in the normal range
+            if x.abs() > 6.2e-5 && x.abs() < 65504.0 {
+                assert!(((r - x) / x).abs() <= f32::powi(2.0, -11) + 1e-7);
+            }
+            // idempotent
+            let bits = f32_to_f16_bits(r);
+            assert_eq!(f16_bits_to_f32(bits), r);
+        }
+    });
+}
+
+#[test]
+fn prop_per_channel_v_quant_bounds_pv_error() {
+    // per-channel V quantization keeps each channel's relative error
+    // bounded even under extreme channel scale spread (the reason §4.3
+    // picks it for V)
+    check("v-per-channel", 30, |rng| {
+        let rows = gen::usize_in(rng, 4, 64);
+        let cols = gen::usize_in(rng, 2, 64);
+        let mut v = vec![0.0f32; rows * cols];
+        for c in 0..cols {
+            let scale = f32::powi(10.0, rng.below(5) as i32 - 2); // 0.01 .. 100
+            for r in 0..rows {
+                v[r * cols + c] = rng.normal() * scale;
+            }
+        }
+        let q = quant::quant_per_channel(&v, rows, cols);
+        let deq = q.dequant();
+        for c in 0..cols {
+            let col_max: f32 =
+                (0..rows).map(|r| v[r * cols + c].abs()).fold(0.0, f32::max);
+            for r in 0..rows {
+                let err = (v[r * cols + c] - deq[r * cols + c]).abs();
+                assert!(err <= col_max / 127.0 + 1e-6);
+            }
+        }
+    });
+}
