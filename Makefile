@@ -1,0 +1,31 @@
+# One-shot local gates for the SageAttention reproduction.
+#
+#   make verify        tier-1 (release build + tests) plus the format gate
+#   make build         release build only
+#   make test          test suite only
+#   make fmt           rewrite sources with rustfmt
+#   make bench-hotpath the tentpole before/after GFLOPS measurement
+#   make benches       compile every paper-table bench (no run)
+
+.PHONY: verify build test fmt fmt-check bench-hotpath benches
+
+verify:
+	cargo build --release && cargo test -q && cargo fmt --check
+
+build:
+	cargo build --release
+
+test:
+	cargo test -q
+
+fmt:
+	cargo fmt
+
+fmt-check:
+	cargo fmt --check
+
+bench-hotpath: build
+	./target/release/sage bench-hotpath
+
+benches:
+	cargo bench --no-run

@@ -31,13 +31,17 @@ pub struct LayerCalibration {
 pub struct Plan(pub Vec<String>);
 
 impl Plan {
+    /// Serialize as the JSON string array `aot.py --plan-file` consumes.
     pub fn to_json(&self) -> String {
         Json::Arr(self.0.iter().map(|s| Json::Str(s.clone())).collect()).to_string()
     }
 
-    pub fn from_json(text: &str) -> anyhow::Result<Plan> {
+    /// Parse a plan back from its JSON form (`aot.py --plan-file` input).
+    pub fn from_json(text: &str) -> crate::util::error::Result<Plan> {
         let v = Json::parse(text)?;
-        Ok(Plan(v.as_str_vec().ok_or_else(|| anyhow::anyhow!("plan must be a string array"))?))
+        Ok(Plan(v
+            .as_str_vec()
+            .ok_or_else(|| crate::format_err!("plan must be a string array"))?))
     }
 
     pub fn speedup_estimate(&self) -> f64 {
@@ -74,6 +78,26 @@ pub fn synth_layer_inputs(
 
 /// Run the §4.5 calibration over per-layer inputs: measure -vB and -B
 /// against full precision, choose per layer.
+///
+/// ```
+/// use sageattention::adaptive::{calibrate, synth_layer_inputs, COS_THRESHOLD};
+/// use sageattention::synth::Profile;
+///
+/// // two synthetic "layers" of captured activations (B, H, N, d)
+/// let layers = synth_layer_inputs(2, [1, 1, 64, 32], Profile::llama_like(), 1);
+/// let (plan, detail) = calibrate(&layers, false);
+/// assert_eq!(plan.0.len(), 2);
+/// for d in &detail {
+///     // every layer picked -vB only if it cleared the 99.8% bar (§4.5)
+///     if d.choice == "SageAttn-vB" {
+///         assert!(d.cos_vb >= COS_THRESHOLD);
+///     }
+///     assert!(d.cos_b > 0.9, "the -B fallback must stay accurate");
+/// }
+/// // the plan serializes to the JSON that `aot.py --plan-file` consumes
+/// let json = plan.to_json();
+/// assert!(json.starts_with('['));
+/// ```
 pub fn calibrate(
     layers: &[(Tensor, Tensor, Tensor)],
     causal: bool,

@@ -7,17 +7,24 @@
 use crate::quant::{FakeQuant, Granularity};
 use crate::tensor::{default_threads, parallel_map, Tensor};
 
-/// Storage format for a matrix pair in the sweep.
+/// Storage format for a matrix pair in the sweep (the column/row labels
+/// of Tables 2, 3, 17, 18).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Fmt {
+    /// INT8 with scale dequantization (§3.2) — the paper's choice for Q/K.
     Int8,
+    /// OCP FP8 E4M3 (the FlashAttention3-quant format).
     E4M3,
+    /// OCP FP8 E5M2 (wider range, less mantissa — worst in Table 17).
     E5M2,
+    /// IEEE binary16 — the paper's choice for P̃/V (§4.3–§4.4).
     Fp16,
+    /// Full precision (reference rows).
     Fp32,
 }
 
 impl Fmt {
+    /// Table label for this format.
     pub fn name(self) -> &'static str {
         match self {
             Fmt::Int8 => "INT8",
@@ -136,7 +143,7 @@ fn plane_dtype_sim(
     let mut out = vec![0.0f32; n_q * d];
     let mut s = vec![0.0f32; n_kv];
     for i in 0..n_q {
-        let limit = if causal { (i + n_kv - n_q + 1).min(n_kv) } else { n_kv };
+        let limit = super::plane::causal_limit(i, n_q, n_kv, causal);
         let qi = &qf[i * d..(i + 1) * d];
         let mut m = -1e30f32;
         for (j, sj) in s.iter_mut().enumerate().take(limit) {

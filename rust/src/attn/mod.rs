@@ -11,10 +11,13 @@ pub mod dtype_sim;
 mod plane;
 
 pub use dtype_sim::{attention_dtype_sim, qk_product_dtype_sim, Fmt};
-pub use plane::{exact_plane, online_plane, sage_plane};
+pub use plane::{
+    exact_plane, online_plane, online_plane_with, sage_plane, sage_plane_naive,
+    sage_plane_with, Scratch, MAX_HEAD_DIM,
+};
 
 use crate::quant::{Fp8Format, Granularity};
-use crate::tensor::{default_threads, parallel_map, Tensor};
+use crate::tensor::{default_threads, parallel_map_with, Tensor};
 
 /// P·V computation mode (paper §4.3–§4.4).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -70,6 +73,9 @@ pub const BLOCK_Q: usize = 128;
 pub const BLOCK_KV: usize = 64;
 
 impl AttnImpl {
+    /// Look up an implementation by its table name (`"SageAttn-B"`, …);
+    /// inverse of [`AttnImpl::name`] for the four paper variants and the
+    /// two baselines.
     pub fn by_name(name: &str) -> Option<AttnImpl> {
         Some(match name {
             "exact" => AttnImpl::Exact,
@@ -83,6 +89,7 @@ impl AttnImpl {
         })
     }
 
+    /// Display name matching the paper's tables (Table 6 row labels).
     pub fn name(&self) -> String {
         match self {
             AttnImpl::Exact => "exact".into(),
@@ -107,17 +114,21 @@ impl AttnImpl {
     }
 }
 
-/// Multi-head attention over (B, H, N, d) tensors. `n_kv_valid` masks a
-/// padded KV suffix (serving: dense cache longer than the live prefix).
+/// Multi-head attention over (B, H, N, d) tensors (paper Alg. 1 applied
+/// per plane). Planes are processed in parallel over (batch, head) via
+/// scoped worker threads, each owning one preallocated [`Scratch`] reused
+/// across all planes it handles — the online-softmax loop itself never
+/// allocates (§Perf).
 pub fn attention(q: &Tensor, k: &Tensor, v: &Tensor, imp: AttnImpl, causal: bool) -> Tensor {
     let (b, h, n_q, d) = q.dims4();
     let (_, _, n_kv, _) = k.dims4();
     assert_eq!(k.dims4().3, d);
     assert_eq!(v.dims4(), k.dims4());
 
-    let planes = parallel_map(b * h, default_threads(), |idx| {
+    let planes = parallel_map_with(b * h, default_threads(), Scratch::new, |scratch, idx| {
         let (bi, hi) = (idx / h, idx % h);
         run_plane(
+            scratch,
             q.head(bi, hi),
             k.head(bi, hi),
             v.head(bi, hi),
@@ -138,6 +149,7 @@ pub fn attention(q: &Tensor, k: &Tensor, v: &Tensor, imp: AttnImpl, causal: bool
 
 #[allow(clippy::too_many_arguments)]
 fn run_plane(
+    scratch: &mut Scratch,
     q: &[f32],
     k: &[f32],
     v: &[f32],
@@ -149,9 +161,9 @@ fn run_plane(
 ) -> Vec<f32> {
     match imp {
         AttnImpl::Exact => exact_plane(q, k, v, n_q, n_kv, d, causal),
-        AttnImpl::OnlineFp32 => online_plane(q, k, v, n_q, n_kv, d, causal),
+        AttnImpl::OnlineFp32 => online_plane_with(scratch, q, k, v, n_q, n_kv, d, causal),
         AttnImpl::Sage { qk, pv, smooth_k } => {
-            sage_plane(q, k, v, n_q, n_kv, d, qk, pv, smooth_k, causal)
+            sage_plane_with(scratch, q, k, v, n_q, n_kv, d, qk, pv, smooth_k, causal)
         }
         AttnImpl::Fp8 { qk, pv } => plane::fp8_plane(q, k, v, n_q, n_kv, d, qk, pv, causal),
     }

@@ -3,6 +3,15 @@
 //! tiling (Q-block 128, KV-block 64), INT8 S-tile with row/col scale
 //! dequantization, fp32 online softmax, and either the simulated-FP16
 //! accumulator or the INT8 P·V path.
+//!
+//! §Perf layout: the blocked kernels take their tile/softmax buffers from
+//! a caller-owned [`Scratch`] so the online-softmax loop performs **zero**
+//! heap allocation — [`crate::attn::attention`] allocates one `Scratch`
+//! per worker thread and reuses it across every (batch, head) plane.
+//! [`sage_plane_naive`] is a deliberately *unblocked* row-at-a-time
+//! reference (the textbook formulation, which the seed's kernels never
+//! shipped) kept as the measurable "before" for `sage bench-hotpath` and
+//! as a numerics cross-check oracle.
 
 use crate::quant::{self, Fp8Format, Granularity};
 use crate::util::f16::{round_f16, round_f16_slice};
@@ -11,8 +20,86 @@ use super::{PvMode, BLOCK_KV, BLOCK_Q};
 
 const NEG_BIG: f32 = -1e30;
 
+/// Head dimension the scratch tiles preallocate for (covers every shape
+/// in the paper; d ≤ 128 in all benchmarked models). Larger head dims
+/// still work — [`Scratch`] grows its d-sized buffers on first use.
+pub const MAX_HEAD_DIM: usize = 256;
+
+/// Preallocated per-thread working memory for the blocked kernels.
+///
+/// One `Scratch` holds every buffer the BLOCK_Q × BLOCK_KV online-softmax
+/// loop touches (S tile, running max/normalizer, output accumulator, P̃
+/// staging, INT8/FP16 partials) plus whole-plane staging vectors whose
+/// capacity is retained across planes. Construct once per thread (see
+/// [`crate::tensor::parallel_map_with`]) and feed to the `*_with` kernels.
+pub struct Scratch {
+    /// S tile: BLOCK_Q × BLOCK_KV dequantized scores.
+    s: Vec<f32>,
+    /// INT8-quantized P̃ row (Int8 P·V mode).
+    p_i8: Vec<i8>,
+    /// Per-Q-row online-softmax running max.
+    m: Vec<f32>,
+    /// Per-Q-row online-softmax normalizer.
+    l: Vec<f32>,
+    /// Output accumulator for one Q block (BLOCK_Q × MAX_HEAD_DIM).
+    acc: Vec<f32>,
+    /// fp16-rounded P̃ row.
+    p16: Vec<f32>,
+    /// Per-MMA_K partial products (FP16-accumulator simulation).
+    part: Vec<f32>,
+    /// int32 accumulator lanes (INT8 P·V).
+    acc_i32: Vec<i32>,
+    /// Whole-plane staging: Q with folded 1/√d.
+    qbuf: Vec<f32>,
+    /// Whole-plane staging: smoothed K.
+    kbuf: Vec<f32>,
+    /// Per-channel K mean removed by smooth-K (§4.2).
+    kmean: Vec<f32>,
+    /// Whole-plane staging: fp16-rounded V.
+    vbuf: Vec<f32>,
+}
+
+impl Scratch {
+    pub fn new() -> Scratch {
+        Scratch {
+            s: vec![0.0; BLOCK_Q * BLOCK_KV],
+            p_i8: vec![0; BLOCK_KV],
+            m: vec![0.0; BLOCK_Q],
+            l: vec![0.0; BLOCK_Q],
+            acc: vec![0.0; BLOCK_Q * MAX_HEAD_DIM],
+            p16: vec![0.0; BLOCK_KV],
+            part: vec![0.0; MAX_HEAD_DIM],
+            acc_i32: vec![0; MAX_HEAD_DIM],
+            qbuf: Vec::new(),
+            kbuf: Vec::new(),
+            kmean: Vec::new(),
+            vbuf: Vec::new(),
+        }
+    }
+
+    /// Grow the d-sized buffers for planes wider than [`MAX_HEAD_DIM`]
+    /// (amortized: a no-op once grown).
+    fn ensure_head_dim(&mut self, d: usize) {
+        if self.acc.len() < BLOCK_Q * d {
+            self.acc.resize(BLOCK_Q * d, 0.0);
+        }
+        if self.part.len() < d {
+            self.part.resize(d, 0.0);
+        }
+        if self.acc_i32.len() < d {
+            self.acc_i32.resize(d, 0);
+        }
+    }
+}
+
+impl Default for Scratch {
+    fn default() -> Scratch {
+        Scratch::new()
+    }
+}
+
 /// Exact fp32 attention — softmax(QKᵀ/√d)V with a numerically stable
-/// row-wise softmax.
+/// row-wise softmax. The accuracy gold standard for every table.
 pub fn exact_plane(
     q: &[f32],
     k: &[f32],
@@ -56,11 +143,13 @@ pub fn exact_plane(
 }
 
 /// Highest attendable key index + 1 for query `i` (queries aligned to the
-/// end of the KV sequence, the decode convention).
+/// end of the KV sequence, the decode convention). Saturating: with
+/// n_q > n_kv the earliest queries precede every key and attend nothing
+/// (limit 0) instead of underflowing into an unmasked row.
 #[inline]
-fn causal_limit(i: usize, n_q: usize, n_kv: usize, causal: bool) -> usize {
+pub(super) fn causal_limit(i: usize, n_q: usize, n_kv: usize, causal: bool) -> usize {
     if causal {
-        (i + n_kv - n_q + 1).min(n_kv)
+        (i + n_kv + 1).saturating_sub(n_q).min(n_kv)
     } else {
         n_kv
     }
@@ -68,6 +157,7 @@ fn causal_limit(i: usize, n_q: usize, n_kv: usize, causal: bool) -> usize {
 
 /// FlashAttention-2 fp32 tiling (Eq. 1–2) — validates the online-softmax
 /// recurrence and serves as the full-precision speed baseline's numerics.
+/// Convenience wrapper over [`online_plane_with`] with a fresh [`Scratch`].
 pub fn online_plane(
     q: &[f32],
     k: &[f32],
@@ -77,17 +167,36 @@ pub fn online_plane(
     d: usize,
     causal: bool,
 ) -> Vec<f32> {
+    online_plane_with(&mut Scratch::new(), q, k, v, n_q, n_kv, d, causal)
+}
+
+/// [`online_plane`] against caller-owned scratch (the hot-path entry).
+#[allow(clippy::too_many_arguments)]
+pub fn online_plane_with(
+    scratch: &mut Scratch,
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    n_q: usize,
+    n_kv: usize,
+    d: usize,
+    causal: bool,
+) -> Vec<f32> {
+    scratch.ensure_head_dim(d);
+    let Scratch { s, m, l, acc, .. } = scratch;
     let scale = 1.0 / (d as f32).sqrt();
     let mut out = vec![0.0f32; n_q * d];
-    let mut s = vec![0.0f32; BLOCK_Q * BLOCK_KV];
 
     let mut i0 = 0;
     while i0 < n_q {
         let iq = (i0 + BLOCK_Q).min(n_q);
         let bq = iq - i0;
-        let mut m = vec![NEG_BIG; bq];
-        let mut l = vec![0.0f32; bq];
-        let mut acc = vec![0.0f32; bq * d];
+        let mb = &mut m[..bq];
+        mb.fill(NEG_BIG);
+        let lb = &mut l[..bq];
+        lb.fill(0.0);
+        let accb = &mut acc[..bq * d];
+        accb.fill(0.0);
         let mut j0 = 0;
         while j0 < n_kv {
             let jk = (j0 + BLOCK_KV).min(n_kv);
@@ -110,16 +219,23 @@ pub fn online_plane(
             for bi in 0..bq {
                 let row = &mut s[bi * BLOCK_KV..bi * BLOCK_KV + bk];
                 let m_cur = row.iter().fold(NEG_BIG, |a, &b| a.max(b));
-                let m_new = m[bi].max(m_cur);
-                let alpha = (m[bi] - m_new).exp();
+                let m_new = mb[bi].max(m_cur);
+                if m_new == NEG_BIG {
+                    // row fully masked so far (causal_limit == 0): without
+                    // this guard exp(NEG_BIG - NEG_BIG) = 1 would weight
+                    // every masked key; skip so the row stays zero like
+                    // the exact/naive references
+                    continue;
+                }
+                let alpha = (mb[bi] - m_new).exp();
                 let mut row_sum = 0.0;
                 for p in row.iter_mut() {
                     *p = (*p - m_new).exp();
                     row_sum += *p;
                 }
-                l[bi] = alpha * l[bi] + row_sum;
-                m[bi] = m_new;
-                let o = &mut acc[bi * d..(bi + 1) * d];
+                lb[bi] = alpha * lb[bi] + row_sum;
+                mb[bi] = m_new;
+                let o = &mut accb[bi * d..(bi + 1) * d];
                 for oc in o.iter_mut() {
                     *oc *= alpha;
                 }
@@ -136,9 +252,9 @@ pub fn online_plane(
             j0 = jk;
         }
         for bi in 0..bq {
-            let inv = 1.0 / l[bi].max(1e-30);
+            let inv = 1.0 / lb[bi].max(1e-30);
             let o = &mut out[(i0 + bi) * d..(i0 + bi + 1) * d];
-            for (oc, &ac) in o.iter_mut().zip(&acc[bi * d..(bi + 1) * d]) {
+            for (oc, &ac) in o.iter_mut().zip(&accb[bi * d..(bi + 1) * d]) {
                 *oc = ac * inv;
             }
         }
@@ -149,6 +265,26 @@ pub fn online_plane(
 
 /// SageAttention plane (Alg. 1): INT8 QKᵀ + fp32 online softmax + the
 /// selected P·V mode. Mirrors `python/compile/kernels/sage_attn.py`.
+/// Convenience wrapper over [`sage_plane_with`] with a fresh [`Scratch`].
+///
+/// ```
+/// use sageattention::attn::{exact_plane, sage_plane, PvMode};
+/// use sageattention::metrics::cos_sim;
+/// use sageattention::quant::Granularity;
+/// use sageattention::synth::{make_qkv, Profile};
+///
+/// // one (batch, head) plane: N = 64 tokens, head_dim = 32
+/// let (q, k, v) = make_qkv(7, [1, 1, 64, 32], Profile::llama_like());
+/// let gold = exact_plane(&q.data, &k.data, &v.data, 64, 64, 32, false);
+/// let out = sage_plane(
+///     &q.data, &k.data, &v.data, 64, 64, 32,
+///     Granularity::PerToken,    // ψ per-token on Q and K (§3.2)
+///     PvMode::Fp16Accum,        // FP16 accumulator for P·V (§4.4)
+///     true,                     // smooth-K (§4.2)
+///     false,                    // no causal mask
+/// );
+/// assert!(cos_sim(&gold, &out) > 0.99);
+/// ```
 #[allow(clippy::too_many_arguments)]
 pub fn sage_plane(
     q: &[f32],
@@ -162,45 +298,78 @@ pub fn sage_plane(
     smooth: bool,
     causal: bool,
 ) -> Vec<f32> {
-    assert!(d <= 256, "head_dim > 256 unsupported by the native sage kernel");
+    sage_plane_with(&mut Scratch::new(), q, k, v, n_q, n_kv, d, qk_gran, pv, smooth, causal)
+}
+
+/// [`sage_plane`] against caller-owned scratch — the serving hot path.
+/// Identical arithmetic (and therefore bit-identical output) to the
+/// wrapper; only the buffer lifetimes differ.
+#[allow(clippy::too_many_arguments)]
+pub fn sage_plane_with(
+    scratch: &mut Scratch,
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    n_q: usize,
+    n_kv: usize,
+    d: usize,
+    qk_gran: Granularity,
+    pv: PvMode,
+    smooth: bool,
+    causal: bool,
+) -> Vec<f32> {
+    // per-channel scales are per *column*; the S-tile dequant below indexes
+    // scales per token row, so PerChannel Q/K would read out of bounds —
+    // and §4.3 rules it out for Q/K inside the tiled kernel anyway
+    assert!(
+        qk_gran != Granularity::PerChannel,
+        "per-channel Q/K quantization is infeasible in the tiled kernel (§4.3); \
+         use PerToken/PerBlock/PerTensor"
+    );
+    scratch.ensure_head_dim(d);
+    let Scratch { s, p_i8, m, l, acc, p16, part, acc_i32, qbuf, kbuf, kmean, vbuf } = scratch;
+
     // ---- quantize Q (with folded 1/√d) and K (after smooth-K) ----
     let scale = 1.0 / (d as f32).sqrt();
-    let q_scaled: Vec<f32> = q.iter().map(|&x| x * scale).collect();
-    let k_sm;
+    qbuf.clear();
+    qbuf.extend(q.iter().map(|&x| x * scale));
     let k_src: &[f32] = if smooth {
-        let (sm, _) = quant::smooth_k(k, n_kv, d);
-        k_sm = sm;
-        &k_sm
+        quant::smooth_k_into(k, n_kv, d, kbuf, kmean);
+        kbuf
     } else {
         k
     };
-    let qq = quant::quantize(&q_scaled, n_q, d, qk_gran);
+    let qq = quant::quantize(qbuf, n_q, d, qk_gran);
     let kq = quant::quantize(k_src, n_kv, d, qk_gran);
 
     // ---- quantize / round V per P·V mode ----
-    let (v_i8, v_chan_scale, v_f16): (Vec<i8>, Vec<f32>, Vec<f32>) = match pv {
+    let (v_i8, v_chan_scale): (Vec<i8>, Vec<f32>) = match pv {
         PvMode::Int8 => {
             let vq = quant::quant_per_channel(v, n_kv, d);
-            (vq.data, vq.scales, Vec::new())
+            (vq.data, vq.scales)
         }
-        _ => (
-            Vec::new(),
-            Vec::new(),
-            v.iter().map(|&x| round_f16(x)).collect(),
-        ),
+        _ => {
+            vbuf.clear();
+            vbuf.extend_from_slice(v);
+            round_f16_slice(vbuf);
+            (Vec::new(), Vec::new())
+        }
     };
+    let v_f16: &[f32] = vbuf;
 
     let mut out = vec![0.0f32; n_q * d];
-    let mut s = vec![0.0f32; BLOCK_Q * BLOCK_KV];
-    let mut p_i8 = vec![0i8; BLOCK_Q * BLOCK_KV];
 
     let mut i0 = 0;
     while i0 < n_q {
         let iq = (i0 + BLOCK_Q).min(n_q);
         let bq = iq - i0;
-        let mut m = vec![NEG_BIG; bq];
-        let mut l = vec![0.0f32; bq];
-        let mut acc = vec![0.0f32; bq * d]; // held as fp16 values when Fp16Accum
+        let mb = &mut m[..bq];
+        mb.fill(NEG_BIG);
+        let lb = &mut l[..bq];
+        lb.fill(0.0);
+        // held as fp16 values when Fp16Accum
+        let accb = &mut acc[..bq * d];
+        accb.fill(0.0);
         let mut j0 = 0;
         while j0 < n_kv {
             let jk = (j0 + BLOCK_KV).min(n_kv);
@@ -225,16 +394,22 @@ pub fn sage_plane(
             for bi in 0..bq {
                 let row = &mut s[bi * BLOCK_KV..bi * BLOCK_KV + bk];
                 let m_cur = row.iter().fold(NEG_BIG, |a, &b| a.max(b));
-                let m_new = m[bi].max(m_cur);
-                let alpha = (m[bi] - m_new).exp();
+                let m_new = mb[bi].max(m_cur);
+                if m_new == NEG_BIG {
+                    // fully-masked row (causal_limit == 0): skip so it
+                    // stays zero like the exact/naive references instead
+                    // of exp(0)-weighting every masked key
+                    continue;
+                }
+                let alpha = (mb[bi] - m_new).exp();
                 let mut row_sum = 0.0;
                 for p in row.iter_mut() {
                     *p = (*p - m_new).exp();
                     row_sum += *p;
                 }
-                l[bi] = alpha * l[bi] + row_sum;
-                m[bi] = m_new;
-                let o = &mut acc[bi * d..(bi + 1) * d];
+                lb[bi] = alpha * lb[bi] + row_sum;
+                mb[bi] = m_new;
+                let o = &mut accb[bi * d..(bi + 1) * d];
                 match pv {
                     PvMode::Int8 => {
                         // P̃ ∈ [0,1]: static per-block scale 1/127 (§4.3)
@@ -247,20 +422,20 @@ pub fn sage_plane(
                         }
                         // int32 accumulate over the block (row-major V
                         // walk — contiguous loads vectorize), dequant once
-                        let mut acc_i32 = [0i32; 256];
-                        let acc_i32 = &mut acc_i32[..d];
+                        let acc32 = &mut acc_i32[..d];
+                        acc32.fill(0);
                         for (bj, &pq) in prow.iter().enumerate() {
                             if pq == 0 {
                                 continue;
                             }
                             let p32 = pq as i32;
                             let vrow = &v_i8[(j0 + bj) * d..(j0 + bj + 1) * d];
-                            for (a, &vc) in acc_i32.iter_mut().zip(vrow) {
+                            for (a, &vc) in acc32.iter_mut().zip(vrow) {
                                 *a += p32 * vc as i32;
                             }
                         }
                         for (oc, (&a, &vs)) in
-                            o.iter_mut().zip(acc_i32.iter().zip(&v_chan_scale[..d]))
+                            o.iter_mut().zip(acc32.iter().zip(&v_chan_scale[..d]))
                         {
                             *oc += a as f32 * (1.0 / quant::INT8_MAX) * vs;
                         }
@@ -276,27 +451,26 @@ pub fn sage_plane(
                         // MMA_K=16 contraction steps (matches fp16_sim.py).
                         // All roundings go through the F16C-vectorized
                         // slice helper.
-                        let mut p16 = [0.0f32; BLOCK_KV];
-                        p16[..bk].copy_from_slice(&row[..bk]);
-                        round_f16_slice(&mut p16[..bk]);
-                        let mut part = [0.0f32; 256];
-                        let part = &mut part[..d];
+                        let p16b = &mut p16[..bk];
+                        p16b.copy_from_slice(&row[..bk]);
+                        round_f16_slice(p16b);
+                        let partd = &mut part[..d];
                         let mut bj = 0;
                         while bj < bk {
                             let je = (bj + 16).min(bk);
-                            part.fill(0.0);
+                            partd.fill(0.0);
                             for t in bj..je {
-                                let p = p16[t];
+                                let p = p16b[t];
                                 if p == 0.0 {
                                     continue;
                                 }
                                 let vrow = &v_f16[(j0 + t) * d..(j0 + t + 1) * d];
-                                for (pc, &vc) in part.iter_mut().zip(vrow) {
+                                for (pc, &vc) in partd.iter_mut().zip(vrow) {
                                     *pc += p * vc;
                                 }
                             }
-                            round_f16_slice(part);
-                            for (oc, &pc) in o.iter_mut().zip(part.iter()) {
+                            round_f16_slice(partd);
+                            for (oc, &pc) in o.iter_mut().zip(partd.iter()) {
                                 *oc += pc;
                             }
                             round_f16_slice(o);
@@ -307,10 +481,10 @@ pub fn sage_plane(
                         for oc in o.iter_mut() {
                             *oc *= alpha;
                         }
-                        let mut p16 = [0.0f32; BLOCK_KV];
-                        p16[..bk].copy_from_slice(&row[..bk]);
-                        round_f16_slice(&mut p16[..bk]);
-                        for (bj, &p) in p16[..bk].iter().enumerate() {
+                        let p16b = &mut p16[..bk];
+                        p16b.copy_from_slice(&row[..bk]);
+                        round_f16_slice(p16b);
+                        for (bj, &p) in p16b.iter().enumerate() {
                             if p == 0.0 {
                                 continue;
                             }
@@ -325,13 +499,93 @@ pub fn sage_plane(
             j0 = jk;
         }
         for bi in 0..bq {
-            let inv = 1.0 / l[bi].max(1e-30);
+            let inv = 1.0 / lb[bi].max(1e-30);
             let o = &mut out[(i0 + bi) * d..(i0 + bi + 1) * d];
-            for (oc, &ac) in o.iter_mut().zip(&acc[bi * d..(bi + 1) * d]) {
+            for (oc, &ac) in o.iter_mut().zip(&accb[bi * d..(bi + 1) * d]) {
                 *oc = ac * inv;
             }
         }
         i0 = iq;
+    }
+    out
+}
+
+/// Unblocked row-at-a-time reference: INT8-QKᵀ attention with a full
+/// (non-online) softmax and a fresh score buffer allocated inside the
+/// loop for every query row — no KV tiling, so K and V stream through
+/// cache once per query. This is the textbook formulation the blocked
+/// kernel improves on (the seed's `sage_plane` was already tiled; what
+/// this PR adds there is scratch reuse). Numerically it tracks
+/// [`sage_plane`] with [`PvMode::Fp32Accum`] (same quantizers,
+/// fp16-rounded P̃ and V, fp32 accumulation; only the summation order
+/// differs). Used as the measured "before" of `sage bench-hotpath` and
+/// as a cross-check oracle for the blocked kernel.
+#[allow(clippy::too_many_arguments)]
+pub fn sage_plane_naive(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    n_q: usize,
+    n_kv: usize,
+    d: usize,
+    qk_gran: Granularity,
+    smooth: bool,
+    causal: bool,
+) -> Vec<f32> {
+    // scales are read per token row below (qq.scales[i], kq.scales[j]);
+    // per-channel scales are per column, so PerChannel would index out of
+    // bounds — reject it the way the blocked kernel does
+    assert!(
+        qk_gran != Granularity::PerChannel,
+        "per-channel Q/K quantization unsupported: this kernel dequantizes with \
+         per-token-row scales; use PerToken/PerBlock/PerTensor"
+    );
+    let scale = 1.0 / (d as f32).sqrt();
+    let q_scaled: Vec<f32> = q.iter().map(|&x| x * scale).collect();
+    let k_sm;
+    let k_src: &[f32] = if smooth {
+        let (sm, _) = quant::smooth_k(k, n_kv, d);
+        k_sm = sm;
+        &k_sm
+    } else {
+        k
+    };
+    let qq = quant::quantize(&q_scaled, n_q, d, qk_gran);
+    let kq = quant::quantize(k_src, n_kv, d, qk_gran);
+    let v_f16: Vec<f32> = v.iter().map(|&x| round_f16(x)).collect();
+
+    let mut out = vec![0.0f32; n_q * d];
+    for i in 0..n_q {
+        // the per-row allocation the blocked kernel eliminates
+        let mut s = vec![0.0f32; n_kv];
+        let limit = causal_limit(i, n_q, n_kv, causal);
+        let qi = &qq.data[i * d..(i + 1) * d];
+        let qs = qq.scales[i];
+        let mut mx = NEG_BIG;
+        for (j, sj) in s.iter_mut().enumerate().take(limit) {
+            let kj = &kq.data[j * d..(j + 1) * d];
+            *sj = dot_i8(qi, kj) as f32 * qs * kq.scales[j];
+            mx = mx.max(*sj);
+        }
+        let mut lsum = 0.0f32;
+        for sj in s.iter_mut().take(limit) {
+            *sj = round_f16((*sj - mx).exp());
+            lsum += *sj;
+        }
+        let o = &mut out[i * d..(i + 1) * d];
+        for (j, &p) in s.iter().enumerate().take(limit) {
+            if p == 0.0 {
+                continue;
+            }
+            let vj = &v_f16[j * d..(j + 1) * d];
+            for (oc, &vc) in o.iter_mut().zip(vj) {
+                *oc += p * vc;
+            }
+        }
+        let inv = 1.0 / lsum.max(1e-30);
+        for oc in o.iter_mut() {
+            *oc *= inv;
+        }
     }
     out
 }
@@ -410,4 +664,124 @@ pub fn dot_i8(a: &[i8], b: &[i8]) -> i32 {
         acc += *x as i32 * *y as i32;
     }
     acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::cos_sim;
+    use crate::synth::{make_qkv, Profile};
+
+    #[test]
+    fn scratch_reuse_is_deterministic() {
+        // one scratch driven across planes of different shapes must give
+        // bit-identical results to fresh-scratch calls (no stale state)
+        let mut scratch = Scratch::new();
+        let (q1, k1, v1) = make_qkv(1, [1, 1, 200, 64], Profile::diffusion_like());
+        let (q2, k2, v2) = make_qkv(2, [1, 1, 96, 32], Profile::llama_like());
+        for pv in [PvMode::Fp16Accum, PvMode::Int8, PvMode::Fp32Accum] {
+            let fresh1 = sage_plane(
+                &q1.data, &k1.data, &v1.data, 200, 200, 64,
+                Granularity::PerToken, pv, true, false,
+            );
+            let fresh2 = sage_plane(
+                &q2.data, &k2.data, &v2.data, 96, 96, 32,
+                Granularity::PerBlock(128), pv, true, true,
+            );
+            let reused1 = sage_plane_with(
+                &mut scratch, &q1.data, &k1.data, &v1.data, 200, 200, 64,
+                Granularity::PerToken, pv, true, false,
+            );
+            let reused2 = sage_plane_with(
+                &mut scratch, &q2.data, &k2.data, &v2.data, 96, 96, 32,
+                Granularity::PerBlock(128), pv, true, true,
+            );
+            assert_eq!(fresh1, reused1, "{pv:?} large plane");
+            assert_eq!(fresh2, reused2, "{pv:?} small plane after large");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "per-channel Q/K")]
+    fn per_channel_qk_rejected() {
+        let (q, k, v) = make_qkv(6, [1, 1, 32, 16], Profile::llama_like());
+        sage_plane(
+            &q.data, &k.data, &v.data, 32, 32, 16,
+            Granularity::PerChannel, PvMode::Fp32Accum, true, false,
+        );
+    }
+
+    #[test]
+    fn online_with_matches_wrapper() {
+        let (q, k, v) = make_qkv(3, [1, 1, 300, 64], Profile::vit_like());
+        let mut scratch = Scratch::new();
+        let a = online_plane(&q.data, &k.data, &v.data, 300, 300, 64, false);
+        let b = online_plane_with(&mut scratch, &q.data, &k.data, &v.data, 300, 300, 64, false);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn causal_with_more_queries_than_keys_masks_fully() {
+        // decode-aligned causal with n_q > n_kv: the earliest queries
+        // precede every key — their rows must be exactly zero (not a
+        // uniform average of V), matching the exact reference
+        let (n_q, n_kv, d) = (150usize, 40usize, 32usize);
+        let (q, k, v) = make_qkv(12, [1, 1, n_q, d], Profile::llama_like());
+        let kp = &k.data[..n_kv * d];
+        let vp = &v.data[..n_kv * d];
+        let zero_rows = (n_q - n_kv) * d;
+
+        let gold = exact_plane(&q.data, kp, vp, n_q, n_kv, d, true);
+        assert!(gold[..zero_rows].iter().all(|&x| x == 0.0));
+
+        let on = online_plane(&q.data, kp, vp, n_q, n_kv, d, true);
+        assert!(on[..zero_rows].iter().all(|&x| x == 0.0), "online leaked masked keys");
+        assert!(cos_sim(&gold[zero_rows..], &on[zero_rows..]) > 0.9999);
+
+        let blocked = sage_plane(
+            &q.data, kp, vp, n_q, n_kv, d,
+            Granularity::PerToken, PvMode::Fp32Accum, true, true,
+        );
+        assert!(blocked[..zero_rows].iter().all(|&x| x == 0.0), "sage leaked masked keys");
+        let naive = sage_plane_naive(
+            &q.data, kp, vp, n_q, n_kv, d, Granularity::PerToken, true, true,
+        );
+        assert!(naive[..zero_rows].iter().all(|&x| x == 0.0));
+        assert!(cos_sim(&blocked[zero_rows..], &naive[zero_rows..]) > 0.999);
+    }
+
+    #[test]
+    fn head_dim_beyond_prealloc_grows_scratch() {
+        // d > MAX_HEAD_DIM must grow the scratch, not panic or truncate
+        let (q, k, v) = make_qkv(9, [1, 1, 40, 320], Profile::llama_like());
+        let gold = exact_plane(&q.data, &k.data, &v.data, 40, 40, 320, false);
+        let on = online_plane(&q.data, &k.data, &v.data, 40, 40, 320, false);
+        assert!(cos_sim(&gold, &on) > 0.9999);
+        let mut scratch = Scratch::new();
+        for pv in [PvMode::Fp16Accum, PvMode::Int8, PvMode::Fp32Accum] {
+            let out = sage_plane_with(
+                &mut scratch, &q.data, &k.data, &v.data, 40, 40, 320,
+                Granularity::PerToken, pv, true, false,
+            );
+            assert!(cos_sim(&gold, &out) > 0.98, "{pv:?}");
+        }
+    }
+
+    #[test]
+    fn naive_tracks_blocked_fp32acc() {
+        // the bench-hotpath baseline must be the same computation up to
+        // fp32 summation order
+        let (q, k, v) = make_qkv(4, [1, 1, 256, 64], Profile::diffusion_like());
+        let naive = sage_plane_naive(
+            &q.data, &k.data, &v.data, 256, 256, 64,
+            Granularity::PerToken, true, false,
+        );
+        let blocked = sage_plane(
+            &q.data, &k.data, &v.data, 256, 256, 64,
+            Granularity::PerToken, PvMode::Fp32Accum, true, false,
+        );
+        let c = cos_sim(&naive, &blocked);
+        assert!(c > 0.999, "naive vs blocked cos {c}");
+        assert!(naive.iter().all(|x| x.is_finite()));
+    }
 }

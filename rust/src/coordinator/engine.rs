@@ -13,9 +13,9 @@ use std::collections::BTreeMap;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use anyhow::{bail, Context, Result};
-
+use crate::runtime::pjrt as xla;
 use crate::runtime::{Artifact, ModelCfg, Runtime, Value};
+use crate::util::error::{bail, Context, Result};
 use crate::util::rng::Pcg32;
 
 use super::request::{FinishReason, GenParams, Request, RequestId, Response};

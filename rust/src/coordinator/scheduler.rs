@@ -2,7 +2,7 @@
 //! the serving loop. One `tick()` = admit what fits, prefill admissions,
 //! advance the decode batch one token, release finished sequences.
 
-use anyhow::Result;
+use crate::util::error::Result;
 
 use crate::metrics::LatencyStats;
 

@@ -15,7 +15,10 @@
 //!   the kernels for accuracy experiments.
 //!
 //! Python never runs on the request path: artifacts are compiled once by
-//! `make artifacts` and executed through the PJRT C API.
+//! `make artifacts` and executed through the PJRT C API. Offline builds
+//! (no `xla` bindings) link the [`runtime::pjrt`] stub instead: all
+//! rust-native numerics, the coordinator accounting, and value
+//! marshalling work in full; artifact execution errors cleanly.
 
 pub mod adaptive;
 pub mod attn;

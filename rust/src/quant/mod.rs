@@ -15,9 +15,17 @@ const EPS: f32 = 1e-8;
 /// Quantization granularity for Q/K (paper Table 6 rows).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Granularity {
+    /// One scale for the whole plane — cheapest dequant, worst outlier
+    /// robustness (Table 1 "per-tensor" rows).
     PerTensor,
+    /// One scale per token row — δ = max|row|/127 (§3.2; SageAttn-T).
     PerToken,
+    /// One scale per block of consecutive token rows, matching the kernel's
+    /// Q/K tile height so dequant is a single broadcast scalar per tile
+    /// (§4.3 point 1; SageAttn-B with block = 128).
     PerBlock(usize),
+    /// One scale per channel column — infeasible for Q/K inside the tiled
+    /// kernel (§4.3) but exactly right for V in the -vT/-vB variants.
     PerChannel,
 }
 
@@ -143,6 +151,26 @@ pub fn quant_per_channel(x: &[f32], rows: usize, cols: usize) -> QuantizedPlane 
     QuantizedPlane { data, scales, rows, cols, granularity: Granularity::PerChannel }
 }
 
+/// Quantize a (rows, cols) plane to INT8 at the chosen granularity —
+/// the ψ transform of paper §3.2 / Table 6.
+///
+/// ```
+/// use sageattention::quant::{quantize, Granularity};
+///
+/// // a 2×4 plane (two tokens, four channels)
+/// let x = vec![0.5, -1.0, 2.0, -4.0, 0.25, 0.5, -0.125, 1.0];
+/// let q = quantize(&x, 2, 4, Granularity::PerToken);
+/// assert_eq!(q.scales.len(), 2); // one scale per token row
+///
+/// // the round-trip error is bounded by half a quantization step
+/// let back = q.dequant();
+/// for r in 0..2 {
+///     for c in 0..4 {
+///         let err = (x[r * 4 + c] - back[r * 4 + c]).abs();
+///         assert!(err <= 0.5 * q.scales[r] + 1e-6);
+///     }
+/// }
+/// ```
 pub fn quantize(x: &[f32], rows: usize, cols: usize, g: Granularity) -> QuantizedPlane {
     match g {
         Granularity::PerTensor => quant_per_tensor(x, rows, cols),
@@ -155,7 +183,24 @@ pub fn quantize(x: &[f32], rows: usize, cols: usize, g: Granularity) -> Quantize
 /// γ(K) = K − mean(K): subtract the per-channel mean over the token axis
 /// (paper §4.2). Returns the smoothed plane and the removed mean (len cols).
 pub fn smooth_k(k: &[f32], rows: usize, cols: usize) -> (Vec<f32>, Vec<f32>) {
-    let mut mean = vec![0.0f32; cols];
+    let (mut out, mut mean) = (Vec::new(), Vec::new());
+    smooth_k_into(k, rows, cols, &mut out, &mut mean);
+    (out, mean)
+}
+
+/// [`smooth_k`] into caller-owned buffers (the hot path's zero-allocation
+/// variant: `out`/`mean` retain their capacity across planes). `out` ends
+/// with the smoothed plane (len rows·cols), `mean` with the removed
+/// per-channel mean (len cols). Bit-identical to [`smooth_k`].
+pub fn smooth_k_into(
+    k: &[f32],
+    rows: usize,
+    cols: usize,
+    out: &mut Vec<f32>,
+    mean: &mut Vec<f32>,
+) {
+    mean.clear();
+    mean.resize(cols, 0.0);
     for r in 0..rows {
         for c in 0..cols {
             mean[c] += k[r * cols + c];
@@ -164,26 +209,32 @@ pub fn smooth_k(k: &[f32], rows: usize, cols: usize) -> (Vec<f32>, Vec<f32>) {
     for m in mean.iter_mut() {
         *m /= rows as f32;
     }
-    let mut out = vec![0.0f32; rows * cols];
+    out.clear();
+    out.reserve(rows * cols);
     for r in 0..rows {
         for c in 0..cols {
-            out[r * cols + c] = k[r * cols + c] - mean[c];
+            out.push(k[r * cols + c] - mean[c]);
         }
     }
-    (out, mean)
 }
 
-/// Quantize-dequantize through a numeric format (the accuracy-table sweeps).
+/// Quantize-dequantize through a numeric format (the accuracy-table
+/// sweeps of Tables 2, 3, 17, 18).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum FakeQuant {
+    /// Identity — keep fp32 (the full-precision reference rows).
     None,
+    /// Round through IEEE binary16 (the FP16 operand rows of Table 3).
     Fp16,
+    /// INT8 at the given granularity (§3.2's ψ, then ψ⁻¹).
     Int8(Granularity),
     /// 4-bit signed integers — the paper's future-work direction
     /// (SageAttention2 ships this with per-thread granularity + Q
     /// smoothing; here it quantifies how far plain INT4 falls short).
     Int4(Granularity),
-    Fp8(Fp8Format), // per-token scaled to the format's max, like FA3
+    /// FP8, per-token scaled to the format's max value the way
+    /// FlashAttention3's quantized mode does (Tables 1/2/3 baselines).
+    Fp8(Fp8Format),
 }
 
 pub fn fake_quant(x: &[f32], rows: usize, cols: usize, kind: FakeQuant) -> Vec<f32> {
@@ -293,6 +344,19 @@ mod tests {
         let x = make_plane(10, 10, 4);
         let q = quant_per_tensor(&x, 10, 10);
         assert!(q.scales.iter().all(|&s| s == q.scales[0]));
+    }
+
+    #[test]
+    fn smooth_k_into_matches_allocating_variant() {
+        let (rows, cols) = (33, 20);
+        let x = make_plane(rows, cols, 8);
+        let (out_a, mean_a) = smooth_k(&x, rows, cols);
+        // reused buffers (stale contents + excess capacity) give identical bits
+        let mut out_b = vec![9.0f32; 5];
+        let mut mean_b = vec![-3.0f32; 100];
+        smooth_k_into(&x, rows, cols, &mut out_b, &mut mean_b);
+        assert_eq!(out_a, out_b);
+        assert_eq!(mean_a, mean_b);
     }
 
     #[test]

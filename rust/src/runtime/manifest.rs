@@ -4,7 +4,7 @@
 
 use std::collections::BTreeMap;
 
-use anyhow::{Context, Result};
+use crate::util::error::{Context, Result};
 
 use crate::util::json::Json;
 

@@ -6,8 +6,13 @@
 //! Interchange is HLO *text* (not serialized protos): jax ≥ 0.5 emits
 //! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
 //! parser reassigns ids (see aot.py).
+//!
+//! Offline builds (this image) link the [`pjrt`] stub instead of the real
+//! `xla` bindings: manifest handling and value marshalling work in full,
+//! while compiling/executing an artifact returns an "unavailable" error.
 
 mod manifest;
+pub mod pjrt;
 mod value;
 
 pub use manifest::{ArtifactSpec, Manifest, ModelCfg, ParamSpec, TensorSpec};
@@ -17,7 +22,8 @@ use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 use std::time::Instant;
 
-use anyhow::{bail, Context, Result};
+use self::pjrt as xla;
+use crate::util::error::{bail, Context, Result};
 
 /// A compiled artifact plus its manifest spec.
 pub struct Artifact {

@@ -1,0 +1,230 @@
+//! Offline stand-in for the `xla` PJRT bindings.
+//!
+//! The offline image cannot vendor the `xla` crate (it links against a
+//! prebuilt `xla_extension`), so this module mirrors the slice of its API
+//! the runtime layer uses. [`Literal`] is a real host-side container —
+//! marshalling ([`crate::runtime::Value::to_literal`] /
+//! `from_literal`) round-trips losslessly — while everything that would
+//! need an actual XLA backend (HLO parsing, compilation, execution)
+//! returns a clear "unavailable in the offline build" error. Code above
+//! this boundary (manifest handling, the coordinator's accounting, all
+//! rust-native numerics) runs unchanged; artifact execution paths fail
+//! loudly instead of silently producing wrong answers.
+
+use crate::util::error::{Error, Result};
+
+/// Element dtypes crossing the artifact ABI (f32 activations, i32 tokens).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ElementType {
+    F32,
+    S32,
+}
+
+impl ElementType {
+    fn byte_width(self) -> usize {
+        match self {
+            ElementType::F32 | ElementType::S32 => 4,
+        }
+    }
+
+    fn name(self) -> &'static str {
+        match self {
+            ElementType::F32 => "f32",
+            ElementType::S32 => "s32",
+        }
+    }
+}
+
+/// Host types that can be decoded out of a [`Literal`].
+pub trait NativeType: Sized {
+    const TY: ElementType;
+    fn from_ne_bytes(bytes: [u8; 4]) -> Self;
+}
+
+impl NativeType for f32 {
+    const TY: ElementType = ElementType::F32;
+    fn from_ne_bytes(bytes: [u8; 4]) -> f32 {
+        f32::from_ne_bytes(bytes)
+    }
+}
+
+impl NativeType for i32 {
+    const TY: ElementType = ElementType::S32;
+    fn from_ne_bytes(bytes: [u8; 4]) -> i32 {
+        i32::from_ne_bytes(bytes)
+    }
+}
+
+/// A host tensor literal: dtype + shape + native-endian bytes. Fully
+/// functional (unlike the executable types below) so the Value marshalling
+/// layer and its tests work without XLA.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Literal {
+    ty: ElementType,
+    shape: Vec<usize>,
+    bytes: Vec<u8>,
+}
+
+impl Literal {
+    pub fn create_from_shape_and_untyped_data(
+        ty: ElementType,
+        shape: &[usize],
+        data: &[u8],
+    ) -> Result<Literal> {
+        let expected = shape.iter().product::<usize>() * ty.byte_width();
+        if data.len() != expected {
+            return Err(Error::msg(format!(
+                "literal data is {} bytes, shape {:?} of {} needs {}",
+                data.len(),
+                shape,
+                ty.name(),
+                expected
+            )));
+        }
+        Ok(Literal { ty, shape: shape.to_vec(), bytes: data.to_vec() })
+    }
+
+    pub fn element_type(&self) -> ElementType {
+        self.ty
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    /// Decode into a host vector; the requested type must match.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        if self.ty != T::TY {
+            return Err(Error::msg(format!(
+                "literal holds {}, requested {}",
+                self.ty.name(),
+                T::TY.name()
+            )));
+        }
+        Ok(self
+            .bytes
+            .chunks_exact(4)
+            .map(|c| T::from_ne_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    /// Device→host transfer; host literals are already on the host.
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Ok(self.clone())
+    }
+
+    /// Unpack a tuple literal. Only executables produce tuples, and the
+    /// stub cannot execute, so this is unreachable in the offline build.
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        Err(Error::msg(
+            "tuple literals require an XLA execution result; unavailable in the offline build",
+        ))
+    }
+}
+
+fn unavailable(what: &str) -> Error {
+    Error::msg(format!(
+        "{what} unavailable: this build uses the offline PJRT stub \
+         (crate::runtime::pjrt) — link the real `xla` bindings to execute artifacts"
+    ))
+}
+
+/// Parsed HLO module handle. The stub has no HLO parser, so construction
+/// always fails (after checking the file is at least readable, so missing
+/// files and unparseable files report distinct errors).
+pub struct HloModuleProto {
+    _private: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto> {
+        std::fs::read_to_string(path)
+            .map_err(|e| Error::msg(format!("reading HLO text {path}: {e}")))?;
+        Err(unavailable("HLO text parsing"))
+    }
+}
+
+/// An XLA computation wrapping a parsed HLO module.
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _private: () }
+    }
+}
+
+/// A compiled, device-loaded executable. Never constructible through the
+/// stub (compilation fails), so `execute` is unreachable.
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T: std::borrow::Borrow<Literal>>(
+        &self,
+        _args: &[T],
+    ) -> Result<Vec<Vec<Literal>>> {
+        Err(unavailable("artifact execution"))
+    }
+}
+
+/// The PJRT client. Creation succeeds (so manifest-only runtimes work —
+/// opening an artifact directory, listing entries, accounting); anything
+/// touching a device does not.
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Ok(PjRtClient { _private: () })
+    }
+
+    pub fn platform_name(&self) -> String {
+        "cpu-stub (offline; no XLA backend)".to_owned()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(unavailable("artifact compilation"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrips_f32_and_i32() {
+        let xs = [1.0f32, -2.5, 3.25];
+        let bytes: Vec<u8> = xs.iter().flat_map(|x| x.to_ne_bytes()).collect();
+        let lit =
+            Literal::create_from_shape_and_untyped_data(ElementType::F32, &[3], &bytes).unwrap();
+        assert_eq!(lit.to_vec::<f32>().unwrap(), xs);
+        assert!(lit.to_vec::<i32>().is_err(), "dtype confusion must fail");
+
+        let is = [7i32, -9];
+        let bytes: Vec<u8> = is.iter().flat_map(|x| x.to_ne_bytes()).collect();
+        let lit =
+            Literal::create_from_shape_and_untyped_data(ElementType::S32, &[2], &bytes).unwrap();
+        assert_eq!(lit.to_vec::<i32>().unwrap(), is);
+    }
+
+    #[test]
+    fn literal_rejects_size_mismatch() {
+        assert!(
+            Literal::create_from_shape_and_untyped_data(ElementType::F32, &[4], &[0u8; 12])
+                .is_err()
+        );
+    }
+
+    #[test]
+    fn execution_paths_fail_loudly() {
+        let client = PjRtClient::cpu().unwrap();
+        assert!(client.platform_name().contains("stub"));
+        let comp = XlaComputation { _private: () };
+        let err = client.compile(&comp).unwrap_err().to_string();
+        assert!(err.contains("offline"), "{err}");
+    }
+}

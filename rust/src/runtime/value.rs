@@ -1,8 +1,8 @@
 //! Host-side tensor values crossing the PJRT boundary.
 
-use anyhow::{bail, Result};
-
 use super::manifest::TensorSpec;
+use super::pjrt as xla;
+use crate::util::error::{bail, Result};
 
 /// A host tensor: the only dtypes crossing the artifact ABI are f32
 /// (activations, params, caches) and i32 (tokens, step/pos counters).

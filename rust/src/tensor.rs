@@ -68,9 +68,26 @@ impl fmt::Debug for Tensor {
 /// unavailable rayon. `f(i)` must be independent per index. Results are
 /// returned in order.
 pub fn parallel_map<T: Send>(n: usize, threads: usize, f: impl Fn(usize) -> T + Sync) -> Vec<T> {
+    parallel_map_with(n, threads, || (), |_, i| f(i))
+}
+
+/// [`parallel_map`] with per-thread scratch state: each worker thread
+/// builds one `S` via `make_scratch` and reuses it across every index it
+/// processes. This is the hot-path allocation contract (§Perf): the
+/// blocked attention kernels keep their tile/softmax buffers in an
+/// [`crate::attn::Scratch`] that is allocated once per thread, not once
+/// per (batch, head) plane — so a B×H sweep does O(threads) allocations
+/// instead of O(B·H·N/128).
+pub fn parallel_map_with<T: Send, S>(
+    n: usize,
+    threads: usize,
+    make_scratch: impl Fn() -> S + Sync,
+    f: impl Fn(&mut S, usize) -> T + Sync,
+) -> Vec<T> {
     let threads = threads.clamp(1, n.max(1));
     if threads <= 1 || n <= 1 {
-        return (0..n).map(f).collect();
+        let mut scratch = make_scratch();
+        return (0..n).map(|i| f(&mut scratch, i)).collect();
     }
     let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
     let next = std::sync::atomic::AtomicUsize::new(0);
@@ -78,13 +95,16 @@ pub fn parallel_map<T: Send>(n: usize, threads: usize, f: impl Fn(usize) -> T + 
         out.iter_mut().map(std::sync::Mutex::new).collect();
     std::thread::scope(|s| {
         for _ in 0..threads {
-            s.spawn(|| loop {
-                let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-                if i >= n {
-                    break;
+            s.spawn(|| {
+                let mut scratch = make_scratch();
+                loop {
+                    let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    let v = f(&mut scratch, i);
+                    **slots[i].lock().unwrap() = Some(v);
                 }
-                let v = f(i);
-                **slots[i].lock().unwrap() = Some(v);
             });
         }
     });
@@ -118,5 +138,31 @@ mod tests {
         let serial: Vec<usize> = (0..100).map(|i| i * i).collect();
         let par = parallel_map(100, 8, |i| i * i);
         assert_eq!(serial, par);
+    }
+
+    #[test]
+    fn parallel_map_with_reuses_scratch_and_orders_results() {
+        // scratch is a per-thread buffer; results must still land in order
+        let out = parallel_map_with(
+            64,
+            8,
+            || vec![0u8; 16],
+            |scratch, i| {
+                scratch[i % 16] = scratch[i % 16].wrapping_add(1);
+                i * 3
+            },
+        );
+        assert_eq!(out, (0..64).map(|i| i * 3).collect::<Vec<_>>());
+        // single-threaded path shares one scratch across all indices
+        let sums = parallel_map_with(
+            5,
+            1,
+            || 0usize,
+            |acc, i| {
+                *acc += i;
+                *acc
+            },
+        );
+        assert_eq!(sums, vec![0, 1, 3, 6, 10]);
     }
 }

@@ -1,7 +1,9 @@
 //! Self-contained substrates standing in for unavailable ecosystem crates
 //! (offline image, DESIGN.md §3): IEEE half-precision conversion, a PCG
-//! random generator, and a JSON parser/writer for the artifact manifest.
+//! random generator, a JSON parser/writer for the artifact manifest, and
+//! an `anyhow`-shaped error/context type.
 
+pub mod error;
 pub mod f16;
 pub mod json;
 pub mod rng;

@@ -1,0 +1,281 @@
+//! Public-API surface smoke test: constructs every exported enum variant,
+//! round-trips the core data types, and touches each module's entry
+//! points with tiny shapes. Refactors that silently drop or rename an
+//! export break this file at compile time; behavioral regressions in the
+//! cheap paths break it at run time.
+
+use sageattention::adaptive::{Plan, COS_THRESHOLD};
+use sageattention::attn::{
+    attention, attention_dtype_sim, exact_plane, online_plane, online_plane_with, sage_plane,
+    sage_plane_naive, sage_plane_with, AttnImpl, Fmt, PvMode, Scratch, BLOCK_KV, BLOCK_Q,
+    MAX_HEAD_DIM, SAGE_B, SAGE_T, SAGE_VB, SAGE_VT,
+};
+use sageattention::bench::{f1, f2, f3, f4, pct, sci, Table};
+use sageattention::coordinator::{
+    BatchPolicy, Batcher, FinishReason, GenParams, KvCacheManager, Request, Router,
+    RoutingPolicy,
+};
+use sageattention::metrics::{accuracy, attention_ops, cos_sim, LatencyStats, Welford};
+use sageattention::perfmodel::{
+    predict, predict_tops, AttnKernel, Workpoint, RTX3090, RTX4090,
+};
+use sageattention::quant::{
+    fake_quant, quantize, smooth_k, FakeQuant, Fp8Format, Granularity, QuantizedPlane,
+};
+use sageattention::runtime::{Manifest, Value};
+use sageattention::synth::{make_qkv, Corpus, Profile, WorkloadGen};
+use sageattention::tensor::{parallel_map, parallel_map_with, Tensor};
+use sageattention::testing::gen;
+use sageattention::util::f16::{round_f16, F16};
+use sageattention::util::json::Json;
+use sageattention::util::rng::Pcg32;
+
+/// Every `AttnImpl` variant constructs, names itself, and produces finite
+/// output on a small plane; the named variants round-trip `by_name`.
+#[test]
+fn attn_impl_variants_construct_and_run() {
+    let (q, k, v) = make_qkv(11, [1, 2, 96, 32], Profile::llama_like());
+    let impls = [
+        AttnImpl::Exact,
+        AttnImpl::OnlineFp32,
+        SAGE_T,
+        SAGE_B,
+        SAGE_VT,
+        SAGE_VB,
+        AttnImpl::Sage {
+            qk: Granularity::PerTensor,
+            pv: PvMode::Fp32Accum,
+            smooth_k: false,
+        },
+        AttnImpl::Fp8 { qk: Fp8Format::E4M3, pv: Fp8Format::E5M2 },
+    ];
+    for imp in impls {
+        let o = attention(&q, &k, &v, imp, false);
+        assert_eq!(o.shape, vec![1, 2, 96, 32]);
+        assert!(o.data.iter().all(|x| x.is_finite()), "{} not finite", imp.name());
+    }
+    for name in ["exact", "online", "SageAttn-T", "SageAttn-B", "SageAttn-vT", "SageAttn-vB"] {
+        let imp = AttnImpl::by_name(name).expect(name);
+        assert_eq!(imp.name(), name);
+    }
+    assert!(AttnImpl::by_name("no-such-kernel").is_none());
+    assert!(BLOCK_Q >= BLOCK_KV && MAX_HEAD_DIM >= 128);
+}
+
+/// Every `Granularity` quantizes and dequantizes within half a step.
+#[test]
+fn quantized_plane_roundtrips_every_granularity() {
+    let mut rng = Pcg32::seeded(4);
+    let (rows, cols) = (40, 24);
+    let x: Vec<f32> = (0..rows * cols).map(|_| rng.normal() * 2.0).collect();
+    for g in [
+        Granularity::PerTensor,
+        Granularity::PerToken,
+        Granularity::PerBlock(16),
+        Granularity::PerChannel,
+    ] {
+        let q: QuantizedPlane = quantize(&x, rows, cols, g);
+        assert_eq!(q.granularity, g);
+        assert_eq!(q.data.len(), rows * cols);
+        let deq = q.dequant();
+        let max_scale = q.scales.iter().cloned().fold(0.0f32, f32::max);
+        for (a, b) in x.iter().zip(&deq) {
+            assert!((a - b).abs() <= 0.5 * max_scale + 1e-6, "{g:?}");
+        }
+    }
+    // fake-quant kinds all construct and keep shapes
+    for kind in [
+        FakeQuant::None,
+        FakeQuant::Fp16,
+        FakeQuant::Int8(Granularity::PerToken),
+        FakeQuant::Int4(Granularity::PerToken),
+        FakeQuant::Fp8(Fp8Format::E4M3),
+        FakeQuant::Fp8(Fp8Format::E5M2),
+    ] {
+        assert_eq!(fake_quant(&x, rows, cols, kind).len(), x.len());
+    }
+    let (sm, mean) = smooth_k(&x, rows, cols);
+    assert_eq!(sm.len(), x.len());
+    assert_eq!(mean.len(), cols);
+}
+
+/// The plane-level kernels (scratch and scratch-free) stay exported and
+/// agree with each other.
+#[test]
+fn plane_kernels_agree() {
+    let (q, k, v) = make_qkv(5, [1, 1, 130, 32], Profile::vit_like());
+    let (n, d) = (130, 32);
+    let mut scratch = Scratch::new();
+    let a = online_plane(&q.data, &k.data, &v.data, n, n, d, false);
+    let b = online_plane_with(&mut scratch, &q.data, &k.data, &v.data, n, n, d, false);
+    assert_eq!(a, b);
+    let c = sage_plane(
+        &q.data, &k.data, &v.data, n, n, d,
+        Granularity::PerToken, PvMode::Fp16Accum, true, false,
+    );
+    let e = sage_plane_with(
+        &mut scratch, &q.data, &k.data, &v.data, n, n, d,
+        Granularity::PerToken, PvMode::Fp16Accum, true, false,
+    );
+    assert_eq!(c, e);
+    let gold = exact_plane(&q.data, &k.data, &v.data, n, n, d, false);
+    assert!(cos_sim(&gold, &c) > 0.99);
+    let naive = sage_plane_naive(
+        &q.data, &k.data, &v.data, n, n, d, Granularity::PerToken, true, false,
+    );
+    assert!(cos_sim(&gold, &naive) > 0.99);
+    // dtype-sim sweep entry point
+    let o = attention_dtype_sim(
+        &q, &k, &v, Fmt::Int8, Granularity::PerToken, Fmt::Fp16, true, false,
+    );
+    assert!(o.data.iter().all(|x| x.is_finite()));
+}
+
+/// Coordinator accounting types: batcher, KV manager, router, request.
+#[test]
+fn coordinator_surface() {
+    let mut kv = KvCacheManager::new(16, 8);
+    let mut batcher = Batcher::new(BatchPolicy::SkipSmall { window: 2 });
+    for i in 0..4u64 {
+        batcher.push(Request::new(
+            i,
+            vec![1; 8],
+            GenParams { max_new_tokens: 8, ..Default::default() },
+        ));
+    }
+    let admitted = batcher.admit(2, &mut kv);
+    assert_eq!(admitted.len(), 2);
+    assert_eq!(kv.live_sequences(), 2);
+    kv.check_invariants().unwrap();
+    for r in &admitted {
+        assert_eq!(r.max_tokens(), 16);
+        kv.release(r.id).unwrap();
+    }
+    let _ = FinishReason::MaxTokens;
+    let _ = FinishReason::StopToken;
+    let _ = FinishReason::Rejected;
+
+    struct Mock(usize, f64);
+    impl sageattention::coordinator::Replica for Mock {
+        fn id(&self) -> usize {
+            self.0
+        }
+        fn load(&self) -> f64 {
+            self.1
+        }
+        fn submit(&mut self, _req: Request) -> bool {
+            self.1 += 1.0;
+            true
+        }
+    }
+    for policy in [
+        RoutingPolicy::RoundRobin,
+        RoutingPolicy::LeastLoaded,
+        RoutingPolicy::PowerOfK(2),
+    ] {
+        let mut router = Router::new(policy, 2);
+        let mut reps = vec![Mock(0, 0.0), Mock(1, 0.0)];
+        let picked = router
+            .route(&mut reps, &Request::new(9, vec![1], GenParams::default()))
+            .unwrap();
+        assert!(picked < 2);
+    }
+}
+
+/// Runtime value marshalling round-trips through the (stub) literal layer,
+/// and the manifest parser accepts the documented schema.
+#[test]
+fn runtime_surface() {
+    let t = Tensor::new(vec![1.0, -2.0, 3.0, 4.5], &[2, 2]);
+    let val = Value::from_tensor(&t);
+    let lit = val.to_literal().unwrap();
+    let spec = sageattention::runtime::TensorSpec {
+        shape: vec![2, 2],
+        dtype: "float32".to_owned(),
+    };
+    let back = Value::from_literal(&lit, &spec).unwrap();
+    assert_eq!(back.as_f32().unwrap(), t.data.as_slice());
+
+    let iv = Value::i32(vec![3, -7], &[2]);
+    let ilit = iv.to_literal().unwrap();
+    let ispec = sageattention::runtime::TensorSpec { shape: vec![2], dtype: "int32".to_owned() };
+    assert_eq!(Value::from_literal(&ilit, &ispec).unwrap().as_i32().unwrap(), &[3, -7]);
+
+    let m = Manifest::parse(
+        r#"{"entries": {"a": {"file": "a.hlo.txt",
+            "inputs": [{"shape": [2], "dtype": "float32"}],
+            "outputs": [{"shape": [2], "dtype": "float32"}]}}}"#,
+    )
+    .unwrap();
+    assert_eq!(m.entries.len(), 1);
+}
+
+/// Adaptive plan + metrics + bench + util substrates.
+#[test]
+fn support_module_surface() {
+    let plan = Plan(vec!["SageAttn-B".into(), "SageAttn-vB".into()]);
+    assert_eq!(Plan::from_json(&plan.to_json()).unwrap(), plan);
+    assert!(plan.speedup_estimate() > 1.0);
+    assert!(COS_THRESHOLD > 0.99);
+
+    let a = [1.0f32, 2.0, 3.0];
+    let acc = accuracy(&a, &a);
+    assert!(acc.cos_sim > 0.999_99 && acc.rmse == 0.0);
+    assert!(attention_ops(1, 1, 8, 8, 4, true) * 2.0 == attention_ops(1, 1, 8, 8, 4, false));
+    let mut w = Welford::new();
+    w.push(1.0);
+    w.push(3.0);
+    assert_eq!(w.mean(), 2.0);
+    let mut lat = LatencyStats::default();
+    lat.record(std::time::Duration::from_millis(5));
+    assert!(!lat.is_empty() && lat.len() == 1);
+
+    let mut table = Table::new(&["a", "b"]);
+    table.row(&[f1(1.0), f2(2.0)]);
+    table.row(&[f3(3.0), f4(4.0)]);
+    table.row(&[pct(0.5), sci(1e-4)]);
+
+    assert_eq!(round_f16(1.0), 1.0);
+    assert_eq!(F16::from_f32(2.0).to_f32(), 2.0);
+    let j = Json::parse(r#"{"k": [1, 2]}"#).unwrap();
+    assert_eq!(j.path("k").unwrap().as_usize_vec().unwrap(), vec![1, 2]);
+    let mut rng = Pcg32::seeded(1);
+    assert!(gen::usize_in(&mut rng, 1, 4) <= 4);
+
+    // synth generators
+    let p = Profile::by_name("diffusion-like").unwrap();
+    let (q, _, _) = make_qkv(1, [1, 1, 4, 4], p);
+    assert_eq!(q.numel(), 16);
+    let mut corpus = Corpus::new(32, 1);
+    assert_eq!(corpus.batch(2, 8).len(), 16);
+    assert_eq!(corpus.vocab(), 32);
+    let mut wl = WorkloadGen::new(1, 32, 10.0, vec![4, 8], 4);
+    assert_eq!(wl.generate(3).len(), 3);
+
+    // parallel substrates
+    assert_eq!(parallel_map(4, 2, |i| i), vec![0, 1, 2, 3]);
+    let doubled = parallel_map_with(4, 2, || 2usize, |m, i| *m * i);
+    assert_eq!(doubled, vec![0, 2, 4, 6]);
+
+    // perfmodel: every kernel prices every device point finitely
+    for kernel in [
+        AttnKernel::TorchNaive,
+        AttnKernel::SageTorchBased,
+        AttnKernel::Xformers,
+        AttnKernel::FlashAttention2,
+        AttnKernel::FlashAttention3Fp8,
+        AttnKernel::SageAttnT,
+        AttnKernel::SageAttnB,
+        AttnKernel::SageAttnVT,
+        AttnKernel::SageAttnVB,
+        AttnKernel::SageAttnBNoSmooth,
+        AttnKernel::SageAttnTUnfused,
+    ] {
+        for dev in [&RTX4090, &RTX3090] {
+            let wp = Workpoint::square(1, 8, 2048, 64, false);
+            let cost = predict(dev, kernel, wp);
+            assert!(cost.total_s.is_finite() && cost.total_s > 0.0, "{}", kernel.name());
+            assert!(predict_tops(dev, kernel, wp) > 0.0);
+        }
+    }
+}

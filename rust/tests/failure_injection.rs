@@ -34,8 +34,9 @@ fn manifest_with_missing_fields_rejected() {
 
 #[test]
 fn truncated_hlo_file_fails_at_load_not_at_run() {
-    let rt = Runtime::open(Runtime::default_dir()).unwrap();
-    // copy the manifest but point an entry at a garbage HLO file
+    // a manifest entry pointing at a garbage HLO file must fail at load();
+    // holds for the real XLA backend (parse error) and the offline stub
+    // (HLO parsing unavailable) alike
     let dir = std::env::temp_dir().join(format!("sage_badhlo_{}", std::process::id()));
     std::fs::create_dir_all(&dir).unwrap();
     let manifest = r#"{
@@ -53,11 +54,11 @@ fn truncated_hlo_file_fails_at_load_not_at_run() {
     let rt2 = Runtime::open(&dir).unwrap();
     assert!(rt2.load("bad").is_err(), "garbage HLO must fail to parse/compile");
     assert!(rt2.load("nonexistent").is_err());
-    drop(rt);
     std::fs::remove_dir_all(&dir).unwrap();
 }
 
 #[test]
+#[ignore = "requires PJRT + AOT artifacts (make artifacts); the offline build links the runtime::pjrt stub, which cannot execute HLO"]
 fn engine_rejects_unknown_config_and_plan() {
     let rt = Runtime::open(Runtime::default_dir()).unwrap();
     assert!(Engine::new(&rt, "no-such-config", "sage", 1).is_err());
@@ -65,6 +66,7 @@ fn engine_rejects_unknown_config_and_plan() {
 }
 
 #[test]
+#[ignore = "requires PJRT + AOT artifacts (make artifacts); the offline build links the runtime::pjrt stub, which cannot execute HLO"]
 fn engine_rejects_over_budget_requests() {
     let rt = Runtime::open(Runtime::default_dir()).unwrap();
     let mut engine = Engine::new(&rt, "tiny", "fp", 1).unwrap();
@@ -92,6 +94,7 @@ fn engine_rejects_over_budget_requests() {
 }
 
 #[test]
+#[ignore = "requires PJRT + AOT artifacts (make artifacts); the offline build links the runtime::pjrt stub, which cannot execute HLO"]
 fn engine_refuses_when_full_without_error() {
     let rt = Runtime::open(Runtime::default_dir()).unwrap();
     let mut engine = Engine::new(&rt, "tiny", "fp", 2).unwrap();
@@ -107,6 +110,7 @@ fn engine_refuses_when_full_without_error() {
 }
 
 #[test]
+#[ignore = "requires PJRT + AOT artifacts (make artifacts); the offline build links the runtime::pjrt stub, which cannot execute HLO"]
 fn set_params_validates_shapes() {
     let rt = Runtime::open(Runtime::default_dir()).unwrap();
     let mut engine = Engine::new(&rt, "tiny", "fp", 3).unwrap();
@@ -123,6 +127,7 @@ fn set_params_validates_shapes() {
 }
 
 #[test]
+#[ignore = "requires PJRT + AOT artifacts (make artifacts); the offline build links the runtime::pjrt stub, which cannot execute HLO"]
 fn value_dtype_confusion_rejected_at_run() {
     let rt = Runtime::open(Runtime::default_dir()).unwrap();
     let art = rt.load("attn_exact_1x2x256x64").unwrap();

@@ -15,6 +15,7 @@ fn runtime() -> Runtime {
 }
 
 #[test]
+#[ignore = "requires PJRT + AOT artifacts (make artifacts); the offline build links the runtime::pjrt stub, which cannot execute HLO"]
 fn attention_artifacts_match_native_reference() {
     let rt = runtime();
     for (name, imp, min_cos) in [
@@ -40,6 +41,7 @@ fn attention_artifacts_match_native_reference() {
 }
 
 #[test]
+#[ignore = "requires PJRT + AOT artifacts (make artifacts); the offline build links the runtime::pjrt stub, which cannot execute HLO"]
 fn causal_artifacts_respect_masking() {
     let rt = runtime();
     let art = rt.load("attn_sage_b_causal_1x2x256x64").unwrap();
@@ -53,6 +55,7 @@ fn causal_artifacts_respect_masking() {
 }
 
 #[test]
+#[ignore = "requires PJRT + AOT artifacts (make artifacts); the offline build links the runtime::pjrt stub, which cannot execute HLO"]
 fn artifact_rejects_wrong_arity_and_shape() {
     let rt = runtime();
     let art = rt.load("attn_exact_1x2x256x64").unwrap();
@@ -65,6 +68,7 @@ fn artifact_rejects_wrong_arity_and_shape() {
 }
 
 #[test]
+#[ignore = "requires PJRT + AOT artifacts (make artifacts); the offline build links the runtime::pjrt stub, which cannot execute HLO"]
 fn train_step_descends_via_artifact() {
     let rt = runtime();
     let art = rt.load("tiny_train_step").unwrap();
@@ -110,6 +114,7 @@ fn train_step_descends_via_artifact() {
 }
 
 #[test]
+#[ignore = "requires PJRT + AOT artifacts (make artifacts); the offline build links the runtime::pjrt stub, which cannot execute HLO"]
 fn eval_loss_fp_vs_sage_close() {
     // the paper's Table 8 property at tiny scale: swapping in quantized
     // attention leaves the language-model loss essentially unchanged
@@ -130,6 +135,7 @@ fn eval_loss_fp_vs_sage_close() {
 }
 
 #[test]
+#[ignore = "requires PJRT + AOT artifacts (make artifacts); the offline build links the runtime::pjrt stub, which cannot execute HLO"]
 fn engine_serves_and_respects_budgets() {
     let rt = runtime();
     let mut engine = Engine::new(&rt, "tiny", "sage", 2).unwrap();
@@ -157,6 +163,7 @@ fn engine_serves_and_respects_budgets() {
 }
 
 #[test]
+#[ignore = "requires PJRT + AOT artifacts (make artifacts); the offline build links the runtime::pjrt stub, which cannot execute HLO"]
 fn scheduler_end_to_end_fifo() {
     let rt = runtime();
     let engine = Engine::new(&rt, "tiny", "fp", 7).unwrap();
@@ -180,6 +187,7 @@ fn scheduler_end_to_end_fifo() {
 }
 
 #[test]
+#[ignore = "requires PJRT + AOT artifacts (make artifacts); the offline build links the runtime::pjrt stub, which cannot execute HLO"]
 fn plug_and_play_same_params_same_greedy_tokens() {
     // the paper's end-to-end claim, at serving granularity: with identical
     // weights and greedy sampling, sage vs fp decode should mostly agree
