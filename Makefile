@@ -1,16 +1,21 @@
 # One-shot local gates for the SageAttention reproduction.
 #
-#   make verify        tier-1 (release build + tests) plus the format gate
-#   make build         release build only
-#   make test          test suite only
-#   make fmt           rewrite sources with rustfmt
-#   make bench-hotpath the tentpole before/after GFLOPS measurement
-#   make benches       compile every paper-table bench (no run)
+#   make verify          tier-1 (release build + tests) plus the format gate
+#                        and the bench-hotpath no-regression check against
+#                        the checked-in bench_baseline.json (speedup floors:
+#                        blocked-vs-naive and PreparedKV decode)
+#   make build           release build only
+#   make test            test suite only
+#   make fmt             rewrite sources with rustfmt
+#   make bench-hotpath   the before/after GFLOPS measurement (full budget)
+#   make bench-baseline  re-measure and rewrite bench_baseline.json
+#   make benches         compile every paper-table bench (no run)
 
-.PHONY: verify build test fmt fmt-check bench-hotpath benches
+.PHONY: verify build test fmt fmt-check bench-hotpath bench-baseline benches
 
 verify:
 	cargo build --release && cargo test -q && cargo fmt --check
+	./target/release/sage bench-hotpath --secs 1 --check bench_baseline.json
 
 build:
 	cargo build --release
@@ -26,6 +31,9 @@ fmt-check:
 
 bench-hotpath: build
 	./target/release/sage bench-hotpath
+
+bench-baseline: build
+	./target/release/sage bench-hotpath --update bench_baseline.json
 
 benches:
 	cargo bench --no-run

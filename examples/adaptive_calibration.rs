@@ -10,6 +10,7 @@
 //! Run: `cargo run --release --example adaptive_calibration -- [n_layers]`
 
 use sageattention::adaptive::{calibrate, synth_layer_inputs, COS_THRESHOLD};
+use sageattention::attn::AttnSpec;
 use sageattention::bench::{pct, Table};
 use sageattention::runtime::Runtime;
 use sageattention::synth::Profile;
@@ -40,7 +41,11 @@ fn main() -> anyhow::Result<()> {
         COS_THRESHOLD * 100.0
     ));
 
-    // 2. persist the plan
+    // 2. persist the plan — after proving every entry resolves through
+    //    the kernel registry and runs on the calibration inputs
+    for (imp, (q, k, v)) in plan.kernels()?.iter().zip(&layers) {
+        AttnSpec::new(*imp).run(q, k, v)?;
+    }
     let path = "plan.json";
     std::fs::write(path, plan.to_json())?;
     let n_vb = plan.0.iter().filter(|s| s.as_str() == "SageAttn-vB").count();

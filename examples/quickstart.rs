@@ -6,7 +6,7 @@
 //!
 //! Run: `cargo run --release --example quickstart`
 
-use sageattention::attn::{attention, AttnImpl};
+use sageattention::attn::{registry, AttnSpec};
 use sageattention::metrics::accuracy;
 use sageattention::runtime::{Runtime, Value};
 use sageattention::synth::{make_qkv, Profile};
@@ -29,26 +29,34 @@ fn main() -> anyhow::Result<()> {
     ])?;
 
     // --- 4. compare against exact fp32 attention -------------------------
-    let gold = attention(&q, &k, &v, AttnImpl::Exact, false);
+    let gold = AttnSpec::exact().run(&q, &k, &v)?;
     let acc = accuracy(&gold.data, out[0].as_f32()?);
     println!("\nSageAttn-B (Pallas, AOT via PJRT) vs full precision: {acc}");
 
-    // --- 5. sweep all four Table-6 variants with the rust-native kernels -
-    println!("\nall kernel variants (rust-native mirrors):");
-    for name in ["SageAttn-T", "SageAttn-B", "SageAttn-vT", "SageAttn-vB"] {
-        let imp = AttnImpl::by_name(name).unwrap();
-        let o = attention(&q, &k, &v, imp, false);
-        println!("  {name:<12} {}", accuracy(&gold.data, &o.data));
+    // --- 5. sweep the kernel registry with the rust-native mirrors -------
+    //        (AttnSpec::auto() is the plug-and-play entry point; here we
+    //        pin each registered variant by name instead)
+    println!("\nall registered kernels (rust-native mirrors):");
+    for entry in registry::entries() {
+        let o = AttnSpec::by_name(entry.name)?.run(&q, &k, &v)?;
+        println!("  {:<12} {}", entry.name, accuracy(&gold.data, &o.data));
     }
 
     // --- 6. the ablation that motivates the paper: skip smooth-K ---------
-    let no_smooth = AttnImpl::Sage {
-        qk: sageattention::quant::Granularity::PerToken,
-        pv: sageattention::attn::PvMode::Fp16Accum,
-        smooth_k: false,
-    };
-    let o = attention(&q, &k, &v, no_smooth, false);
+    //        (parameterized kernel names resolve too)
+    let o = AttnSpec::by_name("SageAttn-T-nosmooth")?.run(&q, &k, &v)?;
     println!("\nwithout smooth-K: {}", accuracy(&gold.data, &o.data));
     println!("(the CosSim drop above is Figure 3's blurry image, in numbers)");
+
+    // --- 7. decode with quantize-once KV: prepare the prefix, then
+    //        extend one row per token — no prefix requantization ----------
+    let spec = AttnSpec::sage_b();
+    let mut kv = spec.prepare(&k.narrow_n(0, 250), &v.narrow_n(0, 250))?;
+    for t in 250..256 {
+        kv.extend(&k.narrow_n(t, t + 1), &v.narrow_n(t, t + 1))?;
+        let step = spec.run_prepared(&q.narrow_n(t, t + 1), &kv)?;
+        assert_eq!(step.shape, vec![1, 2, 1, 64]);
+    }
+    println!("\nPreparedKV decode: 6 tokens appended to a 250-row prefix, quantized once");
     Ok(())
 }

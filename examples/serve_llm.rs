@@ -24,6 +24,7 @@ fn run_plan(
     seed: u64,
 ) -> anyhow::Result<(sageattention::coordinator::SchedulerReport, f64, Vec<Vec<i32>>)> {
     let engine = Engine::new(rt, config, plan, seed)?;
+    println!("[{plan:>4}] kernel {} ({})", engine.kernel().name, engine.kernel().summary);
     let cfg = &rt.manifest.configs[config];
     let slots = engine.batch_slots();
     let mut gen = WorkloadGen::new(seed, cfg.vocab, 40.0, engine.prefill_sizes(), 24);

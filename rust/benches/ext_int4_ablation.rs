@@ -5,7 +5,7 @@
 //! make INT4 viable; this ablation quantifies the gap that motivates it:
 //! INT4 per-token collapses on outlier profiles where INT8 stays ≈ exact.
 
-use sageattention::attn::{attention, AttnImpl};
+use sageattention::attn::AttnSpec;
 use sageattention::bench::{pct, Table};
 use sageattention::metrics::cos_sim;
 use sageattention::quant::{fake_quant, FakeQuant, Granularity};
@@ -26,7 +26,7 @@ fn attn_qk_fake(q: &Tensor, k: &Tensor, v: &Tensor, kind: FakeQuant) -> Tensor {
                 .copy_from_slice(&fake_quant(q.head(bi, hi), n, d, kind));
         }
     }
-    attention(&q2, &k2, v, AttnImpl::Exact, false)
+    AttnSpec::exact().run(&q2, &k2, v).unwrap()
 }
 
 fn main() {
@@ -50,7 +50,7 @@ fn main() {
         .enumerate()
         .map(|(i, (_, p))| {
             let (q, k, v) = make_qkv(50 + i as u64, [1, 4, 512, 64], *p);
-            let gold = attention(&q, &k, &v, AttnImpl::Exact, false);
+            let gold = AttnSpec::exact().run(&q, &k, &v).unwrap();
             (q, k, v, gold)
         })
         .collect();

@@ -9,7 +9,7 @@
 //! both can run: SageAttention's INT8 pipeline must beat the fp32 online
 //! baseline even on CPU SIMD.
 
-use sageattention::attn::{attention, AttnImpl, SAGE_B};
+use sageattention::attn::AttnSpec;
 use sageattention::bench::{bench_budget, f1, f2, Table};
 use sageattention::perfmodel::{predict_tops, AttnKernel, DeviceSpec, Workpoint, RTX3090, RTX4090};
 use sageattention::synth::{make_qkv, Profile};
@@ -44,11 +44,13 @@ fn figure(dev: &DeviceSpec, head_dim: usize, causal: bool, title: &str) {
 fn cpu_crosscheck() {
     // CPU wall-clock ordering check at a size both paths can run
     let (q, k, v) = make_qkv(1, [1, 8, 2048, 64], Profile::diffusion_like());
+    let online_spec = AttnSpec::online();
     let online = bench_budget("online-fp32", Duration::from_secs(3), 3, || {
-        std::hint::black_box(attention(&q, &k, &v, AttnImpl::OnlineFp32, false));
+        std::hint::black_box(online_spec.run(&q, &k, &v).unwrap());
     });
+    let sage_spec = AttnSpec::sage_b();
     let sage = bench_budget("sage-b", Duration::from_secs(3), 3, || {
-        std::hint::black_box(attention(&q, &k, &v, SAGE_B, false));
+        std::hint::black_box(sage_spec.run(&q, &k, &v).unwrap());
     });
     println!(
         "\nCPU cross-check (1x8x2048x64): online-fp32 {:.1} ms, sage-B {:.1} ms ({:.2}x)",

@@ -3,7 +3,7 @@
 //! decode step. Run before/after every optimization; numbers land in
 //! EXPERIMENTS.md §Perf.
 
-use sageattention::attn::{attention, AttnImpl, SAGE_B, SAGE_VB};
+use sageattention::attn::AttnSpec;
 use sageattention::bench::{bench_budget, Table};
 use sageattention::coordinator::{Engine, GenParams, Request};
 use sageattention::quant::{self, Granularity};
@@ -25,14 +25,28 @@ fn main() {
 
     // --- L3-native kernels ---
     let (q, k, v) = make_qkv(1, [1, 8, 2048, 64], Profile::diffusion_like());
+    let online = AttnSpec::online();
     push(bench_budget("attn/online-fp32 1x8x2048x64", budget, 3, || {
-        std::hint::black_box(attention(&q, &k, &v, AttnImpl::OnlineFp32, false));
+        std::hint::black_box(online.run(&q, &k, &v).unwrap());
     }));
+    let sage_b = AttnSpec::sage_b();
     push(bench_budget("attn/sage-B 1x8x2048x64", budget, 3, || {
-        std::hint::black_box(attention(&q, &k, &v, SAGE_B, false));
+        std::hint::black_box(sage_b.run(&q, &k, &v).unwrap());
     }));
+    let sage_vb = AttnSpec::sage_vb();
     push(bench_budget("attn/sage-vB 1x8x2048x64", budget, 3, || {
-        std::hint::black_box(attention(&q, &k, &v, SAGE_VB, false));
+        std::hint::black_box(sage_vb.run(&q, &k, &v).unwrap());
+    }));
+
+    // --- PreparedKV decode micro-costs: repeated 1-row queries against
+    //     a fixed prefix, with vs without quantize-once state ---
+    let kv_state = sage_b.prepare(&k, &v).unwrap();
+    let q_row = q.narrow_n(2047, 2048);
+    push(bench_budget("decode/prepared-run 1row vs 2048", budget, 10, || {
+        std::hint::black_box(sage_b.run_prepared(&q_row, &kv_state).unwrap());
+    }));
+    push(bench_budget("decode/full-requant 1row vs 2048", budget, 10, || {
+        std::hint::black_box(sage_b.run(&q_row, &k, &v).unwrap());
     }));
 
     // --- quantizers ---

@@ -9,7 +9,7 @@
 //! profiles *without* smoothing and all recover *with* it, while FA3-FP8
 //! (no smoothing) degrades; llama-like stays flat everywhere.
 
-use sageattention::attn::{attention, attention_dtype_sim, AttnImpl, Fmt};
+use sageattention::attn::{attention_dtype_sim, AttnSpec, Fmt};
 use sageattention::bench::{pct, Table};
 use sageattention::metrics::cos_sim;
 use sageattention::quant::Granularity;
@@ -43,7 +43,7 @@ fn main() {
         .enumerate()
         .map(|(i, (_, p))| {
             let (q, k, v) = make_qkv(100 + i as u64, shape, *p);
-            let gold = attention(&q, &k, &v, AttnImpl::Exact, false);
+            let gold = AttnSpec::exact().run(&q, &k, &v).unwrap();
             (q, k, v, gold)
         })
         .collect();
@@ -65,17 +65,9 @@ fn main() {
     }
     // FlashAttention3-with-quant baseline: FP8 everywhere, no smoothing
     let mut row = vec!["FlashAttn3 (quant)".to_string()];
+    let fa3 = AttnSpec::by_name("fa3-fp8").unwrap();
     for (q, k, v, gold) in &golds {
-        let o = attention(
-            q,
-            k,
-            v,
-            AttnImpl::Fp8 {
-                qk: sageattention::quant::Fp8Format::E4M3,
-                pv: sageattention::quant::Fp8Format::E4M3,
-            },
-            false,
-        );
+        let o = fa3.run(q, k, v).unwrap();
         row.push(pct(cos_sim(&gold.data, &o.data) as f64));
     }
     t.row(&row);

@@ -6,7 +6,7 @@
 //! generator with depth-increasing outlier severity (DESIGN.md §3): the
 //! average row reproduces Table 2's ordering, the min row Table 3's.
 
-use sageattention::attn::{attention, attention_dtype_sim, AttnImpl, Fmt};
+use sageattention::attn::{attention_dtype_sim, AttnSpec, Fmt};
 use sageattention::bench::{f4, pct, sci, Table};
 use sageattention::metrics::{accuracy, Welford};
 use sageattention::quant::Granularity;
@@ -30,9 +30,10 @@ fn main() {
             sageattention::synth::make_qkv(42 + l as u64, shape, prof)
         })
         .collect();
+    let exact = AttnSpec::exact();
     let golds: Vec<_> = layers
         .iter()
-        .map(|(q, k, v)| attention(q, k, v, AttnImpl::Exact, false))
+        .map(|(q, k, v)| exact.run(q, k, v).unwrap())
         .collect();
 
     let qk_fmts = [Fmt::Int8, Fmt::E4M3, Fmt::E5M2];

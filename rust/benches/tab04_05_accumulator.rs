@@ -6,7 +6,7 @@
 //! running 2× faster on RTX4090-class hardware. Both tables should show
 //! *identical* metrics to the displayed precision.
 
-use sageattention::attn::{attention, AttnImpl, PvMode};
+use sageattention::attn::{AttnImpl, AttnSpec, PvMode};
 use sageattention::bench::{f4, pct, sci, Table};
 use sageattention::metrics::{accuracy, Welford};
 use sageattention::quant::Granularity;
@@ -25,15 +25,11 @@ fn main() {
 
     for (label, pv) in [("FP32", PvMode::Fp32Accum), ("FP16", PvMode::Fp16Accum)] {
         let (mut wc, mut wl, mut wr) = (Welford::new(), Welford::new(), Welford::new());
+        let spec =
+            AttnSpec::new(AttnImpl::Sage { qk: Granularity::PerToken, pv, smooth_k: true });
         for (q, k, v) in &layers {
-            let gold = attention(q, k, v, AttnImpl::Exact, false);
-            let o = attention(
-                q,
-                k,
-                v,
-                AttnImpl::Sage { qk: Granularity::PerToken, pv, smooth_k: true },
-                false,
-            );
+            let gold = AttnSpec::exact().run(q, k, v).unwrap();
+            let o = spec.run(q, k, v).unwrap();
             let a = accuracy(&gold.data, &o.data);
             wc.push(a.cos_sim as f64);
             wl.push(a.rel_l1 as f64);

@@ -3,7 +3,7 @@
 //! paper's setup for this table), via both the rust-native kernels and —
 //! when artifacts are present — the AOT Pallas kernels through PJRT.
 
-use sageattention::attn::{attention, AttnImpl, SAGE_B, SAGE_T, SAGE_VB, SAGE_VT};
+use sageattention::attn::AttnSpec;
 use sageattention::bench::{f3, pct, sci, Table};
 use sageattention::metrics::accuracy;
 use sageattention::runtime::{Runtime, Value};
@@ -24,14 +24,14 @@ fn normal_qkv(seed: u64, shape: [usize; 4]) -> (Tensor, Tensor, Tensor) {
 fn main() {
     let shape = [2, 8, 1024, 64];
     let (q, k, v) = normal_qkv(9, shape);
-    let gold = attention(&q, &k, &v, AttnImpl::Exact, false);
+    let gold = AttnSpec::exact().run(&q, &k, &v).unwrap();
 
     let mut t = Table::new(&["attention", "CosSim", "RelL1", "RMSE"]);
-    for imp in [SAGE_T, SAGE_B, SAGE_VT, SAGE_VB] {
-        let o = attention(&q, &k, &v, imp, false);
+    for name in ["SageAttn-T", "SageAttn-B", "SageAttn-vT", "SageAttn-vB"] {
+        let o = AttnSpec::by_name(name).unwrap().run(&q, &k, &v).unwrap();
         let a = accuracy(&gold.data, &o.data);
         t.row(&[
-            imp.name(),
+            name.to_string(),
             pct(a.cos_sim as f64),
             f3(a.rel_l1 as f64),
             sci(a.rmse as f64),
@@ -43,7 +43,7 @@ fn main() {
     match Runtime::open(Runtime::default_dir()) {
         Ok(rt) => {
             let (q, k, v) = normal_qkv(10, [1, 2, 256, 64]);
-            let gold = attention(&q, &k, &v, AttnImpl::Exact, false);
+            let gold = AttnSpec::exact().run(&q, &k, &v).unwrap();
             let mut t = Table::new(&["artifact", "CosSim", "RelL1", "RMSE"]);
             for name in [
                 "attn_sage_t_1x2x256x64",

@@ -4,7 +4,7 @@
 //!   2. CPU wall-clock of the rust-native kernel with/without smooth-K.
 //! Both must land under ~0.5% (paper: <0.2%).
 
-use sageattention::attn::{attention, AttnImpl, PvMode, SAGE_B};
+use sageattention::attn::{AttnImpl, AttnSpec, PvMode};
 use sageattention::bench::{bench_budget, f1, f2, Table};
 use sageattention::perfmodel::{predict, AttnKernel, Workpoint, RTX4090};
 use sageattention::quant::Granularity;
@@ -33,16 +33,17 @@ fn main() {
 
     // --- CPU wall-clock of the rust-native kernel ---
     let (q, k, v) = make_qkv(5, [1, 8, 2048, 64], Profile::diffusion_like());
-    let no_smooth = AttnImpl::Sage {
+    let with_smooth = AttnSpec::sage_b();
+    let no_smooth = AttnSpec::new(AttnImpl::Sage {
         qk: Granularity::PerBlock(128),
         pv: PvMode::Fp16Accum,
         smooth_k: false,
-    };
+    });
     let s_with = bench_budget("with-smooth", Duration::from_secs(3), 4, || {
-        std::hint::black_box(attention(&q, &k, &v, SAGE_B, false));
+        std::hint::black_box(with_smooth.run(&q, &k, &v).unwrap());
     });
     let s_without = bench_budget("no-smooth", Duration::from_secs(3), 4, || {
-        std::hint::black_box(attention(&q, &k, &v, no_smooth, false));
+        std::hint::black_box(no_smooth.run(&q, &k, &v).unwrap());
     });
     let overhead =
         (s_with.median_s() - s_without.median_s()) / s_without.median_s() * 100.0;

@@ -4,7 +4,7 @@
 //! and (b) attention TOPS from the cost model.
 
 use sageattention::adaptive::{calibrate, synth_layer_inputs, COS_THRESHOLD};
-use sageattention::attn::{attention, AttnImpl, SAGE_B, SAGE_T, SAGE_VB};
+use sageattention::attn::AttnSpec;
 use sageattention::bench::{f1, pct, Table};
 use sageattention::metrics::{cos_sim, Welford};
 use sageattention::perfmodel::{predict_tops, AttnKernel, Workpoint, RTX4090};
@@ -14,16 +14,20 @@ fn run(model: &str, n_layers: usize, shape: [usize; 4], wp: Workpoint, profile: 
     let layers = synth_layer_inputs(n_layers, shape, profile, seed);
     let (plan, _) = calibrate(&layers, wp.causal);
     let n_vb = plan.0.iter().filter(|s| s.as_str() == "SageAttn-vB").count();
+    // the plan's layer kernels resolve through the registry — no
+    // hand-rolled string matching at the consumption site
+    let plan_kernels = plan.kernels().expect("calibrate emits registered kernel names");
 
     // accuracy: mean CosSim over layers for each strategy
+    let exact = AttnSpec::exact().causal(wp.causal);
+    let sage_t = AttnSpec::sage_t().causal(wp.causal);
     let mut acc_t = Welford::new();
     let mut acc_adaptive = Welford::new();
-    for ((q, k, v), choice) in layers.iter().zip(&plan.0) {
-        let gold = attention(q, k, v, AttnImpl::Exact, wp.causal);
-        let o_t = attention(q, k, v, SAGE_T, wp.causal);
+    for ((q, k, v), imp) in layers.iter().zip(&plan_kernels) {
+        let gold = exact.run(q, k, v).unwrap();
+        let o_t = sage_t.run(q, k, v).unwrap();
         acc_t.push(cos_sim(&gold.data, &o_t.data) as f64);
-        let imp = if choice == "SageAttn-vB" { SAGE_VB } else { SAGE_B };
-        let o_a = attention(q, k, v, imp, wp.causal);
+        let o_a = AttnSpec::new(*imp).causal(wp.causal).run(q, k, v).unwrap();
         acc_adaptive.push(cos_sim(&gold.data, &o_a.data) as f64);
     }
 

@@ -7,7 +7,7 @@
 //! We reproduce the §A.5 speedup accounting from the cost model's latency
 //! split plus accuracy surrogates for the orthogonality claim.
 
-use sageattention::attn::{attention, AttnImpl, SAGE_B};
+use sageattention::attn::AttnSpec;
 use sageattention::bench::{f1, pct, Table};
 use sageattention::metrics::cos_sim;
 use sageattention::perfmodel::{predict, AttnKernel, Workpoint, RTX4090};
@@ -67,8 +67,8 @@ fn main() {
     // surrogate: attention error from SageAttention vs activation error
     // from W8A8-quantizing an MLP block, and their composition
     let (q, k, v) = make_qkv(11, [1, 4, 512, 64], Profile::diffusion_like());
-    let gold = attention(&q, &k, &v, AttnImpl::Exact, false);
-    let sage = attention(&q, &k, &v, SAGE_B, false);
+    let gold = AttnSpec::exact().run(&q, &k, &v).unwrap();
+    let sage = AttnSpec::sage_b().run(&q, &k, &v).unwrap();
     let cos_attn = cos_sim(&gold.data, &sage.data);
 
     // W8A8 linear surrogate: y = W·x with both sides int8 per-token

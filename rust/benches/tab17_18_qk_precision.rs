@@ -7,10 +7,10 @@
 //! Table 18: full-attention error with vs without smooth-K for the three
 //! Q/K granularities, against the FlashAttention3-quantized baseline.
 
-use sageattention::attn::{attention, attention_dtype_sim, qk_product_dtype_sim, AttnImpl, Fmt};
+use sageattention::attn::{attention_dtype_sim, qk_product_dtype_sim, AttnSpec, Fmt};
 use sageattention::bench::{f3, pct, sci, Table};
 use sageattention::metrics::{accuracy, cos_sim, rel_l1};
-use sageattention::quant::{Fp8Format, Granularity};
+use sageattention::quant::Granularity;
 use sageattention::synth::{make_qkv, Profile};
 
 fn main() {
@@ -38,7 +38,7 @@ fn main() {
 
     // ---- Table 18: smooth-K ablation over granularities ----
     let (q, k, v) = make_qkv(18, [1, 4, 512, 64], Profile::diffusion_like().with_severity(4.0));
-    let gold = attention(&q, &k, &v, AttnImpl::Exact, false);
+    let gold = AttnSpec::exact().run(&q, &k, &v).unwrap();
     let mut t = Table::new(&["quantization", "smooth K", "CosSim", "RelL1", "RMSE"]);
     for (label, gran) in [
         ("Per-token (SageAttn-T)", Granularity::PerToken),
@@ -57,13 +57,7 @@ fn main() {
             ]);
         }
     }
-    let fa3 = attention(
-        &q,
-        &k,
-        &v,
-        AttnImpl::Fp8 { qk: Fp8Format::E4M3, pv: Fp8Format::E4M3 },
-        false,
-    );
+    let fa3 = AttnSpec::by_name("fa3-fp8").unwrap().run(&q, &k, &v).unwrap();
     let a = accuracy(&gold.data, &fa3.data);
     t.row(&[
         "FlashAttention-3 (quantized)".into(),

@@ -7,7 +7,7 @@
 //! layers run -B. The resulting plan feeds back into `aot.py --plan-file`
 //! to emit the `*_adaptive` artifacts.
 
-use crate::attn::{attention, AttnImpl, SAGE_B, SAGE_VB};
+use crate::attn::{registry, AttnImpl, AttnSpec};
 use crate::metrics::cos_sim;
 use crate::synth::Profile;
 use crate::tensor::Tensor;
@@ -50,6 +50,23 @@ impl Plan {
         let vb = self.0.iter().filter(|s| s.as_str() == "SageAttn-vB").count() as f64;
         1.0 + 0.04 * vb / n.max(1.0)
     }
+
+    /// Resolve every layer's kernel through the attention registry —
+    /// consumers run plan entries via [`crate::attn::AttnSpec`] instead
+    /// of re-matching the strings by hand.
+    pub fn kernels(&self) -> crate::util::error::Result<Vec<AttnImpl>> {
+        self.0
+            .iter()
+            .map(|name| {
+                registry::resolve(name).ok_or_else(|| {
+                    crate::format_err!(
+                        "plan entry '{name}' is not a registered kernel (registered: {})",
+                        registry::known_names()
+                    )
+                })
+            })
+            .collect()
+    }
 }
 
 /// Calibration input supplier: per-layer QKV tensors. Real deployments
@@ -81,6 +98,7 @@ pub fn synth_layer_inputs(
 ///
 /// ```
 /// use sageattention::adaptive::{calibrate, synth_layer_inputs, COS_THRESHOLD};
+/// use sageattention::attn::AttnSpec;
 /// use sageattention::synth::Profile;
 ///
 /// // two synthetic "layers" of captured activations (B, H, N, d)
@@ -97,17 +115,27 @@ pub fn synth_layer_inputs(
 /// // the plan serializes to the JSON that `aot.py --plan-file` consumes
 /// let json = plan.to_json();
 /// assert!(json.starts_with('['));
+///
+/// // plan entries resolve through the kernel registry, ready to run:
+/// let (q, k, v) = &layers[0];
+/// for imp in plan.kernels().unwrap() {
+///     let out = AttnSpec::new(imp).run(q, k, v).unwrap();
+///     assert_eq!(out.shape, q.shape);
+/// }
 /// ```
 pub fn calibrate(
     layers: &[(Tensor, Tensor, Tensor)],
     causal: bool,
 ) -> (Plan, Vec<LayerCalibration>) {
+    let exact = AttnSpec::exact().causal(causal);
+    let vb = AttnSpec::sage_vb().causal(causal);
+    let b = AttnSpec::sage_b().causal(causal);
     let mut plan = Vec::new();
     let mut detail = Vec::new();
     for (i, (q, k, v)) in layers.iter().enumerate() {
-        let gold = attention(q, k, v, AttnImpl::Exact, causal);
-        let o_vb = attention(q, k, v, SAGE_VB, causal);
-        let o_b = attention(q, k, v, SAGE_B, causal);
+        let gold = exact.run(q, k, v).expect("calibration layer shapes are valid");
+        let o_vb = vb.run(q, k, v).expect("calibration layer shapes are valid");
+        let o_b = b.run(q, k, v).expect("calibration layer shapes are valid");
         let cos_vb = cos_sim(&gold.data, &o_vb.data);
         let cos_b = cos_sim(&gold.data, &o_b.data);
         let choice = if cos_vb >= COS_THRESHOLD { "SageAttn-vB" } else { "SageAttn-B" };
@@ -126,6 +154,14 @@ mod tests {
         let p = Plan(vec!["SageAttn-B".into(), "SageAttn-vB".into()]);
         let p2 = Plan::from_json(&p.to_json()).unwrap();
         assert_eq!(p, p2);
+    }
+
+    #[test]
+    fn plan_kernels_resolve_through_registry() {
+        let p = Plan(vec!["SageAttn-B".into(), "SageAttn-vB".into()]);
+        assert_eq!(p.kernels().unwrap(), vec![crate::attn::SAGE_B, crate::attn::SAGE_VB]);
+        let err = Plan(vec!["bogus".into()]).kernels().unwrap_err().to_string();
+        assert!(err.contains("registered"), "{err}");
     }
 
     #[test]

@@ -1,0 +1,618 @@
+//! The `sageattn`-style public attention surface: one spec type that
+//! carries every knob the reference repo's
+//! `sageattn(q, k, v, tensor_layout, is_causal, sm_scale, ...)` entry
+//! point exposes, plus quantize-once KV state for decode.
+//!
+//! * [`AttnSpec`] — builder-style configuration: kernel selection (by
+//!   value, by registry name, or `auto`-dispatched like
+//!   `core.py:sageattn`), tensor layout ([`Layout::BHND`]/
+//!   [`Layout::BNHD`]), causal masking, softmax-scale override, sliding
+//!   window, and a validated GQA head-group mapping.
+//! * [`PreparedKV`] — smooth-K + INT8 K + V scales computed once per KV
+//!   prefix, reusable across repeated Q batches and extendable
+//!   row-by-row, so a decode loop stops re-quantizing its prefix every
+//!   token (`sage bench-hotpath`'s prepared-decode lane measures the
+//!   win).
+//! * The kernel registry ([`crate::attn::registry`]) backs name
+//!   resolution and auto-dispatch.
+//!
+//! The legacy `attention(q, k, v, imp, causal)` free function survives
+//! as a deprecated shim over `AttnSpec` (see the README migration note).
+
+use std::borrow::Cow;
+
+use crate::tensor::{default_threads, parallel_map_with, Tensor};
+use crate::util::error::{ensure, Result};
+
+use super::plane::{self, PlaneOpts, Scratch};
+use super::prepared::{self, PreparedPlane};
+use super::registry::{self, KernelReq};
+use super::{AttnImpl, SAGE_B, SAGE_T, SAGE_VB, SAGE_VT};
+
+/// Memory layout of the 4-D Q/K/V tensors.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Layout {
+    /// (batch, heads, seq, head_dim) — the crate's native layout (the
+    /// reference repo's `"HND"`).
+    BHND,
+    /// (batch, seq, heads, head_dim) — the usual PyTorch serving layout
+    /// (the reference repo's `"NHD"`).
+    BNHD,
+}
+
+/// Builder-style attention configuration — the `sageattn(...)` call
+/// surface as a value.
+///
+/// ```
+/// use sageattention::attn::AttnSpec;
+/// use sageattention::metrics::cos_sim;
+/// use sageattention::synth::{make_qkv, Profile};
+///
+/// let (q, k, v) = make_qkv(7, [1, 2, 64, 32], Profile::llama_like());
+/// let gold = AttnSpec::exact().run(&q, &k, &v).unwrap();
+///
+/// // the paper's plug-and-play entry point: kernel auto-dispatched
+/// // through the registry, like core.py:sageattn
+/// let out = AttnSpec::auto().run(&q, &k, &v).unwrap();
+/// assert!(cos_sim(&gold.data, &out.data) > 0.99);
+///
+/// // or pick a kernel by its table name and stack options builder-style
+/// let causal = AttnSpec::by_name("SageAttn-vB")
+///     .unwrap()
+///     .causal(true)
+///     .run(&q, &k, &v)
+///     .unwrap();
+/// assert_eq!(causal.shape, vec![1, 2, 64, 32]);
+/// ```
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct AttnSpec {
+    kernel: Option<AttnImpl>,
+    layout: Layout,
+    causal: bool,
+    sm_scale: Option<f32>,
+    window: Option<usize>,
+    kv_heads: Option<usize>,
+}
+
+impl AttnSpec {
+    /// Auto-dispatch: resolve the kernel through the registry at run
+    /// time (the `core.py:sageattn` behavior).
+    pub fn auto() -> AttnSpec {
+        AttnSpec {
+            kernel: None,
+            layout: Layout::BHND,
+            causal: false,
+            sm_scale: None,
+            window: None,
+            kv_heads: None,
+        }
+    }
+
+    /// Pin an explicit kernel implementation.
+    pub fn new(imp: AttnImpl) -> AttnSpec {
+        AttnSpec { kernel: Some(imp), ..AttnSpec::auto() }
+    }
+
+    /// Resolve a kernel by registry name (`"SageAttn-B"`, `"exact"`,
+    /// `"fa3-fp8"`, …) or structured `AttnImpl` name.
+    pub fn by_name(name: &str) -> Result<AttnSpec> {
+        match registry::resolve(name) {
+            Some(imp) => Ok(AttnSpec::new(imp)),
+            None => crate::bail!(
+                "unknown attention kernel '{name}' (registered: {})",
+                registry::known_names()
+            ),
+        }
+    }
+
+    /// Exact fp32 attention (accuracy gold standard).
+    pub fn exact() -> AttnSpec {
+        AttnSpec::new(AttnImpl::Exact)
+    }
+
+    /// FlashAttention-2-style fp32 online softmax (speed baseline).
+    pub fn online() -> AttnSpec {
+        AttnSpec::new(AttnImpl::OnlineFp32)
+    }
+
+    /// SageAttn-T (Table 6): per-token INT8 QK, FP16-accumulator PV.
+    pub fn sage_t() -> AttnSpec {
+        AttnSpec::new(SAGE_T)
+    }
+
+    /// SageAttn-B (Table 6): per-block INT8 QK, FP16-accumulator PV —
+    /// the paper's plug-and-play default.
+    pub fn sage_b() -> AttnSpec {
+        AttnSpec::new(SAGE_B)
+    }
+
+    /// SageAttn-vT (Table 6): per-token INT8 QK, INT8 PV.
+    pub fn sage_vt() -> AttnSpec {
+        AttnSpec::new(SAGE_VT)
+    }
+
+    /// SageAttn-vB (Table 6): per-block INT8 QK, INT8 PV.
+    pub fn sage_vb() -> AttnSpec {
+        AttnSpec::new(SAGE_VB)
+    }
+
+    // ---- builder options -------------------------------------------------
+
+    /// Tensor layout of Q/K/V (and of every output this spec produces).
+    pub fn layout(mut self, layout: Layout) -> AttnSpec {
+        self.layout = layout;
+        self
+    }
+
+    /// Decode-aligned causal masking.
+    pub fn causal(mut self, causal: bool) -> AttnSpec {
+        self.causal = causal;
+        self
+    }
+
+    /// Softmax scale override (default 1/√d).
+    pub fn sm_scale(mut self, scale: f32) -> AttnSpec {
+        self.sm_scale = Some(scale);
+        self
+    }
+
+    /// Sliding-window width (requires `causal`): each query attends the
+    /// last `w` keys at or before its causal limit.
+    pub fn window(mut self, w: usize) -> AttnSpec {
+        self.window = Some(w);
+        self
+    }
+
+    /// Declare grouped-query attention: K/V carry `n_kv_heads` heads and
+    /// each group of `n_heads / n_kv_heads` query heads shares one KV
+    /// head. Mismatched head counts without this declaration are an
+    /// error (silent shape bugs otherwise).
+    pub fn kv_heads(mut self, n_kv_heads: usize) -> AttnSpec {
+        self.kv_heads = Some(n_kv_heads);
+        self
+    }
+
+    // ---- execution -------------------------------------------------------
+
+    /// Kernel this spec resolves to for a given request shape (explicit
+    /// kernels are capability-checked; `auto` walks the registry).
+    pub fn resolve_kernel(&self, head_dim: usize) -> Result<AttnImpl> {
+        self.resolve(&self.request(head_dim, false, false))
+    }
+
+    /// Human-readable kernel label for reports.
+    pub fn kernel_name(&self) -> String {
+        match self.kernel {
+            Some(imp) => imp.name(),
+            None => "auto".to_owned(),
+        }
+    }
+
+    /// Run attention. Shapes (in the spec's layout): Q (B, H, N_q, d),
+    /// K/V (B, H_kv, N_kv, d) with `H_kv == H` for MHA or a declared
+    /// [`AttnSpec::kv_heads`] divisor for GQA.
+    pub fn run(&self, q: &Tensor, k: &Tensor, v: &Tensor) -> Result<Tensor> {
+        let qn = to_bhnd(q, self.layout);
+        let kn = to_bhnd(k, self.layout);
+        let vn = to_bhnd(v, self.layout);
+        let (b, h, n_q, d) = qn.dims4();
+        let (bk, h_kv, n_kv, dk) = kn.dims4();
+        ensure!(
+            kn.dims4() == vn.dims4(),
+            "K/V shape mismatch: {:?} vs {:?}",
+            kn.shape,
+            vn.shape
+        );
+        ensure!(bk == b, "Q batch {b} != K/V batch {bk}");
+        ensure!(dk == d, "Q head_dim {d} != K/V head_dim {dk}");
+        self.validate_heads(h, h_kv)?;
+        self.validate_mask()?;
+        let imp = self.resolve(&self.request(d, h != h_kv, false))?;
+        let opts = self.plane_opts();
+        let group = h / h_kv;
+        // GQA note: each worker quantizes its KV plane independently, so a
+        // shared KV head is quantized `group` times per call. One-shot GQA
+        // calls eat that (it keeps the bit-identity with repeated-KV MHA
+        // simple); amortized workloads should prepare() once instead —
+        // PreparedKV quantizes each KV head exactly once.
+
+        let planes = parallel_map_with(b * h, default_threads(), Scratch::new, |scratch, idx| {
+            let (bi, hi) = (idx / h, idx % h);
+            run_plane_opt(
+                scratch,
+                qn.head(bi, hi),
+                kn.head(bi, hi / group),
+                vn.head(bi, hi / group),
+                n_q,
+                n_kv,
+                d,
+                imp,
+                opts,
+            )
+        });
+        let mut out = Tensor::zeros(&[b, h, n_q, d]);
+        for (idx, pl) in planes.into_iter().enumerate() {
+            out.head_mut(idx / h, idx % h).copy_from_slice(&pl);
+        }
+        Ok(from_bhnd(out, self.layout))
+    }
+
+    /// Quantize a KV prefix once (smooth-K means, INT8 K planes,
+    /// per-channel V scales, fp32 fallbacks) for reuse across repeated Q
+    /// batches and row-by-row [`PreparedKV::extend`] calls.
+    ///
+    /// ```
+    /// use sageattention::attn::AttnSpec;
+    /// use sageattention::synth::{make_qkv, Profile};
+    ///
+    /// let (q, k, v) = make_qkv(9, [1, 2, 48, 32], Profile::llama_like());
+    /// let spec = AttnSpec::sage_b();
+    /// // quantize the 40-row prefix once...
+    /// let mut kv = spec.prepare(&k.narrow_n(0, 40), &v.narrow_n(0, 40)).unwrap();
+    /// // ...then decode: extend one row per token, never re-quantizing
+    /// // the prefix, and reuse the state for every query
+    /// for t in 40..48 {
+    ///     kv.extend(&k.narrow_n(t, t + 1), &v.narrow_n(t, t + 1)).unwrap();
+    ///     let out = spec.run_prepared(&q.narrow_n(t, t + 1), &kv).unwrap();
+    ///     assert_eq!(out.shape, vec![1, 2, 1, 32]);
+    /// }
+    /// // incremental growth is bit-identical to one-shot preparation
+    /// assert_eq!(kv, spec.prepare(&k, &v).unwrap());
+    /// ```
+    pub fn prepare(&self, k: &Tensor, v: &Tensor) -> Result<PreparedKV> {
+        let kn = to_bhnd(k, self.layout);
+        let (b, h_kv, _, d) = kn.dims4();
+        drop(kn);
+        let imp = self.resolve(&self.request(d, false, true))?;
+        let mut kv = PreparedKV {
+            imp,
+            layout: self.layout,
+            b,
+            h_kv,
+            d,
+            planes: (0..b * h_kv).map(|_| PreparedPlane::new(d)).collect(),
+        };
+        kv.extend(k, v)?;
+        Ok(kv)
+    }
+
+    /// Run attention for (possibly repeated) Q batches against a
+    /// [`PreparedKV`] — the decode hot path: per call, only Q is
+    /// quantized.
+    pub fn run_prepared(&self, q: &Tensor, kv: &PreparedKV) -> Result<Tensor> {
+        let qn = to_bhnd(q, self.layout);
+        let (b, h, n_q, d) = qn.dims4();
+        ensure!(b == kv.b, "Q batch {b} != PreparedKV batch {}", kv.b);
+        ensure!(d == kv.d, "Q head_dim {d} != PreparedKV head_dim {}", kv.d);
+        self.validate_heads(h, kv.h_kv)?;
+        self.validate_mask()?;
+        let imp = self.resolve(&self.request(d, h != kv.h_kv, true))?;
+        ensure!(
+            imp == kv.imp,
+            "PreparedKV was built for kernel '{}' but the spec resolves to '{}'",
+            kv.imp.name(),
+            imp.name()
+        );
+        let opts = self.plane_opts();
+        let group = h / kv.h_kv;
+        let n_kv = kv.n_kv();
+
+        let planes = parallel_map_with(b * h, default_threads(), Scratch::new, |scratch, idx| {
+            let (bi, hi) = (idx / h, idx % h);
+            let prep = &kv.planes[bi * kv.h_kv + hi / group];
+            match imp {
+                AttnImpl::Sage { qk, pv, .. } => prepared::sage_plane_prepared(
+                    scratch,
+                    qn.head(bi, hi),
+                    prep,
+                    n_q,
+                    qk,
+                    pv,
+                    opts,
+                ),
+                AttnImpl::Exact => plane::exact_plane_opt(
+                    qn.head(bi, hi),
+                    &prep.k_raw,
+                    &prep.v_raw,
+                    n_q,
+                    n_kv,
+                    d,
+                    opts,
+                ),
+                AttnImpl::OnlineFp32 => plane::online_plane_opt(
+                    scratch,
+                    qn.head(bi, hi),
+                    &prep.k_raw,
+                    &prep.v_raw,
+                    n_q,
+                    n_kv,
+                    d,
+                    opts,
+                ),
+                AttnImpl::Fp8 { .. } => unreachable!("fp8 rejected by the capability check"),
+            }
+        });
+        let mut out = Tensor::zeros(&[b, h, n_q, d]);
+        for (idx, pl) in planes.into_iter().enumerate() {
+            out.head_mut(idx / h, idx % h).copy_from_slice(&pl);
+        }
+        Ok(from_bhnd(out, self.layout))
+    }
+
+    // ---- internals -------------------------------------------------------
+
+    fn request(&self, head_dim: usize, gqa: bool, prepared: bool) -> KernelReq {
+        KernelReq {
+            head_dim,
+            causal: self.causal,
+            window: self.window.is_some(),
+            gqa,
+            prepared,
+        }
+    }
+
+    fn resolve(&self, req: &KernelReq) -> Result<AttnImpl> {
+        match self.kernel {
+            Some(imp) => {
+                ensure!(
+                    registry::supports(&imp, req),
+                    "kernel '{}' does not support this request \
+                     (head_dim {}, prepared {}, window {})",
+                    imp.name(),
+                    req.head_dim,
+                    req.prepared,
+                    req.window
+                );
+                Ok(imp)
+            }
+            None => match registry::auto(req) {
+                Some(entry) => Ok(entry.imp),
+                None => crate::bail!(
+                    "no registered kernel supports this request (registered: {})",
+                    registry::known_names()
+                ),
+            },
+        }
+    }
+
+    fn plane_opts(&self) -> PlaneOpts {
+        PlaneOpts { causal: self.causal, window: self.window, sm_scale: self.sm_scale }
+    }
+
+    fn validate_heads(&self, h: usize, h_kv: usize) -> Result<()> {
+        if let Some(expect) = self.kv_heads {
+            ensure!(
+                h_kv == expect,
+                "K/V carry {h_kv} heads but the spec declares kv_heads({expect})"
+            );
+            ensure!(expect >= 1 && expect <= h, "kv_heads({expect}) must be in 1..={h}");
+        }
+        if h != h_kv {
+            ensure!(
+                self.kv_heads.is_some(),
+                "K/V head count {h_kv} != Q head count {h}: declare grouped-query \
+                 attention explicitly with .kv_heads({h_kv})"
+            );
+            ensure!(
+                h % h_kv == 0,
+                "GQA requires n_heads ({h}) divisible by n_kv_heads ({h_kv})"
+            );
+        }
+        Ok(())
+    }
+
+    fn validate_mask(&self) -> Result<()> {
+        if let Some(w) = self.window {
+            ensure!(self.causal, "sliding window requires causal attention");
+            ensure!(w >= 1, "window width must be >= 1");
+        }
+        Ok(())
+    }
+}
+
+/// Quantize-once KV state (see [`AttnSpec::prepare`]): per (batch,
+/// kv-head) plane it holds the anchored smooth-K means, the INT8 K plane
+/// with its scales, the P·V-mode V representation (per-block per-channel
+/// INT8 scales, or fp16-rounded rows) and the raw fp32 rows as
+/// requant source / full-precision fallback. Extending row-by-row
+/// touches only a bounded suffix and is bit-identical to one-shot
+/// preparation.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PreparedKV {
+    imp: AttnImpl,
+    layout: Layout,
+    b: usize,
+    h_kv: usize,
+    d: usize,
+    planes: Vec<PreparedPlane>,
+}
+
+impl PreparedKV {
+    /// KV rows currently held.
+    pub fn n_kv(&self) -> usize {
+        self.planes.first().map(|p| p.n).unwrap_or(0)
+    }
+
+    pub fn batch(&self) -> usize {
+        self.b
+    }
+
+    pub fn kv_heads(&self) -> usize {
+        self.h_kv
+    }
+
+    pub fn head_dim(&self) -> usize {
+        self.d
+    }
+
+    /// Kernel this state was quantized for.
+    pub fn kernel(&self) -> AttnImpl {
+        self.imp
+    }
+
+    /// Append new KV rows (shape (B, H_kv, t, d) in the originating
+    /// spec's layout) — the decode step. Only the trailing partial
+    /// quantization block is re-derived; the prefix is untouched.
+    pub fn extend(&mut self, k: &Tensor, v: &Tensor) -> Result<()> {
+        let kn = to_bhnd(k, self.layout);
+        let vn = to_bhnd(v, self.layout);
+        let (b, h_kv, _, d) = kn.dims4();
+        ensure!(
+            kn.dims4() == vn.dims4(),
+            "K/V shape mismatch: {:?} vs {:?}",
+            kn.shape,
+            vn.shape
+        );
+        ensure!(
+            b == self.b && h_kv == self.h_kv && d == self.d,
+            "extend shape {:?} does not match PreparedKV (b {}, kv_heads {}, d {})",
+            kn.shape,
+            self.b,
+            self.h_kv,
+            self.d
+        );
+        for bi in 0..b {
+            for hi in 0..h_kv {
+                self.planes[bi * h_kv + hi].append(kn.head(bi, hi), vn.head(bi, hi), self.imp);
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Tensor-level dispatch over one (batch, head) plane.
+fn run_plane_opt(
+    scratch: &mut Scratch,
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    n_q: usize,
+    n_kv: usize,
+    d: usize,
+    imp: AttnImpl,
+    opts: PlaneOpts,
+) -> Vec<f32> {
+    match imp {
+        AttnImpl::Exact => plane::exact_plane_opt(q, k, v, n_q, n_kv, d, opts),
+        AttnImpl::OnlineFp32 => plane::online_plane_opt(scratch, q, k, v, n_q, n_kv, d, opts),
+        AttnImpl::Sage { qk, pv, smooth_k } => {
+            plane::sage_plane_opt(scratch, q, k, v, n_q, n_kv, d, qk, pv, smooth_k, opts)
+        }
+        AttnImpl::Fp8 { qk, pv } => plane::fp8_plane_opt(q, k, v, n_q, n_kv, d, qk, pv, opts),
+    }
+}
+
+/// Normalize a tensor to the internal (B, H, N, d) layout (borrowing
+/// when it already is).
+fn to_bhnd(t: &Tensor, layout: Layout) -> Cow<'_, Tensor> {
+    match layout {
+        Layout::BHND => Cow::Borrowed(t),
+        Layout::BNHD => Cow::Owned(swap12(t)),
+    }
+}
+
+/// Return an internally-(B, H, N, d) result in the spec's layout.
+fn from_bhnd(t: Tensor, layout: Layout) -> Tensor {
+    match layout {
+        Layout::BHND => t,
+        Layout::BNHD => swap12(&t),
+    }
+}
+
+/// Swap axes 1 and 2 of a 4-D tensor — (B, N, H, d) ↔ (B, H, N, d),
+/// its own inverse.
+fn swap12(t: &Tensor) -> Tensor {
+    let (b, x, y, d) = t.dims4();
+    let mut out = Tensor::zeros(&[b, y, x, d]);
+    for bi in 0..b {
+        for xi in 0..x {
+            for yi in 0..y {
+                let src = ((bi * x + xi) * y + yi) * d;
+                let dst = ((bi * y + yi) * x + xi) * d;
+                out.data[dst..dst + d].copy_from_slice(&t.data[src..src + d]);
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::cos_sim;
+    use crate::synth::{make_qkv, Profile};
+
+    #[test]
+    fn spec_matches_legacy_attention() {
+        // the shim and the spec must agree bit-for-bit
+        let (q, k, v) = make_qkv(51, [1, 2, 96, 32], Profile::diffusion_like());
+        for name in ["exact", "online", "SageAttn-T", "SageAttn-vB", "fa3-fp8"] {
+            let spec = AttnSpec::by_name(name).unwrap().causal(true);
+            let via_spec = spec.run(&q, &k, &v).unwrap();
+            #[allow(deprecated)]
+            let via_legacy =
+                super::super::attention(&q, &k, &v, registry::resolve(name).unwrap(), true);
+            assert_eq!(via_spec.data, via_legacy.data, "{name}");
+        }
+    }
+
+    #[test]
+    fn swap12_is_involutive() {
+        let (q, _, _) = make_qkv(52, [2, 3, 5, 4], Profile::llama_like());
+        let back = swap12(&swap12(&q));
+        assert_eq!(q.shape, back.shape);
+        assert_eq!(q.data, back.data);
+    }
+
+    #[test]
+    fn auto_dispatch_runs() {
+        let (q, k, v) = make_qkv(53, [1, 1, 64, 32], Profile::llama_like());
+        let gold = AttnSpec::exact().run(&q, &k, &v).unwrap();
+        let out = AttnSpec::auto().causal(false).run(&q, &k, &v).unwrap();
+        assert!(cos_sim(&gold.data, &out.data) > 0.99);
+        assert_eq!(AttnSpec::auto().kernel_name(), "auto");
+        assert_eq!(AttnSpec::auto().resolve_kernel(32).unwrap(), SAGE_B);
+    }
+
+    #[test]
+    fn invalid_specs_error_cleanly() {
+        let (q, k, v) = make_qkv(54, [1, 2, 32, 16], Profile::llama_like());
+        // window without causal
+        assert!(AttnSpec::sage_b().window(8).run(&q, &k, &v).is_err());
+        // undeclared GQA (K/V with fewer heads)
+        let (_, k_half, v_half) = make_qkv(54, [1, 1, 32, 16], Profile::llama_like());
+        assert!(AttnSpec::sage_b().run(&q, &k_half, &v_half).is_err());
+        // declared but non-divisible GQA
+        let (q3, _, _) = make_qkv(55, [1, 3, 32, 16], Profile::llama_like());
+        assert!(AttnSpec::sage_b().kv_heads(2).run(&q3, &k, &v).is_err());
+        // unknown kernel names list the registry
+        let err = AttnSpec::by_name("definitely-not-a-kernel").unwrap_err().to_string();
+        assert!(err.contains("SageAttn-B"), "{err}");
+        // per-channel QK is rejected by capability check, not a panic
+        let bad = AttnSpec::new(AttnImpl::Sage {
+            qk: crate::quant::Granularity::PerChannel,
+            pv: super::super::PvMode::Fp16Accum,
+            smooth_k: true,
+        });
+        assert!(bad.run(&q, &k, &v).is_err());
+    }
+
+    #[test]
+    fn prepared_rejects_incapable_kernels() {
+        let (_, k, v) = make_qkv(56, [1, 1, 64, 16], Profile::llama_like());
+        assert!(AttnSpec::by_name("fa3-fp8").unwrap().prepare(&k, &v).is_err());
+        let per_tensor = AttnSpec::new(AttnImpl::Sage {
+            qk: crate::quant::Granularity::PerTensor,
+            pv: super::super::PvMode::Fp16Accum,
+            smooth_k: true,
+        });
+        assert!(per_tensor.prepare(&k, &v).is_err());
+        // fp32 references ride the raw-row fallback
+        let (q, _, _) = make_qkv(56, [1, 1, 64, 16], Profile::llama_like());
+        let spec = AttnSpec::exact().causal(true);
+        let kv = spec.prepare(&k, &v).unwrap();
+        let a = spec.run_prepared(&q, &kv).unwrap();
+        let b = spec.run(&q, &k, &v).unwrap();
+        assert_eq!(a.data, b.data, "prepared exact must equal one-shot exact");
+    }
+}

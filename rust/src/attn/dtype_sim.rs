@@ -187,7 +187,7 @@ fn plane_dtype_sim(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::attn::{attention, AttnImpl};
+    use crate::attn::AttnSpec;
     use crate::metrics::cos_sim;
     use crate::synth::{make_qkv, Profile};
 
@@ -196,7 +196,7 @@ mod tests {
         let (q, k, v) = make_qkv(1, [1, 2, 96, 32], Profile::diffusion_like());
         let a = attention_dtype_sim(
             &q, &k, &v, Fmt::Fp32, Granularity::PerToken, Fmt::Fp32, false, false);
-        let b = attention(&q, &k, &v, AttnImpl::Exact, false);
+        let b = AttnSpec::exact().run(&q, &k, &v).unwrap();
         assert!(cos_sim(&a.data, &b.data) > 0.99999);
     }
 
@@ -204,7 +204,7 @@ mod tests {
     fn table2_ordering_int8_qk_beats_fp8() {
         // Table 2: with (P,V) fixed, INT8 (Q,K) > E4M3 > E5M2
         let (q, k, v) = make_qkv(2, [1, 2, 192, 64], Profile::diffusion_like());
-        let gold = attention(&q, &k, &v, AttnImpl::Exact, false);
+        let gold = AttnSpec::exact().run(&q, &k, &v).unwrap();
         let mut cs = Vec::new();
         for fmt in [Fmt::Int8, Fmt::E4M3, Fmt::E5M2] {
             let o = attention_dtype_sim(
@@ -222,7 +222,7 @@ mod tests {
             [1, 2, 192, 64],
             Profile::diffusion_like().with_severity(3.0),
         );
-        let gold = attention(&q, &k, &v, AttnImpl::Exact, false);
+        let gold = AttnSpec::exact().run(&q, &k, &v).unwrap();
         let fp16 = attention_dtype_sim(
             &q, &k, &v, Fmt::Int8, Granularity::PerToken, Fmt::Fp16, true, false);
         let int8 = attention_dtype_sim(

@@ -4,20 +4,33 @@
 //! the adaptive-quantization calibrator and the CPU-side benches without
 //! paying PJRT dispatch overhead.
 //!
-//! Layout: tensors are (B, H, N, d); per-(batch, head) planes are processed
-//! independently (parallelized with scoped threads).
+//! The public surface is [`api::AttnSpec`] — a builder-style spec carrying
+//! kernel selection (explicit, by registry name, or auto-dispatched),
+//! layout, causal/sliding-window masking, softmax scale and the GQA head
+//! mapping — plus [`api::PreparedKV`], quantize-once KV state for decode.
+//! [`registry`] is the kernel dispatch table behind both. The legacy
+//! `attention(q, k, v, imp, causal)` free function survives as a
+//! deprecated shim.
+//!
+//! Layout: internally tensors are (B, H, N, d); per-(batch, head) planes
+//! are processed independently (parallelized with scoped threads).
 
+pub mod api;
 pub mod dtype_sim;
 mod plane;
+mod prepared;
+pub mod registry;
 
+pub use api::{AttnSpec, Layout, PreparedKV};
 pub use dtype_sim::{attention_dtype_sim, qk_product_dtype_sim, Fmt};
 pub use plane::{
-    exact_plane, online_plane, online_plane_with, sage_plane, sage_plane_naive,
-    sage_plane_with, Scratch, MAX_HEAD_DIM,
+    exact_plane, exact_plane_opt, fp8_plane, fp8_plane_opt, online_plane, online_plane_opt,
+    online_plane_with, sage_plane, sage_plane_naive, sage_plane_opt, sage_plane_with, PlaneOpts,
+    Scratch, MAX_HEAD_DIM,
 };
 
 use crate::quant::{Fp8Format, Granularity};
-use crate::tensor::{default_threads, parallel_map_with, Tensor};
+use crate::tensor::Tensor;
 
 /// P·V computation mode (paper §4.3–§4.4).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -73,23 +86,60 @@ pub const BLOCK_Q: usize = 128;
 pub const BLOCK_KV: usize = 64;
 
 impl AttnImpl {
-    /// Look up an implementation by its table name (`"SageAttn-B"`, …);
-    /// inverse of [`AttnImpl::name`] for the four paper variants and the
-    /// two baselines.
+    /// Parse an implementation from its display name — the true inverse
+    /// of [`AttnImpl::name`]: every string `name()` can emit parses back
+    /// to the same implementation, including the parameterized forms
+    /// (`"fp8(E4M3,E5M2)"`, `"SageAttn-+fp32accB64-nosmooth"`, …).
+    /// `"fa3-fp8"` is accepted as an alias for the FA3 baseline; registry
+    /// rows also resolve through [`registry::resolve`].
     pub fn by_name(name: &str) -> Option<AttnImpl> {
-        Some(match name {
-            "exact" => AttnImpl::Exact,
-            "online" => AttnImpl::OnlineFp32,
-            "SageAttn-T" => SAGE_T,
-            "SageAttn-B" => SAGE_B,
-            "SageAttn-vT" => SAGE_VT,
-            "SageAttn-vB" => SAGE_VB,
-            "fa3-fp8" => AttnImpl::Fp8 { qk: Fp8Format::E4M3, pv: Fp8Format::E4M3 },
-            _ => return None,
-        })
+        match name {
+            "exact" => return Some(AttnImpl::Exact),
+            "online" => return Some(AttnImpl::OnlineFp32),
+            // historical alias for the FA3 baseline row label
+            "fa3-fp8" => {
+                return Some(AttnImpl::Fp8 { qk: Fp8Format::E4M3, pv: Fp8Format::E4M3 });
+            }
+            _ => {}
+        }
+        if let Some(inner) = name.strip_prefix("fp8(").and_then(|r| r.strip_suffix(')')) {
+            let (a, b) = inner.split_once(',')?;
+            return Some(AttnImpl::Fp8 {
+                qk: Fp8Format::by_name(a.trim())?,
+                pv: Fp8Format::by_name(b.trim())?,
+            });
+        }
+        let rest = name.strip_prefix("SageAttn-")?;
+        let (rest, smooth_k) = match rest.strip_suffix("-nosmooth") {
+            Some(r) => (r, false),
+            None => (rest, true),
+        };
+        let (g, pv) = if let Some(r) = rest.strip_prefix("+fp32acc") {
+            (r, PvMode::Fp32Accum)
+        } else if let Some(r) = rest.strip_prefix('v') {
+            (r, PvMode::Int8)
+        } else {
+            (rest, PvMode::Fp16Accum)
+        };
+        let qk = match g {
+            "T" => Granularity::PerToken,
+            "tensor" => Granularity::PerTensor,
+            "chan" => Granularity::PerChannel,
+            "B" => Granularity::PerBlock(BLOCK_Q),
+            _ => {
+                let block: usize = g.strip_prefix('B')?.parse().ok()?;
+                if block == 0 {
+                    return None;
+                }
+                Granularity::PerBlock(block)
+            }
+        };
+        Some(AttnImpl::Sage { qk, pv, smooth_k })
     }
 
     /// Display name matching the paper's tables (Table 6 row labels).
+    /// Non-default block sizes are encoded (`"SageAttn-B64"`) so
+    /// [`AttnImpl::by_name`] round-trips every implementation.
     pub fn name(&self) -> String {
         match self {
             AttnImpl::Exact => "exact".into(),
@@ -97,10 +147,11 @@ impl AttnImpl {
             AttnImpl::Fp8 { qk, pv } => format!("fp8({},{})", qk.name(), pv.name()),
             AttnImpl::Sage { qk, pv, smooth_k } => {
                 let g = match qk {
-                    Granularity::PerToken => "T",
-                    Granularity::PerBlock(_) => "B",
-                    Granularity::PerTensor => "tensor",
-                    Granularity::PerChannel => "chan",
+                    Granularity::PerToken => "T".to_owned(),
+                    Granularity::PerBlock(b) if *b == BLOCK_Q => "B".to_owned(),
+                    Granularity::PerBlock(b) => format!("B{b}"),
+                    Granularity::PerTensor => "tensor".to_owned(),
+                    Granularity::PerChannel => "chan".to_owned(),
                 };
                 let p = match pv {
                     PvMode::Fp16Accum => "",
@@ -115,58 +166,16 @@ impl AttnImpl {
 }
 
 /// Multi-head attention over (B, H, N, d) tensors (paper Alg. 1 applied
-/// per plane). Planes are processed in parallel over (batch, head) via
-/// scoped worker threads, each owning one preallocated [`Scratch`] reused
-/// across all planes it handles — the online-softmax loop itself never
-/// allocates (§Perf).
+/// per plane) — the legacy entry point, kept as a thin shim so old call
+/// sites keep compiling. New code should use [`AttnSpec`], which adds
+/// layout selection, GQA, sliding windows, softmax-scale overrides and
+/// the [`PreparedKV`] decode path behind the same kernels.
+#[deprecated(note = "use attn::AttnSpec (see the README migration note)")]
 pub fn attention(q: &Tensor, k: &Tensor, v: &Tensor, imp: AttnImpl, causal: bool) -> Tensor {
-    let (b, h, n_q, d) = q.dims4();
-    let (_, _, n_kv, _) = k.dims4();
-    assert_eq!(k.dims4().3, d);
-    assert_eq!(v.dims4(), k.dims4());
-
-    let planes = parallel_map_with(b * h, default_threads(), Scratch::new, |scratch, idx| {
-        let (bi, hi) = (idx / h, idx % h);
-        run_plane(
-            scratch,
-            q.head(bi, hi),
-            k.head(bi, hi),
-            v.head(bi, hi),
-            n_q,
-            n_kv,
-            d,
-            imp,
-            causal,
-        )
-    });
-    let mut out = Tensor::zeros(&[b, h, n_q, d]);
-    for (idx, plane) in planes.into_iter().enumerate() {
-        let (bi, hi) = (idx / h, idx % h);
-        out.head_mut(bi, hi).copy_from_slice(&plane);
-    }
-    out
-}
-
-#[allow(clippy::too_many_arguments)]
-fn run_plane(
-    scratch: &mut Scratch,
-    q: &[f32],
-    k: &[f32],
-    v: &[f32],
-    n_q: usize,
-    n_kv: usize,
-    d: usize,
-    imp: AttnImpl,
-    causal: bool,
-) -> Vec<f32> {
-    match imp {
-        AttnImpl::Exact => exact_plane(q, k, v, n_q, n_kv, d, causal),
-        AttnImpl::OnlineFp32 => online_plane_with(scratch, q, k, v, n_q, n_kv, d, causal),
-        AttnImpl::Sage { qk, pv, smooth_k } => {
-            sage_plane_with(scratch, q, k, v, n_q, n_kv, d, qk, pv, smooth_k, causal)
-        }
-        AttnImpl::Fp8 { qk, pv } => plane::fp8_plane(q, k, v, n_q, n_kv, d, qk, pv, causal),
-    }
+    api::AttnSpec::new(imp)
+        .causal(causal)
+        .run(q, k, v)
+        .expect("legacy attention() call with invalid inputs")
 }
 
 #[cfg(test)]
@@ -179,11 +188,15 @@ mod tests {
         make_qkv(seed, shape, profile)
     }
 
+    fn run(q: &Tensor, k: &Tensor, v: &Tensor, imp: AttnImpl, causal: bool) -> Tensor {
+        AttnSpec::new(imp).causal(causal).run(q, k, v).unwrap()
+    }
+
     #[test]
     fn online_matches_exact() {
         let (q, k, v) = gen(1, [1, 2, 300, 64], Profile::diffusion_like());
-        let a = attention(&q, &k, &v, AttnImpl::Exact, false);
-        let b = attention(&q, &k, &v, AttnImpl::OnlineFp32, false);
+        let a = run(&q, &k, &v, AttnImpl::Exact, false);
+        let b = run(&q, &k, &v, AttnImpl::OnlineFp32, false);
         let err = a
             .data
             .iter()
@@ -196,8 +209,8 @@ mod tests {
     #[test]
     fn online_matches_exact_causal() {
         let (q, k, v) = gen(2, [2, 2, 200, 64], Profile::llama_like());
-        let a = attention(&q, &k, &v, AttnImpl::Exact, true);
-        let b = attention(&q, &k, &v, AttnImpl::OnlineFp32, true);
+        let a = run(&q, &k, &v, AttnImpl::Exact, true);
+        let b = run(&q, &k, &v, AttnImpl::OnlineFp32, true);
         let err = a
             .data
             .iter()
@@ -210,14 +223,14 @@ mod tests {
     #[test]
     fn sage_variants_track_exact() {
         let (q, k, v) = gen(3, [1, 2, 256, 64], Profile::diffusion_like());
-        let gold = attention(&q, &k, &v, AttnImpl::Exact, false);
+        let gold = run(&q, &k, &v, AttnImpl::Exact, false);
         for (imp, min_cos) in [
             (SAGE_T, 0.999),
             (SAGE_B, 0.999),
             (SAGE_VT, 0.99),
             (SAGE_VB, 0.99),
         ] {
-            let o = attention(&q, &k, &v, imp, false);
+            let o = run(&q, &k, &v, imp, false);
             let c = cos_sim(&gold.data, &o.data);
             assert!(c > min_cos, "{}: cos {c}", imp.name());
         }
@@ -226,9 +239,9 @@ mod tests {
     #[test]
     fn smoothing_matters_under_outliers() {
         let (q, k, v) = gen(4, [1, 2, 256, 64], Profile::diffusion_like());
-        let gold = attention(&q, &k, &v, AttnImpl::Exact, false);
-        let with = attention(&q, &k, &v, SAGE_T, false);
-        let without = attention(
+        let gold = run(&q, &k, &v, AttnImpl::Exact, false);
+        let with = run(&q, &k, &v, SAGE_T, false);
+        let without = run(
             &q,
             &k,
             &v,
@@ -249,7 +262,7 @@ mod tests {
     fn causal_upper_triangle_ignored() {
         // output at query i must not depend on keys > i
         let (q, k, v) = gen(5, [1, 1, 64, 32], Profile::llama_like());
-        let o1 = attention(&q, &k, &v, SAGE_T, true);
+        let o1 = run(&q, &k, &v, SAGE_T, true);
         let mut k2 = k.clone();
         let mut v2 = v.clone();
         // perturb the last key/value; first-row output must be unchanged
@@ -258,7 +271,7 @@ mod tests {
             k2.data[n - 32 + c] += 100.0;
             v2.data[n - 32 + c] -= 50.0;
         }
-        let o2 = attention(&q, &k2, &v2, SAGE_T, true);
+        let o2 = run(&q, &k2, &v2, SAGE_T, true);
         // Per-token quantization of K changes only the last row's scale;
         // smooth-K's mean shift cancels in softmax. First query row should
         // be (nearly) identical.
@@ -270,5 +283,57 @@ mod tests {
                 o2.data[c]
             );
         }
+    }
+
+    #[test]
+    fn name_by_name_round_trips_exhaustively() {
+        // parsing must be the true inverse of naming for every
+        // constructible implementation...
+        let mut impls = vec![AttnImpl::Exact, AttnImpl::OnlineFp32];
+        for qk in [
+            Granularity::PerToken,
+            Granularity::PerTensor,
+            Granularity::PerChannel,
+            Granularity::PerBlock(BLOCK_Q),
+            Granularity::PerBlock(64),
+        ] {
+            for pv in [PvMode::Fp16Accum, PvMode::Fp32Accum, PvMode::Int8] {
+                for smooth_k in [true, false] {
+                    impls.push(AttnImpl::Sage { qk, pv, smooth_k });
+                }
+            }
+        }
+        for qk in [Fp8Format::E4M3, Fp8Format::E5M2] {
+            for pv in [Fp8Format::E4M3, Fp8Format::E5M2] {
+                impls.push(AttnImpl::Fp8 { qk, pv });
+            }
+        }
+        for imp in impls {
+            let name = imp.name();
+            assert_eq!(AttnImpl::by_name(&name), Some(imp), "'{name}' failed to round-trip");
+        }
+        // ...and canonical names are fixed points of name ∘ by_name
+        for name in [
+            "exact",
+            "online",
+            "SageAttn-T",
+            "SageAttn-B",
+            "SageAttn-vT",
+            "SageAttn-vB",
+            "SageAttn-B64",
+            "SageAttn-+fp32accT-nosmooth",
+            "SageAttn-vtensor",
+            "fp8(E4M3,E5M2)",
+        ] {
+            let imp = AttnImpl::by_name(name).expect(name);
+            assert_eq!(imp.name(), name);
+        }
+        // the alias resolves but canonicalizes to the structured form
+        assert_eq!(
+            AttnImpl::by_name("fa3-fp8").unwrap().name(),
+            "fp8(E4M3,E4M3)"
+        );
+        assert!(AttnImpl::by_name("no-such-kernel").is_none());
+        assert!(AttnImpl::by_name("SageAttn-B0").is_none(), "zero block must not parse");
     }
 }

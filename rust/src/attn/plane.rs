@@ -6,12 +6,20 @@
 //!
 //! §Perf layout: the blocked kernels take their tile/softmax buffers from
 //! a caller-owned [`Scratch`] so the online-softmax loop performs **zero**
-//! heap allocation — [`crate::attn::attention`] allocates one `Scratch`
-//! per worker thread and reuses it across every (batch, head) plane.
+//! heap allocation — [`crate::attn::api::AttnSpec`] allocates one
+//! `Scratch` per worker thread and reuses it across every (batch, head)
+//! plane; since this PR the per-plane INT8 planes and scale vectors also
+//! live here (filled via [`crate::quant::quantize_into`]).
 //! [`sage_plane_naive`] is a deliberately *unblocked* row-at-a-time
 //! reference (the textbook formulation, which the seed's kernels never
 //! shipped) kept as the measurable "before" for `sage bench-hotpath` and
 //! as a numerics cross-check oracle.
+//!
+//! Every kernel comes in two forms: the legacy positional signature
+//! (`*_plane`/`*_plane_with`, unchanged and bit-identical to the seed)
+//! and an `*_opt` form taking [`PlaneOpts`], which adds the sliding
+//! window and softmax-scale knobs the [`crate::attn::api`] surface
+//! exposes.
 
 use crate::quant::{self, Fp8Format, Granularity};
 use crate::util::f16::{round_f16, round_f16_slice};
@@ -25,38 +33,89 @@ const NEG_BIG: f32 = -1e30;
 /// still work — [`Scratch`] grows its d-sized buffers on first use.
 pub const MAX_HEAD_DIM: usize = 256;
 
+/// Masking and scaling options threaded through every plane kernel.
+///
+/// The legacy `causal: bool` signatures wrap this with
+/// [`PlaneOpts::causal`]; [`crate::attn::api::AttnSpec`] builds the full
+/// form. With `window`/`sm_scale` unset the `*_opt` kernels are
+/// bit-identical to their legacy counterparts.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct PlaneOpts {
+    /// Decode-aligned causal masking (queries aligned to the end of the
+    /// KV sequence).
+    pub causal: bool,
+    /// Sliding-window width (causal only): query `i` attends the last
+    /// `w` keys at or before its causal limit (Mistral-style SWA).
+    pub window: Option<usize>,
+    /// Softmax scale override; `None` = 1/√d.
+    pub sm_scale: Option<f32>,
+}
+
+impl PlaneOpts {
+    /// Plain causal/non-causal masking — the legacy kernels' semantics.
+    pub fn causal(causal: bool) -> PlaneOpts {
+        PlaneOpts { causal, window: None, sm_scale: None }
+    }
+
+    pub(crate) fn scale(&self, d: usize) -> f32 {
+        self.sm_scale.unwrap_or_else(|| 1.0 / (d as f32).sqrt())
+    }
+
+    /// Attendable key range `[lo, hi)` for query `i`.
+    pub(crate) fn range(&self, i: usize, n_q: usize, n_kv: usize) -> (usize, usize) {
+        let hi = causal_limit(i, n_q, n_kv, self.causal);
+        let lo = match self.window {
+            Some(w) if self.causal => hi.saturating_sub(w),
+            _ => 0,
+        };
+        (lo, hi)
+    }
+}
+
 /// Preallocated per-thread working memory for the blocked kernels.
 ///
 /// One `Scratch` holds every buffer the BLOCK_Q × BLOCK_KV online-softmax
 /// loop touches (S tile, running max/normalizer, output accumulator, P̃
 /// staging, INT8/FP16 partials) plus whole-plane staging vectors whose
-/// capacity is retained across planes. Construct once per thread (see
-/// [`crate::tensor::parallel_map_with`]) and feed to the `*_with` kernels.
+/// capacity is retained across planes — including the INT8 data and
+/// scale vectors the quantizers fill via [`crate::quant::quantize_into`],
+/// so the per-plane `QuantizedPlane` allocations of the seed are gone.
+/// Construct once per thread (see [`crate::tensor::parallel_map_with`])
+/// and feed to the `*_with`/`*_opt` kernels.
 pub struct Scratch {
     /// S tile: BLOCK_Q × BLOCK_KV dequantized scores.
-    s: Vec<f32>,
+    pub(super) s: Vec<f32>,
     /// INT8-quantized P̃ row (Int8 P·V mode).
-    p_i8: Vec<i8>,
+    pub(super) p_i8: Vec<i8>,
     /// Per-Q-row online-softmax running max.
-    m: Vec<f32>,
+    pub(super) m: Vec<f32>,
     /// Per-Q-row online-softmax normalizer.
-    l: Vec<f32>,
+    pub(super) l: Vec<f32>,
     /// Output accumulator for one Q block (BLOCK_Q × MAX_HEAD_DIM).
-    acc: Vec<f32>,
+    pub(super) acc: Vec<f32>,
     /// fp16-rounded P̃ row.
-    p16: Vec<f32>,
+    pub(super) p16: Vec<f32>,
     /// Per-MMA_K partial products (FP16-accumulator simulation).
-    part: Vec<f32>,
+    pub(super) part: Vec<f32>,
     /// int32 accumulator lanes (INT8 P·V).
-    acc_i32: Vec<i32>,
-    /// Whole-plane staging: Q with folded 1/√d.
-    qbuf: Vec<f32>,
+    pub(super) acc_i32: Vec<i32>,
+    /// Whole-plane staging: Q with folded softmax scale.
+    pub(super) qbuf: Vec<f32>,
     /// Whole-plane staging: smoothed K.
-    kbuf: Vec<f32>,
+    pub(super) kbuf: Vec<f32>,
     /// Per-channel K mean removed by smooth-K (§4.2).
-    kmean: Vec<f32>,
+    pub(super) kmean: Vec<f32>,
     /// Whole-plane staging: fp16-rounded V.
-    vbuf: Vec<f32>,
+    pub(super) vbuf: Vec<f32>,
+    /// INT8 Q plane + its scales (ψ output, `quantize_into` target).
+    pub(super) q_i8: Vec<i8>,
+    pub(super) q_scales: Vec<f32>,
+    /// INT8 K plane + its scales.
+    pub(super) k_i8: Vec<i8>,
+    pub(super) k_scales: Vec<f32>,
+    /// INT8 V plane + per-channel scales (Int8 P·V mode).
+    pub(super) v_i8: Vec<i8>,
+    pub(super) v_scales: Vec<f32>,
 }
 
 impl Scratch {
@@ -74,12 +133,18 @@ impl Scratch {
             kbuf: Vec::new(),
             kmean: Vec::new(),
             vbuf: Vec::new(),
+            q_i8: Vec::new(),
+            q_scales: Vec::new(),
+            k_i8: Vec::new(),
+            k_scales: Vec::new(),
+            v_i8: Vec::new(),
+            v_scales: Vec::new(),
         }
     }
 
     /// Grow the d-sized buffers for planes wider than [`MAX_HEAD_DIM`]
     /// (amortized: a no-op once grown).
-    fn ensure_head_dim(&mut self, d: usize) {
+    pub(super) fn ensure_head_dim(&mut self, d: usize) {
         if self.acc.len() < BLOCK_Q * d {
             self.acc.resize(BLOCK_Q * d, 0.0);
         }
@@ -109,26 +174,39 @@ pub fn exact_plane(
     d: usize,
     causal: bool,
 ) -> Vec<f32> {
-    let scale = 1.0 / (d as f32).sqrt();
+    exact_plane_opt(q, k, v, n_q, n_kv, d, PlaneOpts::causal(causal))
+}
+
+/// [`exact_plane`] with the full masking/scaling options.
+pub fn exact_plane_opt(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    n_q: usize,
+    n_kv: usize,
+    d: usize,
+    opts: PlaneOpts,
+) -> Vec<f32> {
+    let scale = opts.scale(d);
     let mut out = vec![0.0f32; n_q * d];
     let mut s = vec![0.0f32; n_kv];
     for i in 0..n_q {
         let qi = &q[i * d..(i + 1) * d];
-        let limit = causal_limit(i, n_q, n_kv, causal);
+        let (lo, hi) = opts.range(i, n_q, n_kv);
         let mut m = NEG_BIG;
-        for (j, sj) in s.iter_mut().enumerate().take(limit) {
+        for (j, sj) in s.iter_mut().enumerate().take(hi).skip(lo) {
             let kj = &k[j * d..(j + 1) * d];
             let dot: f32 = qi.iter().zip(kj).map(|(a, b)| a * b).sum();
             *sj = dot * scale;
             m = m.max(*sj);
         }
         let mut l = 0.0f32;
-        for sj in s.iter_mut().take(limit) {
+        for sj in s.iter_mut().take(hi).skip(lo) {
             *sj = (*sj - m).exp();
             l += *sj;
         }
         let o = &mut out[i * d..(i + 1) * d];
-        for (j, &p) in s.iter().enumerate().take(limit) {
+        for (j, &p) in s.iter().enumerate().take(hi).skip(lo) {
             let vj = &v[j * d..(j + 1) * d];
             for (oc, &vc) in o.iter_mut().zip(vj) {
                 *oc += p * vc;
@@ -182,9 +260,24 @@ pub fn online_plane_with(
     d: usize,
     causal: bool,
 ) -> Vec<f32> {
+    online_plane_opt(scratch, q, k, v, n_q, n_kv, d, PlaneOpts::causal(causal))
+}
+
+/// [`online_plane_with`] with the full masking/scaling options.
+#[allow(clippy::too_many_arguments)]
+pub fn online_plane_opt(
+    scratch: &mut Scratch,
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    n_q: usize,
+    n_kv: usize,
+    d: usize,
+    opts: PlaneOpts,
+) -> Vec<f32> {
     scratch.ensure_head_dim(d);
     let Scratch { s, m, l, acc, .. } = scratch;
-    let scale = 1.0 / (d as f32).sqrt();
+    let scale = opts.scale(d);
     let mut out = vec![0.0f32; n_q * d];
 
     let mut i0 = 0;
@@ -203,11 +296,12 @@ pub fn online_plane_with(
             let bk = jk - j0;
             // S tile
             for bi in 0..bq {
-                let limit = causal_limit(i0 + bi, n_q, n_kv, causal);
+                let (lo, hi) = opts.range(i0 + bi, n_q, n_kv);
                 let qi = &q[(i0 + bi) * d..(i0 + bi + 1) * d];
                 for bj in 0..bk {
-                    let s_val = if j0 + bj < limit {
-                        let kj = &k[(j0 + bj) * d..(j0 + bj + 1) * d];
+                    let j = j0 + bj;
+                    let s_val = if j >= lo && j < hi {
+                        let kj = &k[j * d..(j + 1) * d];
                         qi.iter().zip(kj).map(|(a, b)| a * b).sum::<f32>() * scale
                     } else {
                         NEG_BIG
@@ -265,26 +359,8 @@ pub fn online_plane_with(
 
 /// SageAttention plane (Alg. 1): INT8 QKᵀ + fp32 online softmax + the
 /// selected P·V mode. Mirrors `python/compile/kernels/sage_attn.py`.
-/// Convenience wrapper over [`sage_plane_with`] with a fresh [`Scratch`].
-///
-/// ```
-/// use sageattention::attn::{exact_plane, sage_plane, PvMode};
-/// use sageattention::metrics::cos_sim;
-/// use sageattention::quant::Granularity;
-/// use sageattention::synth::{make_qkv, Profile};
-///
-/// // one (batch, head) plane: N = 64 tokens, head_dim = 32
-/// let (q, k, v) = make_qkv(7, [1, 1, 64, 32], Profile::llama_like());
-/// let gold = exact_plane(&q.data, &k.data, &v.data, 64, 64, 32, false);
-/// let out = sage_plane(
-///     &q.data, &k.data, &v.data, 64, 64, 32,
-///     Granularity::PerToken,    // ψ per-token on Q and K (§3.2)
-///     PvMode::Fp16Accum,        // FP16 accumulator for P·V (§4.4)
-///     true,                     // smooth-K (§4.2)
-///     false,                    // no causal mask
-/// );
-/// assert!(cos_sim(&gold, &out) > 0.99);
-/// ```
+/// Convenience wrapper over [`sage_plane_with`] with a fresh [`Scratch`];
+/// the tensor-level entry point is [`crate::attn::api::AttnSpec`].
 #[allow(clippy::too_many_arguments)]
 pub fn sage_plane(
     q: &[f32],
@@ -318,6 +394,24 @@ pub fn sage_plane_with(
     smooth: bool,
     causal: bool,
 ) -> Vec<f32> {
+    sage_plane_opt(scratch, q, k, v, n_q, n_kv, d, qk_gran, pv, smooth, PlaneOpts::causal(causal))
+}
+
+/// [`sage_plane_with`] with the full masking/scaling options.
+#[allow(clippy::too_many_arguments)]
+pub fn sage_plane_opt(
+    scratch: &mut Scratch,
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    n_q: usize,
+    n_kv: usize,
+    d: usize,
+    qk_gran: Granularity,
+    pv: PvMode,
+    smooth: bool,
+    opts: PlaneOpts,
+) -> Vec<f32> {
     // per-channel scales are per *column*; the S-tile dequant below indexes
     // scales per token row, so PerChannel Q/K would read out of bounds —
     // and §4.3 rules it out for Q/K inside the tiled kernel anyway
@@ -327,10 +421,30 @@ pub fn sage_plane_with(
          use PerToken/PerBlock/PerTensor"
     );
     scratch.ensure_head_dim(d);
-    let Scratch { s, p_i8, m, l, acc, p16, part, acc_i32, qbuf, kbuf, kmean, vbuf } = scratch;
+    let Scratch {
+        s,
+        p_i8,
+        m,
+        l,
+        acc,
+        p16,
+        part,
+        acc_i32,
+        qbuf,
+        kbuf,
+        kmean,
+        vbuf,
+        q_i8,
+        q_scales,
+        k_i8,
+        k_scales,
+        v_i8,
+        v_scales,
+    } = scratch;
 
-    // ---- quantize Q (with folded 1/√d) and K (after smooth-K) ----
-    let scale = 1.0 / (d as f32).sqrt();
+    // ---- quantize Q (with folded softmax scale) and K (after smooth-K),
+    //      all into scratch-owned buffers (zero per-plane allocation) ----
+    let scale = opts.scale(d);
     qbuf.clear();
     qbuf.extend(q.iter().map(|&x| x * scale));
     let k_src: &[f32] = if smooth {
@@ -339,22 +453,18 @@ pub fn sage_plane_with(
     } else {
         k
     };
-    let qq = quant::quantize(qbuf, n_q, d, qk_gran);
-    let kq = quant::quantize(k_src, n_kv, d, qk_gran);
+    quant::quantize_into(qbuf, n_q, d, qk_gran, q_i8, q_scales);
+    quant::quantize_into(k_src, n_kv, d, qk_gran, k_i8, k_scales);
 
     // ---- quantize / round V per P·V mode ----
-    let (v_i8, v_chan_scale): (Vec<i8>, Vec<f32>) = match pv {
-        PvMode::Int8 => {
-            let vq = quant::quant_per_channel(v, n_kv, d);
-            (vq.data, vq.scales)
-        }
+    match pv {
+        PvMode::Int8 => quant::quant_per_channel_into(v, n_kv, d, v_i8, v_scales),
         _ => {
             vbuf.clear();
             vbuf.extend_from_slice(v);
             round_f16_slice(vbuf);
-            (Vec::new(), Vec::new())
         }
-    };
+    }
     let v_f16: &[f32] = vbuf;
 
     let mut out = vec![0.0f32; n_q * d];
@@ -376,14 +486,15 @@ pub fn sage_plane_with(
             let bk = jk - j0;
             // ---- S tile: mma(u8.u8.s32) + dequant ----
             for bi in 0..bq {
-                let limit = causal_limit(i0 + bi, n_q, n_kv, causal);
-                let qi = &qq.data[(i0 + bi) * d..(i0 + bi + 1) * d];
-                let qs = qq.scales[i0 + bi];
+                let (lo, hi) = opts.range(i0 + bi, n_q, n_kv);
+                let qi = &q_i8[(i0 + bi) * d..(i0 + bi + 1) * d];
+                let qs = q_scales[i0 + bi];
                 for bj in 0..bk {
-                    let s_val = if j0 + bj < limit {
-                        let kj = &kq.data[(j0 + bj) * d..(j0 + bj + 1) * d];
+                    let j = j0 + bj;
+                    let s_val = if j >= lo && j < hi {
+                        let kj = &k_i8[j * d..(j + 1) * d];
                         let dot = dot_i8(qi, kj);
-                        dot as f32 * qs * kq.scales[j0 + bj]
+                        dot as f32 * qs * k_scales[j]
                     } else {
                         NEG_BIG
                     };
@@ -435,7 +546,7 @@ pub fn sage_plane_with(
                             }
                         }
                         for (oc, (&a, &vs)) in
-                            o.iter_mut().zip(acc32.iter().zip(&v_chan_scale[..d]))
+                            o.iter_mut().zip(acc32.iter().zip(&v_scales[..d]))
                         {
                             *oc += a as f32 * (1.0 / quant::INT8_MAX) * vs;
                         }
@@ -515,7 +626,7 @@ pub fn sage_plane_with(
 /// loop for every query row — no KV tiling, so K and V stream through
 /// cache once per query. This is the textbook formulation the blocked
 /// kernel improves on (the seed's `sage_plane` was already tiled; what
-/// this PR adds there is scratch reuse). Numerically it tracks
+/// PR 1 added there is scratch reuse). Numerically it tracks
 /// [`sage_plane`] with [`PvMode::Fp32Accum`] (same quantizers,
 /// fp16-rounded P̃ and V, fp32 accumulation; only the summation order
 /// differs). Used as the measured "before" of `sage bench-hotpath` and
@@ -604,31 +715,47 @@ pub fn fp8_plane(
     pv_fmt: Fp8Format,
     causal: bool,
 ) -> Vec<f32> {
+    fp8_plane_opt(q, k, v, n_q, n_kv, d, qk_fmt, pv_fmt, PlaneOpts::causal(causal))
+}
+
+/// [`fp8_plane`] with the full masking/scaling options.
+#[allow(clippy::too_many_arguments)]
+pub fn fp8_plane_opt(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    n_q: usize,
+    n_kv: usize,
+    d: usize,
+    qk_fmt: Fp8Format,
+    pv_fmt: Fp8Format,
+    opts: PlaneOpts,
+) -> Vec<f32> {
     use crate::quant::FakeQuant;
     let qf = quant::fake_quant(q, n_q, d, FakeQuant::Fp8(qk_fmt));
     let kf = quant::fake_quant(k, n_kv, d, FakeQuant::Fp8(qk_fmt));
     // V quantized per-token to FP8; P̃ rounded to FP8 inside the loop.
     let vf = quant::fake_quant(v, n_kv, d, FakeQuant::Fp8(pv_fmt));
-    let scale = 1.0 / (d as f32).sqrt();
+    let scale = opts.scale(d);
     let mut out = vec![0.0f32; n_q * d];
     let mut s = vec![0.0f32; n_kv];
     for i in 0..n_q {
         let qi = &qf[i * d..(i + 1) * d];
-        let limit = causal_limit(i, n_q, n_kv, causal);
+        let (lo, hi) = opts.range(i, n_q, n_kv);
         let mut m = NEG_BIG;
-        for (j, sj) in s.iter_mut().enumerate().take(limit) {
+        for (j, sj) in s.iter_mut().enumerate().take(hi).skip(lo) {
             let kj = &kf[j * d..(j + 1) * d];
             let dot: f32 = qi.iter().zip(kj).map(|(a, b)| a * b).sum();
             *sj = dot * scale;
             m = m.max(*sj);
         }
         let mut l = 0.0f32;
-        for sj in s.iter_mut().take(limit) {
+        for sj in s.iter_mut().take(hi).skip(lo) {
             *sj = pv_fmt.round((*sj - m).exp());
             l += *sj;
         }
         let o = &mut out[i * d..(i + 1) * d];
-        for (j, &p) in s.iter().enumerate().take(limit) {
+        for (j, &p) in s.iter().enumerate().take(hi).skip(lo) {
             if p == 0.0 {
                 continue;
             }
@@ -718,6 +845,73 @@ mod tests {
         let a = online_plane(&q.data, &k.data, &v.data, 300, 300, 64, false);
         let b = online_plane_with(&mut scratch, &q.data, &k.data, &v.data, 300, 300, 64, false);
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn window_covering_sequence_is_full_attention() {
+        // a sliding window at least as wide as the sequence must be
+        // bit-identical to plain causal attention, for every kernel family
+        let (n, d) = (150usize, 32usize);
+        let (q, k, v) = make_qkv(21, [1, 1, n, d], Profile::llama_like());
+        let causal = PlaneOpts::causal(true);
+        let windowed = PlaneOpts { window: Some(n), ..causal };
+        assert_eq!(
+            exact_plane_opt(&q.data, &k.data, &v.data, n, n, d, causal),
+            exact_plane_opt(&q.data, &k.data, &v.data, n, n, d, windowed),
+        );
+        let mut scratch = Scratch::new();
+        assert_eq!(
+            online_plane_opt(&mut scratch, &q.data, &k.data, &v.data, n, n, d, causal),
+            online_plane_opt(&mut scratch, &q.data, &k.data, &v.data, n, n, d, windowed),
+        );
+        let sage = |opts| {
+            sage_plane_opt(
+                &mut Scratch::new(), &q.data, &k.data, &v.data, n, n, d,
+                Granularity::PerToken, PvMode::Fp16Accum, true, opts,
+            )
+        };
+        assert_eq!(sage(causal), sage(windowed));
+    }
+
+    #[test]
+    fn window_restricts_reach() {
+        // with a narrow window, query i must ignore keys before i-w+1:
+        // perturbing an early key must not change a late query's output
+        let (n, d, w) = (96usize, 16usize, 8usize);
+        let (q, k, v) = make_qkv(22, [1, 1, n, d], Profile::llama_like());
+        let opts = PlaneOpts { window: Some(w), ..PlaneOpts::causal(true) };
+        let o1 = exact_plane_opt(&q.data, &k.data, &v.data, n, n, d, opts);
+        let mut k2 = k.clone();
+        let mut v2 = v.clone();
+        for c in 0..d {
+            k2.data[c] += 100.0; // key 0, far outside the last row's window
+            v2.data[c] -= 50.0;
+        }
+        let o2 = exact_plane_opt(&q.data, &k2.data, &v2.data, n, n, d, opts);
+        let last = (n - 1) * d;
+        assert_eq!(&o1[last..], &o2[last..], "window leaked an out-of-range key");
+        // ...but the windowed result differs from full causal attention
+        let full = exact_plane_opt(&q.data, &k.data, &v.data, n, n, d, PlaneOpts::causal(true));
+        assert_ne!(o1, full);
+    }
+
+    #[test]
+    fn sm_scale_default_is_inv_sqrt_d() {
+        let (n, d) = (64usize, 32usize);
+        let (q, k, v) = make_qkv(23, [1, 1, n, d], Profile::vit_like());
+        let explicit = PlaneOpts {
+            sm_scale: Some(1.0 / (d as f32).sqrt()),
+            ..PlaneOpts::causal(false)
+        };
+        assert_eq!(
+            exact_plane_opt(&q.data, &k.data, &v.data, n, n, d, PlaneOpts::causal(false)),
+            exact_plane_opt(&q.data, &k.data, &v.data, n, n, d, explicit),
+        );
+        // a different scale changes the distribution
+        let sharp = PlaneOpts { sm_scale: Some(1.0), ..PlaneOpts::causal(false) };
+        let o = exact_plane_opt(&q.data, &k.data, &v.data, n, n, d, sharp);
+        assert_ne!(o, exact_plane_opt(&q.data, &k.data, &v.data, n, n, d, explicit));
+        assert!(o.iter().all(|x| x.is_finite()));
     }
 
     #[test]

@@ -1,0 +1,434 @@
+//! Quantize-once KV state for the decode path (the
+//! [`crate::attn::api::PreparedKV`] substrate).
+//!
+//! A full `sage_plane` call re-runs smooth-K and re-quantizes K and V on
+//! every invocation — asymptotically wasteful when one query row is
+//! decoded against a static prefix T times. [`PreparedPlane`] holds the
+//! quantized state of one (batch, kv-head) plane so repeated Q batches
+//! reuse it, and `append` extends it row-by-row touching only a bounded
+//! suffix:
+//!
+//! * **smooth-K mean** (§4.2): anchored to the first [`BLOCK_KV`] rows
+//!   and frozen once that many exist. Softmax is invariant to *any*
+//!   fixed per-channel shift of K (the `q·mean` offset is constant
+//!   across keys for a given query), so freezing the anchor changes
+//!   only quantization error, not the attended distribution — and it
+//!   makes every later append O(new rows) instead of O(prefix).
+//! * **K scales**: per-token or per-block at absolute row boundaries;
+//!   appending requantizes at most the trailing partial block.
+//! * **V**: per-channel INT8 scales are kept per [`BLOCK_KV`] block (the
+//!   granularity at which the kernel's P·V dequant already runs), so new
+//!   rows never rescale old blocks; fp16-rounded V rows are row-local.
+//!
+//! Because every derived quantity depends only on block-local data (plus
+//! the frozen anchor), building the state in one shot and growing it
+//! incrementally are **bit-identical** — the invariant
+//! `tests/api_scenarios.rs` pins down.
+
+use crate::quant::{self, Granularity};
+use crate::util::f16::round_f16_slice;
+
+use super::plane::{dot_i8, PlaneOpts, Scratch};
+use super::{AttnImpl, PvMode, BLOCK_KV, BLOCK_Q};
+
+const NEG_BIG: f32 = -1e30;
+
+/// Prepared (quantize-once) state of one (batch, kv-head) KV plane.
+#[derive(Clone, Debug, PartialEq)]
+pub(crate) struct PreparedPlane {
+    pub d: usize,
+    /// KV rows currently held.
+    pub n: usize,
+    /// fp32 fallback (and requant source): raw K/V rows as appended.
+    pub k_raw: Vec<f32>,
+    pub v_raw: Vec<f32>,
+    /// Anchored per-channel smooth-K mean (len d; zeros when smoothing
+    /// is off or no Sage kernel is attached).
+    pub kmean: Vec<f32>,
+    /// Rows `kmean` was computed over — frozen once it reaches BLOCK_KV.
+    pub anchor_rows: usize,
+    /// INT8 smoothed K plane + per-row scales.
+    pub k_i8: Vec<i8>,
+    pub k_scales: Vec<f32>,
+    /// INT8 V plane + per-(BLOCK_KV block, channel) scales (Int8 P·V).
+    pub v_i8: Vec<i8>,
+    pub v_scales: Vec<f32>,
+    /// fp16-rounded V rows (FP16/FP32-accumulator P·V).
+    pub v_f16: Vec<f32>,
+}
+
+impl PreparedPlane {
+    pub fn new(d: usize) -> PreparedPlane {
+        PreparedPlane {
+            d,
+            n: 0,
+            k_raw: Vec::new(),
+            v_raw: Vec::new(),
+            kmean: vec![0.0; d],
+            anchor_rows: 0,
+            k_i8: Vec::new(),
+            k_scales: Vec::new(),
+            v_i8: Vec::new(),
+            v_scales: Vec::new(),
+            v_f16: Vec::new(),
+        }
+    }
+
+    /// Append new K/V rows and requantize the bounded suffix they can
+    /// affect. One-shot preparation is `append` on an empty plane, so
+    /// incremental growth is bit-identical by construction.
+    pub fn append(&mut self, k_rows: &[f32], v_rows: &[f32], imp: AttnImpl) {
+        let d = self.d;
+        debug_assert_eq!(k_rows.len() % d, 0);
+        debug_assert_eq!(k_rows.len(), v_rows.len());
+        let n_old = self.n;
+        self.k_raw.extend_from_slice(k_rows);
+        self.v_raw.extend_from_slice(v_rows);
+        self.n += k_rows.len() / d;
+
+        let AttnImpl::Sage { qk, pv, smooth_k } = imp else {
+            // exact/online fallbacks run straight off k_raw/v_raw
+            return;
+        };
+        let group = match qk {
+            Granularity::PerToken => 1,
+            Granularity::PerBlock(b) => b,
+            // PerTensor/PerChannel are rejected by the capability check
+            // before a PreparedKV is ever built
+            _ => unreachable!("unsupported prepared Q/K granularity {qk:?}"),
+        };
+
+        // anchored smooth-K mean: recomputing it forces a full requant,
+        // which can only happen while n < BLOCK_KV (a bounded prefix)
+        let mut from_k = n_old - n_old % group;
+        if smooth_k && self.anchor_rows < BLOCK_KV.min(self.n) {
+            self.anchor_rows = BLOCK_KV.min(self.n);
+            self.kmean.iter_mut().for_each(|m| *m = 0.0);
+            for r in 0..self.anchor_rows {
+                for c in 0..d {
+                    self.kmean[c] += self.k_raw[r * d + c];
+                }
+            }
+            for m in self.kmean.iter_mut() {
+                *m /= self.anchor_rows as f32;
+            }
+            from_k = 0;
+        }
+        self.requant_k_from(from_k, group);
+
+        let from_v = match pv {
+            PvMode::Int8 => n_old - n_old % BLOCK_KV,
+            _ => n_old,
+        };
+        self.requant_v_from(from_v, pv);
+    }
+
+    /// Rebuild INT8 K data/scales for rows `from..n` (`from` must sit on
+    /// a scale-group boundary; group boundaries are absolute, so partial
+    /// trailing groups re-derive exactly as a one-shot build would).
+    /// Each group is the ψ per-tensor transform of its smoothed rows —
+    /// the same `quant` machinery the one-shot kernels use.
+    fn requant_k_from(&mut self, from: usize, group: usize) {
+        let d = self.d;
+        debug_assert_eq!(from % group, 0, "requant must start on a scale-group boundary");
+        self.k_i8.truncate(from * d);
+        self.k_scales.truncate(from);
+        let mut buf = Vec::with_capacity(group.min(self.n - from) * d);
+        let (mut data, mut scales) = (Vec::new(), Vec::new());
+        let mut g0 = from;
+        while g0 < self.n {
+            let g1 = (g0 + group).min(self.n);
+            buf.clear();
+            for r in g0..g1 {
+                for c in 0..d {
+                    // kmean is all-zero when smoothing is off (x - 0.0
+                    // is an IEEE identity, so no branch needed)
+                    buf.push(self.k_raw[r * d + c] - self.kmean[c]);
+                }
+            }
+            quant::quant_per_tensor_into(&buf, g1 - g0, d, &mut data, &mut scales);
+            self.k_i8.extend_from_slice(&data);
+            self.k_scales.extend_from_slice(&scales);
+            g0 = g1;
+        }
+    }
+
+    /// Rebuild the V representation for rows `from..n` (`from` must sit
+    /// on a BLOCK_KV boundary in Int8 mode). Each BLOCK_KV block is the
+    /// ψ per-channel transform of its raw rows.
+    fn requant_v_from(&mut self, from: usize, pv: PvMode) {
+        let d = self.d;
+        match pv {
+            PvMode::Int8 => {
+                debug_assert_eq!(from % BLOCK_KV, 0);
+                self.v_i8.truncate(from * d);
+                self.v_scales.truncate((from / BLOCK_KV) * d);
+                let (mut data, mut scales) = (Vec::new(), Vec::new());
+                let mut b0 = from;
+                while b0 < self.n {
+                    let b1 = (b0 + BLOCK_KV).min(self.n);
+                    quant::quant_per_channel_into(
+                        &self.v_raw[b0 * d..b1 * d],
+                        b1 - b0,
+                        d,
+                        &mut data,
+                        &mut scales,
+                    );
+                    self.v_i8.extend_from_slice(&data);
+                    self.v_scales.extend_from_slice(&scales);
+                    b0 = b1;
+                }
+            }
+            _ => {
+                self.v_f16.truncate(from * d);
+                self.v_f16.extend_from_slice(&self.v_raw[from * d..self.n * d]);
+                round_f16_slice(&mut self.v_f16[from * d..]);
+            }
+        }
+    }
+}
+
+/// Blocked SageAttention kernel against a prequantized KV plane: only Q
+/// is quantized per call; K data/scales (smooth-K already folded in) and
+/// V come from `prep`. Mirrors `sage_plane_opt`'s tile loop — the
+/// anchored smooth-K mean cancels in softmax, so no dequant correction
+/// term is needed. V's per-channel scales are per KV block, which slots
+/// into the P·V dequant that already runs once per block.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn sage_plane_prepared(
+    scratch: &mut Scratch,
+    q: &[f32],
+    prep: &PreparedPlane,
+    n_q: usize,
+    qk_gran: Granularity,
+    pv: PvMode,
+    opts: PlaneOpts,
+) -> Vec<f32> {
+    let d = prep.d;
+    let n_kv = prep.n;
+    assert!(
+        qk_gran != Granularity::PerChannel && qk_gran != Granularity::PerTensor,
+        "prepared KV supports PerToken/PerBlock Q/K granularity"
+    );
+    scratch.ensure_head_dim(d);
+    let Scratch { s, p_i8, m, l, acc, p16, part, acc_i32, qbuf, q_i8, q_scales, .. } = scratch;
+
+    let scale = opts.scale(d);
+    qbuf.clear();
+    qbuf.extend(q.iter().map(|&x| x * scale));
+    quant::quantize_into(qbuf, n_q, d, qk_gran, q_i8, q_scales);
+
+    let mut out = vec![0.0f32; n_q * d];
+
+    let mut i0 = 0;
+    while i0 < n_q {
+        let iq = (i0 + BLOCK_Q).min(n_q);
+        let bq = iq - i0;
+        let mb = &mut m[..bq];
+        mb.fill(NEG_BIG);
+        let lb = &mut l[..bq];
+        lb.fill(0.0);
+        let accb = &mut acc[..bq * d];
+        accb.fill(0.0);
+        let mut j0 = 0;
+        while j0 < n_kv {
+            let jk = (j0 + BLOCK_KV).min(n_kv);
+            let bk = jk - j0;
+            // ---- S tile from the prepared INT8 K ----
+            for bi in 0..bq {
+                let (lo, hi) = opts.range(i0 + bi, n_q, n_kv);
+                let qi = &q_i8[(i0 + bi) * d..(i0 + bi + 1) * d];
+                let qs = q_scales[i0 + bi];
+                for bj in 0..bk {
+                    let j = j0 + bj;
+                    let s_val = if j >= lo && j < hi {
+                        let kj = &prep.k_i8[j * d..(j + 1) * d];
+                        dot_i8(qi, kj) as f32 * qs * prep.k_scales[j]
+                    } else {
+                        NEG_BIG
+                    };
+                    s[bi * BLOCK_KV + bj] = s_val;
+                }
+            }
+            // ---- online softmax (fp32) + P·V ----
+            // per-block V scales for this tile (Int8 mode)
+            let vs_base = (j0 / BLOCK_KV) * d;
+            for bi in 0..bq {
+                let row = &mut s[bi * BLOCK_KV..bi * BLOCK_KV + bk];
+                let m_cur = row.iter().fold(NEG_BIG, |a, &b| a.max(b));
+                let m_new = mb[bi].max(m_cur);
+                if m_new == NEG_BIG {
+                    continue;
+                }
+                let alpha = (mb[bi] - m_new).exp();
+                let mut row_sum = 0.0;
+                for p in row.iter_mut() {
+                    *p = (*p - m_new).exp();
+                    row_sum += *p;
+                }
+                lb[bi] = alpha * lb[bi] + row_sum;
+                mb[bi] = m_new;
+                let o = &mut accb[bi * d..(bi + 1) * d];
+                match pv {
+                    PvMode::Int8 => {
+                        let prow = &mut p_i8[..bk];
+                        for (pq, &p) in prow.iter_mut().zip(row.iter()) {
+                            *pq = (p * quant::INT8_MAX).round() as i8;
+                        }
+                        for oc in o.iter_mut() {
+                            *oc *= alpha;
+                        }
+                        let acc32 = &mut acc_i32[..d];
+                        acc32.fill(0);
+                        for (bj, &pq) in prow.iter().enumerate() {
+                            if pq == 0 {
+                                continue;
+                            }
+                            let p32 = pq as i32;
+                            let vrow = &prep.v_i8[(j0 + bj) * d..(j0 + bj + 1) * d];
+                            for (a, &vc) in acc32.iter_mut().zip(vrow) {
+                                *a += p32 * vc as i32;
+                            }
+                        }
+                        let vs = &prep.v_scales[vs_base..vs_base + d];
+                        for (oc, (&a, &vsc)) in o.iter_mut().zip(acc32.iter().zip(vs)) {
+                            *oc += a as f32 * (1.0 / quant::INT8_MAX) * vsc;
+                        }
+                    }
+                    PvMode::Fp16Accum => {
+                        for oc in o.iter_mut() {
+                            *oc *= alpha;
+                        }
+                        round_f16_slice(o);
+                        let p16b = &mut p16[..bk];
+                        p16b.copy_from_slice(&row[..bk]);
+                        round_f16_slice(p16b);
+                        let partd = &mut part[..d];
+                        let mut bj = 0;
+                        while bj < bk {
+                            let je = (bj + 16).min(bk);
+                            partd.fill(0.0);
+                            for t in bj..je {
+                                let p = p16b[t];
+                                if p == 0.0 {
+                                    continue;
+                                }
+                                let vrow = &prep.v_f16[(j0 + t) * d..(j0 + t + 1) * d];
+                                for (pc, &vc) in partd.iter_mut().zip(vrow) {
+                                    *pc += p * vc;
+                                }
+                            }
+                            round_f16_slice(partd);
+                            for (oc, &pc) in o.iter_mut().zip(partd.iter()) {
+                                *oc += pc;
+                            }
+                            round_f16_slice(o);
+                            bj = je;
+                        }
+                    }
+                    PvMode::Fp32Accum => {
+                        for oc in o.iter_mut() {
+                            *oc *= alpha;
+                        }
+                        let p16b = &mut p16[..bk];
+                        p16b.copy_from_slice(&row[..bk]);
+                        round_f16_slice(p16b);
+                        for (bj, &p) in p16b.iter().enumerate() {
+                            if p == 0.0 {
+                                continue;
+                            }
+                            let vrow = &prep.v_f16[(j0 + bj) * d..(j0 + bj + 1) * d];
+                            for (oc, &vc) in o.iter_mut().zip(vrow) {
+                                *oc += p * vc;
+                            }
+                        }
+                    }
+                }
+            }
+            j0 = jk;
+        }
+        for bi in 0..bq {
+            let inv = 1.0 / lb[bi].max(1e-30);
+            let o = &mut out[(i0 + bi) * d..(i0 + bi + 1) * d];
+            for (oc, &ac) in o.iter_mut().zip(&accb[bi * d..(bi + 1) * d]) {
+                *oc = ac * inv;
+            }
+        }
+        i0 = iq;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::cos_sim;
+    use crate::synth::{make_qkv, Profile};
+    use crate::attn::plane::exact_plane;
+    use crate::attn::{SAGE_B, SAGE_T, SAGE_VB, SAGE_VT};
+
+    fn build(k: &[f32], v: &[f32], d: usize, imp: AttnImpl) -> PreparedPlane {
+        let mut p = PreparedPlane::new(d);
+        p.append(k, v, imp);
+        p
+    }
+
+    #[test]
+    fn oneshot_equals_rowwise_incremental() {
+        let (n, d) = (200usize, 32usize);
+        let (_, k, v) = make_qkv(31, [1, 1, n, d], Profile::diffusion_like());
+        for imp in [SAGE_T, SAGE_B, SAGE_VT, SAGE_VB] {
+            let oneshot = build(&k.data, &v.data, d, imp);
+            // grow row by row through every anchor/group/block boundary
+            let mut inc = PreparedPlane::new(d);
+            for r in 0..n {
+                inc.append(&k.data[r * d..(r + 1) * d], &v.data[r * d..(r + 1) * d], imp);
+            }
+            assert_eq!(oneshot, inc, "{}", imp.name());
+            // and in irregular chunks
+            let mut chunked = PreparedPlane::new(d);
+            let mut r = 0;
+            for step in [1usize, 7, 63, 64, 65, 100].iter().cycle() {
+                if r >= n {
+                    break;
+                }
+                let e = (r + step).min(n);
+                chunked.append(&k.data[r * d..e * d], &v.data[r * d..e * d], imp);
+                r = e;
+            }
+            assert_eq!(oneshot, chunked, "{} chunked", imp.name());
+        }
+    }
+
+    #[test]
+    fn prepared_kernel_tracks_exact() {
+        let (n, d) = (256usize, 64usize);
+        let (q, k, v) = make_qkv(32, [1, 1, n, d], Profile::diffusion_like());
+        let gold = exact_plane(&q.data, &k.data, &v.data, n, n, d, false);
+        let mut scratch = Scratch::new();
+        for (imp, min_cos) in [(SAGE_T, 0.999), (SAGE_B, 0.999), (SAGE_VT, 0.99), (SAGE_VB, 0.99)]
+        {
+            let prep = build(&k.data, &v.data, d, imp);
+            let AttnImpl::Sage { qk, pv, .. } = imp else { unreachable!() };
+            let out = sage_plane_prepared(
+                &mut scratch, &q.data, &prep, n, qk, pv, PlaneOpts::causal(false),
+            );
+            let c = cos_sim(&gold, &out);
+            assert!(c > min_cos, "{}: cos {c}", imp.name());
+        }
+    }
+
+    #[test]
+    fn anchor_freezes_after_first_block() {
+        let (n, d) = (300usize, 16usize);
+        let (_, k, v) = make_qkv(33, [1, 1, n, d], Profile::diffusion_like());
+        let mut p = build(&k.data[..BLOCK_KV * d], &v.data[..BLOCK_KV * d], d, SAGE_T);
+        let frozen = p.kmean.clone();
+        p.append(&k.data[BLOCK_KV * d..], &v.data[BLOCK_KV * d..], SAGE_T);
+        assert_eq!(p.kmean, frozen, "anchor mean must not move after BLOCK_KV rows");
+        assert_eq!(p.anchor_rows, BLOCK_KV);
+        assert_eq!(p.n, n);
+        assert_eq!(p.k_scales.len(), n);
+        assert_eq!(p.k_i8.len(), n * d);
+    }
+}

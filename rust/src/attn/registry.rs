@@ -1,0 +1,311 @@
+//! Kernel registry: every attention variant the crate ships, under a
+//! stable name with a capability predicate and a per-plane entry point —
+//! the CPU analogue of the reference repo's `core.py:sageattn` dispatch
+//! table (SNIPPETS.md §"GPU Dispatch"). Name resolution ([`resolve`]),
+//! auto-dispatch ([`auto`]), the CLI's `sage kernels` listing, the
+//! adaptive calibrator's plan strings and the serving engine's plan
+//! validation all read this table; a new kernel variant (e.g. the
+//! SageAttention2 INT4 path on the roadmap) registers a row here to
+//! become nameable/dispatchable, plus one arm in
+//! `attn::api::run_plane_opt` for its parameterized forms. The `plane`
+//! field is the variant's direct plane-level entry point (benches and
+//! plane-granular callers; the tensor-level `AttnSpec` dispatches on
+//! [`AttnImpl`] so parameterized implementations share the same path).
+
+use crate::quant::{Fp8Format, Granularity};
+
+use super::plane::{self, PlaneOpts, Scratch};
+use super::{AttnImpl, SAGE_B, SAGE_T, SAGE_VB, SAGE_VT};
+
+/// What a call site needs from a kernel — the capability-probe input.
+/// Today's CPU kernels generalize over shape and masking, so the current
+/// predicates only discriminate on `prepared` (and, via [`supports`], on
+/// Q/K granularity); the remaining fields exist so future variants with
+/// real constraints (e.g. an INT4 path limited to specific head dims)
+/// can reject requests without changing any call site.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct KernelReq {
+    pub head_dim: usize,
+    pub causal: bool,
+    /// Sliding-window masking requested.
+    pub window: bool,
+    /// Grouped-query attention (n_kv_heads < n_heads) requested.
+    pub gqa: bool,
+    /// The call runs against [`crate::attn::PreparedKV`] state.
+    pub prepared: bool,
+}
+
+/// Per-plane kernel entry point shared by every registry row:
+/// `(scratch, q, k, v, n_q, n_kv, d, opts)` over contiguous (N, d)
+/// planes. Reference-only kernels ignore the scratch.
+pub type PlaneFn =
+    fn(&mut Scratch, &[f32], &[f32], &[f32], usize, usize, usize, PlaneOpts) -> Vec<f32>;
+
+/// One registered kernel variant.
+pub struct KernelEntry {
+    /// Stable lookup name (the paper's table row label).
+    pub name: &'static str,
+    pub imp: AttnImpl,
+    pub summary: &'static str,
+    /// Capability predicate — `auto` skips entries whose predicate
+    /// rejects the request, and explicit selections fail fast.
+    pub supports: fn(&KernelReq) -> bool,
+    /// Per-plane kernel (the tensor-level dispatch lives in
+    /// [`crate::attn::api::AttnSpec`]).
+    pub plane: PlaneFn,
+}
+
+fn supports_any(_req: &KernelReq) -> bool {
+    true
+}
+
+fn supports_unprepared(req: &KernelReq) -> bool {
+    !req.prepared
+}
+
+fn plane_exact(
+    _s: &mut Scratch,
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    n_q: usize,
+    n_kv: usize,
+    d: usize,
+    opts: PlaneOpts,
+) -> Vec<f32> {
+    plane::exact_plane_opt(q, k, v, n_q, n_kv, d, opts)
+}
+
+fn plane_online(
+    s: &mut Scratch,
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    n_q: usize,
+    n_kv: usize,
+    d: usize,
+    opts: PlaneOpts,
+) -> Vec<f32> {
+    plane::online_plane_opt(s, q, k, v, n_q, n_kv, d, opts)
+}
+
+macro_rules! sage_plane_fn {
+    ($name:ident, $imp:expr) => {
+        fn $name(
+            s: &mut Scratch,
+            q: &[f32],
+            k: &[f32],
+            v: &[f32],
+            n_q: usize,
+            n_kv: usize,
+            d: usize,
+            opts: PlaneOpts,
+        ) -> Vec<f32> {
+            let AttnImpl::Sage { qk, pv, smooth_k } = $imp else {
+                unreachable!("sage_plane_fn! takes a Sage implementation")
+            };
+            plane::sage_plane_opt(s, q, k, v, n_q, n_kv, d, qk, pv, smooth_k, opts)
+        }
+    };
+}
+
+sage_plane_fn!(plane_sage_t, SAGE_T);
+sage_plane_fn!(plane_sage_b, SAGE_B);
+sage_plane_fn!(plane_sage_vt, SAGE_VT);
+sage_plane_fn!(plane_sage_vb, SAGE_VB);
+
+fn plane_fp8(
+    _s: &mut Scratch,
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    n_q: usize,
+    n_kv: usize,
+    d: usize,
+    opts: PlaneOpts,
+) -> Vec<f32> {
+    plane::fp8_plane_opt(q, k, v, n_q, n_kv, d, Fp8Format::E4M3, Fp8Format::E4M3, opts)
+}
+
+/// The registered kernels, in `auto`-dispatch priority order: the
+/// paper's plug-and-play default (SageAttn-B) first, then the other
+/// Table-6 variants, then the full-precision and FP8 baselines.
+pub static REGISTRY: &[KernelEntry] = &[
+    KernelEntry {
+        name: "SageAttn-B",
+        imp: SAGE_B,
+        summary: "INT8 QK per-block + smooth-K + FP16-accum PV (the plug-and-play default)",
+        supports: supports_any,
+        plane: plane_sage_b,
+    },
+    KernelEntry {
+        name: "SageAttn-T",
+        imp: SAGE_T,
+        summary: "INT8 QK per-token + smooth-K + FP16-accum PV",
+        supports: supports_any,
+        plane: plane_sage_t,
+    },
+    KernelEntry {
+        name: "SageAttn-vB",
+        imp: SAGE_VB,
+        summary: "INT8 QK per-block + smooth-K + INT8 PV (fastest, needs §4.5 calibration)",
+        supports: supports_any,
+        plane: plane_sage_vb,
+    },
+    KernelEntry {
+        name: "SageAttn-vT",
+        imp: SAGE_VT,
+        summary: "INT8 QK per-token + smooth-K + INT8 PV",
+        supports: supports_any,
+        plane: plane_sage_vt,
+    },
+    KernelEntry {
+        name: "online",
+        imp: AttnImpl::OnlineFp32,
+        summary: "FlashAttention-2 fp32 tiling (full-precision speed baseline)",
+        supports: supports_any,
+        plane: plane_online,
+    },
+    KernelEntry {
+        name: "exact",
+        imp: AttnImpl::Exact,
+        summary: "exact fp32 softmax(QK^T/sqrt(d))V (accuracy gold standard)",
+        supports: supports_any,
+        plane: plane_exact,
+    },
+    KernelEntry {
+        name: "fa3-fp8",
+        imp: AttnImpl::Fp8 { qk: Fp8Format::E4M3, pv: Fp8Format::E4M3 },
+        summary: "FlashAttention3-style all-FP8 baseline (no PreparedKV path)",
+        supports: supports_unprepared,
+        plane: plane_fp8,
+    },
+];
+
+/// All registered kernels (stable order: `auto` priority).
+pub fn entries() -> &'static [KernelEntry] {
+    REGISTRY
+}
+
+/// Look up a registry row by its stable name.
+pub fn find(name: &str) -> Option<&'static KernelEntry> {
+    REGISTRY.iter().find(|e| e.name == name)
+}
+
+/// Resolve a kernel name to an implementation: registry rows (including
+/// aliases like `fa3-fp8`) first, then the structured [`AttnImpl`] name
+/// grammar (`SageAttn-+fp32accB64-nosmooth`, `fp8(E4M3,E5M2)`, …) — the
+/// true inverse of [`AttnImpl::name`]. This is the single resolver the
+/// CLI, the adaptive calibrator's plan strings and `AttnSpec::by_name`
+/// share.
+pub fn resolve(name: &str) -> Option<AttnImpl> {
+    find(name).map(|e| e.imp).or_else(|| AttnImpl::by_name(name))
+}
+
+/// `core.py:sageattn`-style auto dispatch: the first registry row whose
+/// capability predicate accepts the request.
+pub fn auto(req: &KernelReq) -> Option<&'static KernelEntry> {
+    REGISTRY.iter().find(|e| (e.supports)(req) && supports(&e.imp, req))
+}
+
+/// Capability check covering parameterized implementations that aren't
+/// registry rows (custom block sizes, granularities, FP8 formats).
+pub fn supports(imp: &AttnImpl, req: &KernelReq) -> bool {
+    match imp {
+        // per-channel Q/K scales cannot dequantize inside the tiled
+        // kernel (§4.3)
+        AttnImpl::Sage { qk: Granularity::PerChannel, .. } => false,
+        // a per-tensor scale covers the whole plane, so appending rows
+        // would requantize the entire prefix — exactly what PreparedKV
+        // exists to avoid
+        AttnImpl::Sage { qk: Granularity::PerTensor, .. } => !req.prepared,
+        AttnImpl::Sage { .. } => true,
+        // the FP8 baseline has no quantize-once state (per-token FP8
+        // scales are recomputed per call)
+        AttnImpl::Fp8 { .. } => !req.prepared,
+        // fp32 references run off the PreparedKV raw-row fallback
+        AttnImpl::Exact | AttnImpl::OnlineFp32 => true,
+    }
+}
+
+/// Serving-plan families (the artifact name prefixes `fp`/`sage`/
+/// `adaptive`) → the registry row each family's kernels lower to. The
+/// engine validates its `--plan` flag through this instead of failing
+/// later on a missing artifact.
+pub fn plan_entry(plan: &str) -> Option<&'static KernelEntry> {
+    let name = match plan {
+        "fp" => "online",
+        // "adaptive" refines -B per layer (§4.5) but lowers from the
+        // same kernel family
+        "sage" | "adaptive" => "SageAttn-B",
+        _ => return None,
+    };
+    find(name)
+}
+
+/// Registered names, comma-separated (for error messages and usage text).
+pub fn known_names() -> String {
+    REGISTRY.iter().map(|e| e.name).collect::<Vec<_>>().join(", ")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attn::PvMode;
+    use crate::synth::{make_qkv, Profile};
+
+    #[test]
+    fn every_entry_resolves_and_runs() {
+        let (q, k, v) = make_qkv(41, [1, 1, 96, 32], Profile::llama_like());
+        let mut scratch = Scratch::new();
+        for e in entries() {
+            assert_eq!(resolve(e.name).as_ref(), Some(&e.imp), "{}", e.name);
+            let out = (e.plane)(
+                &mut scratch, &q.data, &k.data, &v.data, 96, 96, 32,
+                PlaneOpts::causal(false),
+            );
+            assert_eq!(out.len(), 96 * 32);
+            assert!(out.iter().all(|x| x.is_finite()), "{}", e.name);
+        }
+    }
+
+    #[test]
+    fn auto_prefers_the_sage_default() {
+        let req = KernelReq { head_dim: 64, ..Default::default() };
+        assert_eq!(auto(&req).unwrap().name, "SageAttn-B");
+        // a prepared request must skip prepared-incapable rows but still
+        // land on the default (which supports PreparedKV)
+        let prep = KernelReq { head_dim: 64, prepared: true, ..Default::default() };
+        assert_eq!(auto(&prep).unwrap().name, "SageAttn-B");
+    }
+
+    #[test]
+    fn capability_checks() {
+        let prep = KernelReq { prepared: true, ..Default::default() };
+        let plain = KernelReq::default();
+        let fp8 = AttnImpl::Fp8 { qk: Fp8Format::E4M3, pv: Fp8Format::E4M3 };
+        assert!(supports(&fp8, &plain) && !supports(&fp8, &prep));
+        let per_tensor = AttnImpl::Sage {
+            qk: Granularity::PerTensor,
+            pv: PvMode::Fp16Accum,
+            smooth_k: true,
+        };
+        assert!(supports(&per_tensor, &plain) && !supports(&per_tensor, &prep));
+        let per_chan = AttnImpl::Sage {
+            qk: Granularity::PerChannel,
+            pv: PvMode::Fp16Accum,
+            smooth_k: true,
+        };
+        assert!(!supports(&per_chan, &plain));
+        assert!(supports(&SAGE_B, &prep));
+    }
+
+    #[test]
+    fn plan_families_map_to_registry_rows() {
+        assert_eq!(plan_entry("fp").unwrap().name, "online");
+        assert_eq!(plan_entry("sage").unwrap().name, "SageAttn-B");
+        assert_eq!(plan_entry("adaptive").unwrap().name, "SageAttn-B");
+        assert!(plan_entry("nope").is_none());
+        assert!(known_names().contains("SageAttn-vB"));
+    }
+}

@@ -13,6 +13,7 @@ use std::collections::BTreeMap;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
+use crate::attn::registry;
 use crate::runtime::pjrt as xla;
 use crate::runtime::{Artifact, ModelCfg, Runtime, Value};
 use crate::util::error::{bail, Context, Result};
@@ -62,6 +63,7 @@ struct Slot {
 pub struct Engine {
     cfg: ModelCfg,
     plan: String,
+    kernel: &'static registry::KernelEntry,
     params: Vec<Value>,
     params_lit: Vec<xla::Literal>,
     decode: Arc<Artifact>,
@@ -77,6 +79,15 @@ impl Engine {
     /// Build an engine for `config` ("tiny"/"small") and `plan`
     /// ("fp"/"sage"/"adaptive"), initializing parameters from `seed`.
     pub fn new(rt: &Runtime, config: &str, plan: &str, seed: u64) -> Result<Engine> {
+        // validate the plan through the kernel registry up front, so a
+        // typo reports as "unknown plan" instead of a missing artifact
+        let Some(kernel) = registry::plan_entry(plan) else {
+            bail!(
+                "unknown attention plan '{plan}' (expected fp|sage|adaptive; \
+                 registry kernels: {})",
+                registry::known_names()
+            );
+        };
         let cfg = rt
             .manifest
             .configs
@@ -109,6 +120,7 @@ impl Engine {
         Ok(Engine {
             cfg: cfg.clone(),
             plan: plan.to_owned(),
+            kernel,
             params,
             params_lit,
             decode,
@@ -140,6 +152,12 @@ impl Engine {
 
     pub fn plan(&self) -> &str {
         &self.plan
+    }
+
+    /// Registry row this plan's artifacts lower from (the "adaptive"
+    /// plan refines it per layer; see §4.5).
+    pub fn kernel(&self) -> &'static registry::KernelEntry {
+        self.kernel
     }
 
     pub fn batch_slots(&self) -> usize {

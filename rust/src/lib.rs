@@ -12,7 +12,9 @@
 //!   router, continuous batcher, paged KV cache, prefill/decode scheduler,
 //!   plus the adaptive-quantization calibrator (§4.5), a GPU cost model
 //!   regenerating the paper's speed figures, and rust-native mirrors of
-//!   the kernels for accuracy experiments.
+//!   the kernels for accuracy experiments — fronted by the `sageattn`-style
+//!   [`attn::AttnSpec`] builder (layout/causal/window/GQA/sm_scale over a
+//!   kernel registry) and [`attn::PreparedKV`] quantize-once decode state.
 //!
 //! Python never runs on the request path: artifacts are compiled once by
 //! `make artifacts` and executed through the PJRT C API. Offline builds

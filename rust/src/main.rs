@@ -7,8 +7,12 @@
 //!   calibrate [--out plan.json]   §4.5 adaptive-quantization calibration
 //!   accuracy [--profile P]        kernel accuracy vs full precision
 //!   speed [--device 4090]         cost-model kernel speed sweep
+//!   kernels                       list the attention kernel registry
 //!   bench-hotpath [--seq 4096]    before/after GFLOPS on the blocked
-//!                                 sage_plane hot path vs the naive loop
+//!                                 sage_plane hot path vs the naive loop,
+//!                                 plus the PreparedKV decode lane; with
+//!                                 --check FILE asserts no-regression
+//!                                 against the checked-in baseline
 //!
 //! (arg parsing is hand-rolled: clap is unavailable offline; unknown
 //! subcommands and flags exit 2 with usage instead of being ignored)
@@ -18,9 +22,9 @@ use std::time::Duration;
 
 use sageattention::adaptive;
 use sageattention::attn::{
-    attention, sage_plane_naive, AttnImpl, PvMode, BLOCK_Q, SAGE_B, SAGE_T, SAGE_VB, SAGE_VT,
+    registry, sage_plane_naive, sage_plane_with, AttnImpl, AttnSpec, PvMode, Scratch, BLOCK_Q,
 };
-use sageattention::bench::{bench_budget, f2, pct, sci, Sample, Table};
+use sageattention::bench::{bench, bench_budget, f2, pct, sci, Sample, Table};
 use sageattention::coordinator::{
     BatchPolicy, Batcher, Engine, GenParams, KvCacheManager, Request, Scheduler,
 };
@@ -29,8 +33,9 @@ use sageattention::perfmodel::{predict_tops, AttnKernel, DeviceSpec, Workpoint};
 use sageattention::quant::Granularity;
 use sageattention::runtime::{Runtime, Value};
 use sageattention::synth::{make_qkv, Profile, WorkloadGen};
-use sageattention::tensor::{default_threads, parallel_map, Tensor};
+use sageattention::tensor::{default_threads, parallel_map, parallel_map_with, Tensor};
 use sageattention::util::error::{ensure, Context, Result};
+use sageattention::util::json::Json;
 
 const USAGE: &str = "\
 usage: sage <subcommand> [--key value]...   (`sage help` prints this)
@@ -39,9 +44,11 @@ subcommands:
   smoke          [--artifact NAME]                    artifact round-trip sanity check
   serve          [--config C] [--plan P] [--requests N] [--seed S]
   calibrate      [--layers N] [--profile P] [--out FILE] [--seed S]
-  accuracy       [--profile P] [--seq N] [--headdim D]
+  accuracy       [--profile P] [--seq N] [--headdim D] [--kernel NAME]
   speed          [--device 4090|3090] [--headdim D] [--causal]
-  bench-hotpath  [--seq N] [--headdim D] [--batch B] [--heads H] [--secs S]";
+  kernels                                             list the kernel registry
+  bench-hotpath  [--seq N] [--headdim D] [--batch B] [--heads H] [--secs S]
+                 [--decode-tokens T] [--check FILE] [--update FILE]";
 
 /// Flags that are bare switches (no value); every other flag requires one.
 const BOOLEAN_FLAGS: &[&str] = &["causal"];
@@ -64,9 +71,12 @@ fn main() {
         "smoke" => &["artifact"],
         "serve" => &["config", "plan", "requests", "seed"],
         "calibrate" => &["layers", "profile", "out", "seed"],
-        "accuracy" => &["profile", "seq", "headdim"],
+        "accuracy" => &["profile", "seq", "headdim", "kernel"],
         "speed" => &["device", "headdim", "causal"],
-        "bench-hotpath" => &["seq", "headdim", "batch", "heads", "secs"],
+        "kernels" => &[],
+        "bench-hotpath" => {
+            &["seq", "headdim", "batch", "heads", "secs", "decode-tokens", "check", "update"]
+        }
         other => usage_error(&format!("unknown subcommand '{other}'")),
     };
     // help wins over any other flag validation (checked first so the
@@ -100,6 +110,7 @@ fn main() {
         "calibrate" => calibrate(&flags),
         "accuracy" => accuracy_cmd(&flags),
         "speed" => speed(&flags),
+        "kernels" => kernels_cmd(),
         "bench-hotpath" => bench_hotpath(&flags),
         _ => unreachable!("subcommand validated above"),
     };
@@ -196,7 +207,8 @@ fn smoke(flags: &HashMap<String, String>) -> Result<()> {
         Value::from_tensor(&k),
         Value::from_tensor(&v),
     ])?;
-    let gold = attention(&q, &k, &v, AttnImpl::Exact, art.spec.causal.unwrap_or(false));
+    let gold =
+        AttnSpec::exact().causal(art.spec.causal.unwrap_or(false)).run(&q, &k, &v)?;
     let acc = accuracy(&gold.data, out[0].as_f32()?);
     println!("{name}: {acc}");
     ensure!(acc.cos_sim > 0.99, "artifact output diverged from reference");
@@ -214,6 +226,7 @@ fn serve(flags: &HashMap<String, String>) -> Result<()> {
     let seed: u64 = parsed_flag(flags, "seed", "1");
     let rt = Runtime::open(Runtime::default_dir())?;
     let engine = Engine::new(&rt, config, plan, seed)?;
+    println!("plan '{plan}' → kernel {} ({})", engine.kernel().name, engine.kernel().summary);
     let cfg = &rt.manifest.configs[config];
     let vocab = cfg.vocab;
     let max_seq = cfg.max_seq;
@@ -267,6 +280,9 @@ fn calibrate(flags: &HashMap<String, String>) -> Result<()> {
         ]);
     }
     t.print("adaptive calibration (threshold 99.8%)");
+    // every plan entry must resolve through the kernel registry before
+    // it is handed to aot.py
+    plan.kernels()?;
     std::fs::write(out, plan.to_json())?;
     println!(
         "\nwrote {out}; estimated attention speedup over all--B: {:.1}%",
@@ -281,14 +297,22 @@ fn accuracy_cmd(flags: &HashMap<String, String>) -> Result<()> {
         .context("unknown profile")?;
     let n: usize = parsed_flag(flags, "seq", "512");
     let d: usize = parsed_flag(flags, "headdim", "64");
+    let names: Vec<String> = match flags.get("kernel") {
+        Some(name) => vec![name.clone()],
+        None => ["SageAttn-T", "SageAttn-B", "SageAttn-vT", "SageAttn-vB"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect(),
+    };
     let (q, k, v) = make_qkv(3, [2, 4, n, d], profile);
-    let gold = attention(&q, &k, &v, AttnImpl::Exact, false);
+    let gold = AttnSpec::exact().run(&q, &k, &v)?;
     let mut t = Table::new(&["kernel", "CosSim", "RelL1", "RMSE"]);
-    for imp in [SAGE_T, SAGE_B, SAGE_VT, SAGE_VB] {
-        let o = attention(&q, &k, &v, imp, false);
+    for name in &names {
+        let spec = AttnSpec::by_name(name)?;
+        let o = spec.run(&q, &k, &v)?;
         let a = accuracy(&gold.data, &o.data);
         t.row(&[
-            imp.name(),
+            name.clone(),
             pct(a.cos_sim as f64),
             f2(a.rel_l1 as f64 * 100.0) + "e-2",
             sci(a.rmse as f64),
@@ -329,20 +353,57 @@ fn speed(flags: &HashMap<String, String>) -> Result<()> {
     Ok(())
 }
 
-/// Before/after GFLOPS on the sage_plane hot path: an unblocked
-/// row-at-a-time reference (full softmax, per-row allocation, no KV
-/// tiling) vs the blocked, scratch-reusing kernel, both parallelized over
-/// (batch, head) planes with the same thread pool. The speedup line is
-/// the blocking + scratch win over the textbook formulation.
+/// List the attention kernel registry (the `core.py:sageattn` dispatch
+/// table, as data).
+fn kernels_cmd() -> Result<()> {
+    let mut t = Table::new(&["name", "impl", "prepared-kv", "summary"]);
+    for e in registry::entries() {
+        let prep = registry::supports(
+            &e.imp,
+            &registry::KernelReq { prepared: true, ..Default::default() },
+        );
+        t.row(&[
+            e.name.to_string(),
+            e.imp.name(),
+            (if prep { "yes" } else { "no" }).to_string(),
+            e.summary.to_string(),
+        ]);
+    }
+    t.print("registered attention kernels (auto-dispatch priority order)");
+    println!("\nparameterized forms also resolve, e.g. 'SageAttn-B64' or 'fp8(E4M3,E5M2)'");
+    Ok(())
+}
+
+/// Before/after GFLOPS on the sage_plane hot path, in two parts:
+/// (1) the blocked, scratch-reusing kernel vs the unblocked row-at-a-time
+/// reference, and (2) the PreparedKV decode lane — per-token cost of
+/// decoding against an N-long prefix with quantize-once state vs a full
+/// `sage_plane` call (which re-runs smooth-K + INT8 quantization of the
+/// whole prefix) per token. With --check FILE the measured speedups are
+/// asserted against the checked-in floors (CI regression gate); --update
+/// FILE rewrites the baseline with the measured numbers.
 fn bench_hotpath(flags: &HashMap<String, String>) -> Result<()> {
     let n: usize = parsed_flag(flags, "seq", "4096");
     let d: usize = parsed_flag(flags, "headdim", "128");
     let b: usize = parsed_flag(flags, "batch", "1");
     let h: usize = parsed_flag(flags, "heads", "4");
     let secs: u64 = parsed_flag(flags, "secs", "2");
-    if n == 0 || d == 0 || b == 0 || h == 0 || secs == 0 {
-        usage_error("bench-hotpath shape dims and --secs must be non-zero");
+    let t_dec: usize = parsed_flag(flags, "decode-tokens", "24");
+    if n == 0 || d == 0 || b == 0 || h == 0 || secs == 0 || t_dec == 0 {
+        usage_error("bench-hotpath shape dims, --secs and --decode-tokens must be non-zero");
     }
+    if flags.contains_key("check") && flags.contains_key("update") {
+        usage_error("--check and --update are mutually exclusive");
+    }
+    // decode lanes consume t_dec timed + 2 warmup tokens off the prefix
+    // (bench() runs at least 3 timed iterations)
+    let t_dec = t_dec.max(3);
+    let warmup = 2usize;
+    ensure!(
+        n > t_dec + warmup + 1,
+        "--seq {n} too small for --decode-tokens {t_dec} (+{warmup} warmup)"
+    );
+    let n0 = n - t_dec - warmup;
     let budget = Duration::from_secs(secs);
     let gran = Granularity::PerBlock(BLOCK_Q);
     println!(
@@ -379,17 +440,23 @@ fn bench_hotpath(flags: &HashMap<String, String>) -> Result<()> {
 
     // "after": blocked tiles + per-thread scratch, same numerics family
     // (fp32-accumulated P·V) — this pair isolates the blocking win.
-    let blocked_fp32 = AttnImpl::Sage { qk: gran, pv: PvMode::Fp32Accum, smooth_k: true };
+    let blocked_fp32 = AttnSpec::new(AttnImpl::Sage {
+        qk: gran,
+        pv: PvMode::Fp32Accum,
+        smooth_k: true,
+    });
     let s_blocked = bench_budget("blocked+scratch (fp32-acc PV)", budget, 2, || {
-        std::hint::black_box(attention(&q, &k, &v, blocked_fp32, false));
+        std::hint::black_box(blocked_fp32.run(&q, &k, &v).unwrap());
     });
 
     // the two shipping variants, for the record
+    let sage_b = AttnSpec::sage_b();
     let s_fp16 = bench_budget("blocked+scratch (SageAttn-B, fp16-acc sim)", budget, 2, || {
-        std::hint::black_box(attention(&q, &k, &v, SAGE_B, false));
+        std::hint::black_box(sage_b.run(&q, &k, &v).unwrap());
     });
+    let sage_vb = AttnSpec::sage_vb();
     let s_int8 = bench_budget("blocked+scratch (SageAttn-vB, int8 PV)", budget, 2, || {
-        std::hint::black_box(attention(&q, &k, &v, SAGE_VB, false));
+        std::hint::black_box(sage_vb.run(&q, &k, &v).unwrap());
     });
 
     let mut t = Table::new(&["case", "median ms", "GFLOPS", "iters"]);
@@ -410,5 +477,194 @@ fn bench_hotpath(flags: &HashMap<String, String>) -> Result<()> {
           fp32-acc P·V, N={n}, d={d})"
     );
     println!("acceptance bar: >= 1.50x at N=4096, d=128");
+
+    // ---- prepared-decode lane: per-token cost against an n0-long
+    //      prefix, SageAttn-B numerics on both sides ----
+    // baseline: one full sage_plane call per token — smooth-K + INT8
+    // quantization of the whole prefix re-run every time (plane-level
+    // slices, so no tensor-copy overhead is billed to it)
+    let mut t_full = 0usize;
+    let s_dec_full = bench("decode/full-requant", warmup, t_dec, || {
+        let n_kv = n0 + t_full + 1;
+        let out = parallel_map_with(b * h, default_threads(), Scratch::new, |scratch, idx| {
+            let (bi, hi) = (idx / h, idx % h);
+            let qrow = &q.head(bi, hi)[(n_kv - 1) * d..n_kv * d];
+            sage_plane_with(
+                scratch,
+                qrow,
+                &k.head(bi, hi)[..n_kv * d],
+                &v.head(bi, hi)[..n_kv * d],
+                1,
+                n_kv,
+                d,
+                gran,
+                PvMode::Fp16Accum,
+                true,
+                false,
+            )
+        });
+        std::hint::black_box(out);
+        t_full += 1;
+    });
+
+    // prepared: quantize the prefix once, then per token extend by one
+    // row and run against the prepared state
+    let mut kv_state = sage_b.prepare(&k.narrow_n(0, n0), &v.narrow_n(0, n0))?;
+    let mut t_prep = 0usize;
+    let s_dec_prep = bench("decode/prepared (extend+run)", warmup, t_dec, || {
+        let row = n0 + t_prep;
+        kv_state
+            .extend(&k.narrow_n(row, row + 1), &v.narrow_n(row, row + 1))
+            .expect("decode extend");
+        let out = sage_b
+            .run_prepared(&q.narrow_n(row, row + 1), &kv_state)
+            .expect("prepared decode");
+        std::hint::black_box(out);
+        t_prep += 1;
+    });
+
+    let mut td = Table::new(&["case", "median ms/token", "tok/s", "tokens"]);
+    for s in [&s_dec_full, &s_dec_prep] {
+        td.row(&[
+            s.name.clone(),
+            format!("{:.3}", s.median_s() * 1e3),
+            format!("{:.1}", 1.0 / s.median_s()),
+            s.iters.to_string(),
+        ]);
+    }
+    td.print(&format!("PreparedKV decode lane (prefix {n0}, {t_dec} tokens)"));
+
+    let dec_speedup = s_dec_full.median_s() / s_dec_prep.median_s();
+    println!(
+        "\nprepared-decode speedup: {dec_speedup:.2}x \
+         (PreparedKV extend+run vs full per-token requantization, N={n}, d={d})"
+    );
+    println!("acceptance bar: >= 3.00x at N=4096, d=128");
+
+    let gflops_measured: Vec<(&str, f64)> = vec![
+        ("naive", gflops(&s_naive)),
+        ("blocked_fp32", gflops(&s_blocked)),
+        ("sage_b", gflops(&s_fp16)),
+        ("sage_vb", gflops(&s_int8)),
+    ];
+    let decode_tok_s: Vec<(&str, f64)> = vec![
+        ("full_requant", 1.0 / s_dec_full.median_s()),
+        ("prepared", 1.0 / s_dec_prep.median_s()),
+    ];
+    let ratios: Vec<(&str, f64)> =
+        vec![("blocked_over_naive", speedup), ("prepared_decode_speedup", dec_speedup)];
+
+    if let Some(path) = flags.get("check") {
+        check_baseline(path, &gflops_measured, &decode_tok_s, &ratios)?;
+    }
+    if let Some(path) = flags.get("update") {
+        update_baseline(path, b, h, n, d, &gflops_measured, &decode_tok_s, &ratios)?;
+    }
+    Ok(())
+}
+
+/// Assert the measured speedup ratios against the floors recorded in the
+/// checked-in baseline file. Ratios are machine-portable (both sides of
+/// each ratio run on the same machine), so they are the hard gate;
+/// recorded absolute GFLOPS / decode tok/s, when present, are compared
+/// informationally.
+fn check_baseline(
+    path: &str,
+    gflops: &[(&str, f64)],
+    decode_tok_s: &[(&str, f64)],
+    ratios: &[(&str, f64)],
+) -> Result<()> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading bench baseline {path}"))?;
+    let base = Json::parse(&text).with_context(|| format!("parsing {path}"))?;
+    let floors = base.get("floors").context("baseline missing 'floors'")?;
+    let floors = floors.as_obj().context("'floors' must be an object")?;
+    println!("\nbaseline check against {path}:");
+    let mut failed = Vec::new();
+    for (name, floor) in floors {
+        let floor = floor.as_f64().with_context(|| format!("floor '{name}' not a number"))?;
+        let Some(&(_, got)) = ratios.iter().find(|(r, _)| *r == name.as_str()) else {
+            sageattention::bail!("baseline floor '{name}' is not a measured ratio");
+        };
+        let ok = got >= floor;
+        println!(
+            "  {} {name}: measured {got:.2}x, floor {floor:.2}x",
+            if ok { "PASS" } else { "FAIL" }
+        );
+        if !ok {
+            failed.push(name.clone());
+        }
+    }
+    for (key, unit, measured) in
+        [("gflops", "GFLOPS", gflops), ("decode_tok_s", "tok/s", decode_tok_s)]
+    {
+        if let Some(Json::Obj(recorded)) = base.get(key) {
+            for (name, val) in recorded {
+                if let (Some(rec), Some(&(_, got))) =
+                    (val.as_f64(), measured.iter().find(|(m, _)| *m == name.as_str()))
+                {
+                    if rec > 0.0 {
+                        println!(
+                            "  info {key}.{name}: measured {got:.2} vs recorded {rec:.2} {unit}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+    ensure!(
+        failed.is_empty(),
+        "bench-hotpath regression: {} below baseline floor (see table above); \
+         rerun with --update {path} only if the slowdown is intended",
+        failed.join(", ")
+    );
+    println!("baseline check OK");
+    Ok(())
+}
+
+/// Rewrite the baseline file with measured numbers, preserving existing
+/// floors (floors are policy, measurements are evidence).
+fn update_baseline(
+    path: &str,
+    b: usize,
+    h: usize,
+    n: usize,
+    d: usize,
+    gflops: &[(&str, f64)],
+    decode_tok_s: &[(&str, f64)],
+    ratios: &[(&str, f64)],
+) -> Result<()> {
+    let existing_floors = std::fs::read_to_string(path)
+        .ok()
+        .and_then(|t| Json::parse(&t).ok())
+        .and_then(|j| j.get("floors").cloned());
+    let floors = existing_floors.unwrap_or_else(|| {
+        Json::obj(vec![
+            ("blocked_over_naive", Json::num(1.5)),
+            ("prepared_decode_speedup", Json::num(3.0)),
+        ])
+    });
+    let round2 = |x: f64| (x * 100.0).round() / 100.0;
+    let num_obj = |pairs: &[(&str, f64)]| {
+        Json::obj(pairs.iter().map(|&(k, v)| (k, Json::num(round2(v)))).collect())
+    };
+    let json = Json::obj(vec![
+        ("schema", Json::num(1.0)),
+        (
+            "shape",
+            Json::obj(vec![
+                ("batch", Json::num(b as f64)),
+                ("heads", Json::num(h as f64)),
+                ("seq", Json::num(n as f64)),
+                ("headdim", Json::num(d as f64)),
+            ]),
+        ),
+        ("floors", floors),
+        ("gflops", num_obj(gflops)),
+        ("decode_tok_s", num_obj(decode_tok_s)),
+        ("ratios", num_obj(ratios)),
+    ]);
+    std::fs::write(path, format!("{json}\n"))?;
+    println!("\nwrote {path}");
     Ok(())
 }

@@ -76,6 +76,16 @@ impl Fp8Format {
             Fp8Format::E5M2 => "E5M2",
         }
     }
+
+    /// Inverse of [`Fp8Format::name`] (case-insensitive, so CLI kernel
+    /// names like `fp8(e4m3,e4m3)` also resolve).
+    pub fn by_name(name: &str) -> Option<Fp8Format> {
+        match name.to_ascii_uppercase().as_str() {
+            "E4M3" => Some(Fp8Format::E4M3),
+            "E5M2" => Some(Fp8Format::E5M2),
+            _ => None,
+        }
+    }
 }
 
 #[cfg(test)]

@@ -10,7 +10,7 @@ pub use fp8::Fp8Format;
 pub const INT8_MAX: f32 = 127.0;
 /// INT4 range (paper §6 future work / SageAttention2): [-7, +7].
 pub const INT4_MAX: f32 = 7.0;
-const EPS: f32 = 1e-8;
+pub(crate) const EPS: f32 = 1e-8;
 
 /// Quantization granularity for Q/K (paper Table 6 rows).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -69,39 +69,59 @@ impl QuantizedPlane {
     }
 }
 
-fn amax(xs: &[f32]) -> f32 {
+pub(crate) fn amax(xs: &[f32]) -> f32 {
     xs.iter().fold(0.0f32, |m, &x| m.max(x.abs())).max(EPS)
 }
 
-fn quantize_rows(x: &[f32], rows: usize, cols: usize, row_scale: &[f32]) -> Vec<i8> {
-    let mut out = vec![0i8; rows * cols];
+fn quantize_rows_into(x: &[f32], rows: usize, cols: usize, row_scale: &[f32], out: &mut Vec<i8>) {
+    out.clear();
+    out.reserve(rows * cols);
     for r in 0..rows {
         let inv = 1.0 / row_scale[r];
         for c in 0..cols {
             let q = (x[r * cols + c] * inv).round();
-            out[r * cols + c] = q.clamp(-INT8_MAX, INT8_MAX) as i8;
+            out.push(q.clamp(-INT8_MAX, INT8_MAX) as i8);
         }
     }
-    out
+}
+
+/// ψ per-token into caller-owned buffers: one scale per row
+/// (δ = max|row| / 127). `data`/`scales` are cleared and refilled, so
+/// their capacity is retained across planes (the hot path's
+/// zero-allocation contract; see [`crate::attn::Scratch`]).
+pub fn quant_per_token_into(
+    x: &[f32],
+    rows: usize,
+    cols: usize,
+    data: &mut Vec<i8>,
+    scales: &mut Vec<f32>,
+) {
+    scales.clear();
+    scales.extend((0..rows).map(|r| amax(&x[r * cols..(r + 1) * cols]) / INT8_MAX));
+    quantize_rows_into(x, rows, cols, scales, data);
 }
 
 /// ψ per-token: one scale per row (δ = max|row| / 127).
 pub fn quant_per_token(x: &[f32], rows: usize, cols: usize) -> QuantizedPlane {
-    let scales: Vec<f32> =
-        (0..rows).map(|r| amax(&x[r * cols..(r + 1) * cols]) / INT8_MAX).collect();
-    QuantizedPlane {
-        data: quantize_rows(x, rows, cols, &scales),
-        scales,
-        rows,
-        cols,
-        granularity: Granularity::PerToken,
-    }
+    let (mut data, mut scales) = (Vec::new(), Vec::new());
+    quant_per_token_into(x, rows, cols, &mut data, &mut scales);
+    QuantizedPlane { data, scales, rows, cols, granularity: Granularity::PerToken }
 }
 
-/// ψ per-block: one scale per `block` consecutive rows, materialized
-/// per-row (block-constant) so consumers are granularity-agnostic.
-pub fn quant_per_block(x: &[f32], rows: usize, cols: usize, block: usize) -> QuantizedPlane {
-    let mut scales = vec![0.0f32; rows];
+/// ψ per-block into caller-owned buffers: one scale per `block`
+/// consecutive rows, materialized per-row (block-constant) so consumers
+/// are granularity-agnostic.
+pub fn quant_per_block_into(
+    x: &[f32],
+    rows: usize,
+    cols: usize,
+    block: usize,
+    data: &mut Vec<i8>,
+    scales: &mut Vec<f32>,
+) {
+    assert!(block > 0, "per-block quantization needs a non-zero block");
+    scales.clear();
+    scales.resize(rows, 0.0);
     let mut r0 = 0;
     while r0 < rows {
         let r1 = (r0 + block).min(rows);
@@ -109,30 +129,49 @@ pub fn quant_per_block(x: &[f32], rows: usize, cols: usize, block: usize) -> Qua
         scales[r0..r1].fill(s);
         r0 = r1;
     }
-    QuantizedPlane {
-        data: quantize_rows(x, rows, cols, &scales),
-        scales,
-        rows,
-        cols,
-        granularity: Granularity::PerBlock(block),
-    }
+    quantize_rows_into(x, rows, cols, scales, data);
+}
+
+/// ψ per-block: one scale per `block` consecutive rows.
+pub fn quant_per_block(x: &[f32], rows: usize, cols: usize, block: usize) -> QuantizedPlane {
+    let (mut data, mut scales) = (Vec::new(), Vec::new());
+    quant_per_block_into(x, rows, cols, block, &mut data, &mut scales);
+    QuantizedPlane { data, scales, rows, cols, granularity: Granularity::PerBlock(block) }
+}
+
+/// ψ per-tensor into caller-owned buffers: a single scale (stored per-row
+/// for uniform consumption).
+pub fn quant_per_tensor_into(
+    x: &[f32],
+    rows: usize,
+    cols: usize,
+    data: &mut Vec<i8>,
+    scales: &mut Vec<f32>,
+) {
+    let s = amax(x) / INT8_MAX;
+    scales.clear();
+    scales.resize(rows, s);
+    quantize_rows_into(x, rows, cols, scales, data);
 }
 
 /// ψ per-tensor: a single scale (stored per-row for uniform consumption).
 pub fn quant_per_tensor(x: &[f32], rows: usize, cols: usize) -> QuantizedPlane {
-    let s = amax(x) / INT8_MAX;
-    QuantizedPlane {
-        data: quantize_rows(x, rows, cols, &vec![s; rows]),
-        scales: vec![s; rows],
-        rows,
-        cols,
-        granularity: Granularity::PerTensor,
-    }
+    let (mut data, mut scales) = (Vec::new(), Vec::new());
+    quant_per_tensor_into(x, rows, cols, &mut data, &mut scales);
+    QuantizedPlane { data, scales, rows, cols, granularity: Granularity::PerTensor }
 }
 
-/// ψ per-channel: one scale per column (V in the -vT/-vB kernels).
-pub fn quant_per_channel(x: &[f32], rows: usize, cols: usize) -> QuantizedPlane {
-    let mut scales = vec![EPS; cols];
+/// ψ per-channel into caller-owned buffers: one scale per column (V in
+/// the -vT/-vB kernels); `scales` ends with length `cols`.
+pub fn quant_per_channel_into(
+    x: &[f32],
+    rows: usize,
+    cols: usize,
+    data: &mut Vec<i8>,
+    scales: &mut Vec<f32>,
+) {
+    scales.clear();
+    scales.resize(cols, EPS);
     for r in 0..rows {
         for c in 0..cols {
             scales[c] = scales[c].max(x[r * cols + c].abs());
@@ -141,13 +180,20 @@ pub fn quant_per_channel(x: &[f32], rows: usize, cols: usize) -> QuantizedPlane 
     for s in scales.iter_mut() {
         *s /= INT8_MAX;
     }
-    let mut data = vec![0i8; rows * cols];
+    data.clear();
+    data.reserve(rows * cols);
     for r in 0..rows {
         for c in 0..cols {
             let q = (x[r * cols + c] / scales[c]).round();
-            data[r * cols + c] = q.clamp(-INT8_MAX, INT8_MAX) as i8;
+            data.push(q.clamp(-INT8_MAX, INT8_MAX) as i8);
         }
     }
+}
+
+/// ψ per-channel: one scale per column (V in the -vT/-vB kernels).
+pub fn quant_per_channel(x: &[f32], rows: usize, cols: usize) -> QuantizedPlane {
+    let (mut data, mut scales) = (Vec::new(), Vec::new());
+    quant_per_channel_into(x, rows, cols, &mut data, &mut scales);
     QuantizedPlane { data, scales, rows, cols, granularity: Granularity::PerChannel }
 }
 
@@ -155,7 +201,7 @@ pub fn quant_per_channel(x: &[f32], rows: usize, cols: usize) -> QuantizedPlane 
 /// the ψ transform of paper §3.2 / Table 6.
 ///
 /// ```
-/// use sageattention::quant::{quantize, Granularity};
+/// use sageattention::quant::{quantize, quantize_into, Granularity};
 ///
 /// // a 2×4 plane (two tokens, four channels)
 /// let x = vec![0.5, -1.0, 2.0, -4.0, 0.25, 0.5, -0.125, 1.0];
@@ -170,13 +216,38 @@ pub fn quant_per_channel(x: &[f32], rows: usize, cols: usize) -> QuantizedPlane 
 ///         assert!(err <= 0.5 * q.scales[r] + 1e-6);
 ///     }
 /// }
+///
+/// // the hot path reuses caller-owned buffers instead (zero allocation
+/// // once the capacity is warm) — bit-identical to the allocating form
+/// let (mut data, mut scales) = (Vec::new(), Vec::new());
+/// quantize_into(&x, 2, 4, Granularity::PerToken, &mut data, &mut scales);
+/// assert_eq!(data, q.data);
+/// assert_eq!(scales, q.scales);
 /// ```
 pub fn quantize(x: &[f32], rows: usize, cols: usize, g: Granularity) -> QuantizedPlane {
+    let (mut data, mut scales) = (Vec::new(), Vec::new());
+    quantize_into(x, rows, cols, g, &mut data, &mut scales);
+    QuantizedPlane { data, scales, rows, cols, granularity: g }
+}
+
+/// [`quantize`] into caller-owned buffers: `data` and `scales` are
+/// cleared and refilled (capacity retained across planes), producing
+/// bit-identical results to the allocating form. This is how the blocked
+/// kernels keep their per-plane `QuantizedPlane` allocations inside
+/// [`crate::attn::Scratch`].
+pub fn quantize_into(
+    x: &[f32],
+    rows: usize,
+    cols: usize,
+    g: Granularity,
+    data: &mut Vec<i8>,
+    scales: &mut Vec<f32>,
+) {
     match g {
-        Granularity::PerTensor => quant_per_tensor(x, rows, cols),
-        Granularity::PerToken => quant_per_token(x, rows, cols),
-        Granularity::PerBlock(b) => quant_per_block(x, rows, cols, b),
-        Granularity::PerChannel => quant_per_channel(x, rows, cols),
+        Granularity::PerTensor => quant_per_tensor_into(x, rows, cols, data, scales),
+        Granularity::PerToken => quant_per_token_into(x, rows, cols, data, scales),
+        Granularity::PerBlock(b) => quant_per_block_into(x, rows, cols, b, data, scales),
+        Granularity::PerChannel => quant_per_channel_into(x, rows, cols, data, scales),
     }
 }
 
@@ -344,6 +415,26 @@ mod tests {
         let x = make_plane(10, 10, 4);
         let q = quant_per_tensor(&x, 10, 10);
         assert!(q.scales.iter().all(|&s| s == q.scales[0]));
+    }
+
+    #[test]
+    fn quantize_into_matches_allocating_variant() {
+        let (rows, cols) = (70, 24);
+        let x = make_plane(rows, cols, 7);
+        // dirty, over- and under-sized buffers must give identical bits
+        let mut data = vec![42i8; 3];
+        let mut scales = vec![-1.0f32; 4096];
+        for g in [
+            Granularity::PerTensor,
+            Granularity::PerToken,
+            Granularity::PerBlock(16),
+            Granularity::PerChannel,
+        ] {
+            let q = quantize(&x, rows, cols, g);
+            quantize_into(&x, rows, cols, g, &mut data, &mut scales);
+            assert_eq!(data, q.data, "{g:?}");
+            assert_eq!(scales, q.scales, "{g:?}");
+        }
     }
 
     #[test]

@@ -56,6 +56,22 @@ impl Tensor {
             shape: self.shape.clone(),
         }
     }
+
+    /// Copy rows `lo..hi` of the sequence axis (axis 2) of a (B, H, N, d)
+    /// tensor — the decode idiom for slicing a KV prefix or one query row.
+    pub fn narrow_n(&self, lo: usize, hi: usize) -> Tensor {
+        let (b, h, n, d) = self.dims4();
+        assert!(lo <= hi && hi <= n, "narrow_n {lo}..{hi} out of range for N={n}");
+        let rows = hi - lo;
+        let mut out = Tensor::zeros(&[b, h, rows, d]);
+        for bi in 0..b {
+            for hi_ in 0..h {
+                let src = &self.head(bi, hi_)[lo * d..hi * d];
+                out.head_mut(bi, hi_).copy_from_slice(src);
+            }
+        }
+        out
+    }
 }
 
 impl fmt::Debug for Tensor {

@@ -1,0 +1,190 @@
+//! Scenario tests for the `AttnSpec`/`PreparedKV` surface: the behaviors
+//! the unified API adds over the legacy `attention()` free function —
+//! GQA head grouping, sliding windows, the BNHD layout, softmax-scale
+//! overrides, and quantize-once decode state. Each test pins an exact
+//! equivalence (bitwise where the math guarantees it) rather than a
+//! loose cosine bound.
+
+use sageattention::attn::{AttnSpec, Layout, BLOCK_KV};
+use sageattention::metrics::cos_sim;
+use sageattention::synth::{make_qkv, Profile};
+use sageattention::tensor::Tensor;
+
+/// GQA must equal MHA with the KV heads explicitly repeated: query head
+/// `hi` reads KV head `hi / (h / h_kv)`, which is exactly what repeating
+/// each KV head `h / h_kv` times produces — same plane slices, same
+/// arithmetic, bit-identical output.
+#[test]
+fn gqa_equals_mha_with_repeated_kv_heads() {
+    let (b, h, h_kv, n, d) = (2usize, 4usize, 2usize, 96usize, 32usize);
+    let (q, _, _) = make_qkv(1, [b, h, n, d], Profile::llama_like());
+    let (_, k, v) = make_qkv(2, [b, h_kv, n, d], Profile::llama_like());
+
+    // repeat each KV head group times → an MHA-shaped K/V
+    let group = h / h_kv;
+    let repeat = |t: &Tensor| {
+        let mut out = Tensor::zeros(&[b, h, n, d]);
+        for bi in 0..b {
+            for hi in 0..h {
+                out.head_mut(bi, hi).copy_from_slice(t.head(bi, hi / group));
+            }
+        }
+        out
+    };
+    let k_rep = repeat(&k);
+    let v_rep = repeat(&v);
+
+    for name in ["SageAttn-B", "SageAttn-vT", "online", "fa3-fp8"] {
+        let spec = AttnSpec::by_name(name).unwrap().causal(true);
+        let gqa = spec.kv_heads(h_kv).run(&q, &k, &v).unwrap();
+        let mha = spec.run(&q, &k_rep, &v_rep).unwrap();
+        assert_eq!(gqa.data, mha.data, "{name}");
+        assert_eq!(gqa.shape, vec![b, h, n, d]);
+    }
+}
+
+/// A sliding window at least as wide as the KV sequence must be
+/// bit-identical to plain causal attention (every query's window already
+/// covers all its attendable keys).
+#[test]
+fn window_covering_sequence_equals_full_attention() {
+    let (q, k, v) = make_qkv(3, [1, 2, 150, 64], Profile::diffusion_like());
+    for name in ["SageAttn-B", "SageAttn-vB", "exact"] {
+        let spec = AttnSpec::by_name(name).unwrap().causal(true);
+        let full = spec.run(&q, &k, &v).unwrap();
+        let windowed = spec.window(150).run(&q, &k, &v).unwrap();
+        assert_eq!(full.data, windowed.data, "{name}");
+        // a narrow window genuinely changes the result
+        let narrow = spec.window(8).run(&q, &k, &v).unwrap();
+        assert_ne!(full.data, narrow.data, "{name} window had no effect");
+        assert!(narrow.data.iter().all(|x| x.is_finite()));
+    }
+}
+
+/// Running in BNHD layout must equal transposing, running in BHND, and
+/// transposing back — bit-identical, since the layout only changes how
+/// planes are gathered.
+#[test]
+fn bnhd_layout_round_trips_against_bhnd() {
+    let (b, h, n, d) = (2usize, 3usize, 70usize, 16usize);
+    let (q, k, v) = make_qkv(4, [b, h, n, d], Profile::vit_like());
+    // permute (B,H,N,d) → (B,N,H,d)
+    let to_bnhd = |t: &Tensor| {
+        let mut out = Tensor::zeros(&[b, n, h, d]);
+        for bi in 0..b {
+            for hi in 0..h {
+                for ni in 0..n {
+                    let src = &t.head(bi, hi)[ni * d..(ni + 1) * d];
+                    let dst = ((bi * n + ni) * h + hi) * d;
+                    out.data[dst..dst + d].copy_from_slice(src);
+                }
+            }
+        }
+        out
+    };
+    let (qb, kb, vb) = (to_bnhd(&q), to_bnhd(&k), to_bnhd(&v));
+    for name in ["SageAttn-T", "SageAttn-vB", "exact"] {
+        let bhnd = AttnSpec::by_name(name).unwrap().causal(true).run(&q, &k, &v).unwrap();
+        let bnhd = AttnSpec::by_name(name)
+            .unwrap()
+            .causal(true)
+            .layout(Layout::BNHD)
+            .run(&qb, &kb, &vb)
+            .unwrap();
+        assert_eq!(bnhd.shape, vec![b, n, h, d], "{name}");
+        assert_eq!(to_bnhd(&bhnd).data, bnhd.data, "{name}");
+    }
+}
+
+/// Incremental `PreparedKV::extend` must be bit-identical to one-shot
+/// preparation — state and outputs — across anchor/scale-group/V-block
+/// boundaries, for every prepared-capable kernel family.
+#[test]
+fn prepared_incremental_extend_is_bit_identical_to_oneshot() {
+    let (b, h, n, d) = (1usize, 2usize, 200usize, 32usize);
+    let (q, k, v) = make_qkv(5, [b, h, n, d], Profile::diffusion_like());
+    let n0 = 70; // not a multiple of BLOCK_KV (64) or BLOCK_Q (128)
+    assert_ne!(n0 % BLOCK_KV, 0);
+    for name in ["SageAttn-T", "SageAttn-B", "SageAttn-vT", "SageAttn-vB", "exact"] {
+        let spec = AttnSpec::by_name(name).unwrap().causal(true);
+        let oneshot = spec.prepare(&k, &v).unwrap();
+        // prefix + per-token growth (the decode pattern)
+        let mut inc = spec.prepare(&k.narrow_n(0, n0), &v.narrow_n(0, n0)).unwrap();
+        for t in n0..n {
+            inc.extend(&k.narrow_n(t, t + 1), &v.narrow_n(t, t + 1)).unwrap();
+        }
+        assert_eq!(oneshot, inc, "{name}: incremental state diverged");
+        // and from an empty prefix, in irregular chunks
+        let mut chunked = spec.prepare(&k.narrow_n(0, 0), &v.narrow_n(0, 0)).unwrap();
+        let mut t = 0;
+        for step in [1usize, 63, 64, 65, 7].iter().cycle() {
+            if t >= n {
+                break;
+            }
+            let e = (t + step).min(n);
+            chunked.extend(&k.narrow_n(t, e), &v.narrow_n(t, e)).unwrap();
+            t = e;
+        }
+        assert_eq!(oneshot, chunked, "{name}: chunked state diverged");
+        // identical state ⇒ identical outputs, for full and 1-row queries
+        let a = spec.run_prepared(&q, &oneshot).unwrap();
+        let bb = spec.run_prepared(&q, &inc).unwrap();
+        assert_eq!(a.data, bb.data, "{name}");
+    }
+}
+
+/// The prepared path must stay accurate (its smooth-K mean is anchored to
+/// the first KV block, which softmax invariance makes a pure quant-error
+/// tradeoff) and agree closely with the one-shot kernel.
+#[test]
+fn prepared_tracks_unprepared_and_exact() {
+    let (q, k, v) = make_qkv(6, [1, 2, 256, 64], Profile::diffusion_like());
+    let gold = AttnSpec::exact().run(&q, &k, &v).unwrap();
+    for (name, min_cos) in [("SageAttn-B", 0.999), ("SageAttn-vB", 0.99)] {
+        let spec = AttnSpec::by_name(name).unwrap();
+        let kv = spec.prepare(&k, &v).unwrap();
+        let prepared = spec.run_prepared(&q, &kv).unwrap();
+        let unprepared = spec.run(&q, &k, &v).unwrap();
+        let c_gold = cos_sim(&gold.data, &prepared.data);
+        let c_pair = cos_sim(&unprepared.data, &prepared.data);
+        assert!(c_gold > min_cos, "{name} vs exact: {c_gold}");
+        assert!(c_pair > 0.999, "{name} prepared vs one-shot: {c_pair}");
+    }
+}
+
+/// PreparedKV decode with GQA + sliding window composes: repeated query
+/// batches against one prepared prefix, grouped KV heads, causal window.
+#[test]
+fn prepared_decode_composes_with_gqa_and_window() {
+    let (b, h, h_kv, n, d) = (1usize, 4usize, 2usize, 160usize, 32usize);
+    let (q, _, _) = make_qkv(7, [b, h, n, d], Profile::llama_like());
+    let (_, k, v) = make_qkv(8, [b, h_kv, n, d], Profile::llama_like());
+    let spec = AttnSpec::sage_b().causal(true).window(96).kv_heads(h_kv);
+    let mut kv = spec.prepare(&k.narrow_n(0, n - 4), &v.narrow_n(0, n - 4)).unwrap();
+    for t in (n - 4)..n {
+        kv.extend(&k.narrow_n(t, t + 1), &v.narrow_n(t, t + 1)).unwrap();
+        let step = spec.run_prepared(&q.narrow_n(t, t + 1), &kv).unwrap();
+        assert_eq!(step.shape, vec![b, h, 1, d]);
+        assert!(step.data.iter().all(|x| x.is_finite()));
+    }
+    // whole-batch query against the full prepared state matches the
+    // bit-identical one-shot preparation
+    let oneshot = spec.prepare(&k, &v).unwrap();
+    assert_eq!(kv, oneshot);
+    let a = spec.run_prepared(&q, &kv).unwrap();
+    let bb = spec.run_prepared(&q, &oneshot).unwrap();
+    assert_eq!(a.data, bb.data);
+}
+
+/// sm_scale override: the default is 1/√d, and an explicit equal value
+/// is bit-identical; a different value changes the result.
+#[test]
+fn sm_scale_override_default_identity() {
+    let (q, k, v) = make_qkv(9, [1, 1, 64, 16], Profile::llama_like());
+    let spec = AttnSpec::sage_t();
+    let default = spec.run(&q, &k, &v).unwrap();
+    let explicit = spec.sm_scale(1.0 / (16f32).sqrt()).run(&q, &k, &v).unwrap();
+    assert_eq!(default.data, explicit.data);
+    let sharper = spec.sm_scale(0.5).run(&q, &k, &v).unwrap();
+    assert_ne!(default.data, sharper.data);
+}

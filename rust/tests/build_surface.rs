@@ -6,9 +6,10 @@
 
 use sageattention::adaptive::{Plan, COS_THRESHOLD};
 use sageattention::attn::{
-    attention, attention_dtype_sim, exact_plane, online_plane, online_plane_with, sage_plane,
-    sage_plane_naive, sage_plane_with, AttnImpl, Fmt, PvMode, Scratch, BLOCK_KV, BLOCK_Q,
-    MAX_HEAD_DIM, SAGE_B, SAGE_T, SAGE_VB, SAGE_VT,
+    attention_dtype_sim, exact_plane, online_plane, online_plane_with, registry, sage_plane,
+    sage_plane_naive, sage_plane_opt, sage_plane_with, AttnImpl, AttnSpec, Fmt, Layout,
+    PlaneOpts, PreparedKV, PvMode, Scratch, BLOCK_KV, BLOCK_Q, MAX_HEAD_DIM, SAGE_B, SAGE_T,
+    SAGE_VB, SAGE_VT,
 };
 use sageattention::bench::{f1, f2, f3, f4, pct, sci, Table};
 use sageattention::coordinator::{
@@ -20,7 +21,8 @@ use sageattention::perfmodel::{
     predict, predict_tops, AttnKernel, Workpoint, RTX3090, RTX4090,
 };
 use sageattention::quant::{
-    fake_quant, quantize, smooth_k, FakeQuant, Fp8Format, Granularity, QuantizedPlane,
+    fake_quant, quantize, quantize_into, smooth_k, FakeQuant, Fp8Format, Granularity,
+    QuantizedPlane,
 };
 use sageattention::runtime::{Manifest, Value};
 use sageattention::synth::{make_qkv, Corpus, Profile, WorkloadGen};
@@ -31,7 +33,8 @@ use sageattention::util::json::Json;
 use sageattention::util::rng::Pcg32;
 
 /// Every `AttnImpl` variant constructs, names itself, and produces finite
-/// output on a small plane; the named variants round-trip `by_name`.
+/// output on a small plane; the named variants round-trip `by_name`; the
+/// deprecated `attention` shim agrees with `AttnSpec`.
 #[test]
 fn attn_impl_variants_construct_and_run() {
     let (q, k, v) = make_qkv(11, [1, 2, 96, 32], Profile::llama_like());
@@ -50,9 +53,13 @@ fn attn_impl_variants_construct_and_run() {
         AttnImpl::Fp8 { qk: Fp8Format::E4M3, pv: Fp8Format::E5M2 },
     ];
     for imp in impls {
-        let o = attention(&q, &k, &v, imp, false);
+        let o = AttnSpec::new(imp).run(&q, &k, &v).unwrap();
         assert_eq!(o.shape, vec![1, 2, 96, 32]);
         assert!(o.data.iter().all(|x| x.is_finite()), "{} not finite", imp.name());
+        // the legacy shim stays exported and bit-identical
+        #[allow(deprecated)]
+        let legacy = sageattention::attn::attention(&q, &k, &v, imp, false);
+        assert_eq!(o.data, legacy.data, "{}", imp.name());
     }
     for name in ["exact", "online", "SageAttn-T", "SageAttn-B", "SageAttn-vT", "SageAttn-vB"] {
         let imp = AttnImpl::by_name(name).expect(name);
@@ -60,6 +67,60 @@ fn attn_impl_variants_construct_and_run() {
     }
     assert!(AttnImpl::by_name("no-such-kernel").is_none());
     assert!(BLOCK_Q >= BLOCK_KV && MAX_HEAD_DIM >= 128);
+}
+
+/// The `attn::api` surface: spec builder, layouts, registry and
+/// PreparedKV all stay exported and functional.
+#[test]
+fn attn_api_surface() {
+    let (q, k, v) = make_qkv(12, [1, 2, 80, 32], Profile::llama_like());
+    // builder options compose; Layout variants construct
+    let spec = AttnSpec::sage_b()
+        .layout(Layout::BHND)
+        .causal(true)
+        .window(64)
+        .sm_scale(1.0 / 32f32.sqrt());
+    let o = spec.run(&q, &k, &v).unwrap();
+    assert_eq!(o.shape, q.shape);
+    assert_eq!(spec.kernel_name(), "SageAttn-B");
+    let _ = Layout::BNHD;
+
+    // registry: entries enumerate, resolve, and auto-dispatch
+    assert!(registry::entries().len() >= 7);
+    assert!(registry::find("SageAttn-B").is_some());
+    assert_eq!(registry::resolve("SageAttn-B"), Some(SAGE_B));
+    let req = registry::KernelReq { head_dim: 32, ..Default::default() };
+    assert!(registry::auto(&req).is_some());
+    assert!(registry::supports(&SAGE_B, &req));
+    assert!(registry::plan_entry("sage").is_some());
+
+    // PreparedKV: prepare/extend/run_prepared round-trip
+    let spec = AttnSpec::sage_t();
+    let mut kv: PreparedKV = spec.prepare(&k.narrow_n(0, 79), &v.narrow_n(0, 79)).unwrap();
+    kv.extend(&k.narrow_n(79, 80), &v.narrow_n(79, 80)).unwrap();
+    assert_eq!(kv.n_kv(), 80);
+    assert_eq!((kv.batch(), kv.kv_heads(), kv.head_dim()), (1, 2, 32));
+    assert_eq!(kv.kernel(), SAGE_T);
+    let o = spec.run_prepared(&q, &kv).unwrap();
+    assert_eq!(o.shape, q.shape);
+
+    // PlaneOpts + the *_opt plane kernels stay exported
+    let mut scratch = Scratch::new();
+    let opts = PlaneOpts { causal: true, window: Some(16), sm_scale: None };
+    let plane = sage_plane_opt(
+        &mut scratch,
+        q.head(0, 0),
+        k.head(0, 0),
+        v.head(0, 0),
+        80,
+        80,
+        32,
+        Granularity::PerToken,
+        PvMode::Fp16Accum,
+        true,
+        opts,
+    );
+    assert!(plane.iter().all(|x| x.is_finite()));
 }
 
 /// Every `Granularity` quantizes and dequantizes within half a step.
@@ -77,6 +138,10 @@ fn quantized_plane_roundtrips_every_granularity() {
         let q: QuantizedPlane = quantize(&x, rows, cols, g);
         assert_eq!(q.granularity, g);
         assert_eq!(q.data.len(), rows * cols);
+        // the buffer-reusing variant stays exported and bit-identical
+        let (mut data, mut scales) = (Vec::new(), Vec::new());
+        quantize_into(&x, rows, cols, g, &mut data, &mut scales);
+        assert_eq!((data, scales), (q.data.clone(), q.scales.clone()));
         let deq = q.dequant();
         let max_scale = q.scales.iter().cloned().fold(0.0f32, f32::max);
         for (a, b) in x.iter().zip(&deq) {

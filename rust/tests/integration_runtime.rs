@@ -2,7 +2,7 @@
 //! executes the jax-lowered computations and checks them against the
 //! rust-native numerics substrate. Requires `make artifacts` to have run.
 
-use sageattention::attn::{attention, AttnImpl};
+use sageattention::attn::AttnSpec;
 use sageattention::coordinator::{
     BatchPolicy, Batcher, Engine, GenParams, KvCacheManager, Request, Scheduler,
 };
@@ -18,19 +18,19 @@ fn runtime() -> Runtime {
 #[ignore = "requires PJRT + AOT artifacts (make artifacts); the offline build links the runtime::pjrt stub, which cannot execute HLO"]
 fn attention_artifacts_match_native_reference() {
     let rt = runtime();
-    for (name, imp, min_cos) in [
-        ("attn_exact_1x2x256x64", AttnImpl::Exact, 0.99999),
-        ("attn_sage_t_1x2x256x64", AttnImpl::by_name("SageAttn-T").unwrap(), 0.999),
-        ("attn_sage_b_1x2x256x64", AttnImpl::by_name("SageAttn-B").unwrap(), 0.999),
-        ("attn_sage_vt_1x2x256x64", AttnImpl::by_name("SageAttn-vT").unwrap(), 0.995),
-        ("attn_sage_vb_1x2x256x64", AttnImpl::by_name("SageAttn-vB").unwrap(), 0.995),
+    for (name, kernel, min_cos) in [
+        ("attn_exact_1x2x256x64", "exact", 0.99999),
+        ("attn_sage_t_1x2x256x64", "SageAttn-T", 0.999),
+        ("attn_sage_b_1x2x256x64", "SageAttn-B", 0.999),
+        ("attn_sage_vt_1x2x256x64", "SageAttn-vT", 0.995),
+        ("attn_sage_vb_1x2x256x64", "SageAttn-vB", 0.995),
     ] {
         let art = rt.load(name).unwrap();
         let (q, k, v) = make_qkv(7, [1, 2, 256, 64], Profile::diffusion_like());
         let out = art
             .run(&[Value::from_tensor(&q), Value::from_tensor(&k), Value::from_tensor(&v)])
             .unwrap();
-        let native = attention(&q, &k, &v, imp, false);
+        let native = AttnSpec::by_name(kernel).unwrap().run(&q, &k, &v).unwrap();
         let acc = accuracy(&native.data, out[0].as_f32().unwrap());
         assert!(
             acc.cos_sim > min_cos,
@@ -49,7 +49,7 @@ fn causal_artifacts_respect_masking() {
     let out = art
         .run(&[Value::from_tensor(&q), Value::from_tensor(&k), Value::from_tensor(&v)])
         .unwrap();
-    let gold = attention(&q, &k, &v, AttnImpl::Exact, true);
+    let gold = AttnSpec::exact().causal(true).run(&q, &k, &v).unwrap();
     let acc = accuracy(&gold.data, out[0].as_f32().unwrap());
     assert!(acc.cos_sim > 0.999, "causal cos {}", acc.cos_sim);
 }

@@ -1,7 +1,7 @@
 //! Randomized invariant tests over the coordinator substrates (the
 //! proptest-shaped suite; see `sageattention::testing` for the harness).
 
-use sageattention::attn::{attention, AttnImpl, SAGE_B, SAGE_T, SAGE_VB, SAGE_VT};
+use sageattention::attn::AttnSpec;
 use sageattention::coordinator::kv_cache::KvCacheManager;
 use sageattention::coordinator::{BatchPolicy, Batcher, GenParams, Request};
 use sageattention::metrics::cos_sim;
@@ -140,7 +140,7 @@ fn prop_smooth_k_preserves_softmax() {
         let [b, h, n, d] = gen::attn_shape(rng);
         let n = n.max(2);
         let (q, k, v) = make_qkv(rng.next_u64(), [b, h, n, d], Profile::diffusion_like());
-        let o1 = attention(&q, &k, &v, AttnImpl::Exact, false);
+        let o1 = AttnSpec::exact().run(&q, &k, &v).unwrap();
         // smooth every (b,h) plane of K, then run exact attention
         let mut k2 = k.clone();
         for bi in 0..b {
@@ -149,7 +149,7 @@ fn prop_smooth_k_preserves_softmax() {
                 k2.head_mut(bi, hi).copy_from_slice(&sm);
             }
         }
-        let o2 = attention(&q, &k2, &v, AttnImpl::Exact, false);
+        let o2 = AttnSpec::exact().run(&q, &k2, &v).unwrap();
         let c = cos_sim(&o1.data, &o2.data);
         assert!(c > 0.99999, "smoothing changed attention: cos {c}");
     });
@@ -162,12 +162,12 @@ fn prop_sage_variants_finite_and_close_over_shapes() {
         let n = n.max(4);
         let causal = rng.bernoulli(0.5);
         let (q, k, v) = make_qkv(rng.next_u64(), [b, h, n, d], Profile::vit_like());
-        let gold = attention(&q, &k, &v, AttnImpl::Exact, causal);
-        for imp in [SAGE_T, SAGE_B, SAGE_VT, SAGE_VB] {
-            let o = attention(&q, &k, &v, imp, causal);
-            assert!(o.data.iter().all(|x| x.is_finite()), "{}", imp.name());
+        let gold = AttnSpec::exact().causal(causal).run(&q, &k, &v).unwrap();
+        for name in ["SageAttn-T", "SageAttn-B", "SageAttn-vT", "SageAttn-vB"] {
+            let o = AttnSpec::by_name(name).unwrap().causal(causal).run(&q, &k, &v).unwrap();
+            assert!(o.data.iter().all(|x| x.is_finite()), "{name}");
             let c = cos_sim(&gold.data, &o.data);
-            assert!(c > 0.97, "{} cos {c} at {:?}", imp.name(), [b, h, n, d]);
+            assert!(c > 0.97, "{name} cos {c} at {:?}", [b, h, n, d]);
         }
     });
 }
