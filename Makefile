@@ -1,9 +1,12 @@
 # One-shot local gates for the SageAttention reproduction.
 #
-#   make verify          tier-1 (release build + tests) plus the format gate
-#                        and the bench-hotpath no-regression check against
-#                        the checked-in bench_baseline.json (speedup floors:
-#                        blocked-vs-naive and PreparedKV decode)
+#   make verify          tier-1 (release build + tests) plus the format gate,
+#                        the native-backend serve smoke (end-to-end decode
+#                        with zero PJRT; fails on panic/nonzero exit), and
+#                        the bench-hotpath no-regression check against the
+#                        checked-in bench_baseline.json (speedup floors:
+#                        blocked-vs-naive, PreparedKV decode, serve-decode;
+#                        tab09 kernel-accuracy cosine floors)
 #   make build           release build only
 #   make test            test suite only
 #   make fmt             rewrite sources with rustfmt
@@ -15,6 +18,7 @@
 
 verify:
 	cargo build --release && cargo test -q && cargo fmt --check
+	./target/release/sage serve --backend native --requests 8
 	./target/release/sage bench-hotpath --secs 1 --check bench_baseline.json
 
 build:

@@ -10,7 +10,7 @@
 //! (config "small" ≈ 6M params; "tiny" for a fast smoke run)
 
 use sageattention::bench::{f4, Table};
-use sageattention::coordinator::{Engine, GenParams, Request};
+use sageattention::coordinator::{Engine, GenParams, KvCacheManager, Request};
 use sageattention::runtime::{Runtime, Value};
 use sageattention::synth::Corpus;
 
@@ -107,17 +107,21 @@ fn main() -> anyhow::Result<()> {
     let mut gens: Vec<Vec<i32>> = Vec::new();
     for plan in ["fp", "sage"] {
         let mut engine = Engine::new(&rt, &config, plan, 0)?;
+        let mut kv = KvCacheManager::new(256, 16);
         engine.set_params(trained.clone())?;
         let sizes = engine.prefill_sizes();
         let mut prompt_corpus = Corpus::new(cfg.vocab, 4242);
         let prompt = prompt_corpus.batch(1, sizes[0]);
-        engine.add_request(&Request::new(
-            1,
-            prompt,
-            GenParams { max_new_tokens: 24, ..Default::default() },
-        ))?;
+        engine.add_request(
+            &Request::new(
+                1,
+                prompt,
+                GenParams { max_new_tokens: 24, ..Default::default() },
+            ),
+            &mut kv,
+        )?;
         loop {
-            let done = engine.step()?;
+            let done = engine.step(&mut kv)?.finished;
             if let Some(r) = done.into_iter().next() {
                 gens.push(r.tokens);
                 break;

@@ -59,7 +59,7 @@ fn run_plan(
         }
     }
     let wall = t0.elapsed().as_secs_f64();
-    let occupancy = sched.engine.stats.mean_occupancy();
+    let occupancy = sched.engine.stats().mean_occupancy();
     let report = sched.into_report(wall);
     let mut outs: Vec<Vec<i32>> = Vec::new();
     let mut sorted = report.responses.clone();

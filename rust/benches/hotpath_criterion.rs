@@ -5,7 +5,7 @@
 
 use sageattention::attn::AttnSpec;
 use sageattention::bench::{bench_budget, Table};
-use sageattention::coordinator::{Engine, GenParams, Request};
+use sageattention::coordinator::{Engine, GenParams, KvCacheManager, Request};
 use sageattention::quant::{self, Granularity};
 use sageattention::runtime::{Runtime, Value};
 use sageattention::synth::{make_qkv, Profile};
@@ -76,23 +76,27 @@ fn main() {
                 }));
             }
             if let Ok(mut engine) = Engine::new(&rt, "tiny", "sage", 1) {
+                let mut kv = KvCacheManager::new(256, 16);
                 let sizes = engine.prefill_sizes();
                 let mut next_id = 0u64;
-                let mut refill = |engine: &mut Engine| {
+                let mut refill = |engine: &mut Engine, kv: &mut KvCacheManager| {
                     while engine.free_slots() > 0 {
-                        let _ = engine.add_request(&Request::new(
-                            next_id,
-                            vec![1; sizes[0]],
-                            GenParams { max_new_tokens: 64, ..Default::default() },
-                        ));
+                        let _ = engine.add_request(
+                            &Request::new(
+                                next_id,
+                                vec![1; sizes[0]],
+                                GenParams { max_new_tokens: 64, ..Default::default() },
+                            ),
+                            kv,
+                        );
                         next_id += 1;
                     }
                 };
-                refill(&mut engine);
+                refill(&mut engine, &mut kv);
                 push(bench_budget("engine/decode-step tiny b2", budget, 5, || {
                     // keep the decode batch full so every step is full-width
-                    std::hint::black_box(engine.step().unwrap());
-                    refill(&mut engine);
+                    std::hint::black_box(engine.step(&mut kv).unwrap());
+                    refill(&mut engine, &mut kv);
                 }));
             }
         }

@@ -23,6 +23,7 @@ pub mod registry;
 
 pub use api::{AttnSpec, Layout, PreparedKV};
 pub use dtype_sim::{attention_dtype_sim, qk_product_dtype_sim, Fmt};
+pub use prepared::{gather_raw, KvPage, PagedSegment, PAGE_ROWS};
 pub use plane::{
     exact_plane, exact_plane_opt, fp8_plane, fp8_plane_opt, online_plane, online_plane_opt,
     online_plane_with, sage_plane, sage_plane_naive, sage_plane_opt, sage_plane_with, PlaneOpts,

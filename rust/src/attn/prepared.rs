@@ -26,12 +26,20 @@
 //! `tests/api_scenarios.rs` pins down.
 
 use crate::quant::{self, Granularity};
+use crate::util::error::Result;
 use crate::util::f16::round_f16_slice;
 
-use super::plane::{dot_i8, PlaneOpts, Scratch};
+use super::plane::{self, dot_i8, PlaneOpts, Scratch};
+use super::registry::{self, KernelReq};
 use super::{AttnImpl, PvMode, BLOCK_KV, BLOCK_Q};
 
 const NEG_BIG: f32 = -1e30;
+
+/// Rows per physical KV page — fixed at [`BLOCK_KV`], the granularity at
+/// which the kernel's K tiles and per-channel V scales (§4.3–§4.4) are
+/// already block-local, so a page never shares quantization state with
+/// its neighbours and the paged kernel maps tiles to pages 1:1.
+pub const PAGE_ROWS: usize = BLOCK_KV;
 
 /// Prepared (quantize-once) state of one (batch, kv-head) KV plane.
 #[derive(Clone, Debug, PartialEq)]
@@ -359,6 +367,451 @@ pub(crate) fn sage_plane_prepared(
     out
 }
 
+// ---------------------------------------------------------------------------
+// Paged (random-access) surface: the serving cache's physical blocks
+// ---------------------------------------------------------------------------
+
+/// One fixed-size physical page ([`PAGE_ROWS`] rows) of one
+/// (layer, kv-head) KV plane — the payload a serving block owns.
+///
+/// A page carries everything the paper's §3 quantize-once pipeline
+/// derives for its rows: the raw fp32 rows (requant source and
+/// full-precision fallback), the smoothed INT8 K rows with their per-row
+/// scales (per-token or block-constant, §4.2–§4.3), and the P·V-mode V
+/// representation — per-channel INT8 scales covering exactly this page
+/// (§4.4) or fp16-rounded rows. All of it is page-local (plus the
+/// segment's frozen smooth-K anchor), which is what makes fixed-size
+/// paging possible without cross-page requantization.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct KvPage {
+    pub(crate) k_raw: Vec<f32>,
+    pub(crate) v_raw: Vec<f32>,
+    pub(crate) k_i8: Vec<i8>,
+    pub(crate) k_scales: Vec<f32>,
+    pub(crate) v_i8: Vec<i8>,
+    pub(crate) v_scales: Vec<f32>,
+    pub(crate) v_f16: Vec<f32>,
+}
+
+impl KvPage {
+    pub fn new() -> KvPage {
+        KvPage::default()
+    }
+
+    /// KV rows currently resident in this page.
+    pub fn rows(&self, d: usize) -> usize {
+        debug_assert_eq!(self.k_raw.len() % d, 0);
+        self.k_raw.len() / d
+    }
+
+    /// Resident payload size in bytes (telemetry).
+    pub fn payload_bytes(&self) -> usize {
+        (self.k_raw.len() + self.v_raw.len() + self.v_f16.len()) * 4
+            + (self.k_scales.len() + self.v_scales.len()) * 4
+            + self.k_i8.len()
+            + self.v_i8.len()
+    }
+}
+
+/// Per-(layer, kv-head) metadata of a KV plane whose rows live in
+/// externally-owned [`KvPage`]s — the paged counterpart of
+/// [`crate::attn::PreparedKV`]'s planes. The segment holds only O(d)
+/// state (the frozen §4.2 smooth-K anchor and the row count); every
+/// per-row quantity sits in the pages, resolved through whatever block
+/// table the caller maintains.
+///
+/// [`PagedSegment::append`] mirrors the `PreparedKV` append contract:
+/// one-shot building and row-by-row growth are bit-identical, and each
+/// append requantizes at most the trailing partial scale group / page.
+/// [`PagedSegment::run`] is bit-identical to
+/// [`crate::attn::AttnSpec::run_prepared`] on the same rows (the
+/// serving acceptance invariant; see `tests/native_serving.rs`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct PagedSegment {
+    imp: AttnImpl,
+    d: usize,
+    n: usize,
+    /// Anchored per-channel smooth-K mean (frozen after the first page).
+    kmean: Vec<f32>,
+    anchor_rows: usize,
+}
+
+impl PagedSegment {
+    /// Build an empty segment for head dim `d` quantized for `imp`.
+    /// Rejects kernels without a quantize-once state (FP8, per-tensor /
+    /// per-channel Q/K) exactly like [`crate::attn::AttnSpec::prepare`].
+    pub fn new(d: usize, imp: AttnImpl) -> Result<PagedSegment> {
+        let req = KernelReq { head_dim: d, prepared: true, ..Default::default() };
+        crate::ensure!(
+            registry::supports(&imp, &req),
+            "kernel '{}' has no quantize-once state to page",
+            imp.name()
+        );
+        Ok(PagedSegment { imp, d, n: 0, kmean: vec![0.0; d], anchor_rows: 0 })
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    pub fn head_dim(&self) -> usize {
+        self.d
+    }
+
+    pub fn kernel(&self) -> AttnImpl {
+        self.imp
+    }
+
+    /// Pages needed to hold `rows` KV rows.
+    pub fn pages_for(rows: usize) -> usize {
+        rows.div_ceil(PAGE_ROWS)
+    }
+
+    /// Append new K/V rows (row-major, `rows × d` each) into `pages`,
+    /// requantizing only the bounded suffix they can affect. `pages`
+    /// must be the segment's pages in block-table order with capacity
+    /// for the new rows; the same take-append-put sequence of calls is
+    /// bit-identical to a single one-shot append (the `PreparedKV`
+    /// invariant, per-page).
+    pub fn append(&mut self, pages: &mut [KvPage], k_rows: &[f32], v_rows: &[f32]) {
+        let d = self.d;
+        debug_assert_eq!(k_rows.len() % d, 0);
+        debug_assert_eq!(k_rows.len(), v_rows.len());
+        let rows_new = k_rows.len() / d;
+        let n_old = self.n;
+        assert!(
+            pages.len() * PAGE_ROWS >= n_old + rows_new,
+            "segment append overflows the page table: {} pages for {} rows",
+            pages.len(),
+            n_old + rows_new
+        );
+        for i in 0..rows_new {
+            let r = n_old + i;
+            let pg = &mut pages[r / PAGE_ROWS];
+            debug_assert_eq!(pg.k_raw.len(), (r % PAGE_ROWS) * d, "page row misalignment");
+            pg.k_raw.extend_from_slice(&k_rows[i * d..(i + 1) * d]);
+            pg.v_raw.extend_from_slice(&v_rows[i * d..(i + 1) * d]);
+        }
+        self.n += rows_new;
+
+        let AttnImpl::Sage { qk, pv, smooth_k } = self.imp else {
+            // fp32 references run straight off the raw page rows
+            return;
+        };
+        let group = match qk {
+            Granularity::PerToken => 1,
+            Granularity::PerBlock(b) => b,
+            _ => unreachable!("unsupported paged Q/K granularity {qk:?}"),
+        };
+
+        // anchored smooth-K mean: recomputable only while the anchor is
+        // still growing (n < PAGE_ROWS), i.e. entirely within page 0
+        let mut from_k = n_old - n_old % group;
+        if smooth_k && self.anchor_rows < BLOCK_KV.min(self.n) {
+            self.anchor_rows = BLOCK_KV.min(self.n);
+            self.kmean.iter_mut().for_each(|m| *m = 0.0);
+            for r in 0..self.anchor_rows {
+                for c in 0..d {
+                    self.kmean[c] += pages[0].k_raw[r * d + c];
+                }
+            }
+            for m in self.kmean.iter_mut() {
+                *m /= self.anchor_rows as f32;
+            }
+            from_k = 0;
+        }
+        self.requant_k_from(pages, from_k, group);
+
+        let from_v = match pv {
+            PvMode::Int8 => n_old - n_old % BLOCK_KV,
+            _ => n_old,
+        };
+        self.requant_v_from(pages, from_v, pv);
+    }
+
+    /// Rebuild INT8 K data/scales for rows `from..n` across the pages
+    /// (`from` on a scale-group boundary) — the paged mirror of
+    /// `PreparedPlane::requant_k_from`, gathering each group's raw rows
+    /// through the page table and scattering the ψ output back.
+    fn requant_k_from(&mut self, pages: &mut [KvPage], from: usize, group: usize) {
+        let d = self.d;
+        debug_assert_eq!(from % group, 0, "requant must start on a scale-group boundary");
+        let first_pg = from / PAGE_ROWS;
+        for (pi, pg) in pages.iter_mut().enumerate().skip(first_pg) {
+            let local = if pi == first_pg { from % PAGE_ROWS } else { 0 };
+            pg.k_i8.truncate(local * d);
+            pg.k_scales.truncate(local);
+        }
+        let mut buf = Vec::with_capacity(group.min(self.n - from) * d);
+        let (mut data, mut scales) = (Vec::new(), Vec::new());
+        let mut g0 = from;
+        while g0 < self.n {
+            let g1 = (g0 + group).min(self.n);
+            buf.clear();
+            for r in g0..g1 {
+                let kr = &pages[r / PAGE_ROWS].k_raw[(r % PAGE_ROWS) * d..];
+                for c in 0..d {
+                    buf.push(kr[c] - self.kmean[c]);
+                }
+            }
+            quant::quant_per_tensor_into(&buf, g1 - g0, d, &mut data, &mut scales);
+            for (i, r) in (g0..g1).enumerate() {
+                let pg = &mut pages[r / PAGE_ROWS];
+                debug_assert_eq!(pg.k_i8.len(), (r % PAGE_ROWS) * d);
+                pg.k_i8.extend_from_slice(&data[i * d..(i + 1) * d]);
+                pg.k_scales.push(scales[i]);
+            }
+            g0 = g1;
+        }
+    }
+
+    /// Rebuild the V representation for rows `from..n`. Int8 mode
+    /// requantizes whole pages (per-channel scales are per page, so
+    /// `from` sits on a page boundary); fp16 modes round only new rows.
+    fn requant_v_from(&mut self, pages: &mut [KvPage], from: usize, pv: PvMode) {
+        let d = self.d;
+        match pv {
+            PvMode::Int8 => {
+                debug_assert_eq!(from % PAGE_ROWS, 0);
+                let mut p0 = from / PAGE_ROWS;
+                while p0 * PAGE_ROWS < self.n {
+                    let rows = (self.n - p0 * PAGE_ROWS).min(PAGE_ROWS);
+                    let KvPage { v_raw, v_i8, v_scales, .. } = &mut pages[p0];
+                    quant::quant_per_channel_into(&v_raw[..rows * d], rows, d, v_i8, v_scales);
+                    p0 += 1;
+                }
+            }
+            _ => {
+                let first_pg = from / PAGE_ROWS;
+                for (pi, pg) in pages.iter_mut().enumerate().skip(first_pg) {
+                    let local = if pi == first_pg { from % PAGE_ROWS } else { 0 };
+                    let KvPage { v_raw, v_f16, .. } = pg;
+                    v_f16.truncate(local * d);
+                    v_f16.extend_from_slice(&v_raw[local * d..]);
+                    round_f16_slice(&mut v_f16[local * d..]);
+                }
+            }
+        }
+    }
+
+    /// Run attention for `n_q` query rows against the paged rows —
+    /// bit-identical to [`sage_plane_prepared`] on the equivalent
+    /// contiguous state. `pages` is the block table's resolution of this
+    /// segment's physical pages, in order.
+    pub fn run(
+        &self,
+        scratch: &mut Scratch,
+        q: &[f32],
+        n_q: usize,
+        pages: &[&KvPage],
+        opts: PlaneOpts,
+    ) -> Vec<f32> {
+        debug_assert!(pages.len() * PAGE_ROWS >= self.n);
+        match self.imp {
+            AttnImpl::Sage { qk, pv, .. } => {
+                sage_plane_paged(scratch, q, pages, n_q, self.n, self.d, qk, pv, opts)
+            }
+            AttnImpl::Exact => {
+                let (k, v) = gather_raw(pages, self.n, self.d);
+                plane::exact_plane_opt(q, &k, &v, n_q, self.n, self.d, opts)
+            }
+            AttnImpl::OnlineFp32 => {
+                let (k, v) = gather_raw(pages, self.n, self.d);
+                plane::online_plane_opt(scratch, q, &k, &v, n_q, self.n, self.d, opts)
+            }
+            AttnImpl::Fp8 { .. } => unreachable!("fp8 rejected by PagedSegment::new"),
+        }
+    }
+}
+
+/// Concatenate the raw fp32 K/V rows of a paged plane (full-precision
+/// fallback path, and the requant-every-step serving baseline).
+pub fn gather_raw(pages: &[&KvPage], n: usize, d: usize) -> (Vec<f32>, Vec<f32>) {
+    let mut k = Vec::with_capacity(n * d);
+    let mut v = Vec::with_capacity(n * d);
+    let mut r = 0;
+    for pg in pages {
+        if r >= n {
+            break;
+        }
+        let take = (n - r).min(PAGE_ROWS) * d;
+        k.extend_from_slice(&pg.k_raw[..take]);
+        v.extend_from_slice(&pg.v_raw[..take]);
+        r += PAGE_ROWS;
+    }
+    (k, v)
+}
+
+/// [`sage_plane_prepared`] over paged KV state: identical arithmetic,
+/// with each BLOCK_KV tile resolved to its physical page (tiles and
+/// pages coincide because [`PAGE_ROWS`] == [`BLOCK_KV`]), so the decode
+/// hot path reads quantized rows through the block table without ever
+/// materializing a contiguous plane.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn sage_plane_paged(
+    scratch: &mut Scratch,
+    q: &[f32],
+    pages: &[&KvPage],
+    n_q: usize,
+    n_kv: usize,
+    d: usize,
+    qk_gran: Granularity,
+    pv: PvMode,
+    opts: PlaneOpts,
+) -> Vec<f32> {
+    assert!(
+        qk_gran != Granularity::PerChannel && qk_gran != Granularity::PerTensor,
+        "paged KV supports PerToken/PerBlock Q/K granularity"
+    );
+    scratch.ensure_head_dim(d);
+    let Scratch { s, p_i8, m, l, acc, p16, part, acc_i32, qbuf, q_i8, q_scales, .. } = scratch;
+
+    let scale = opts.scale(d);
+    qbuf.clear();
+    qbuf.extend(q.iter().map(|&x| x * scale));
+    quant::quantize_into(qbuf, n_q, d, qk_gran, q_i8, q_scales);
+
+    let mut out = vec![0.0f32; n_q * d];
+
+    let mut i0 = 0;
+    while i0 < n_q {
+        let iq = (i0 + BLOCK_Q).min(n_q);
+        let bq = iq - i0;
+        let mb = &mut m[..bq];
+        mb.fill(NEG_BIG);
+        let lb = &mut l[..bq];
+        lb.fill(0.0);
+        let accb = &mut acc[..bq * d];
+        accb.fill(0.0);
+        let mut j0 = 0;
+        while j0 < n_kv {
+            let jk = (j0 + BLOCK_KV).min(n_kv);
+            let bk = jk - j0;
+            // page ↔ tile correspondence: PAGE_ROWS == BLOCK_KV
+            let pg = pages[j0 / PAGE_ROWS];
+            // ---- S tile from the page's INT8 K ----
+            for bi in 0..bq {
+                let (lo, hi) = opts.range(i0 + bi, n_q, n_kv);
+                let qi = &q_i8[(i0 + bi) * d..(i0 + bi + 1) * d];
+                let qs = q_scales[i0 + bi];
+                for bj in 0..bk {
+                    let j = j0 + bj;
+                    let s_val = if j >= lo && j < hi {
+                        let kj = &pg.k_i8[bj * d..(bj + 1) * d];
+                        dot_i8(qi, kj) as f32 * qs * pg.k_scales[bj]
+                    } else {
+                        NEG_BIG
+                    };
+                    s[bi * BLOCK_KV + bj] = s_val;
+                }
+            }
+            // ---- online softmax (fp32) + P·V ----
+            for bi in 0..bq {
+                let row = &mut s[bi * BLOCK_KV..bi * BLOCK_KV + bk];
+                let m_cur = row.iter().fold(NEG_BIG, |a, &b| a.max(b));
+                let m_new = mb[bi].max(m_cur);
+                if m_new == NEG_BIG {
+                    continue;
+                }
+                let alpha = (mb[bi] - m_new).exp();
+                let mut row_sum = 0.0;
+                for p in row.iter_mut() {
+                    *p = (*p - m_new).exp();
+                    row_sum += *p;
+                }
+                lb[bi] = alpha * lb[bi] + row_sum;
+                mb[bi] = m_new;
+                let o = &mut accb[bi * d..(bi + 1) * d];
+                match pv {
+                    PvMode::Int8 => {
+                        let prow = &mut p_i8[..bk];
+                        for (pq, &p) in prow.iter_mut().zip(row.iter()) {
+                            *pq = (p * quant::INT8_MAX).round() as i8;
+                        }
+                        for oc in o.iter_mut() {
+                            *oc *= alpha;
+                        }
+                        let acc32 = &mut acc_i32[..d];
+                        acc32.fill(0);
+                        for (bj, &pq) in prow.iter().enumerate() {
+                            if pq == 0 {
+                                continue;
+                            }
+                            let p32 = pq as i32;
+                            let vrow = &pg.v_i8[bj * d..(bj + 1) * d];
+                            for (a, &vc) in acc32.iter_mut().zip(vrow) {
+                                *a += p32 * vc as i32;
+                            }
+                        }
+                        let vs = &pg.v_scales[..d];
+                        for (oc, (&a, &vsc)) in o.iter_mut().zip(acc32.iter().zip(vs)) {
+                            *oc += a as f32 * (1.0 / quant::INT8_MAX) * vsc;
+                        }
+                    }
+                    PvMode::Fp16Accum => {
+                        for oc in o.iter_mut() {
+                            *oc *= alpha;
+                        }
+                        round_f16_slice(o);
+                        let p16b = &mut p16[..bk];
+                        p16b.copy_from_slice(&row[..bk]);
+                        round_f16_slice(p16b);
+                        let partd = &mut part[..d];
+                        let mut bj = 0;
+                        while bj < bk {
+                            let je = (bj + 16).min(bk);
+                            partd.fill(0.0);
+                            for t in bj..je {
+                                let p = p16b[t];
+                                if p == 0.0 {
+                                    continue;
+                                }
+                                let vrow = &pg.v_f16[t * d..(t + 1) * d];
+                                for (pc, &vc) in partd.iter_mut().zip(vrow) {
+                                    *pc += p * vc;
+                                }
+                            }
+                            round_f16_slice(partd);
+                            for (oc, &pc) in o.iter_mut().zip(partd.iter()) {
+                                *oc += pc;
+                            }
+                            round_f16_slice(o);
+                            bj = je;
+                        }
+                    }
+                    PvMode::Fp32Accum => {
+                        for oc in o.iter_mut() {
+                            *oc *= alpha;
+                        }
+                        let p16b = &mut p16[..bk];
+                        p16b.copy_from_slice(&row[..bk]);
+                        round_f16_slice(p16b);
+                        for (bj, &p) in p16b.iter().enumerate() {
+                            if p == 0.0 {
+                                continue;
+                            }
+                            let vrow = &pg.v_f16[bj * d..(bj + 1) * d];
+                            for (oc, &vc) in o.iter_mut().zip(vrow) {
+                                *oc += p * vc;
+                            }
+                        }
+                    }
+                }
+            }
+            j0 = jk;
+        }
+        for bi in 0..bq {
+            let inv = 1.0 / lb[bi].max(1e-30);
+            let o = &mut out[(i0 + bi) * d..(i0 + bi + 1) * d];
+            for (oc, &ac) in o.iter_mut().zip(&accb[bi * d..(bi + 1) * d]) {
+                *oc = ac * inv;
+            }
+        }
+        i0 = iq;
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -416,6 +869,118 @@ mod tests {
             let c = cos_sim(&gold, &out);
             assert!(c > min_cos, "{}: cos {c}", imp.name());
         }
+    }
+
+    /// Build a paged plane by appending in the given chunk sizes.
+    fn build_paged(
+        k: &[f32],
+        v: &[f32],
+        d: usize,
+        imp: AttnImpl,
+        chunks: &[usize],
+    ) -> (PagedSegment, Vec<KvPage>) {
+        let n = k.len() / d;
+        let mut seg = PagedSegment::new(d, imp).unwrap();
+        let mut pages = vec![KvPage::new(); PagedSegment::pages_for(n)];
+        let mut r = 0;
+        for step in chunks.iter().cycle() {
+            if r >= n {
+                break;
+            }
+            let e = (r + step).min(n);
+            seg.append(&mut pages, &k[r * d..e * d], &v[r * d..e * d]);
+            r = e;
+        }
+        (seg, pages)
+    }
+
+    #[test]
+    fn paged_state_matches_prepared_plane_bitwise() {
+        let (n, d) = (300usize, 32usize);
+        let (_, k, v) = make_qkv(35, [1, 1, n, d], Profile::diffusion_like());
+        for imp in [SAGE_T, SAGE_B, SAGE_VT, SAGE_VB] {
+            let oneshot = build(&k.data, &v.data, d, imp);
+            for chunks in [&[n][..], &[1][..], &[7, 64, 1, 100][..]] {
+                let (seg, pages) = build_paged(&k.data, &v.data, d, imp, chunks);
+                assert_eq!(seg.n(), n);
+                assert_eq!(seg.kmean, oneshot.kmean, "{} kmean", imp.name());
+                assert_eq!(seg.anchor_rows, oneshot.anchor_rows);
+                // concatenated page payloads == the contiguous plane
+                let cat_i8: Vec<i8> =
+                    pages.iter().flat_map(|p| p.k_i8.iter().copied()).collect();
+                let cat_ks: Vec<f32> =
+                    pages.iter().flat_map(|p| p.k_scales.iter().copied()).collect();
+                assert_eq!(cat_i8, oneshot.k_i8, "{} k_i8", imp.name());
+                assert_eq!(cat_ks, oneshot.k_scales, "{} k_scales", imp.name());
+                let cat_vi8: Vec<i8> =
+                    pages.iter().flat_map(|p| p.v_i8.iter().copied()).collect();
+                let cat_vs: Vec<f32> =
+                    pages.iter().flat_map(|p| p.v_scales.iter().copied()).collect();
+                let cat_vf: Vec<f32> =
+                    pages.iter().flat_map(|p| p.v_f16.iter().copied()).collect();
+                assert_eq!(cat_vi8, oneshot.v_i8, "{} v_i8", imp.name());
+                assert_eq!(cat_vs, oneshot.v_scales, "{} v_scales", imp.name());
+                assert_eq!(cat_vf, oneshot.v_f16, "{} v_f16", imp.name());
+            }
+        }
+    }
+
+    #[test]
+    fn paged_kernel_matches_prepared_bitwise() {
+        let (n, d) = (200usize, 64usize);
+        let (q, k, v) = make_qkv(36, [1, 1, n, d], Profile::diffusion_like());
+        let mut scratch = Scratch::new();
+        for imp in [SAGE_T, SAGE_B, SAGE_VT, SAGE_VB] {
+            let prep = build(&k.data, &v.data, d, imp);
+            let (seg, pages) = build_paged(&k.data, &v.data, d, imp, &[13, 64, 1]);
+            let refs: Vec<&KvPage> = pages.iter().collect();
+            let AttnImpl::Sage { qk, pv, .. } = imp else { unreachable!() };
+            for (n_q, causal) in [(1usize, true), (n, true), (n, false)] {
+                let opts = PlaneOpts::causal(causal);
+                let a = sage_plane_prepared(
+                    &mut scratch,
+                    &q.data[..n_q * d],
+                    &prep,
+                    n_q,
+                    qk,
+                    pv,
+                    opts,
+                );
+                let b = seg.run(&mut scratch, &q.data[..n_q * d], n_q, &refs, opts);
+                assert_eq!(a, b, "{} n_q={n_q} causal={causal}", imp.name());
+            }
+        }
+    }
+
+    #[test]
+    fn paged_fp32_fallback_matches_exact() {
+        let (n, d) = (130usize, 16usize);
+        let (q, k, v) = make_qkv(37, [1, 1, n, d], Profile::llama_like());
+        let (seg, pages) = build_paged(&k.data, &v.data, d, AttnImpl::Exact, &[9]);
+        let refs: Vec<&KvPage> = pages.iter().collect();
+        let mut scratch = Scratch::new();
+        let out = seg.run(&mut scratch, &q.data, n, &refs, PlaneOpts::causal(true));
+        let gold = exact_plane(&q.data, &k.data, &v.data, n, n, d, true);
+        assert_eq!(out, gold, "paged exact must equal contiguous exact");
+    }
+
+    #[test]
+    fn paged_rejects_unpreparable_kernels() {
+        use crate::quant::Fp8Format;
+        assert!(PagedSegment::new(
+            16,
+            AttnImpl::Fp8 { qk: Fp8Format::E4M3, pv: Fp8Format::E4M3 }
+        )
+        .is_err());
+        assert!(PagedSegment::new(
+            16,
+            AttnImpl::Sage {
+                qk: Granularity::PerTensor,
+                pv: PvMode::Fp16Accum,
+                smooth_k: true,
+            }
+        )
+        .is_err());
     }
 
     #[test]

@@ -1,0 +1,242 @@
+//! Engine backends: the execution side of the serving stack behind one
+//! trait.
+//!
+//! [`EngineBackend`] is the prefill / decode-step / slot-accounting
+//! contract the scheduler drives. Two implementations ship:
+//!
+//! * [`pjrt::PjrtEngine`] — the AOT-artifact driver (dense per-slot KV
+//!   caches inside the XLA executables, full KV reservation at
+//!   admission). Behavior-preserving port of the original `Engine`.
+//! * [`native::NativeEngine`] — a pure-Rust transformer forward over the
+//!   crate's own attention kernels, with a **physical paged KV cache**
+//!   ([`crate::coordinator::PagedKvStore`]): per-slot KV is quantize-once
+//!   `PreparedKV` state paged at `PAGE_ROWS` rows per block, indexed by
+//!   the accountant's block tables, reserved incrementally and reclaimed
+//!   by preemption when blocks run out.
+//!
+//! The attention plan ("fp"/"sage"/"adaptive") stays the experiment knob
+//! on both — the paper's plug-and-play switch — while `--backend` picks
+//! the execution substrate.
+
+pub mod native;
+pub mod pjrt;
+
+use std::time::Duration;
+
+use crate::attn::registry;
+use crate::runtime::Value;
+use crate::util::error::Result;
+use crate::util::rng::Pcg32;
+
+use super::kv_cache::KvCacheManager;
+use super::request::{FinishReason, Request, Response};
+
+/// How a backend wants KV blocks reserved at admission.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ReserveMode {
+    /// Reserve the full `prompt + max_new_tokens` budget up front
+    /// (dense caches: capacity is committed at admission, decode can
+    /// never run out). The PJRT backend's mode.
+    Full,
+    /// Reserve only the prefill rows; decode extends block-by-block and
+    /// preempts a victim on `OutOfBlocks` (the paged native backend).
+    Incremental,
+}
+
+/// What one scheduling step produced.
+#[derive(Debug, Default)]
+pub struct StepOutcome {
+    /// Requests that finished this step.
+    pub finished: Vec<Response>,
+    /// Requests preempted for KV blocks this step, ready to requeue
+    /// (their logical + physical KV is already released; decode
+    /// progress rides in [`Request::resume`]).
+    pub preempted: Vec<Request>,
+}
+
+/// Execution engine contract: admission, decode stepping and slot
+/// accounting over one model replica. The scheduler owns the logical
+/// [`KvCacheManager`] and threads it through so logical accounting and
+/// the backend's physical storage stay in lockstep.
+pub trait EngineBackend {
+    /// Backend discriminator ("pjrt" / "native") for reports and flags.
+    fn backend_name(&self) -> &'static str;
+
+    /// Attention plan this engine was built for.
+    fn plan(&self) -> &str;
+
+    /// Registry row the plan's kernels lower from.
+    fn kernel(&self) -> &'static registry::KernelEntry;
+
+    fn batch_slots(&self) -> usize;
+
+    fn free_slots(&self) -> usize;
+
+    fn live_slots(&self) -> usize {
+        self.batch_slots() - self.free_slots()
+    }
+
+    /// Total queued work in live slots (for routing load scores).
+    fn outstanding_tokens(&self) -> usize;
+
+    /// Prompt lengths this backend can prefill (after padding).
+    fn prefill_sizes(&self) -> Vec<usize>;
+
+    /// KV reservation discipline the batcher must apply.
+    fn reserve_mode(&self) -> ReserveMode;
+
+    /// Replace the model parameters (manifest order; shapes validated).
+    fn set_params(&mut self, params: Vec<Value>) -> Result<()>;
+
+    /// Admit one request: prefill it and occupy a free slot. Returns
+    /// false if no slot is free or the prompt cannot fit. The request's
+    /// KV must already be reserved in `kv` (per [`reserve_mode`]); on
+    /// `Ok(false)` / `Err` the caller keeps ownership of that
+    /// reservation (and must release or requeue it — never drop it).
+    ///
+    /// [`reserve_mode`]: EngineBackend::reserve_mode
+    fn add_request(&mut self, req: &Request, kv: &mut KvCacheManager) -> Result<bool>;
+
+    /// One decode step over all live slots.
+    fn step(&mut self, kv: &mut KvCacheManager) -> Result<StepOutcome>;
+
+    fn stats(&self) -> &EngineStats;
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct EngineStats {
+    pub prefills: u64,
+    pub decode_steps: u64,
+    pub tokens_generated: u64,
+    pub prefill_time: Duration,
+    pub decode_time: Duration,
+    /// decode-batch occupancy accumulated over steps (live slots / B)
+    pub occupancy_sum: f64,
+    /// requests preempted for KV blocks (native backend)
+    pub preemptions: u64,
+}
+
+impl EngineStats {
+    pub fn mean_occupancy(&self) -> f64 {
+        if self.decode_steps == 0 {
+            0.0
+        } else {
+            self.occupancy_sum / self.decode_steps as f64
+        }
+    }
+}
+
+/// One occupied decode slot (shared by both backends).
+pub(crate) struct Slot {
+    pub(crate) id: super::request::RequestId,
+    /// Original prompt (kept for recompute-on-resume preemption).
+    pub(crate) prompt: Vec<i32>,
+    /// position the *next* fed token will occupy
+    pub(crate) pos: usize,
+    pub(crate) next_token: i32,
+    pub(crate) generated: Vec<i32>,
+    pub(crate) params: super::request::GenParams,
+    pub(crate) arrival: std::time::Instant,
+    pub(crate) first_token_at: std::time::Instant,
+    pub(crate) rng: Pcg32,
+}
+
+/// Greedy or temperature sampling over a logits row.
+pub(crate) fn sample(logits: &[f32], temperature: f32, rng: &mut Pcg32) -> i32 {
+    if temperature <= 0.0 {
+        return argmax(logits) as i32;
+    }
+    let m = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let weights: Vec<f32> =
+        logits.iter().map(|&l| ((l - m) / temperature).exp()).collect();
+    rng.categorical(&weights) as i32
+}
+
+fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &x) in xs.iter().enumerate() {
+        if x > xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+/// Mean time-per-output-token over `n_tokens` generated tokens: the
+/// inter-token interval exists only past the first token, so a
+/// single-token response reports `None` instead of fabricating a
+/// denominator (the old `max(2) - 1` bug understated tail TPOT).
+pub(crate) fn tpot_of(e2e_ms: f64, ttft_ms: f64, n_tokens: usize) -> Option<f64> {
+    if n_tokens < 2 {
+        return None;
+    }
+    Some((e2e_ms - ttft_ms) / (n_tokens - 1) as f64)
+}
+
+/// Advance slot `s` with the freshly sampled token `next` — the finish
+/// epilogue both backends share: stop-token / budget / context-window
+/// checks, latency telemetry, and the Response when the request is done
+/// (the slot's `generated` is drained into it; the caller clears the
+/// slot and reclaims KV).
+pub(crate) fn advance_slot(s: &mut Slot, next: i32, max_seq: usize) -> Option<Response> {
+    s.pos += 1;
+    let stop_hit = s.params.stop_token == Some(next);
+    if !stop_hit {
+        s.generated.push(next);
+        s.next_token = next;
+    }
+    let len_hit = s.generated.len() >= s.params.max_new_tokens || s.pos + 1 >= max_seq;
+    if !(stop_hit || len_hit) {
+        return None;
+    }
+    let now = std::time::Instant::now();
+    let e2e = now.duration_since(s.arrival).as_secs_f64() * 1e3;
+    let ttft = s.first_token_at.duration_since(s.arrival).as_secs_f64() * 1e3;
+    Some(Response {
+        id: s.id,
+        finish: if stop_hit { FinishReason::StopToken } else { FinishReason::MaxTokens },
+        ttft_ms: ttft,
+        tpot_ms: tpot_of(e2e, ttft, s.generated.len()),
+        e2e_ms: e2e,
+        tokens: std::mem::take(&mut s.generated),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sample_greedy_is_argmax() {
+        let mut rng = Pcg32::seeded(1);
+        assert_eq!(sample(&[0.1, 3.0, -1.0], 0.0, &mut rng), 1);
+    }
+
+    #[test]
+    fn sample_temperature_covers_support() {
+        let mut rng = Pcg32::seeded(2);
+        let logits = [1.0f32, 1.0, 1.0];
+        let mut seen = [false; 3];
+        for _ in 0..200 {
+            seen[sample(&logits, 1.0, &mut rng) as usize] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn sample_low_temperature_concentrates() {
+        let mut rng = Pcg32::seeded(3);
+        let logits = [0.0f32, 5.0, 0.0];
+        let hits = (0..100)
+            .filter(|_| sample(&logits, 0.1, &mut rng) == 1)
+            .count();
+        assert!(hits > 95);
+    }
+
+    #[test]
+    fn tpot_none_for_single_token() {
+        assert_eq!(tpot_of(10.0, 4.0, 1), None);
+        assert_eq!(tpot_of(10.0, 4.0, 0), None);
+        assert_eq!(tpot_of(10.0, 4.0, 3), Some(3.0));
+    }
+}

@@ -1,0 +1,632 @@
+//! Native serving backend: the toy-transformer forward pass in pure Rust
+//! on top of the crate's attention kernels, with a physical paged KV
+//! cache — `sage serve` without a byte of PJRT.
+//!
+//! The forward mirrors `python/compile/model.py` (RMSNorm → QKV → RoPE →
+//! attention → SwiGLU), with attention dispatched through the same
+//! kernel registry rows the artifact plans lower from ("fp" →
+//! `online`, "sage"/"adaptive" → `SageAttn-B`). Per-slot KV lives in the
+//! [`PagedKvStore`]: each decode step appends one row per (layer, head)
+//! into the blocks named by the accountant's table and runs the
+//! prepared-plane kernel straight off the resident pages — the paper's
+//! quantize-once decode (§3) as serving state, never re-quantizing a
+//! resident prefix.
+//!
+//! KV is reserved incrementally ([`ReserveMode::Incremental`]): a decode
+//! step that crosses a page boundary asks the accountant for one more
+//! block, and on `OutOfBlocks` the engine preempts the longest-tail
+//! victim (most remaining generation budget, latest arrival on ties),
+//! releasing its logical and physical blocks and handing the scheduler a
+//! recompute-on-resume [`Request`]. Because paged one-shot and
+//! incremental quantization are bit-identical, a resumed request's
+//! re-prefilled KV state exactly matches what was evicted.
+
+use std::time::Instant;
+
+use crate::attn::{
+    exact_plane_opt, fp8_plane_opt, online_plane_opt, registry, sage_plane_opt, AttnImpl,
+    PlaneOpts, Scratch, PAGE_ROWS,
+};
+use crate::runtime::{ModelCfg, Value};
+use crate::tensor::{default_threads, parallel_map};
+use crate::util::error::{bail, ensure, Context, Result};
+use crate::util::rng::Pcg32;
+
+use super::super::kv_cache::{AllocError, BlockId, KvCacheManager};
+use super::super::paged_kv::PagedKvStore;
+use super::super::request::{Request, RequestId, ResumeState};
+use super::{advance_slot, sample, EngineBackend, EngineStats, ReserveMode, Slot, StepOutcome};
+
+/// How decode-step attention reads the KV prefix.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DecodeMode {
+    /// Through the paged quantize-once state (the shipping hot path):
+    /// only Q is quantized per step.
+    Prepared,
+    /// Gather raw rows and re-run smooth-K + full INT8 quantization of
+    /// the prefix every step — the naive engine loop `sage bench-hotpath
+    /// --serve-decode` measures against. Numerics only; not for serving.
+    RequantEachStep,
+}
+
+/// Pure-Rust model replica over the paged physical KV cache.
+pub struct NativeEngine {
+    cfg: ModelCfg,
+    plan: String,
+    kernel: &'static registry::KernelEntry,
+    imp: AttnImpl,
+    decode_mode: DecodeMode,
+    params: Vec<Value>,
+    paged: PagedKvStore,
+    slots: Vec<Option<Slot>>,
+    batch: usize,
+    inv_freq: Vec<f32>,
+    scratch: Scratch,
+    pub stats: EngineStats,
+}
+
+impl NativeEngine {
+    /// Default decode-slot count (pjrt slots come from the artifact's
+    /// batch dimension; the native forward has no such constraint).
+    pub const DEFAULT_SLOTS: usize = 4;
+
+    /// Build a native engine for `cfg` and `plan` ("fp"/"sage"/
+    /// "adaptive"), initializing parameters from `seed`.
+    pub fn new(
+        cfg: ModelCfg,
+        plan: &str,
+        seed: u64,
+        slots: usize,
+        decode_mode: DecodeMode,
+    ) -> Result<NativeEngine> {
+        let Some(kernel) = registry::plan_entry(plan) else {
+            bail!(
+                "unknown attention plan '{plan}' (expected fp|sage|adaptive; \
+                 registry kernels: {})",
+                registry::known_names()
+            );
+        };
+        ensure!(slots >= 1, "need at least one decode slot");
+        ensure!(
+            cfg.param_spec.len() == 3 + 9 * cfg.n_layers,
+            "config '{}' param spec is not the GPT layout the native forward expects",
+            cfg.name
+        );
+        ensure!(cfg.d_head % 2 == 0, "RoPE needs an even head dim (got {})", cfg.d_head);
+        let imp = kernel.imp;
+        // the naive requant baseline keeps only raw rows resident
+        let store_imp = match decode_mode {
+            DecodeMode::Prepared => imp,
+            DecodeMode::RequantEachStep => AttnImpl::Exact,
+        };
+        let paged = PagedKvStore::new(cfg.n_layers, cfg.n_heads, cfg.d_head, store_imp)?;
+        let params = cfg.init_params(seed);
+        let half = cfg.d_head / 2;
+        let inv_freq = (0..half)
+            .map(|j| 1.0 / cfg.rope_base.powf(j as f32 / half as f32))
+            .collect();
+        Ok(NativeEngine {
+            cfg,
+            plan: plan.to_owned(),
+            kernel,
+            imp,
+            decode_mode,
+            params,
+            paged,
+            slots: (0..slots).map(|_| None).collect(),
+            batch: slots,
+            inv_freq,
+            scratch: Scratch::new(),
+            stats: EngineStats::default(),
+        })
+    }
+
+    pub fn decode_mode(&self) -> DecodeMode {
+        self.decode_mode
+    }
+
+    /// The physical paged store (telemetry / tests).
+    pub fn paged_store(&self) -> &PagedKvStore {
+        &self.paged
+    }
+
+    /// Longest-tail preemption victim: the live slot with the most
+    /// remaining generation budget (the request most able to pin blocks
+    /// for longest), ties broken toward the latest arrival.
+    fn pick_victim(&self) -> Option<usize> {
+        let mut best: Option<(usize, usize, Instant)> = None;
+        for (i, slot) in self.slots.iter().enumerate() {
+            let Some(s) = slot else { continue };
+            let remaining = s.params.max_new_tokens.saturating_sub(s.generated.len());
+            let better = match &best {
+                None => true,
+                Some((_, r, arr)) => {
+                    remaining > *r || (remaining == *r && s.arrival >= *arr)
+                }
+            };
+            if better {
+                best = Some((i, remaining, s.arrival));
+            }
+        }
+        best.map(|(i, _, _)| i)
+    }
+
+    /// Evict slot `idx`: release its logical and physical blocks and
+    /// return the recompute-on-resume request for the scheduler's queue.
+    fn preempt_slot(&mut self, idx: usize, kv: &mut KvCacheManager) -> Result<Request> {
+        let s = self.slots[idx].take().context("preempting an empty slot")?;
+        let table: Vec<BlockId> = kv
+            .seq_blocks(s.id)
+            .with_context(|| format!("victim {} unknown to the accountant", s.id))?
+            .to_vec();
+        self.paged.release(s.id, &table)?;
+        if kv.release(s.id).is_err() {
+            bail!("logical release failed for preempted request {}", s.id);
+        }
+        self.stats.preemptions += 1;
+        Ok(Request {
+            id: s.id,
+            prompt: s.prompt,
+            params: s.params,
+            arrival: s.arrival,
+            resume: Some(ResumeState {
+                generated: s.generated,
+                rng: s.rng,
+                first_token_at: s.first_token_at,
+            }),
+        })
+    }
+}
+
+impl EngineBackend for NativeEngine {
+    fn backend_name(&self) -> &'static str {
+        "native"
+    }
+
+    fn plan(&self) -> &str {
+        &self.plan
+    }
+
+    fn kernel(&self) -> &'static registry::KernelEntry {
+        self.kernel
+    }
+
+    fn batch_slots(&self) -> usize {
+        self.batch
+    }
+
+    fn free_slots(&self) -> usize {
+        self.slots.iter().filter(|s| s.is_none()).count()
+    }
+
+    fn outstanding_tokens(&self) -> usize {
+        self.slots
+            .iter()
+            .flatten()
+            .map(|s| s.params.max_new_tokens.saturating_sub(s.generated.len()))
+            .sum()
+    }
+
+    /// No AOT prefill shapes to match — any prompt ≤ max_seq works.
+    /// Advertise a power-of-two spread for the workload generators.
+    fn prefill_sizes(&self) -> Vec<usize> {
+        let mut sizes = Vec::new();
+        let mut n = 16;
+        while n <= self.cfg.max_seq / 2 {
+            sizes.push(n);
+            n *= 2;
+        }
+        if sizes.is_empty() {
+            sizes.push((self.cfg.max_seq / 2).max(1));
+        }
+        sizes
+    }
+
+    fn reserve_mode(&self) -> ReserveMode {
+        ReserveMode::Incremental
+    }
+
+    fn set_params(&mut self, params: Vec<Value>) -> Result<()> {
+        if params.len() != self.params.len() {
+            bail!("expected {} params, got {}", self.params.len(), params.len());
+        }
+        for (new, spec) in params.iter().zip(&self.cfg.param_spec) {
+            if new.shape() != spec.shape.as_slice() {
+                bail!("param {} shape mismatch", spec.name);
+            }
+            new.as_f32().with_context(|| format!("param {} must be f32", spec.name))?;
+        }
+        self.params = params;
+        Ok(())
+    }
+
+    fn add_request(&mut self, req: &Request, kv: &mut KvCacheManager) -> Result<bool> {
+        let Some(slot_idx) = self.slots.iter().position(Option::is_none) else {
+            return Ok(false);
+        };
+        ensure!(
+            kv.block_size() == PAGE_ROWS,
+            "native backend pages KV at {PAGE_ROWS} rows/block but the accountant \
+             was built with block_size {} (logical and physical must agree)",
+            kv.block_size()
+        );
+        if req.prompt.is_empty() {
+            bail!("empty prompt");
+        }
+        if req.prompt.len() + req.params.max_new_tokens > self.cfg.max_seq {
+            bail!("request would overflow the context window");
+        }
+        let toks = req.prefill_tokens();
+        // the batcher reserves exactly the prefill rows up front
+        // (incremental mode); anything else is an accounting bug
+        ensure!(
+            kv.seq_tokens(req.id) == Some(toks.len()),
+            "request {} reserved {:?} tokens but prefill needs {}",
+            req.id,
+            kv.seq_tokens(req.id),
+            toks.len()
+        );
+        let table: Vec<BlockId> = kv.seq_blocks(req.id).unwrap().to_vec();
+        self.paged.register(req.id)?;
+
+        let t0 = Instant::now();
+        let logits = match forward_rows(
+            &self.cfg,
+            &self.params,
+            self.imp,
+            self.decode_mode,
+            &self.inv_freq,
+            &mut self.paged,
+            &mut self.scratch,
+            req.id,
+            &table,
+            &toks,
+            0,
+        ) {
+            Ok(l) => l,
+            Err(e) => {
+                // leave no physical residue behind a failed admission
+                let _ = self.paged.release(req.id, &table);
+                return Err(e);
+            }
+        };
+        self.stats.prefill_time += t0.elapsed();
+        self.stats.prefills += 1;
+
+        let (first_token_at, rng, generated) = match &req.resume {
+            Some(res) => (res.first_token_at, res.rng.clone(), res.generated.clone()),
+            None => {
+                let mut rng = Pcg32::seeded(req.params.seed ^ req.id);
+                let first = sample(&logits, req.params.temperature, &mut rng);
+                (Instant::now(), rng, vec![first])
+            }
+        };
+        self.slots[slot_idx] = Some(Slot {
+            id: req.id,
+            prompt: req.prompt.clone(),
+            pos: toks.len(),
+            next_token: *generated.last().expect("at least the first token"),
+            generated,
+            params: req.params,
+            arrival: req.arrival,
+            first_token_at,
+            rng,
+        });
+        Ok(true)
+    }
+
+    fn step(&mut self, kv: &mut KvCacheManager) -> Result<StepOutcome> {
+        let mut outcome = StepOutcome::default();
+        if self.live_slots() == 0 {
+            return Ok(outcome);
+        }
+        let t0 = Instant::now();
+        let live_at_entry = self.live_slots();
+        for b in 0..self.batch {
+            let Some(s) = self.slots[b].as_ref() else { continue };
+            let id = s.id;
+            // grow the logical KV by this step's row; on OutOfBlocks,
+            // preempt-and-requeue the longest-tail victim and retry
+            loop {
+                match kv.extend(id, 1) {
+                    Ok(()) => break,
+                    Err(AllocError::OutOfBlocks) => {
+                        let victim = self
+                            .pick_victim()
+                            .context("OutOfBlocks with no live slot to preempt")?;
+                        let evicted = self.preempt_slot(victim, kv)?;
+                        outcome.preempted.push(evicted);
+                        if victim == b {
+                            break; // preempted ourselves; nothing to decode
+                        }
+                    }
+                    Err(AllocError::UnknownSequence) => {
+                        bail!("slot {b} request {id} unknown to the KV accountant");
+                    }
+                }
+            }
+            let Some(s) = self.slots[b].as_ref() else { continue };
+            let table: Vec<BlockId> = kv.seq_blocks(id).unwrap().to_vec();
+            let (tok, pos, temperature) = (s.next_token, s.pos, s.params.temperature);
+            let logits = forward_rows(
+                &self.cfg,
+                &self.params,
+                self.imp,
+                self.decode_mode,
+                &self.inv_freq,
+                &mut self.paged,
+                &mut self.scratch,
+                id,
+                &table,
+                &[tok],
+                pos,
+            )?;
+            let s = self.slots[b].as_mut().expect("slot checked live above");
+            let next = sample(&logits, temperature, &mut s.rng);
+            self.stats.tokens_generated += 1;
+            if let Some(resp) = advance_slot(s, next, self.cfg.max_seq) {
+                outcome.finished.push(resp);
+                // reclaim the physical pages; the scheduler releases the
+                // logical reservation when it records the response
+                self.paged.release(id, &table)?;
+                self.slots[b] = None;
+            }
+        }
+        self.stats.decode_time += t0.elapsed();
+        self.stats.decode_steps += 1;
+        self.stats.occupancy_sum += live_at_entry as f64 / self.batch as f64;
+        Ok(outcome)
+    }
+
+    fn stats(&self) -> &EngineStats {
+        &self.stats
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The forward pass (mirrors python/compile/model.py)
+// ---------------------------------------------------------------------------
+
+/// Run `tokens` (at absolute positions `pos0..pos0+t`) through the
+/// transformer, appending their K/V rows to the paged store and
+/// returning the last position's logits. Used for both prefill
+/// (`t = prompt len`) and decode (`t = 1`); every sublayer is row-local
+/// and attention state is bit-identical one-shot vs incremental, so
+/// recompute-on-resume rebuilds exactly the state it evicted.
+#[allow(clippy::too_many_arguments)]
+fn forward_rows(
+    cfg: &ModelCfg,
+    params: &[Value],
+    imp: AttnImpl,
+    mode: DecodeMode,
+    inv_freq: &[f32],
+    paged: &mut PagedKvStore,
+    scratch: &mut Scratch,
+    id: RequestId,
+    table: &[BlockId],
+    tokens: &[i32],
+    pos0: usize,
+) -> Result<Vec<f32>> {
+    let (dm, h, dh, ff) = (cfg.d_model, cfg.n_heads, cfg.d_head, cfg.d_ff);
+    let t = tokens.len();
+    ensure!(t > 0, "empty forward");
+    let p = |i: usize| params[i].as_f32().expect("params validated as f32");
+
+    // token embedding
+    let embed = p(0);
+    let mut x = vec![0.0f32; t * dm];
+    for (r, &tok) in tokens.iter().enumerate() {
+        ensure!(
+            (0..cfg.vocab as i32).contains(&tok),
+            "token {tok} outside vocab {}",
+            cfg.vocab
+        );
+        x[r * dm..(r + 1) * dm].copy_from_slice(&embed[tok as usize * dm..(tok as usize + 1) * dm]);
+    }
+
+    let opts = PlaneOpts::causal(true);
+    for l in 0..cfg.n_layers {
+        let base = 1 + 9 * l;
+        // attention sublayer
+        let hn = rmsnorm(&x, p(base), dm);
+        let mut q = split_heads(&matmul(&hn, t, dm, p(base + 1), h * dh), t, h, dh);
+        let mut k = split_heads(&matmul(&hn, t, dm, p(base + 2), h * dh), t, h, dh);
+        let v = split_heads(&matmul(&hn, t, dm, p(base + 3), h * dh), t, h, dh);
+        apply_rope(&mut q, h, t, dh, inv_freq, pos0);
+        apply_rope(&mut k, h, t, dh, inv_freq, pos0);
+        paged.append_layer(id, table, l, &k, &v, t)?;
+        let n_kv = pos0 + t;
+        let attn = match mode {
+            DecodeMode::Prepared => {
+                paged.attention(id, table, l, &q, h, t, scratch, opts)?
+            }
+            DecodeMode::RequantEachStep => {
+                let mut out = vec![0.0f32; h * t * dh];
+                for hd in 0..h {
+                    let (kraw, vraw) = paged.gather_layer_raw(id, table, l, hd)?;
+                    let qh = &q[hd * t * dh..(hd + 1) * t * dh];
+                    let o = match imp {
+                        AttnImpl::Sage { qk, pv, smooth_k } => sage_plane_opt(
+                            scratch, qh, &kraw, &vraw, t, n_kv, dh, qk, pv, smooth_k, opts,
+                        ),
+                        AttnImpl::OnlineFp32 => {
+                            online_plane_opt(scratch, qh, &kraw, &vraw, t, n_kv, dh, opts)
+                        }
+                        AttnImpl::Exact => exact_plane_opt(qh, &kraw, &vraw, t, n_kv, dh, opts),
+                        AttnImpl::Fp8 { qk, pv } => {
+                            fp8_plane_opt(qh, &kraw, &vraw, t, n_kv, dh, qk, pv, opts)
+                        }
+                    };
+                    out[hd * t * dh..(hd + 1) * t * dh].copy_from_slice(&o);
+                }
+                out
+            }
+        };
+        let merged = merge_heads(&attn, t, h, dh);
+        let proj = matmul(&merged, t, h * dh, p(base + 4), dm);
+        for (xi, pi) in x.iter_mut().zip(&proj) {
+            *xi += pi;
+        }
+        // SwiGLU MLP sublayer
+        let hn = rmsnorm(&x, p(base + 5), dm);
+        let gate = matmul(&hn, t, dm, p(base + 6), ff);
+        let up = matmul(&hn, t, dm, p(base + 7), ff);
+        let mut act = vec![0.0f32; t * ff];
+        for ((a, &g), &u) in act.iter_mut().zip(&gate).zip(&up) {
+            *a = silu(g) * u;
+        }
+        let down = matmul(&act, t, ff, p(base + 8), dm);
+        for (xi, di) in x.iter_mut().zip(&down) {
+            *xi += di;
+        }
+    }
+    // logits at the last position only (what sampling needs)
+    let last = rmsnorm(&x[(t - 1) * dm..t * dm], p(1 + 9 * cfg.n_layers), dm);
+    Ok(matmul(&last, 1, dm, p(2 + 9 * cfg.n_layers), cfg.vocab))
+}
+
+fn silu(x: f32) -> f32 {
+    x / (1.0 + (-x).exp())
+}
+
+/// Row-wise RMSNorm (eps mirrors the python model).
+fn rmsnorm(x: &[f32], gain: &[f32], d: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; x.len()];
+    for (xi, oi) in x.chunks_exact(d).zip(out.chunks_exact_mut(d)) {
+        let ms = xi.iter().map(|v| v * v).sum::<f32>() / d as f32;
+        let inv = 1.0 / (ms + 1e-5).sqrt();
+        for ((o, &v), &g) in oi.iter_mut().zip(xi).zip(gain) {
+            *o = v * inv * g;
+        }
+    }
+    out
+}
+
+/// Row-major (m, k) × (k, n) — k-outer accumulation per row for cache
+/// friendliness, parallel over rows when the product is big enough to
+/// amortize the thread handoff (prefill; decode rows stay serial).
+fn matmul(a: &[f32], m: usize, k: usize, b: &[f32], n: usize) -> Vec<f32> {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    let row_of = |i: usize| {
+        let mut row = vec![0.0f32; n];
+        let ar = &a[i * k..(i + 1) * k];
+        for (p, &av) in ar.iter().enumerate() {
+            if av != 0.0 {
+                let br = &b[p * n..(p + 1) * n];
+                for (o, &bv) in row.iter_mut().zip(br) {
+                    *o += av * bv;
+                }
+            }
+        }
+        row
+    };
+    if m >= 8 && m * k * n >= (1 << 20) {
+        let rows = parallel_map(m, default_threads(), row_of);
+        let mut out = Vec::with_capacity(m * n);
+        for r in rows {
+            out.extend_from_slice(&r);
+        }
+        out
+    } else {
+        let mut out = Vec::with_capacity(m * n);
+        for i in 0..m {
+            out.extend_from_slice(&row_of(i));
+        }
+        out
+    }
+}
+
+/// (t, H·dh) → (H, t, dh)
+fn split_heads(x: &[f32], t: usize, h: usize, dh: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; x.len()];
+    for r in 0..t {
+        for hd in 0..h {
+            let src = r * h * dh + hd * dh;
+            let dst = (hd * t + r) * dh;
+            out[dst..dst + dh].copy_from_slice(&x[src..src + dh]);
+        }
+    }
+    out
+}
+
+/// (H, t, dh) → (t, H·dh)
+fn merge_heads(x: &[f32], t: usize, h: usize, dh: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; x.len()];
+    for hd in 0..h {
+        for r in 0..t {
+            let src = (hd * t + r) * dh;
+            let dst = r * h * dh + hd * dh;
+            out[dst..dst + dh].copy_from_slice(&x[src..src + dh]);
+        }
+    }
+    out
+}
+
+/// Split-half (NeoX/Llama) RoPE on an (H, t, dh) slab at absolute
+/// positions `pos0..pos0+t` — position-local, so batched prefill and
+/// one-row decode produce bit-identical rows.
+fn apply_rope(x: &mut [f32], h: usize, t: usize, dh: usize, inv_freq: &[f32], pos0: usize) {
+    let half = dh / 2;
+    for hd in 0..h {
+        for r in 0..t {
+            let row = &mut x[(hd * t + r) * dh..(hd * t + r + 1) * dh];
+            let pos = (pos0 + r) as f32;
+            for (j, &f) in inv_freq.iter().enumerate() {
+                let ang = pos * f;
+                let (sin, cos) = ang.sin_cos();
+                let x1 = row[j];
+                let x2 = row[j + half];
+                row[j] = x1 * cos - x2 * sin;
+                row[j + half] = x2 * cos + x1 * sin;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn head_reshape_round_trips() {
+        let (t, h, dh) = (3usize, 2usize, 4usize);
+        let x: Vec<f32> = (0..t * h * dh).map(|i| i as f32).collect();
+        assert_eq!(merge_heads(&split_heads(&x, t, h, dh), t, h, dh), x);
+    }
+
+    #[test]
+    fn matmul_small_known() {
+        // [1 2; 3 4] × [5 6; 7 8] = [19 22; 43 50]
+        let a = vec![1.0, 2.0, 3.0, 4.0];
+        let b = vec![5.0, 6.0, 7.0, 8.0];
+        assert_eq!(matmul(&a, 2, 2, &b, 2), vec![19.0, 22.0, 43.0, 50.0]);
+    }
+
+    #[test]
+    fn rope_is_position_local() {
+        let (h, dh) = (1usize, 8usize);
+        let half = dh / 2;
+        let inv_freq: Vec<f32> =
+            (0..half).map(|j| 1.0 / 10000f32.powf(j as f32 / half as f32)).collect();
+        let base: Vec<f32> = (0..2 * dh).map(|i| (i as f32).sin()).collect();
+        // rows at positions 5 and 6, rotated together...
+        let mut both = base.clone();
+        apply_rope(&mut both, h, 2, dh, &inv_freq, 5);
+        // ...must equal each row rotated alone at its own position
+        let mut r0 = base[..dh].to_vec();
+        apply_rope(&mut r0, h, 1, dh, &inv_freq, 5);
+        let mut r1 = base[dh..].to_vec();
+        apply_rope(&mut r1, h, 1, dh, &inv_freq, 6);
+        assert_eq!(&both[..dh], r0.as_slice());
+        assert_eq!(&both[dh..], r1.as_slice());
+    }
+
+    #[test]
+    fn rmsnorm_unit_gain_normalizes() {
+        let x = vec![3.0f32, 4.0, 0.0, 0.0];
+        let out = rmsnorm(&x, &[1.0; 4], 4);
+        let ms: f32 = out.iter().map(|v| v * v).sum::<f32>() / 4.0;
+        assert!((ms - 1.0).abs() < 1e-3, "normalized mean square {ms}");
+    }
+}

@@ -6,6 +6,7 @@
 
 use std::collections::VecDeque;
 
+use super::backend::ReserveMode;
 use super::kv_cache::KvCacheManager;
 use super::request::Request;
 
@@ -37,6 +38,13 @@ impl Batcher {
         self.queue.push_back(req);
     }
 
+    /// Return a request to the *head* of the queue: preempted or
+    /// bounced requests resume before newer arrivals (no re-count in
+    /// `enqueued` — the request was already counted on first push).
+    pub fn push_front(&mut self, req: Request) {
+        self.queue.push_front(req);
+    }
+
     pub fn pending(&self) -> usize {
         self.queue.len()
     }
@@ -46,8 +54,27 @@ impl Batcher {
     }
 
     /// Admit up to `free_slots` requests that fit in `kv`'s free capacity,
-    /// reserving their KV budget. Returns admitted requests in queue order.
+    /// reserving their KV budget in full ([`ReserveMode::Full`]).
+    /// Returns admitted requests in queue order.
     pub fn admit(&mut self, free_slots: usize, kv: &mut KvCacheManager) -> Vec<Request> {
+        self.admit_with(free_slots, kv, ReserveMode::Full)
+    }
+
+    /// [`Batcher::admit`] under an explicit reservation discipline.
+    ///
+    /// * [`ReserveMode::Full`] reserves `prompt + max_new_tokens` rows —
+    ///   the dense-cache (PJRT) contract: admission is the only gate.
+    /// * [`ReserveMode::Incremental`] reserves only the prefill rows and
+    ///   additionally requires the request to *eventually* fit the pool
+    ///   alone (`blocks_for(max_tokens) ≤ total_blocks`), so decode-time
+    ///   preemption can always make progress; growth happens step-by-step
+    ///   in the engine.
+    pub fn admit_with(
+        &mut self,
+        free_slots: usize,
+        kv: &mut KvCacheManager,
+        mode: ReserveMode,
+    ) -> Vec<Request> {
         let mut admitted = Vec::new();
         let window = match self.policy {
             BatchPolicy::Fifo => 0,
@@ -55,11 +82,22 @@ impl Batcher {
         };
         let mut i = 0;
         while admitted.len() < free_slots && i < self.queue.len() {
-            let fits = kv.can_admit(self.queue[i].max_tokens());
+            let req = &self.queue[i];
+            // allocate() claims at least one block even for zero tokens,
+            // so probe with max(1) to keep can_admit and allocate aligned
+            let (fits, reserve) = match mode {
+                ReserveMode::Full => {
+                    (kv.can_admit(req.max_tokens().max(1)), req.max_tokens())
+                }
+                ReserveMode::Incremental => (
+                    kv.can_admit(req.prefill_len().max(1))
+                        && kv.blocks_for(req.max_tokens()) <= kv.total_blocks(),
+                    req.prefill_len(),
+                ),
+            };
             if fits {
                 let req = self.queue.remove(i).unwrap();
-                kv.allocate(req.id, req.max_tokens())
-                    .expect("can_admit checked");
+                kv.allocate(req.id, reserve).expect("can_admit checked");
                 admitted.push(req);
                 // do not advance i: the next element shifted into place
             } else if i < window {
@@ -118,6 +156,30 @@ mod tests {
         let admitted = b.admit(2, &mut kv);
         assert_eq!(admitted.iter().map(|r| r.id).collect::<Vec<_>>(), vec![1]);
         assert_eq!(b.pending(), 1); // head still waiting
+    }
+
+    #[test]
+    fn incremental_reserves_prefill_only() {
+        let mut b = Batcher::new(BatchPolicy::Fifo);
+        let mut kv = KvCacheManager::new(4, 16); // 64-token pool
+        // full reservation would need 4 blocks; incremental needs 1 now
+        b.push(req(0, 16, 48));
+        let admitted = b.admit_with(1, &mut kv, ReserveMode::Incremental);
+        assert_eq!(admitted.len(), 1);
+        assert_eq!(kv.free_blocks(), 3, "only the prefill row block is reserved");
+        // a request that could never fit the pool alone is not admitted
+        b.push(req(1, 16, 64)); // 80 tokens > 64-token pool
+        assert!(b.admit_with(1, &mut kv, ReserveMode::Incremental).is_empty());
+    }
+
+    #[test]
+    fn push_front_resumes_before_newer_arrivals() {
+        let mut b = Batcher::new(BatchPolicy::Fifo);
+        let mut kv = KvCacheManager::new(100, 16);
+        b.push(req(1, 8, 8));
+        b.push_front(req(0, 8, 8));
+        let admitted = b.admit(2, &mut kv);
+        assert_eq!(admitted.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 1]);
     }
 
     #[test]

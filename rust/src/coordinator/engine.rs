@@ -1,389 +1,113 @@
-//! Execution engine: drives the AOT transformer artifacts with continuous
-//! batching over a fixed set of decode slots.
+//! `Engine` — the scheduler-facing facade over an [`EngineBackend`].
 //!
-//! Per request: one batch-1 `prefill_<plan>_<len>` call builds the KV
-//! prefix, which is spliced into a free slot of the persistent
-//! (L, B, H, max_seq, d) decode caches; every `step()` then advances all
-//! live slots one token through `decode_step_<plan>` (idle slots ride
-//! along as padding, the continuous-batching trade the paper's serving
-//! setups make). The attention plan ("fp", "sage", "adaptive") only
-//! selects which artifact family runs — the plug-and-play switch.
-
-use std::collections::BTreeMap;
-use std::sync::Arc;
-use std::time::{Duration, Instant};
+//! Construction picks the execution substrate (`--backend pjrt|native`):
+//! [`Engine::pjrt`] drives the AOT artifacts (requires a runtime +
+//! artifacts), [`Engine::native`] runs the pure-Rust forward over the
+//! paged PreparedKV cache with zero PJRT involvement. Everything above
+//! (scheduler, router, CLI, benches) programs against this one type, so
+//! the attention plan *and* the backend are both plug-and-play switches.
 
 use crate::attn::registry;
-use crate::runtime::pjrt as xla;
-use crate::runtime::{Artifact, ModelCfg, Runtime, Value};
-use crate::util::error::{bail, Context, Result};
-use crate::util::rng::Pcg32;
+use crate::runtime::{ModelCfg, Runtime, Value};
+use crate::util::error::{Context, Result};
 
-use super::request::{FinishReason, GenParams, Request, RequestId, Response};
+use super::backend::native::{DecodeMode, NativeEngine};
+use super::backend::pjrt::PjrtEngine;
+use super::backend::{EngineBackend, EngineStats, ReserveMode, StepOutcome};
+use super::kv_cache::KvCacheManager;
+use super::request::Request;
 
-#[derive(Clone, Debug, Default)]
-pub struct EngineStats {
-    pub prefills: u64,
-    pub decode_steps: u64,
-    pub tokens_generated: u64,
-    pub prefill_time: Duration,
-    pub decode_time: Duration,
-    /// decode-batch occupancy accumulated over steps (live slots / B)
-    pub occupancy_sum: f64,
-}
-
-impl EngineStats {
-    pub fn mean_occupancy(&self) -> f64 {
-        if self.decode_steps == 0 {
-            0.0
-        } else {
-            self.occupancy_sum / self.decode_steps as f64
-        }
-    }
-}
-
-struct Slot {
-    id: RequestId,
-    /// position the *next* fed token will occupy
-    pos: usize,
-    next_token: i32,
-    generated: Vec<i32>,
-    params: GenParams,
-    arrival: Instant,
-    first_token_at: Instant,
-    rng: Pcg32,
-}
-
-/// A model replica bound to one artifact family.
-///
-/// Hot-path state (parameters, KV caches) lives as pre-marshalled XLA
-/// literals: parameters are converted once (§Perf — a 19 MB memcpy per
-/// decode step on the `small` config otherwise), and decode-step output
-/// caches are fed back as next-step inputs without a host round-trip.
+/// A model replica behind the [`EngineBackend`] trait.
 pub struct Engine {
-    cfg: ModelCfg,
-    plan: String,
-    kernel: &'static registry::KernelEntry,
-    params: Vec<Value>,
-    params_lit: Vec<xla::Literal>,
-    decode: Arc<Artifact>,
-    prefills: BTreeMap<usize, Arc<Artifact>>,
-    kc_lit: xla::Literal,
-    vc_lit: xla::Literal,
-    slots: Vec<Option<Slot>>,
-    batch: usize,
-    pub stats: EngineStats,
+    backend: Box<dyn EngineBackend>,
 }
 
 impl Engine {
-    /// Build an engine for `config` ("tiny"/"small") and `plan`
-    /// ("fp"/"sage"/"adaptive"), initializing parameters from `seed`.
+    /// Back-compat constructor: the PJRT artifact backend (the original
+    /// `Engine::new`).
     pub fn new(rt: &Runtime, config: &str, plan: &str, seed: u64) -> Result<Engine> {
-        // validate the plan through the kernel registry up front, so a
-        // typo reports as "unknown plan" instead of a missing artifact
-        let Some(kernel) = registry::plan_entry(plan) else {
-            bail!(
-                "unknown attention plan '{plan}' (expected fp|sage|adaptive; \
-                 registry kernels: {})",
-                registry::known_names()
-            );
-        };
-        let cfg = rt
-            .manifest
-            .configs
-            .get(config)
-            .with_context(|| format!("config '{config}' not in manifest"))?
-            .clone();
-        let decode_name = format!("{config}_decode_step_{plan}");
-        let decode = rt.load(&decode_name)?;
-        let batch = decode.spec.batch.context("decode artifact missing batch")?;
-        let mut prefills = BTreeMap::new();
-        for name in rt.entries_of_kind("prefill") {
-            let spec = &rt.manifest.entries[&name];
-            if spec.config.as_deref() == Some(config)
-                && name.starts_with(&format!("{config}_prefill_{plan}_"))
-            {
-                let n = spec.n_prompt.context("prefill missing n_prompt")?;
-                prefills.insert(n, rt.load(&name)?);
-            }
-        }
-        if prefills.is_empty() {
-            bail!("no prefill artifacts for {config}/{plan}");
-        }
-        let params = cfg.init_params(seed);
-        let params_lit = params
-            .iter()
-            .map(Value::to_literal)
-            .collect::<Result<Vec<_>>>()?;
-        let kv_shape = vec![cfg.n_layers, batch, cfg.n_heads, cfg.max_seq, cfg.d_head];
-        let zero_kv = Value::zeros_f32(&kv_shape);
+        Engine::pjrt(rt, config, plan, seed)
+    }
+
+    /// The AOT-artifact (PJRT) backend.
+    pub fn pjrt(rt: &Runtime, config: &str, plan: &str, seed: u64) -> Result<Engine> {
+        Ok(Engine { backend: Box::new(PjrtEngine::new(rt, config, plan, seed)?) })
+    }
+
+    /// The native backend on a built-in config ("tiny"/"small") — no
+    /// runtime, no artifacts, no PJRT.
+    pub fn native(config: &str, plan: &str, seed: u64) -> Result<Engine> {
+        let cfg = ModelCfg::builtin(config)
+            .with_context(|| format!("'{config}' is not a built-in config (tiny|small)"))?;
+        Engine::native_with(cfg, plan, seed, NativeEngine::DEFAULT_SLOTS)
+    }
+
+    /// The native backend on an explicit [`ModelCfg`] with a chosen
+    /// decode-slot count (benches build custom shapes this way).
+    pub fn native_with(cfg: ModelCfg, plan: &str, seed: u64, slots: usize) -> Result<Engine> {
         Ok(Engine {
-            cfg: cfg.clone(),
-            plan: plan.to_owned(),
-            kernel,
-            params,
-            params_lit,
-            decode,
-            prefills,
-            kc_lit: zero_kv.to_literal()?,
-            vc_lit: zero_kv.to_literal()?,
-            slots: (0..batch).map(|_| None).collect(),
-            batch,
-            stats: EngineStats::default(),
+            backend: Box::new(NativeEngine::new(cfg, plan, seed, slots, DecodeMode::Prepared)?),
         })
     }
 
-    /// Replace the parameters (e.g. with trained weights from the E2E
-    /// training driver). Shapes must match the manifest spec.
-    pub fn set_params(&mut self, params: Vec<Value>) -> Result<()> {
-        if params.len() != self.params.len() {
-            bail!("expected {} params, got {}", self.params.len(), params.len());
-        }
-        for (new, spec) in params.iter().zip(&self.cfg.param_spec) {
-            if new.shape() != spec.shape.as_slice() {
-                bail!("param {} shape mismatch", spec.name);
-            }
-        }
-        self.params_lit =
-            params.iter().map(Value::to_literal).collect::<Result<Vec<_>>>()?;
-        self.params = params;
-        Ok(())
+    /// Wrap an already-built backend (custom implementations, benches).
+    pub fn from_backend(backend: Box<dyn EngineBackend>) -> Engine {
+        Engine { backend }
+    }
+
+    pub fn backend_name(&self) -> &'static str {
+        self.backend.backend_name()
     }
 
     pub fn plan(&self) -> &str {
-        &self.plan
+        self.backend.plan()
     }
 
-    /// Registry row this plan's artifacts lower from (the "adaptive"
-    /// plan refines it per layer; see §4.5).
+    /// Registry row this plan's artifacts/kernels lower from.
     pub fn kernel(&self) -> &'static registry::KernelEntry {
-        self.kernel
+        self.backend.kernel()
     }
 
     pub fn batch_slots(&self) -> usize {
-        self.batch
+        self.backend.batch_slots()
     }
 
     pub fn free_slots(&self) -> usize {
-        self.slots.iter().filter(|s| s.is_none()).count()
+        self.backend.free_slots()
     }
 
     pub fn live_slots(&self) -> usize {
-        self.batch - self.free_slots()
+        self.backend.live_slots()
     }
 
-    /// Total queued work in live slots (for routing load scores).
     pub fn outstanding_tokens(&self) -> usize {
-        self.slots
-            .iter()
-            .flatten()
-            .map(|s| s.params.max_new_tokens.saturating_sub(s.generated.len()))
-            .sum()
+        self.backend.outstanding_tokens()
     }
 
-    /// Supported prompt lengths (must match an AOT prefill artifact after
-    /// padding).
     pub fn prefill_sizes(&self) -> Vec<usize> {
-        self.prefills.keys().copied().collect()
+        self.backend.prefill_sizes()
     }
 
-    /// Admit one request: prefill it and occupy a free slot.
-    /// Returns false if no slot is free or the prompt cannot fit.
-    pub fn add_request(&mut self, req: &Request) -> Result<bool> {
-        let Some(slot_idx) = self.slots.iter().position(Option::is_none) else {
-            return Ok(false);
-        };
-        if req.prompt.is_empty() {
-            bail!("empty prompt");
-        }
-        // pick the smallest prefill artifact that fits; right-pad with the
-        // last prompt token (synthetic workloads use exact sizes)
-        let Some((&plen, prefill)) =
-            self.prefills.iter().find(|(&n, _)| n >= req.prompt.len())
-        else {
-            bail!(
-                "prompt len {} exceeds largest prefill artifact {:?}",
-                req.prompt.len(),
-                self.prefills.keys().last()
-            );
-        };
-        if plen + req.params.max_new_tokens > self.cfg.max_seq {
-            bail!("request would overflow the context window");
-        }
-        let mut padded = req.prompt.clone();
-        padded.resize(plen, *req.prompt.last().unwrap());
-
-        let t0 = Instant::now();
-        let prompt_lit = Value::i32(padded, &[1, plen]).to_literal()?;
-        let mut inputs: Vec<&xla::Literal> = self.params_lit.iter().collect();
-        inputs.push(&prompt_lit);
-        let prefill = prefill.clone();
-        let out = prefill.run_raw(&inputs)?;
-        self.stats.prefill_time += t0.elapsed();
-        self.stats.prefills += 1;
-
-        let logits: Vec<f32> = out[0].to_vec()?;
-        let kc1: Vec<f32> = out[1].to_vec()?;
-        let vc1: Vec<f32> = out[2].to_vec()?;
-        self.splice_kv(slot_idx, &kc1, &vc1)?;
-
-        let mut rng = Pcg32::seeded(req.params.seed ^ req.id);
-        let first = sample(&logits, req.params.temperature, &mut rng);
-        self.slots[slot_idx] = Some(Slot {
-            id: req.id,
-            pos: plen,
-            next_token: first,
-            generated: vec![first],
-            params: req.params,
-            arrival: req.arrival,
-            first_token_at: Instant::now(),
-            rng,
-        });
-        Ok(true)
+    pub fn reserve_mode(&self) -> ReserveMode {
+        self.backend.reserve_mode()
     }
 
-    /// Copy a batch-1 prefill KV (L,1,H,max,d) into decode slot `b`.
-    /// Prefill-only path: pulls the decode caches to host, splices, and
-    /// re-marshals (decode steps themselves never round-trip the caches).
-    fn splice_kv(&mut self, b: usize, kc1: &[f32], vc1: &[f32]) -> Result<()> {
-        let (l, bt, h, mx, d) =
-            (self.cfg.n_layers, self.batch, self.cfg.n_heads, self.cfg.max_seq, self.cfg.d_head);
-        let layer = h * mx * d;
-        let mut kc: Vec<f32> = self.kc_lit.to_vec()?;
-        let mut vc: Vec<f32> = self.vc_lit.to_vec()?;
-        for li in 0..l {
-            let src = li * layer..(li + 1) * layer;
-            let dst = (li * bt + b) * layer..(li * bt + b + 1) * layer;
-            kc[dst.clone()].copy_from_slice(&kc1[src.clone()]);
-            vc[dst].copy_from_slice(&vc1[src]);
-        }
-        let shape = vec![l, bt, h, mx, d];
-        self.kc_lit = Value::f32(kc, &shape).to_literal()?;
-        self.vc_lit = Value::f32(vc, &shape).to_literal()?;
-        Ok(())
+    pub fn set_params(&mut self, params: Vec<Value>) -> Result<()> {
+        self.backend.set_params(params)
     }
 
-    /// One decode step over all live slots. Returns finished responses.
-    pub fn step(&mut self) -> Result<Vec<Response>> {
-        if self.live_slots() == 0 {
-            return Ok(Vec::new());
-        }
-        let mut tokens = vec![0i32; self.batch];
-        let mut pos = vec![0i32; self.batch];
-        for (b, slot) in self.slots.iter().enumerate() {
-            if let Some(s) = slot {
-                tokens[b] = s.next_token;
-                pos[b] = s.pos as i32;
-            }
-        }
-        let t0 = Instant::now();
-        let tok_lit = Value::i32(tokens, &[self.batch]).to_literal()?;
-        let pos_lit = Value::i32(pos, &[self.batch]).to_literal()?;
-        let mut inputs: Vec<&xla::Literal> = self.params_lit.iter().collect();
-        inputs.push(&self.kc_lit);
-        inputs.push(&self.vc_lit);
-        inputs.push(&tok_lit);
-        inputs.push(&pos_lit);
-        let mut out = self.decode.run_raw(&inputs)?;
-        self.stats.decode_time += t0.elapsed();
-        self.stats.decode_steps += 1;
-        self.stats.occupancy_sum += self.live_slots() as f64 / self.batch as f64;
-
-        let logits: Vec<f32> = out[0].to_vec()?;
-        let logits = logits.as_slice();
-        // feed the output caches straight back as next-step inputs —
-        // no host round-trip on the decode hot path
-        self.vc_lit = out.pop().unwrap();
-        self.kc_lit = out.pop().unwrap();
-
-        let vocab = self.cfg.vocab;
-        let mut done = Vec::new();
-        for (b, slot) in self.slots.iter_mut().enumerate() {
-            let Some(s) = slot else { continue };
-            let row = &logits[b * vocab..(b + 1) * vocab];
-            let tok = sample(row, s.params.temperature, &mut s.rng);
-            s.pos += 1;
-            self.stats.tokens_generated += 1;
-            let stop_hit = s.params.stop_token == Some(tok);
-            if !stop_hit {
-                s.generated.push(tok);
-                s.next_token = tok;
-            }
-            let len_hit =
-                s.generated.len() >= s.params.max_new_tokens || s.pos + 1 >= self.cfg.max_seq;
-            if stop_hit || len_hit {
-                let now = Instant::now();
-                let e2e = now.duration_since(s.arrival).as_secs_f64() * 1e3;
-                let ttft = s.first_token_at.duration_since(s.arrival).as_secs_f64() * 1e3;
-                let n_after_first = (s.generated.len().max(2) - 1) as f64;
-                done.push(Response {
-                    id: s.id,
-                    tokens: std::mem::take(&mut s.generated),
-                    finish: if stop_hit {
-                        FinishReason::StopToken
-                    } else {
-                        FinishReason::MaxTokens
-                    },
-                    ttft_ms: ttft,
-                    tpot_ms: (e2e - ttft) / n_after_first,
-                    e2e_ms: e2e,
-                });
-                *slot = None;
-            }
-        }
-        Ok(done)
-    }
-}
-
-/// Greedy or temperature sampling over a logits row.
-fn sample(logits: &[f32], temperature: f32, rng: &mut Pcg32) -> i32 {
-    if temperature <= 0.0 {
-        return argmax(logits) as i32;
-    }
-    let m = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
-    let weights: Vec<f32> =
-        logits.iter().map(|&l| ((l - m) / temperature).exp()).collect();
-    rng.categorical(&weights) as i32
-}
-
-fn argmax(xs: &[f32]) -> usize {
-    let mut best = 0;
-    for (i, &x) in xs.iter().enumerate() {
-        if x > xs[best] {
-            best = i;
-        }
-    }
-    best
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-
-    #[test]
-    fn sample_greedy_is_argmax() {
-        let mut rng = Pcg32::seeded(1);
-        assert_eq!(sample(&[0.1, 3.0, -1.0], 0.0, &mut rng), 1);
+    /// Admit one request (its KV reservation already made in `kv` per
+    /// [`Engine::reserve_mode`]). See [`EngineBackend::add_request`].
+    pub fn add_request(&mut self, req: &Request, kv: &mut KvCacheManager) -> Result<bool> {
+        self.backend.add_request(req, kv)
     }
 
-    #[test]
-    fn sample_temperature_covers_support() {
-        let mut rng = Pcg32::seeded(2);
-        let logits = [1.0f32, 1.0, 1.0];
-        let mut seen = [false; 3];
-        for _ in 0..200 {
-            seen[sample(&logits, 1.0, &mut rng) as usize] = true;
-        }
-        assert!(seen.iter().all(|&s| s));
+    /// One decode step over all live slots.
+    pub fn step(&mut self, kv: &mut KvCacheManager) -> Result<StepOutcome> {
+        self.backend.step(kv)
     }
 
-    #[test]
-    fn sample_low_temperature_concentrates() {
-        let mut rng = Pcg32::seeded(3);
-        let logits = [0.0f32, 5.0, 0.0];
-        let hits = (0..100)
-            .filter(|_| sample(&logits, 0.1, &mut rng) == 1)
-            .count();
-        assert!(hits > 95);
+    pub fn stats(&self) -> &EngineStats {
+        self.backend.stats()
     }
 }

@@ -2,23 +2,32 @@
 //!
 //! SageAttention is a serving-acceleration paper, so the coordinator is a
 //! vLLM-router-shaped stack: requests flow through admission/batching into
-//! per-replica engines that drive the AOT transformer artifacts with
-//! continuous batching over a fixed slot set, backed by a paged KV-cache
-//! accountant. The attention implementation inside the artifacts — full
-//! precision vs SageAttention vs an adaptive per-layer plan (§4.5) — is
-//! the experiment knob; everything else stays identical, which is exactly
-//! the paper's plug-and-play claim.
+//! per-replica engines behind the [`backend::EngineBackend`] trait —
+//! either the PJRT artifact driver or the pure-Rust native backend whose
+//! per-slot KV is quantize-once `PreparedKV` state held in a physical
+//! paged cache ([`PagedKvStore`]) indexed by the [`KvCacheManager`]'s
+//! block tables, with preempt-and-requeue (recompute-on-resume) when
+//! blocks run out. The attention implementation — full precision vs
+//! SageAttention vs an adaptive per-layer plan (§4.5) — is the experiment
+//! knob; everything else stays identical, which is exactly the paper's
+//! plug-and-play claim.
 
+pub mod backend;
 pub mod batcher;
 pub mod engine;
 pub mod kv_cache;
+pub mod paged_kv;
 pub mod request;
 pub mod router;
 pub mod scheduler;
 
+pub use backend::native::{DecodeMode, NativeEngine};
+pub use backend::pjrt::PjrtEngine;
+pub use backend::{EngineBackend, EngineStats, ReserveMode, StepOutcome};
 pub use batcher::{BatchPolicy, Batcher};
-pub use engine::{Engine, EngineStats};
+pub use engine::Engine;
 pub use kv_cache::{BlockId, KvCacheManager};
-pub use request::{FinishReason, GenParams, Request, RequestId, Response};
-pub use router::{Replica, Router, RoutingPolicy};
+pub use paged_kv::PagedKvStore;
+pub use request::{FinishReason, GenParams, Request, RequestId, Response, ResumeState};
+pub use router::{EngineReplica, Replica, Router, RoutingPolicy};
 pub use scheduler::{Scheduler, SchedulerReport};

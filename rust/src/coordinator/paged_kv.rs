@@ -1,0 +1,356 @@
+//! Physical paged KV cache for the native serving backend.
+//!
+//! [`PagedKvStore`] owns fixed-size blocks whose payload is
+//! per-(layer, kv-head) [`KvPage`]s — the paper's §3 quantize-once decode
+//! state (smoothed INT8 K rows + block-local scales, per-channel INT8 V
+//! scales or fp16-rounded V rows, and the raw fp32 rows as requant
+//! source), paged at [`PAGE_ROWS`] rows per block so every page is
+//! quantization-self-contained. Blocks are indexed by the
+//! [`KvCacheManager`]'s block tables: the logical accountant decides
+//! *which* block ids a sequence owns, this store holds *what* lives in
+//! them, and the two agree row-for-row (a block covers the same
+//! [`PAGE_ROWS`]-token span on both sides).
+//!
+//! Decode steps run attention directly against the resident pages
+//! ([`PagedKvStore::attention`] → [`PagedSegment::run`]), never
+//! re-quantizing a resident prefix — bit-identical to the one-shot
+//! [`crate::attn::AttnSpec::prepare`]/`run_prepared` path.
+
+use std::collections::HashMap;
+
+use crate::attn::{gather_raw, AttnImpl, KvPage, PagedSegment, PlaneOpts, Scratch, PAGE_ROWS};
+use crate::util::error::{ensure, Context, Result};
+
+use super::kv_cache::BlockId;
+use super::request::RequestId;
+
+/// Physical paged KV storage (see module docs).
+#[derive(Debug)]
+pub struct PagedKvStore {
+    n_layers: usize,
+    h_kv: usize,
+    d: usize,
+    imp: AttnImpl,
+    /// Block id → per-(layer, kv-head) page payloads
+    /// (`n_layers * h_kv` pages per block), bound on first append.
+    blocks: HashMap<BlockId, Vec<KvPage>>,
+    /// Per-sequence segment metadata (`n_layers * h_kv` entries; O(d)
+    /// each — every per-row quantity lives in the blocks).
+    segs: HashMap<RequestId, Vec<PagedSegment>>,
+}
+
+impl PagedKvStore {
+    /// A store for `n_layers` layers of `h_kv` KV heads at head dim `d`,
+    /// quantized for `imp` (must have a quantize-once state; FP8 and
+    /// per-tensor/per-channel Q/K are rejected like `AttnSpec::prepare`).
+    pub fn new(n_layers: usize, h_kv: usize, d: usize, imp: AttnImpl) -> Result<PagedKvStore> {
+        // probe: fails fast for kernels without pageable state
+        PagedSegment::new(d, imp)?;
+        Ok(PagedKvStore {
+            n_layers,
+            h_kv,
+            d,
+            imp,
+            blocks: HashMap::new(),
+            segs: HashMap::new(),
+        })
+    }
+
+    pub fn kernel(&self) -> AttnImpl {
+        self.imp
+    }
+
+    pub fn page_rows(&self) -> usize {
+        PAGE_ROWS
+    }
+
+    /// Register a sequence (empty segments; rows arrive via
+    /// [`PagedKvStore::append_layer`]).
+    pub fn register(&mut self, id: RequestId) -> Result<()> {
+        ensure!(!self.segs.contains_key(&id), "sequence {id} already registered");
+        let mut segs = Vec::with_capacity(self.n_layers * self.h_kv);
+        for _ in 0..self.n_layers * self.h_kv {
+            segs.push(PagedSegment::new(self.d, self.imp)?);
+        }
+        self.segs.insert(id, segs);
+        Ok(())
+    }
+
+    pub fn is_registered(&self, id: RequestId) -> bool {
+        self.segs.contains_key(&id)
+    }
+
+    /// Resident KV rows of a sequence.
+    pub fn rows(&self, id: RequestId) -> Option<usize> {
+        self.segs.get(&id).map(|s| s[0].n())
+    }
+
+    /// Live sequences (must mirror the logical accountant).
+    pub fn live_sequences(&self) -> usize {
+        self.segs.len()
+    }
+
+    /// Append `t` new KV rows for every head of `layer` (row-major
+    /// `(h_kv, t, d)` K and V), writing into the physical blocks named
+    /// by `table` (the sequence's block table from the accountant).
+    pub fn append_layer(
+        &mut self,
+        id: RequestId,
+        table: &[BlockId],
+        layer: usize,
+        k: &[f32],
+        v: &[f32],
+        t: usize,
+    ) -> Result<()> {
+        ensure!(layer < self.n_layers, "layer {layer} out of range");
+        ensure!(k.len() == self.h_kv * t * self.d && v.len() == k.len(), "KV row shape mismatch");
+        let n = self
+            .segs
+            .get(&id)
+            .with_context(|| format!("sequence {id} not registered"))?[layer * self.h_kv]
+            .n();
+        ensure!(
+            table.len() * PAGE_ROWS >= n + t,
+            "block table of {} blocks cannot hold {} rows (logical/physical divergence)",
+            table.len(),
+            n + t
+        );
+        let planes = self.n_layers * self.h_kv;
+        for h in 0..self.h_kv {
+            let plane = layer * self.h_kv + h;
+            // take the plane's pages out of the blocks, append, put back
+            // (safe multi-index mutation without unsafe aliasing)
+            let mut pages: Vec<KvPage> = Vec::with_capacity(table.len());
+            for b in table {
+                let blk = self
+                    .blocks
+                    .entry(*b)
+                    .or_insert_with(|| vec![KvPage::new(); planes]);
+                pages.push(std::mem::take(&mut blk[plane]));
+            }
+            let rows = h * t * self.d..(h + 1) * t * self.d;
+            let seg = &mut self.segs.get_mut(&id).unwrap()[plane];
+            seg.append(&mut pages, &k[rows.clone()], &v[rows]);
+            for (b, pg) in table.iter().zip(pages) {
+                self.blocks.get_mut(b).expect("block bound above")[plane] = pg;
+            }
+        }
+        Ok(())
+    }
+
+    /// Attention for `h_q` query heads of `layer` against the resident
+    /// pages (GQA: `h_q` must be a multiple of the store's KV heads).
+    /// `q` is row-major `(h_q, n_q, d)`; the output matches. The decode
+    /// hot path: quantized K/V is read through the block table, only Q
+    /// is quantized per call.
+    #[allow(clippy::too_many_arguments)]
+    pub fn attention(
+        &self,
+        id: RequestId,
+        table: &[BlockId],
+        layer: usize,
+        q: &[f32],
+        h_q: usize,
+        n_q: usize,
+        scratch: &mut Scratch,
+        opts: PlaneOpts,
+    ) -> Result<Vec<f32>> {
+        let segs = self
+            .segs
+            .get(&id)
+            .with_context(|| format!("sequence {id} not registered"))?;
+        ensure!(
+            h_q >= self.h_kv && h_q % self.h_kv == 0,
+            "{} query heads not a multiple of {} KV heads",
+            h_q,
+            self.h_kv
+        );
+        ensure!(q.len() == h_q * n_q * self.d, "Q shape mismatch");
+        let group = h_q / self.h_kv;
+        let mut out = vec![0.0f32; h_q * n_q * self.d];
+        for qh in 0..h_q {
+            let plane = layer * self.h_kv + qh / group;
+            let seg = &segs[plane];
+            let pages = self.plane_pages(table, plane, seg.n())?;
+            let qh_rows = &q[qh * n_q * self.d..(qh + 1) * n_q * self.d];
+            let o = seg.run(scratch, qh_rows, n_q, &pages, opts);
+            out[qh * n_q * self.d..(qh + 1) * n_q * self.d].copy_from_slice(&o);
+        }
+        Ok(out)
+    }
+
+    /// Raw fp32 K/V rows of one (layer, kv-head) plane, gathered through
+    /// the block table — the requant-every-step serving baseline (and
+    /// recompute source).
+    pub fn gather_layer_raw(
+        &self,
+        id: RequestId,
+        table: &[BlockId],
+        layer: usize,
+        head: usize,
+    ) -> Result<(Vec<f32>, Vec<f32>)> {
+        let segs = self
+            .segs
+            .get(&id)
+            .with_context(|| format!("sequence {id} not registered"))?;
+        let plane = layer * self.h_kv + head;
+        let n = segs[plane].n();
+        let pages = self.plane_pages(table, plane, n)?;
+        Ok(gather_raw(&pages, n, self.d))
+    }
+
+    /// Drop a sequence and reclaim its physical blocks. The caller is
+    /// the accountant's mirror: `table` must be the sequence's block
+    /// table (fetched before the logical release).
+    pub fn release(&mut self, id: RequestId, table: &[BlockId]) -> Result<()> {
+        ensure!(self.segs.remove(&id).is_some(), "sequence {id} not registered");
+        for b in table {
+            self.blocks.remove(b);
+        }
+        Ok(())
+    }
+
+    /// Resident physical payload in bytes (telemetry).
+    pub fn resident_bytes(&self) -> usize {
+        self.blocks
+            .values()
+            .map(|blk| blk.iter().map(KvPage::payload_bytes).sum::<usize>())
+            .sum()
+    }
+
+    /// Physical/logical agreement check (the invariant tests' hook):
+    /// all planes of a sequence agree on the row count, the logical
+    /// block table covers the physical rows, and every block holding
+    /// rows is bound. `tables` resolves a sequence to its accountant
+    /// block table (`None` = unknown to the accountant).
+    pub fn check_agreement(
+        &self,
+        tables: impl Fn(RequestId) -> Option<Vec<BlockId>>,
+    ) -> std::result::Result<(), String> {
+        for (&id, segs) in &self.segs {
+            let n = segs[0].n();
+            if segs.iter().any(|s| s.n() != n) {
+                return Err(format!("sequence {id}: planes disagree on row count"));
+            }
+            let Some(table) = tables(id) else {
+                return Err(format!("sequence {id}: physical rows but no logical table"));
+            };
+            if table.len() * PAGE_ROWS < n {
+                return Err(format!(
+                    "sequence {id}: {} logical blocks < {n} physical rows",
+                    table.len()
+                ));
+            }
+            for (i, b) in table.iter().enumerate() {
+                if i * PAGE_ROWS < n && !self.blocks.contains_key(b) {
+                    return Err(format!("sequence {id}: row-bearing block {b} unbound"));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn plane_pages<'a>(
+        &'a self,
+        table: &[BlockId],
+        plane: usize,
+        n: usize,
+    ) -> Result<Vec<&'a KvPage>> {
+        ensure!(
+            table.len() * PAGE_ROWS >= n,
+            "block table of {} blocks cannot cover {n} resident rows",
+            table.len()
+        );
+        let mut pages = Vec::with_capacity(table.len());
+        for (i, b) in table.iter().enumerate() {
+            if i * PAGE_ROWS >= n {
+                break; // trailing blocks reserved but not yet written
+            }
+            let blk = self
+                .blocks
+                .get(b)
+                .with_context(|| format!("block {b} in table but unbound in the paged store"))?;
+            pages.push(&blk[plane]);
+        }
+        Ok(pages)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attn::{AttnSpec, SAGE_B};
+    use crate::synth::{make_qkv, Profile};
+
+    #[test]
+    fn paged_store_matches_one_shot_prepared_kv() {
+        // the serving invariant: decode through pages == AttnSpec's
+        // one-shot PreparedKV path, bit for bit
+        let (n, d, h) = (150usize, 32usize, 2usize);
+        let (q, k, v) = make_qkv(61, [1, h, n, d], Profile::diffusion_like());
+        let spec = AttnSpec::sage_b().causal(true);
+        let kv = spec.prepare(&k, &v).unwrap();
+        let gold = spec.run_prepared(&q.narrow_n(n - 1, n), &kv).unwrap();
+
+        let mut store = PagedKvStore::new(1, h, d, SAGE_B).unwrap();
+        store.register(7).unwrap();
+        let table: Vec<BlockId> = (0..n.div_ceil(PAGE_ROWS) as BlockId).collect();
+        // interleave per-head rows into (h, t, d) chunks and append
+        let mut r = 0;
+        for step in [64usize, 1, 30].iter().cycle() {
+            if r >= n {
+                break;
+            }
+            let e = (r + step).min(n);
+            let t = e - r;
+            let mut kc = Vec::with_capacity(h * t * d);
+            let mut vc = Vec::with_capacity(h * t * d);
+            for hi in 0..h {
+                kc.extend_from_slice(&k.head(0, hi)[r * d..e * d]);
+                vc.extend_from_slice(&v.head(0, hi)[r * d..e * d]);
+            }
+            store.append_layer(7, &table, 0, &kc, &vc, t).unwrap();
+            r = e;
+        }
+        assert_eq!(store.rows(7), Some(n));
+
+        let mut scratch = Scratch::new();
+        let mut q_last = Vec::with_capacity(h * d);
+        for hi in 0..h {
+            q_last.extend_from_slice(&q.head(0, hi)[(n - 1) * d..n * d]);
+        }
+        let out = store
+            .attention(7, &table, 0, &q_last, h, 1, &mut scratch, PlaneOpts::causal(true))
+            .unwrap();
+        assert_eq!(out, gold.data, "paged attention != one-shot PreparedKV");
+    }
+
+    #[test]
+    fn release_reclaims_blocks() {
+        let (n, d) = (100usize, 16usize);
+        let (_, k, v) = make_qkv(62, [1, 1, n, d], Profile::llama_like());
+        let mut store = PagedKvStore::new(1, 1, d, SAGE_B).unwrap();
+        store.register(1).unwrap();
+        let table: Vec<BlockId> = vec![4, 9];
+        store.append_layer(1, &table, 0, &k.data, &v.data, n).unwrap();
+        assert!(store.resident_bytes() > 0);
+        assert_eq!(store.live_sequences(), 1);
+        store.release(1, &table).unwrap();
+        assert_eq!(store.live_sequences(), 0);
+        assert_eq!(store.resident_bytes(), 0);
+        assert!(store.release(1, &table).is_err());
+    }
+
+    #[test]
+    fn divergence_is_detected() {
+        let d = 16usize;
+        let (_, k, v) = make_qkv(63, [1, 1, PAGE_ROWS * 2, d], Profile::llama_like());
+        let mut store = PagedKvStore::new(1, 1, d, SAGE_B).unwrap();
+        store.register(1).unwrap();
+        // table too small for the rows → logical/physical divergence
+        let err = store.append_layer(1, &[0], 0, &k.data, &v.data, PAGE_ROWS * 2);
+        assert!(err.is_err());
+        // unknown sequence
+        assert!(store.append_layer(9, &[0], 0, &k.data, &v.data, 1).is_err());
+    }
+}

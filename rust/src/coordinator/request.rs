@@ -2,6 +2,8 @@
 
 use std::time::Instant;
 
+use crate::util::rng::Pcg32;
+
 pub type RequestId = u64;
 
 /// Sampling parameters.
@@ -21,6 +23,21 @@ impl Default for GenParams {
     }
 }
 
+/// Decode progress carried across a preemption (recompute-on-resume):
+/// the tokens generated so far, the sampler state, and the original
+/// first-token timestamp so TTFT stays honest. The KV itself is *not*
+/// carried — it is recomputed by re-prefilling `prompt ++ generated`
+/// (vLLM's recompute preemption), which the paged cache's bit-identity
+/// invariant makes exact for the resident quantized state.
+#[derive(Clone, Debug)]
+pub struct ResumeState {
+    /// Tokens sampled before the preemption (the last one has not been
+    /// fed through a decode step yet).
+    pub generated: Vec<i32>,
+    pub rng: Pcg32,
+    pub first_token_at: Instant,
+}
+
 /// An inference request.
 #[derive(Clone, Debug)]
 pub struct Request {
@@ -28,16 +45,43 @@ pub struct Request {
     pub prompt: Vec<i32>,
     pub params: GenParams,
     pub arrival: Instant,
+    /// `Some` when this request was preempted and requeued.
+    pub resume: Option<ResumeState>,
 }
 
 impl Request {
     pub fn new(id: RequestId, prompt: Vec<i32>, params: GenParams) -> Request {
-        Request { id, prompt, params, arrival: Instant::now() }
+        Request { id, prompt, params, arrival: Instant::now(), resume: None }
     }
 
     /// Total KV footprint this request may need (prompt + generation).
     pub fn max_tokens(&self) -> usize {
         self.prompt.len() + self.params.max_new_tokens
+    }
+
+    /// Tokens a prefill must process to (re)build this request's KV
+    /// prefix: the prompt, plus — after a preemption — every generated
+    /// token that had already been fed through a decode step (all but
+    /// the last sampled one).
+    pub fn prefill_tokens(&self) -> Vec<i32> {
+        let mut toks = self.prompt.clone();
+        if let Some(r) = &self.resume {
+            toks.extend_from_slice(&r.generated[..r.generated.len().saturating_sub(1)]);
+        }
+        toks
+    }
+
+    /// Length of [`Request::prefill_tokens`] without materializing it.
+    pub fn prefill_len(&self) -> usize {
+        self.prompt.len()
+            + self.resume.as_ref().map_or(0, |r| r.generated.len().saturating_sub(1))
+    }
+
+    /// Generation budget still outstanding.
+    pub fn remaining_new_tokens(&self) -> usize {
+        self.params
+            .max_new_tokens
+            .saturating_sub(self.resume.as_ref().map_or(0, |r| r.generated.len()))
     }
 }
 
@@ -57,8 +101,10 @@ pub struct Response {
     pub finish: FinishReason,
     /// Time to first token (prefill + queueing), ms.
     pub ttft_ms: f64,
-    /// Mean time per output token after the first, ms.
-    pub tpot_ms: f64,
+    /// Mean time per output token after the first, ms; `None` for
+    /// single-token responses (no inter-token interval exists — a
+    /// fabricated denominator would understate tail TPOT).
+    pub tpot_ms: Option<f64>,
     /// End-to-end latency, ms.
     pub e2e_ms: f64,
 }
@@ -75,5 +121,28 @@ mod tests {
             GenParams { max_new_tokens: 5, ..Default::default() },
         );
         assert_eq!(r.max_tokens(), 8);
+        assert_eq!(r.prefill_len(), 3);
+        assert_eq!(r.prefill_tokens(), vec![1, 2, 3]);
+        assert_eq!(r.remaining_new_tokens(), 5);
+    }
+
+    #[test]
+    fn resume_accounting() {
+        let mut r = Request::new(
+            2,
+            vec![1, 2],
+            GenParams { max_new_tokens: 5, ..Default::default() },
+        );
+        r.resume = Some(ResumeState {
+            generated: vec![10, 11, 12],
+            rng: Pcg32::seeded(0),
+            first_token_at: Instant::now(),
+        });
+        // the last sampled token (12) has not been fed yet: the re-prefill
+        // covers prompt + fed tokens, and 12 rides as the next decode input
+        assert_eq!(r.prefill_tokens(), vec![1, 2, 10, 11]);
+        assert_eq!(r.prefill_len(), 4);
+        assert_eq!(r.remaining_new_tokens(), 2);
+        assert_eq!(r.max_tokens(), 7);
     }
 }

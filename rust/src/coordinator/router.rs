@@ -4,6 +4,7 @@
 //! without PJRT and reusable for heterogeneous backends.
 
 use super::request::Request;
+use super::scheduler::Scheduler;
 
 /// Anything that can accept routed requests.
 pub trait Replica {
@@ -23,6 +24,37 @@ pub enum RoutingPolicy {
     /// Least-loaded among the `k` next round-robin candidates — the
     /// "power of two choices" compromise.
     PowerOfK(usize),
+}
+
+/// A scheduler-backed replica: any [`super::backend::EngineBackend`]
+/// behind the [`super::Engine`] facade, fronted by its own batcher + KV
+/// accountant. Load is outstanding decode work plus queued requests, so
+/// heterogeneous backends (pjrt vs native) are comparable under one
+/// router.
+pub struct EngineReplica {
+    pub id: usize,
+    pub sched: Scheduler,
+}
+
+impl EngineReplica {
+    pub fn new(id: usize, sched: Scheduler) -> EngineReplica {
+        EngineReplica { id, sched }
+    }
+}
+
+impl Replica for EngineReplica {
+    fn id(&self) -> usize {
+        self.id
+    }
+
+    fn load(&self) -> f64 {
+        self.sched.engine.outstanding_tokens() as f64 + self.sched.batcher.pending() as f64
+    }
+
+    fn submit(&mut self, req: Request) -> bool {
+        self.sched.submit(req);
+        true
+    }
 }
 
 /// Stateless-per-request router with per-replica counters.

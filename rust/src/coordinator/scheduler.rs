@@ -1,8 +1,9 @@
 //! Prefill/decode scheduler: ties batcher + KV accountant + engine into
 //! the serving loop. One `tick()` = admit what fits, prefill admissions,
-//! advance the decode batch one token, release finished sequences.
+//! advance the decode batch one token, release finished sequences and
+//! requeue preempted ones.
 
-use crate::util::error::Result;
+use crate::util::error::{bail, Result};
 
 use crate::metrics::LatencyStats;
 
@@ -16,10 +17,20 @@ use super::request::{Request, Response};
 pub struct SchedulerReport {
     pub responses: Vec<Response>,
     pub ttft: LatencyStats,
+    /// TPOT over multi-token responses only (single-token responses have
+    /// no inter-token interval and report `tpot_ms: None`).
     pub tpot: LatencyStats,
     pub e2e: LatencyStats,
     pub wall_s: f64,
     pub tokens_out: u64,
+    /// Requests preempted for KV blocks and requeued (native backend's
+    /// recompute-on-resume policy).
+    pub preemptions: u64,
+    /// Admissions bounced by the engine (no slot after all) and requeued
+    /// with their blocks released — never silently dropped.
+    pub requeued: u64,
+    /// Responses whose TPOT was undefined (single-token).
+    pub tpot_undefined: u64,
 }
 
 impl SchedulerReport {
@@ -56,25 +67,84 @@ impl Scheduler {
     /// One scheduling round. Returns responses that finished this tick.
     pub fn tick(&mut self) -> Result<Vec<Response>> {
         // 1. admission: fill free decode slots from the queue, gated by
-        //    both slot availability and KV block capacity
+        //    slot availability and KV capacity under the backend's
+        //    reservation discipline
+        let mode = self.engine.reserve_mode();
         let free = self.engine.free_slots();
         if free > 0 && !self.batcher.is_empty() {
-            for req in self.batcher.admit(free, &mut self.kv) {
-                let ok = self.engine.add_request(&req)?;
-                debug_assert!(ok, "engine slot accounting diverged from batcher");
+            let mut admitted = self.batcher.admit_with(free, &mut self.kv, mode);
+            let mut placed = 0;
+            let mut admit_err = None;
+            while placed < admitted.len() {
+                match self.engine.add_request(&admitted[placed], &mut self.kv) {
+                    Ok(true) => placed += 1,
+                    Ok(false) => {
+                        // the engine bounced an admission the batcher had
+                        // already reserved blocks for (the release-builds
+                        // failure mode behind the old debug_assert!)
+                        self.report.requeued += 1;
+                        break;
+                    }
+                    Err(e) => {
+                        admit_err = Some(e);
+                        break;
+                    }
+                }
+            }
+            // everything not placed still holds its reservation: release
+            // it and requeue at the head in original order — dropping any
+            // of these would leak their blocks forever. A hard-errored
+            // request is unservable (bad prompt, over budget): drop it
+            // with its blocks released and surface the error.
+            let mut not_placed = admitted.split_off(placed);
+            if admit_err.is_some() && !not_placed.is_empty() {
+                let failed = not_placed.remove(0);
+                let _ = self.kv.release(failed.id);
+            }
+            for req in not_placed.into_iter().rev() {
+                let _ = self.kv.release(req.id);
+                self.batcher.push_front(req);
+            }
+            if let Some(e) = admit_err {
+                return Err(e);
             }
         }
+        // stall detection: the engine is idle, the pool is completely
+        // free, and the queue head still did not fit — that can never
+        // change, so fail loudly instead of spinning forever
+        if self.engine.live_slots() == 0
+            && !self.batcher.is_empty()
+            && self.kv.live_sequences() == 0
+        {
+            bail!(
+                "queued request can never be admitted: it needs more KV blocks \
+                 than the whole pool holds ({} blocks of {})",
+                self.kv.total_blocks(),
+                self.kv.block_size()
+            );
+        }
         // 2. decode step for the live batch
-        let done = self.engine.step()?;
-        // 3. release finished sequences' KV blocks
+        let outcome = self.engine.step(&mut self.kv)?;
+        // 3. requeue preempted requests at the head (their logical and
+        //    physical blocks were released inside the step)
+        for req in outcome.preempted {
+            self.report.preemptions += 1;
+            self.batcher.push_front(req);
+        }
+        // 4. release finished sequences' logical KV blocks (backends
+        //    reclaim the physical side themselves)
+        let done = outcome.finished;
         for resp in &done {
             let _ = self.kv.release(resp.id);
             self.report.ttft.record(std::time::Duration::from_micros(
                 (resp.ttft_ms * 1000.0) as u64,
             ));
-            self.report.tpot.record(std::time::Duration::from_micros(
-                (resp.tpot_ms.max(0.0) * 1000.0) as u64,
-            ));
+            match resp.tpot_ms {
+                Some(tpot) => self.report.tpot.record(std::time::Duration::from_micros(
+                    (tpot.max(0.0) * 1000.0) as u64,
+                )),
+                None => self.report.tpot_undefined += 1,
+            }
             self.report.e2e.record(std::time::Duration::from_micros(
                 (resp.e2e_ms * 1000.0) as u64,
             ));

@@ -22,33 +22,40 @@ use std::time::Duration;
 
 use sageattention::adaptive;
 use sageattention::attn::{
-    registry, sage_plane_naive, sage_plane_with, AttnImpl, AttnSpec, PvMode, Scratch, BLOCK_Q,
+    registry, sage_plane_naive, sage_plane_with, AttnImpl, AttnSpec, KvPage, PagedSegment,
+    PlaneOpts, PvMode, Scratch, BLOCK_Q, PAGE_ROWS,
 };
 use sageattention::bench::{bench, bench_budget, f2, pct, sci, Sample, Table};
 use sageattention::coordinator::{
-    BatchPolicy, Batcher, Engine, GenParams, KvCacheManager, Request, Scheduler,
+    BatchPolicy, Batcher, DecodeMode, Engine, EngineBackend, GenParams, KvCacheManager,
+    NativeEngine, Request, Scheduler,
 };
 use sageattention::metrics::{accuracy, attention_ops};
 use sageattention::perfmodel::{predict_tops, AttnKernel, DeviceSpec, Workpoint};
 use sageattention::quant::Granularity;
-use sageattention::runtime::{Runtime, Value};
-use sageattention::synth::{make_qkv, Profile, WorkloadGen};
+use sageattention::runtime::{ModelCfg, Runtime, Value};
+use sageattention::synth::{make_qkv, Corpus, Profile, WorkloadGen};
 use sageattention::tensor::{default_threads, parallel_map, parallel_map_with, Tensor};
 use sageattention::util::error::{ensure, Context, Result};
 use sageattention::util::json::Json;
+use sageattention::util::rng::Pcg32;
 
 const USAGE: &str = "\
 usage: sage <subcommand> [--key value]...   (`sage help` prints this)
 
 subcommands:
-  smoke          [--artifact NAME]                    artifact round-trip sanity check
-  serve          [--config C] [--plan P] [--requests N] [--seed S]
+  smoke          [--backend pjrt|native] [--artifact NAME]
+                 round-trip sanity check (pjrt: artifact vs native kernels;
+                 native: paged-decode bit-identity + end-to-end serve)
+  serve          [--backend pjrt|native] [--config C] [--plan P] [--requests N]
+                 [--seed S] [--slots N] [--kv-blocks N]
   calibrate      [--layers N] [--profile P] [--out FILE] [--seed S]
   accuracy       [--profile P] [--seq N] [--headdim D] [--kernel NAME]
   speed          [--device 4090|3090] [--headdim D] [--causal]
   kernels                                             list the kernel registry
   bench-hotpath  [--seq N] [--headdim D] [--batch B] [--heads H] [--secs S]
-                 [--decode-tokens T] [--check FILE] [--update FILE]";
+                 [--decode-tokens T] [--serve-seq N] [--serve-decode-tokens T]
+                 [--check FILE] [--update FILE]";
 
 /// Flags that are bare switches (no value); every other flag requires one.
 const BOOLEAN_FLAGS: &[&str] = &["causal"];
@@ -68,15 +75,24 @@ fn main() {
         return;
     }
     let allowed: &[&str] = match cmd.as_str() {
-        "smoke" => &["artifact"],
-        "serve" => &["config", "plan", "requests", "seed"],
+        "smoke" => &["artifact", "backend"],
+        "serve" => &["config", "plan", "requests", "seed", "backend", "slots", "kv-blocks"],
         "calibrate" => &["layers", "profile", "out", "seed"],
         "accuracy" => &["profile", "seq", "headdim", "kernel"],
         "speed" => &["device", "headdim", "causal"],
         "kernels" => &[],
-        "bench-hotpath" => {
-            &["seq", "headdim", "batch", "heads", "secs", "decode-tokens", "check", "update"]
-        }
+        "bench-hotpath" => &[
+            "seq",
+            "headdim",
+            "batch",
+            "heads",
+            "secs",
+            "decode-tokens",
+            "serve-seq",
+            "serve-decode-tokens",
+            "check",
+            "update",
+        ],
         other => usage_error(&format!("unknown subcommand '{other}'")),
     };
     // help wins over any other flag validation (checked first so the
@@ -192,9 +208,16 @@ where
     }
 }
 
-/// Load one attention artifact, run it against synthetic QKV, and compare
-/// with the rust-native exact implementation.
+/// Round-trip sanity check. `--backend pjrt` (default): load one
+/// attention artifact and compare with the rust-native exact kernel.
+/// `--backend native`: zero-PJRT — pin the paged-decode bit-identity
+/// invariant and serve a tiny workload end to end.
 fn smoke(flags: &HashMap<String, String>) -> Result<()> {
+    match flag(flags, "backend", "pjrt") {
+        "native" => return smoke_native(),
+        "pjrt" => {}
+        other => usage_error(&format!("unknown backend '{other}' (expected pjrt|native)")),
+    }
     let rt = Runtime::open(Runtime::default_dir())?;
     println!("platform: {}", rt.platform());
     let name = flag(flags, "artifact", "attn_sage_b_1x2x256x64");
@@ -216,6 +239,54 @@ fn smoke(flags: &HashMap<String, String>) -> Result<()> {
     Ok(())
 }
 
+/// Native-backend smoke: (1) paged decode is bit-identical to the
+/// one-shot `AttnSpec::prepare`/`run_prepared` path, (2) a tiny serve
+/// completes end to end with zero PJRT involvement.
+fn smoke_native() -> Result<()> {
+    // (1) the paged bit-identity invariant, at the attention layer
+    let (n, d) = (150usize, 64usize);
+    let (q, k, v) = make_qkv(42, [1, 1, n, d], Profile::diffusion_like());
+    let spec = AttnSpec::sage_b().causal(true);
+    let kv_state = spec.prepare(&k, &v)?;
+    let gold = spec.run_prepared(&q.narrow_n(n - 1, n), &kv_state)?;
+    let mut seg = PagedSegment::new(d, spec.resolve_kernel(d)?)?;
+    let mut pages = vec![KvPage::new(); PagedSegment::pages_for(n)];
+    for r in 0..n {
+        // grow row by row, as a decode loop would
+        seg.append(&mut pages, &k.data[r * d..(r + 1) * d], &v.data[r * d..(r + 1) * d]);
+    }
+    let refs: Vec<&KvPage> = pages.iter().collect();
+    let mut scratch = Scratch::new();
+    let paged =
+        seg.run(&mut scratch, &q.data[(n - 1) * d..n * d], 1, &refs, PlaneOpts::causal(true));
+    ensure!(
+        paged == gold.data,
+        "paged decode diverged from the one-shot PreparedKV path"
+    );
+    println!("paged-decode bit-identity: OK ({n} rows, d={d}, SageAttn-B)");
+
+    // (2) end-to-end serve on the tiny built-in config
+    let engine = Engine::native("tiny", "sage", 7)?;
+    let slots = engine.batch_slots();
+    let cfg = ModelCfg::builtin("tiny").unwrap();
+    let kv = KvCacheManager::new(slots * cfg.max_seq.div_ceil(PAGE_ROWS), PAGE_ROWS);
+    let mut sched = Scheduler::new(Batcher::new(BatchPolicy::Fifo), kv, engine);
+    let mut corpus = Corpus::new(cfg.vocab, 3);
+    for i in 0..2u64 {
+        sched.submit(Request::new(
+            i,
+            corpus.batch(1, 24),
+            GenParams { max_new_tokens: 6, ..Default::default() },
+        ));
+    }
+    let report = sched.run_to_completion()?;
+    ensure!(report.responses.len() == 2, "expected 2 responses");
+    ensure!(report.tokens_out == 12, "expected 12 tokens, got {}", report.tokens_out);
+    println!("native serve: 2 requests, {} tokens, zero PJRT", report.tokens_out);
+    println!("smoke OK");
+    Ok(())
+}
+
 /// Serve a synthetic workload through the full coordinator.
 fn serve(flags: &HashMap<String, String>) -> Result<()> {
     // validate CLI input before touching the runtime, so flag misuse
@@ -224,16 +295,51 @@ fn serve(flags: &HashMap<String, String>) -> Result<()> {
     let plan = flag(flags, "plan", "sage");
     let n_req: usize = parsed_flag(flags, "requests", "16");
     let seed: u64 = parsed_flag(flags, "seed", "1");
-    let rt = Runtime::open(Runtime::default_dir())?;
-    let engine = Engine::new(&rt, config, plan, seed)?;
-    println!("plan '{plan}' → kernel {} ({})", engine.kernel().name, engine.kernel().summary);
-    let cfg = &rt.manifest.configs[config];
-    let vocab = cfg.vocab;
-    let max_seq = cfg.max_seq;
+    let backend = flag(flags, "backend", "pjrt");
+
+    let (engine, vocab, max_seq) = match backend {
+        "pjrt" => {
+            let rt = Runtime::open(Runtime::default_dir())?;
+            let engine = Engine::pjrt(&rt, config, plan, seed)?;
+            let cfg = &rt.manifest.configs[config];
+            (engine, cfg.vocab, cfg.max_seq)
+        }
+        "native" => {
+            let cfg = ModelCfg::builtin(config)
+                .with_context(|| format!("'{config}' is not a built-in config (tiny|small)"))?;
+            let slots: usize = parsed_flag(flags, "slots", "4");
+            if slots == 0 {
+                usage_error("--slots must be non-zero");
+            }
+            let engine = Engine::native_with(cfg.clone(), plan, seed, slots)?;
+            (engine, cfg.vocab, cfg.max_seq)
+        }
+        other => usage_error(&format!("unknown backend '{other}' (expected pjrt|native)")),
+    };
+    println!(
+        "backend '{}', plan '{plan}' → kernel {} ({})",
+        engine.backend_name(),
+        engine.kernel().name,
+        engine.kernel().summary
+    );
     let slots = engine.batch_slots();
 
+    // block math: pjrt commits dense caches (block 16, legacy sizing);
+    // native pages physically at PAGE_ROWS and takes --kv-blocks to
+    // shrink the pool (exercises the preemption policy)
+    let kv = match backend {
+        "native" => {
+            let default_blocks = slots * max_seq.div_ceil(PAGE_ROWS);
+            let blocks: usize =
+                parsed_flag(flags, "kv-blocks", &default_blocks.to_string());
+            if blocks == 0 {
+                usage_error("--kv-blocks must be non-zero");
+            }
+            KvCacheManager::new(blocks, PAGE_ROWS)
+        }
+        _ => KvCacheManager::new(slots * max_seq / 16, 16),
+    };
     let mut gen = WorkloadGen::new(seed, vocab, 50.0, engine.prefill_sizes(), 24);
-    let kv = KvCacheManager::new(slots * max_seq / 16, 16);
     let mut sched = Scheduler::new(Batcher::new(BatchPolicy::Fifo), kv, engine);
     for (i, r) in gen.generate(n_req).into_iter().enumerate() {
         sched.submit(Request::new(
@@ -257,6 +363,12 @@ fn serve(flags: &HashMap<String, String>) -> Result<()> {
         report.tpot.percentile(50.0),
         report.tpot.percentile(99.0)
     );
+    if report.preemptions > 0 || report.requeued > 0 {
+        println!(
+            "preemptions: {} (recompute-on-resume)   requeued admissions: {}",
+            report.preemptions, report.requeued
+        );
+    }
     Ok(())
 }
 
@@ -541,6 +653,40 @@ fn bench_hotpath(flags: &HashMap<String, String>) -> Result<()> {
     );
     println!("acceptance bar: >= 3.00x at N=4096, d=128");
 
+    // ---- serve-decode lane: the native serving backend end to end —
+    //      paged PreparedKV decode vs a naive engine loop that gathers
+    //      the raw prefix and re-quantizes it every step ----
+    let serve_seq: usize = parsed_flag(flags, "serve-seq", "2048");
+    let t_serve: usize = parsed_flag(flags, "serve-decode-tokens", "12");
+    let (s_srv_requant, s_srv_prep) = serve_decode_lane(serve_seq, t_serve.max(3))?;
+    let mut ts = Table::new(&["case", "median ms/token", "tok/s", "tokens"]);
+    for s in [&s_srv_requant, &s_srv_prep] {
+        ts.row(&[
+            s.name.clone(),
+            format!("{:.3}", s.median_s() * 1e3),
+            format!("{:.1}", 1.0 / s.median_s()),
+            s.iters.to_string(),
+        ]);
+    }
+    ts.print(&format!(
+        "serve-decode lane (native backend, max_seq {serve_seq}, full transformer step)"
+    ));
+    let serve_speedup = s_srv_requant.median_s() / s_srv_prep.median_s();
+    println!(
+        "\nserve-decode speedup: {serve_speedup:.2}x \
+         (paged PreparedKV decode vs requant-every-step engine loop, max_seq {serve_seq})"
+    );
+    println!("acceptance bar: >= 2.00x at max_seq 2048");
+
+    // ---- tab09 kernel-accuracy lane (persisted alongside the ratio
+    //      floors): same setup as benches/tab09_kernel_accuracy.rs ----
+    let acc_measured = tab09_accuracy();
+    let mut ta = Table::new(&["kernel", "CosSim"]);
+    for (name, cos) in &acc_measured {
+        ta.row(&[name.to_string(), pct(*cos)]);
+    }
+    ta.print("tab09 kernel accuracy (N(0,1) QKV, 2x8x1024x64)");
+
     let gflops_measured: Vec<(&str, f64)> = vec![
         ("naive", gflops(&s_naive)),
         ("blocked_fp32", gflops(&s_blocked)),
@@ -550,22 +696,85 @@ fn bench_hotpath(flags: &HashMap<String, String>) -> Result<()> {
     let decode_tok_s: Vec<(&str, f64)> = vec![
         ("full_requant", 1.0 / s_dec_full.median_s()),
         ("prepared", 1.0 / s_dec_prep.median_s()),
+        ("serve_requant", 1.0 / s_srv_requant.median_s()),
+        ("serve_prepared", 1.0 / s_srv_prep.median_s()),
     ];
-    let ratios: Vec<(&str, f64)> =
-        vec![("blocked_over_naive", speedup), ("prepared_decode_speedup", dec_speedup)];
+    let ratios: Vec<(&str, f64)> = vec![
+        ("blocked_over_naive", speedup),
+        ("prepared_decode_speedup", dec_speedup),
+        ("serve_decode_speedup", serve_speedup),
+    ];
 
     if let Some(path) = flags.get("check") {
-        check_baseline(path, &gflops_measured, &decode_tok_s, &ratios)?;
+        check_baseline(path, &gflops_measured, &decode_tok_s, &ratios, &acc_measured)?;
     }
     if let Some(path) = flags.get("update") {
-        update_baseline(path, b, h, n, d, &gflops_measured, &decode_tok_s, &ratios)?;
+        update_baseline(path, b, h, n, d, &gflops_measured, &decode_tok_s, &ratios, &acc_measured)?;
     }
     Ok(())
 }
 
-/// Assert the measured speedup ratios against the floors recorded in the
-/// checked-in baseline file. Ratios are machine-portable (both sides of
-/// each ratio run on the same machine), so they are the hard gate;
+/// Per-token decode cost of the native serving backend at `max_seq`,
+/// prepared (paged quantize-once KV) vs the naive requant-every-step
+/// loop. Both run the identical transformer step (same matmuls, same
+/// sampling); only how decode attention reads the KV prefix differs —
+/// the engine-level version of the PreparedKV claim.
+fn serve_decode_lane(max_seq: usize, t_dec: usize) -> Result<(Sample, Sample)> {
+    let warmup = 2usize;
+    ensure!(
+        max_seq > t_dec + warmup + PAGE_ROWS,
+        "--serve-seq {max_seq} too small for --serve-decode-tokens {t_dec}"
+    );
+    let plen = max_seq - t_dec - warmup - 4;
+    let run = |mode: DecodeMode, label: &str| -> Result<Sample> {
+        let cfg = ModelCfg::gpt("bench-serve", 256, 128, 2, 4, 64, 256, max_seq);
+        let mut corpus = Corpus::new(cfg.vocab, 5);
+        let prompt = corpus.batch(1, plen);
+        let mut kv = KvCacheManager::new(max_seq.div_ceil(PAGE_ROWS), PAGE_ROWS);
+        let mut eng = NativeEngine::new(cfg, "sage", 1, 1, mode)?;
+        kv.allocate(0, plen).expect("fresh pool fits the prefill");
+        let req = Request::new(
+            0,
+            prompt,
+            GenParams { max_new_tokens: t_dec + warmup + 3, ..Default::default() },
+        );
+        ensure!(eng.add_request(&req, &mut kv)?, "bench engine refused the request");
+        Ok(bench(label, warmup, t_dec, || {
+            let out = eng.step(&mut kv).expect("bench decode step");
+            assert!(out.finished.is_empty() && out.preempted.is_empty());
+        }))
+    };
+    let requant = run(DecodeMode::RequantEachStep, "serve-decode/requant-each-step")?;
+    let prepared = run(DecodeMode::Prepared, "serve-decode/prepared (paged)")?;
+    Ok((requant, prepared))
+}
+
+/// The tab09 accuracy numbers (cosine similarity vs exact fp32 on
+/// N(0,1) Q/K/V — the paper's Table 9 setup, same seed and shape as
+/// `benches/tab09_kernel_accuracy.rs`).
+fn tab09_accuracy() -> Vec<(&'static str, f64)> {
+    let shape = [2usize, 8, 1024, 64];
+    let mut rng = Pcg32::seeded(9);
+    let mut mk = || {
+        let mut t = Tensor::zeros(&shape);
+        rng.fill_normal(&mut t.data, 1.0);
+        t
+    };
+    let (q, k, v) = (mk(), mk(), mk());
+    let gold = AttnSpec::exact().run(&q, &k, &v).expect("exact reference");
+    ["SageAttn-T", "SageAttn-B", "SageAttn-vT", "SageAttn-vB"]
+        .iter()
+        .map(|name| {
+            let o = AttnSpec::by_name(name).unwrap().run(&q, &k, &v).unwrap();
+            (*name, accuracy(&gold.data, &o.data).cos_sim as f64)
+        })
+        .collect()
+}
+
+/// Assert the measured speedup ratios and kernel-accuracy floors against
+/// the checked-in baseline file. Ratios and cosine similarities are
+/// machine-portable (ratios: both sides run on the same machine;
+/// accuracy: deterministic seeded inputs), so they are the hard gate;
 /// recorded absolute GFLOPS / decode tok/s, when present, are compared
 /// informationally.
 fn check_baseline(
@@ -573,6 +782,7 @@ fn check_baseline(
     gflops: &[(&str, f64)],
     decode_tok_s: &[(&str, f64)],
     ratios: &[(&str, f64)],
+    accuracy_cos: &[(&str, f64)],
 ) -> Result<()> {
     let text = std::fs::read_to_string(path)
         .with_context(|| format!("reading bench baseline {path}"))?;
@@ -593,6 +803,23 @@ fn check_baseline(
         );
         if !ok {
             failed.push(name.clone());
+        }
+    }
+    if let Some(acc_floors) = base.get("accuracy_cos").and_then(Json::as_obj) {
+        for (name, floor) in acc_floors {
+            let floor =
+                floor.as_f64().with_context(|| format!("accuracy floor '{name}' not a number"))?;
+            let Some(&(_, got)) = accuracy_cos.iter().find(|(k, _)| *k == name.as_str()) else {
+                sageattention::bail!("accuracy floor '{name}' is not a measured kernel");
+            };
+            let ok = got >= floor;
+            println!(
+                "  {} accuracy_cos.{name}: measured {got:.5}, floor {floor:.5}",
+                if ok { "PASS" } else { "FAIL" }
+            );
+            if !ok {
+                failed.push(format!("accuracy_cos.{name}"));
+            }
         }
     }
     for (key, unit, measured) in
@@ -624,6 +851,7 @@ fn check_baseline(
 
 /// Rewrite the baseline file with measured numbers, preserving existing
 /// floors (floors are policy, measurements are evidence).
+#[allow(clippy::too_many_arguments)]
 fn update_baseline(
     path: &str,
     b: usize,
@@ -633,23 +861,37 @@ fn update_baseline(
     gflops: &[(&str, f64)],
     decode_tok_s: &[(&str, f64)],
     ratios: &[(&str, f64)],
+    accuracy_cos: &[(&str, f64)],
 ) -> Result<()> {
-    let existing_floors = std::fs::read_to_string(path)
-        .ok()
-        .and_then(|t| Json::parse(&t).ok())
-        .and_then(|j| j.get("floors").cloned());
-    let floors = existing_floors.unwrap_or_else(|| {
-        Json::obj(vec![
-            ("blocked_over_naive", Json::num(1.5)),
-            ("prepared_decode_speedup", Json::num(3.0)),
-        ])
-    });
+    let existing = std::fs::read_to_string(path).ok().and_then(|t| Json::parse(&t).ok());
+    let floors = existing
+        .as_ref()
+        .and_then(|j| j.get("floors").cloned())
+        .unwrap_or_else(|| {
+            Json::obj(vec![
+                ("blocked_over_naive", Json::num(1.5)),
+                ("prepared_decode_speedup", Json::num(3.0)),
+                ("serve_decode_speedup", Json::num(2.0)),
+            ])
+        });
+    let acc_floors = existing
+        .as_ref()
+        .and_then(|j| j.get("accuracy_cos").cloned())
+        .unwrap_or_else(|| {
+            Json::obj(vec![
+                ("SageAttn-T", Json::num(0.995)),
+                ("SageAttn-B", Json::num(0.995)),
+                ("SageAttn-vT", Json::num(0.98)),
+                ("SageAttn-vB", Json::num(0.98)),
+            ])
+        });
     let round2 = |x: f64| (x * 100.0).round() / 100.0;
+    let round5 = |x: f64| (x * 1e5).round() / 1e5;
     let num_obj = |pairs: &[(&str, f64)]| {
         Json::obj(pairs.iter().map(|&(k, v)| (k, Json::num(round2(v)))).collect())
     };
     let json = Json::obj(vec![
-        ("schema", Json::num(1.0)),
+        ("schema", Json::num(2.0)),
         (
             "shape",
             Json::obj(vec![
@@ -660,9 +902,16 @@ fn update_baseline(
             ]),
         ),
         ("floors", floors),
+        ("accuracy_cos", acc_floors),
         ("gflops", num_obj(gflops)),
         ("decode_tok_s", num_obj(decode_tok_s)),
         ("ratios", num_obj(ratios)),
+        (
+            "accuracy_measured",
+            Json::obj(
+                accuracy_cos.iter().map(|&(k, v)| (k, Json::num(round5(v)))).collect(),
+            ),
+        ),
     ]);
     std::fs::write(path, format!("{json}\n"))?;
     println!("\nwrote {path}");

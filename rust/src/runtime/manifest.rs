@@ -63,6 +63,9 @@ pub struct ModelCfg {
     pub d_head: usize,
     pub d_ff: usize,
     pub max_seq: usize,
+    /// RoPE frequency base (the native backend's forward needs it;
+    /// manifests without the field default to 10000).
+    pub rope_base: f32,
     pub n_params: usize,
     pub param_spec: Vec<ParamSpec>,
 }
@@ -140,6 +143,10 @@ impl Manifest {
                         d_head: get("d_head")?,
                         d_ff: get("d_ff")?,
                         max_seq: get("max_seq")?,
+                        rope_base: c
+                            .get("rope_base")
+                            .and_then(Json::as_f64)
+                            .unwrap_or(10000.0) as f32,
                         n_params: get("n_params")?,
                         param_spec,
                     },
@@ -151,6 +158,76 @@ impl Manifest {
 }
 
 impl ModelCfg {
+    /// Construct a GPT-style config with the parameter spec the model
+    /// layout implies (mirrors python `model.param_spec`: embed, then
+    /// per-layer ln1/wq/wk/wv/wo/ln2/w_gate/w_up/w_down, then
+    /// ln_f/unembed) — the native backend's manifest-free path, and the
+    /// benches' way to build custom shapes.
+    #[allow(clippy::too_many_arguments)]
+    pub fn gpt(
+        name: &str,
+        vocab: usize,
+        d_model: usize,
+        n_layers: usize,
+        n_heads: usize,
+        d_head: usize,
+        d_ff: usize,
+        max_seq: usize,
+    ) -> ModelCfg {
+        let (d, h, dh, f) = (d_model, n_heads, d_head, d_ff);
+        let mut spec = vec![ParamSpec {
+            name: "embed".to_owned(),
+            shape: vec![vocab, d],
+            init_std: 0.02,
+        }];
+        let resid_std = 0.02 / ((2 * n_layers) as f32).sqrt();
+        for i in 0..n_layers {
+            let p = format!("layer{i}.");
+            let mut push = |suffix: &str, shape: Vec<usize>, std: f32| {
+                spec.push(ParamSpec { name: format!("{p}{suffix}"), shape, init_std: std });
+            };
+            push("ln1", vec![d], -1.0);
+            push("wq", vec![d, h * dh], 0.02);
+            push("wk", vec![d, h * dh], 0.02);
+            push("wv", vec![d, h * dh], 0.02);
+            push("wo", vec![h * dh, d], resid_std);
+            push("ln2", vec![d], -1.0);
+            push("w_gate", vec![d, f], 0.02);
+            push("w_up", vec![d, f], 0.02);
+            push("w_down", vec![f, d], resid_std);
+        }
+        spec.push(ParamSpec { name: "ln_f".to_owned(), shape: vec![d], init_std: -1.0 });
+        spec.push(ParamSpec {
+            name: "unembed".to_owned(),
+            shape: vec![d, vocab],
+            init_std: 0.02,
+        });
+        let n_params = spec.iter().map(|p| p.shape.iter().product::<usize>()).sum();
+        ModelCfg {
+            name: name.to_owned(),
+            vocab,
+            d_model,
+            n_layers,
+            n_heads,
+            d_head,
+            d_ff,
+            max_seq,
+            rope_base: 10000.0,
+            n_params,
+            param_spec: spec,
+        }
+    }
+
+    /// The built-in configs (mirroring python `configs.TINY`/`SMALL`) —
+    /// what `--backend native` serves without artifacts or a manifest.
+    pub fn builtin(name: &str) -> Option<ModelCfg> {
+        match name {
+            "tiny" => Some(ModelCfg::gpt("tiny", 256, 128, 2, 2, 64, 256, 128)),
+            "small" => Some(ModelCfg::gpt("small", 1024, 256, 4, 4, 64, 1024, 256)),
+            _ => None,
+        }
+    }
+
     /// Initialize flat parameters per the spec (normal(0, std), ones for
     /// std < 0) with a deterministic seed — the rust-side `init_params`.
     pub fn init_params(&self, seed: u64) -> Vec<crate::runtime::Value> {
@@ -209,6 +286,31 @@ mod tests {
         let c = &m.configs["tiny"];
         assert_eq!(c.vocab, 256);
         assert_eq!(c.param_spec.len(), 2);
+    }
+
+    #[test]
+    fn builtin_configs_match_python_layout() {
+        let tiny = ModelCfg::builtin("tiny").unwrap();
+        assert_eq!(tiny.vocab, 256);
+        assert_eq!(tiny.d_model, 128);
+        assert_eq!(tiny.max_seq, 128);
+        assert_eq!(tiny.rope_base, 10000.0);
+        // embed + 9 per layer + ln_f + unembed
+        assert_eq!(tiny.param_spec.len(), 3 + 9 * tiny.n_layers);
+        assert_eq!(tiny.param_spec[0].name, "embed");
+        assert_eq!(tiny.param_spec[1].name, "layer0.ln1");
+        assert_eq!(tiny.param_spec[5].name, "layer0.wo");
+        assert_eq!(tiny.param_spec.last().unwrap().name, "unembed");
+        // norm gains are ones-initialized (std < 0)
+        assert!(tiny.param_spec[1].init_std < 0.0);
+        let small = ModelCfg::builtin("small").unwrap();
+        assert_eq!(small.n_layers, 4);
+        assert_eq!(small.d_ff, 1024);
+        assert!(ModelCfg::builtin("huge").is_none());
+        // init_params agrees with the generated spec
+        let params = tiny.init_params(3);
+        assert_eq!(params.len(), tiny.param_spec.len());
+        assert_eq!(params[0].shape(), &[256, 128]);
     }
 
     #[test]

@@ -2,7 +2,7 @@
 //! and cleanly on corrupt artifacts, bad manifests, and over-budget
 //! requests — never with a wrong answer.
 
-use sageattention::coordinator::{Engine, GenParams, Request};
+use sageattention::coordinator::{Engine, GenParams, KvCacheManager, Request};
 use sageattention::runtime::{Manifest, Runtime, Value};
 
 #[test]
@@ -70,24 +70,28 @@ fn engine_rejects_unknown_config_and_plan() {
 fn engine_rejects_over_budget_requests() {
     let rt = Runtime::open(Runtime::default_dir()).unwrap();
     let mut engine = Engine::new(&rt, "tiny", "fp", 1).unwrap();
+    let mut kv = KvCacheManager::new(64, 16);
     // empty prompt
     assert!(engine
-        .add_request(&Request::new(1, vec![], GenParams::default()))
+        .add_request(&Request::new(1, vec![], GenParams::default()), &mut kv)
         .is_err());
     // prompt longer than the largest prefill artifact
     let too_long = vec![1i32; 100_000];
     assert!(engine
-        .add_request(&Request::new(2, too_long, GenParams::default()))
+        .add_request(&Request::new(2, too_long, GenParams::default()), &mut kv)
         .is_err());
     // prompt + generation overflowing the context window
     let sizes = engine.prefill_sizes();
     let max = *sizes.last().unwrap();
     assert!(engine
-        .add_request(&Request::new(
-            3,
-            vec![1; max],
-            GenParams { max_new_tokens: 1_000_000, ..Default::default() },
-        ))
+        .add_request(
+            &Request::new(
+                3,
+                vec![1; max],
+                GenParams { max_new_tokens: 1_000_000, ..Default::default() },
+            ),
+            &mut kv
+        )
         .is_err());
     // engine state untouched by the failures
     assert_eq!(engine.free_slots(), engine.batch_slots());
@@ -98,15 +102,16 @@ fn engine_rejects_over_budget_requests() {
 fn engine_refuses_when_full_without_error() {
     let rt = Runtime::open(Runtime::default_dir()).unwrap();
     let mut engine = Engine::new(&rt, "tiny", "fp", 2).unwrap();
+    let mut kv = KvCacheManager::new(64, 16);
     let sizes = engine.prefill_sizes();
     let mk = |id| {
         Request::new(id, vec![1; sizes[0]], GenParams { max_new_tokens: 4, ..Default::default() })
     };
     for id in 0..engine.batch_slots() as u64 {
-        assert!(engine.add_request(&mk(id)).unwrap());
+        assert!(engine.add_request(&mk(id), &mut kv).unwrap());
     }
     // full: polite refusal, not an error
-    assert!(!engine.add_request(&mk(99)).unwrap());
+    assert!(!engine.add_request(&mk(99), &mut kv).unwrap());
 }
 
 #[test]

@@ -139,6 +139,7 @@ fn eval_loss_fp_vs_sage_close() {
 fn engine_serves_and_respects_budgets() {
     let rt = runtime();
     let mut engine = Engine::new(&rt, "tiny", "sage", 2).unwrap();
+    let mut kv = KvCacheManager::new(64, 16);
     let sizes = engine.prefill_sizes();
     assert!(!sizes.is_empty());
     let req = Request::new(
@@ -146,11 +147,11 @@ fn engine_serves_and_respects_budgets() {
         vec![3; sizes[0]],
         GenParams { max_new_tokens: 4, ..Default::default() },
     );
-    assert!(engine.add_request(&req).unwrap());
+    assert!(engine.add_request(&req, &mut kv).unwrap());
     assert_eq!(engine.live_slots(), 1);
     let mut responses = Vec::new();
     for _ in 0..10 {
-        responses.extend(engine.step().unwrap());
+        responses.extend(engine.step(&mut kv).unwrap().finished);
         if !responses.is_empty() {
             break;
         }
@@ -194,17 +195,18 @@ fn plug_and_play_same_params_same_greedy_tokens() {
     let rt = runtime();
     let mut e_fp = Engine::new(&rt, "tiny", "fp", 21).unwrap();
     let mut e_sage = Engine::new(&rt, "tiny", "sage", 21).unwrap();
+    let mut kv = KvCacheManager::new(64, 16);
     let sizes = e_fp.prefill_sizes();
     let req = Request::new(
         1,
         vec![7; sizes[0]],
         GenParams { max_new_tokens: 8, ..Default::default() },
     );
-    e_fp.add_request(&req).unwrap();
-    e_sage.add_request(&req).unwrap();
-    let run = |e: &mut Engine| -> Vec<i32> {
+    e_fp.add_request(&req, &mut kv).unwrap();
+    e_sage.add_request(&req, &mut kv).unwrap();
+    let mut run = |e: &mut Engine| -> Vec<i32> {
         loop {
-            let done = e.step().unwrap();
+            let done = e.step(&mut kv).unwrap().finished;
             if let Some(r) = done.into_iter().next() {
                 return r.tokens;
             }
