@@ -3,6 +3,7 @@
 //! decode step. Run before/after every optimization; numbers land in
 //! EXPERIMENTS.md §Perf.
 
+use sageattention::attn::isa::{self, IsaLevel};
 use sageattention::attn::AttnSpec;
 use sageattention::bench::{bench_budget, Table};
 use sageattention::coordinator::{Engine, GenParams, KvCacheManager, Request};
@@ -48,6 +49,28 @@ fn main() {
     push(bench_budget("decode/full-requant 1row vs 2048", budget, 10, || {
         std::hint::black_box(sage_b.run(&q_row, &k, &v).unwrap());
     }));
+
+    // --- ISA microkernels: every tier this host can execute, so the
+    //     per-tier cost of the INT8 tile primitive is on record ---
+    {
+        let d = 128usize;
+        let (bq, bk) = (128usize, 64usize);
+        let qi: Vec<i8> = (0..bq * d).map(|i| (i % 255) as u8 as i8).collect();
+        let ki: Vec<i8> = (0..bk * d).map(|i| (i % 253) as u8 as i8).collect();
+        let mut tile = vec![0i32; bq * bk];
+        for level in IsaLevel::ALL {
+            let Some(kern) = isa::for_level(level) else { continue };
+            push(bench_budget(
+                &format!("isa/qk-tile-i8 {} 128x64 d128", level.name()),
+                budget,
+                10,
+                || {
+                    (kern.qk_tile_i8)(&qi, &ki, d, bq, bk, &mut tile, bk);
+                    std::hint::black_box(&mut tile);
+                },
+            ));
+        }
+    }
 
     // --- quantizers ---
     let plane = q.head(0, 0).to_vec();

@@ -1,0 +1,35 @@
+//! Toolchain probe: the AVX-512 intrinsics and `avx512*` target features
+//! used by the `attn::isa` VNNI microkernel tier are stable only since
+//! rustc 1.89. Gate that tier behind `cfg(sage_avx512)` so older stable
+//! toolchains still build the crate — they simply top out at the AVX2
+//! tier at runtime (`isa::cpu` never reports `vnni` as detected).
+
+use std::process::Command;
+
+fn main() {
+    println!("cargo:rerun-if-changed=build.rs");
+    // declare the custom cfg so 1.80+ toolchains don't warn on it
+    println!("cargo:rustc-check-cfg=cfg(sage_avx512)");
+    if rustc_minor().map_or(false, |minor| minor >= 89) {
+        println!("cargo:rustc-cfg=sage_avx512");
+    }
+}
+
+/// Minor version of the active rustc (`rustc 1.MINOR.PATCH ...`), or
+/// `None` when it cannot be determined (in which case the AVX-512 tier
+/// stays off — the conservative choice).
+fn rustc_minor() -> Option<u32> {
+    let rustc = std::env::var("RUSTC").unwrap_or_else(|_| "rustc".to_string());
+    let out = Command::new(rustc).arg("--version").output().ok()?;
+    let text = String::from_utf8(out.stdout).ok()?;
+    let semver = text.split_whitespace().nth(1)?;
+    let mut parts = semver.split('.');
+    let major: u32 = parts.next()?.parse().ok()?;
+    if major != 1 {
+        // a hypothetical 2.x is newer than anything we gate on
+        return Some(u32::MAX);
+    }
+    let minor = parts.next()?;
+    let digits: String = minor.chars().take_while(|c| c.is_ascii_digit()).collect();
+    digits.parse().ok()
+}

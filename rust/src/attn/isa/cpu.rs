@@ -1,0 +1,209 @@
+//! CPU-capability detection core: which SIMD microkernel tier this host
+//! can run, detected once (`OnceLock`) and overridable with the
+//! `SAGE_ISA` environment variable (`scalar|avx2|vnni|neon`).
+//!
+//! This is the single feature-detection surface of the crate — the INT8
+//! microkernel dispatch ([`super::kernels`]) and the F16C fast path in
+//! [`crate::util::f16::round_f16_slice`] both resolve through it, so
+//! `SAGE_ISA=scalar` forces every portable fallback at once (the knob
+//! `make verify` uses to keep the scalar paths covered).
+
+use std::sync::OnceLock;
+
+/// A microkernel instruction-set tier, from portable to widest.
+///
+/// `Scalar` is the reference implementation every other tier must match
+/// **bit-exactly** (all INT8 paths accumulate in i32, so this is a hard
+/// equality, not a tolerance — see `tests/isa_differential.rs`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum IsaLevel {
+    /// Portable Rust (LLVM autovectorization only) — always available.
+    Scalar,
+    /// x86-64 AVX2: i8→i16 widening + `pmaddwd` MACs (the
+    /// mma(s8.s8.s32)-shaped path of §4.3 on 256-bit vectors).
+    Avx2,
+    /// x86-64 AVX-512 VNNI: `vpdpbusd` 4-way byte dot products (the
+    /// closest CPU analogue of the tensor-core INT8 MMA).
+    Vnni,
+    /// AArch64 NEON with the `sdot` (dotprod) extension.
+    Neon,
+}
+
+impl IsaLevel {
+    /// Every tier, in detection-preference order (widest last).
+    pub const ALL: [IsaLevel; 4] =
+        [IsaLevel::Scalar, IsaLevel::Avx2, IsaLevel::Vnni, IsaLevel::Neon];
+
+    /// Stable lowercase name (the `SAGE_ISA` vocabulary).
+    pub fn name(self) -> &'static str {
+        match self {
+            IsaLevel::Scalar => "scalar",
+            IsaLevel::Avx2 => "avx2",
+            IsaLevel::Vnni => "vnni",
+            IsaLevel::Neon => "neon",
+        }
+    }
+
+    /// Parse a `SAGE_ISA` value (case-insensitive). Inverse of
+    /// [`IsaLevel::name`].
+    pub fn from_name(name: &str) -> Option<IsaLevel> {
+        match name.to_ascii_lowercase().as_str() {
+            "scalar" => Some(IsaLevel::Scalar),
+            "avx2" => Some(IsaLevel::Avx2),
+            "vnni" => Some(IsaLevel::Vnni),
+            "neon" => Some(IsaLevel::Neon),
+            _ => None,
+        }
+    }
+}
+
+/// What the hardware supports (independent of any `SAGE_ISA` override).
+#[derive(Clone, Copy, Debug)]
+pub struct CpuCaps {
+    /// Widest microkernel tier this host can execute.
+    pub best: IsaLevel,
+    /// x86 F16C conversion instructions available (the vectorized
+    /// `round_f16_slice` path).
+    pub f16c: bool,
+}
+
+/// Detected hardware capabilities, probed once per process.
+pub fn caps() -> &'static CpuCaps {
+    static CAPS: OnceLock<CpuCaps> = OnceLock::new();
+    CAPS.get_or_init(detect)
+}
+
+#[cfg(target_arch = "x86_64")]
+fn detect() -> CpuCaps {
+    let avx2 = std::arch::is_x86_feature_detected!("avx2");
+    // the VNNI kernels use 512-bit dpbusd plus BW byte broadcasts; the
+    // tier only exists on toolchains with stable AVX-512 support
+    // (rustc ≥ 1.89 — build.rs emits `sage_avx512` there)
+    #[cfg(sage_avx512)]
+    let vnni = avx2
+        && std::arch::is_x86_feature_detected!("avx512f")
+        && std::arch::is_x86_feature_detected!("avx512bw")
+        && std::arch::is_x86_feature_detected!("avx512vnni");
+    #[cfg(not(sage_avx512))]
+    let vnni = false;
+    let best = if vnni {
+        IsaLevel::Vnni
+    } else if avx2 {
+        IsaLevel::Avx2
+    } else {
+        IsaLevel::Scalar
+    };
+    CpuCaps { best, f16c: std::arch::is_x86_feature_detected!("f16c") }
+}
+
+#[cfg(target_arch = "aarch64")]
+fn detect() -> CpuCaps {
+    let best = if std::arch::is_aarch64_feature_detected!("dotprod") {
+        IsaLevel::Neon
+    } else {
+        IsaLevel::Scalar
+    };
+    CpuCaps { best, f16c: false }
+}
+
+#[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+fn detect() -> CpuCaps {
+    CpuCaps { best: IsaLevel::Scalar, f16c: false }
+}
+
+/// Can this host execute `level`'s kernel table?
+pub fn supported(level: IsaLevel) -> bool {
+    match level {
+        IsaLevel::Scalar => true,
+        IsaLevel::Avx2 => matches!(caps().best, IsaLevel::Avx2 | IsaLevel::Vnni),
+        IsaLevel::Vnni => caps().best == IsaLevel::Vnni,
+        IsaLevel::Neon => caps().best == IsaLevel::Neon,
+    }
+}
+
+/// The resolved dispatch decision: detected tier, clamped by `SAGE_ISA`.
+#[derive(Clone, Copy, Debug)]
+pub struct ActiveIsa {
+    /// Tier the microkernel tables dispatch to.
+    pub level: IsaLevel,
+    /// The `SAGE_ISA` override, if one was set. When it names a tier the
+    /// hardware lacks, `level` falls back to [`IsaLevel::Scalar`] (the
+    /// only always-safe interpretation of "force").
+    pub requested: Option<IsaLevel>,
+}
+
+/// The active dispatch decision, resolved once per process: `SAGE_ISA`
+/// is read at first use, so set it before the first kernel call (tests
+/// that need a different tier spawn a fresh `sage` process — see
+/// `tests/isa_differential.rs` — or reach a specific table through
+/// [`super::for_level`]).
+///
+/// Panics on a malformed `SAGE_ISA` value: silently running the wrong
+/// tier would invalidate every benchmark that builds on it.
+pub fn active() -> &'static ActiveIsa {
+    static ACTIVE: OnceLock<ActiveIsa> = OnceLock::new();
+    ACTIVE.get_or_init(|| {
+        let requested = match std::env::var("SAGE_ISA") {
+            Ok(raw) => match IsaLevel::from_name(&raw) {
+                Some(level) => Some(level),
+                None => panic!(
+                    "invalid SAGE_ISA value '{raw}': expected one of scalar|avx2|vnni|neon"
+                ),
+            },
+            Err(_) => None,
+        };
+        let level = match requested {
+            Some(level) if supported(level) => level,
+            Some(_) => IsaLevel::Scalar,
+            None => caps().best,
+        };
+        ActiveIsa { level, requested }
+    })
+}
+
+/// Should [`crate::util::f16::round_f16_slice`] take the F16C path?
+/// Requires the hardware bit, and `SAGE_ISA=scalar` forces the portable
+/// (bit-identical) f16 conversion loop along with the scalar INT8
+/// microkernels. Keyed on the *override*, not the detected INT8 tier:
+/// an F16C-capable host without AVX2 keeps its hardware conversions.
+pub fn f16c_enabled() -> bool {
+    caps().f16c && active().requested != Some(IsaLevel::Scalar)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_names_round_trip() {
+        for level in IsaLevel::ALL {
+            assert_eq!(IsaLevel::from_name(level.name()), Some(level));
+            assert_eq!(IsaLevel::from_name(&level.name().to_uppercase()), Some(level));
+        }
+        assert_eq!(IsaLevel::from_name("avx512"), None);
+        assert_eq!(IsaLevel::from_name(""), None);
+    }
+
+    #[test]
+    fn detection_is_coherent() {
+        let caps = caps();
+        assert!(supported(IsaLevel::Scalar));
+        assert!(supported(caps.best), "the detected best tier must be supported");
+        // the ladder never reports a wider tier without its narrower one
+        if supported(IsaLevel::Vnni) {
+            assert!(supported(IsaLevel::Avx2), "vnni implies avx2");
+        }
+    }
+
+    #[test]
+    fn active_tier_is_executable() {
+        let act = active();
+        assert!(supported(act.level), "active tier must be hardware-supported");
+        if let Some(req) = act.requested {
+            // an honored override is exact; an unsupported one clamps to scalar
+            assert!(act.level == req || act.level == IsaLevel::Scalar);
+        } else {
+            assert_eq!(act.level, caps().best);
+        }
+    }
+}

@@ -1,0 +1,175 @@
+//! `attn::isa` — runtime-dispatched SIMD microkernels for the INT8 hot
+//! path, the CPU analogue of the paper's CUDA kernel work (§4.3: INT8
+//! `mma(s8.s8.s32)` is what makes SageAttention fast; here the same dot
+//! products hit `pmaddwd`/`vpdpbusd`/`sdot` instead of tensor cores).
+//!
+//! Structure:
+//! * [`cpu`] — capability detection (`OnceLock`-cached) plus the
+//!   `SAGE_ISA` override (`scalar|avx2|vnni|neon`).
+//! * [`Kernels`] — one dispatch table per tier: [`dot_i8`] (the raw
+//!   mma primitive), [`Kernels::qk_tile_i8`] (a whole BLOCK_Q×BLOCK_KV
+//!   score tile per call, amortizing K loads across Q rows), and the
+//!   P·V accumulation lanes (`pv_accum_i8`, `axpy_f32`, `scale_f32`).
+//! * [`kernels`] — the table for the active tier (what
+//!   `attn::plane` / `attn::prepared` call); [`for_level`] reaches a
+//!   specific tier for differential tests and benches.
+//!
+//! **Bit-identity guarantee**: every tier returns exactly the scalar
+//! reference's bits. INT8 kernels accumulate in i32 (associative — any
+//! lane order gives the same integer); f32 kernels are element-wise
+//! mul-then-add with FMA contraction explicitly avoided. The existing
+//! plane/prepared bit-identity suites therefore pin all tiers at once,
+//! and `tests/isa_differential.rs` fuzzes the microkernels directly.
+
+pub mod cpu;
+
+mod scalar;
+
+#[cfg(target_arch = "aarch64")]
+mod neon;
+#[cfg(target_arch = "x86_64")]
+mod x86;
+
+pub use cpu::{ActiveIsa, CpuCaps, IsaLevel};
+
+/// `dot(a, b)` over INT8 with exact i32 accumulation.
+pub type DotI8Fn = fn(&[i8], &[i8]) -> i32;
+/// `(q, k, d, bq, bk, out, stride)`: `out[r*stride + c] = dot(q_r, k_c)`
+/// for a `bq × bk` tile of row-major length-`d` INT8 rows.
+pub type QkTileI8Fn = fn(&[i8], &[i8], usize, usize, usize, &mut [i32], usize);
+/// `(acc, v, p)`: `acc[i] += p * v[i]` in exact i32.
+pub type PvAccumI8Fn = fn(&mut [i32], &[i8], i32);
+/// `(out, x, a)`: `out[i] += a * x[i]`, element-wise mul-then-add.
+pub type AxpyF32Fn = fn(&mut [f32], &[f32], f32);
+/// `(out, a)`: `out[i] *= a`.
+pub type ScaleF32Fn = fn(&mut [f32], f32);
+
+/// One tier's microkernel dispatch table. Tables are only handed out for
+/// tiers the host supports ([`for_level`]), which is what makes the
+/// `#[target_feature]` implementations behind these pointers sound.
+pub struct Kernels {
+    pub level: IsaLevel,
+    pub dot_i8: DotI8Fn,
+    pub qk_tile_i8: QkTileI8Fn,
+    pub pv_accum_i8: PvAccumI8Fn,
+    pub axpy_f32: AxpyF32Fn,
+    pub scale_f32: ScaleF32Fn,
+}
+
+static SCALAR: Kernels = Kernels {
+    level: IsaLevel::Scalar,
+    dot_i8: scalar::dot_i8,
+    qk_tile_i8: scalar::qk_tile_i8,
+    pv_accum_i8: scalar::pv_accum_i8,
+    axpy_f32: scalar::axpy_f32,
+    scale_f32: scalar::scale_f32,
+};
+
+#[cfg(target_arch = "x86_64")]
+static AVX2: Kernels = Kernels {
+    level: IsaLevel::Avx2,
+    dot_i8: x86::dot_i8_avx2,
+    qk_tile_i8: x86::qk_tile_i8_avx2,
+    pv_accum_i8: x86::pv_accum_i8_avx2,
+    axpy_f32: x86::axpy_f32_avx,
+    scale_f32: x86::scale_f32_avx,
+};
+
+// the VNNI tier upgrades the QKᵀ dot/tile; the P·V lanes (byte-widening
+// multiplies and f32 axpy) have no VNNI-specific instruction and reuse
+// the AVX2 implementations. Compiled only on rustc ≥ 1.89 (build.rs
+// emits `sage_avx512` where the AVX-512 intrinsics are stable); older
+// toolchains never detect `vnni`, so the table is never requested.
+#[cfg(all(target_arch = "x86_64", sage_avx512))]
+static VNNI: Kernels = Kernels {
+    level: IsaLevel::Vnni,
+    dot_i8: x86::dot_i8_vnni,
+    qk_tile_i8: x86::qk_tile_i8_vnni,
+    pv_accum_i8: x86::pv_accum_i8_avx2,
+    axpy_f32: x86::axpy_f32_avx,
+    scale_f32: x86::scale_f32_avx,
+};
+
+#[cfg(target_arch = "aarch64")]
+static NEON: Kernels = Kernels {
+    level: IsaLevel::Neon,
+    dot_i8: neon::dot_i8_neon,
+    qk_tile_i8: neon::qk_tile_i8_neon,
+    pv_accum_i8: neon::pv_accum_i8_neon,
+    axpy_f32: neon::axpy_f32_neon,
+    scale_f32: neon::scale_f32_neon,
+};
+
+/// The dispatch table for one specific tier, or `None` when this host
+/// cannot execute it. `for_level(IsaLevel::Scalar)` always succeeds.
+pub fn for_level(level: IsaLevel) -> Option<&'static Kernels> {
+    if !cpu::supported(level) {
+        return None;
+    }
+    match level {
+        IsaLevel::Scalar => Some(&SCALAR),
+        #[cfg(target_arch = "x86_64")]
+        IsaLevel::Avx2 => Some(&AVX2),
+        #[cfg(all(target_arch = "x86_64", sage_avx512))]
+        IsaLevel::Vnni => Some(&VNNI),
+        #[cfg(target_arch = "aarch64")]
+        IsaLevel::Neon => Some(&NEON),
+        _ => None,
+    }
+}
+
+/// The active tier's dispatch table — what the plane kernels fetch once
+/// per call. Resolved on first use from [`cpu::active`] (detection
+/// clamped by `SAGE_ISA`).
+pub fn kernels() -> &'static Kernels {
+    static ACTIVE: std::sync::OnceLock<&'static Kernels> = std::sync::OnceLock::new();
+    // `get_or_init` yields `&&'static Kernels`; deref to the inner ref
+    *ACTIVE
+        .get_or_init(|| for_level(cpu::active().level).expect("active ISA tier is host-supported"))
+}
+
+/// Dispatched INT8 dot product (convenience for per-pair call sites;
+/// the tile kernels go through [`kernels`] directly).
+#[inline]
+pub fn dot_i8(a: &[i8], b: &[i8]) -> i32 {
+    (kernels().dot_i8)(a, b)
+}
+
+// The scalar-vs-SIMD differential contract (odd lengths, unaligned
+// slices, remainder tails, stride gaps, f32 bit equality) is pinned
+// once, in `tests/isa_differential.rs` — the unit tests here only cover
+// table/dispatch coherence and the i32 overflow headroom.
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Tables other than scalar that this host can execute.
+    fn simd_tables() -> Vec<&'static Kernels> {
+        IsaLevel::ALL
+            .iter()
+            .filter(|&&l| l != IsaLevel::Scalar)
+            .filter_map(|&l| for_level(l))
+            .collect()
+    }
+
+    #[test]
+    fn active_table_matches_active_level() {
+        assert_eq!(kernels().level, cpu::active().level);
+        assert!(for_level(IsaLevel::Scalar).is_some(), "scalar table is unconditional");
+        // dispatched convenience form agrees with the table
+        let a: Vec<i8> = (-64..64).collect();
+        let b: Vec<i8> = (0..128).map(|i| (i % 7 - 3) as i8).collect();
+        assert_eq!(dot_i8(&a, &b), (kernels().dot_i8)(&a, &b));
+    }
+
+    #[test]
+    fn dot_extremes_do_not_overflow_lanes() {
+        // ±saturated inputs at a realistic head dim: |Σ| ≤ d·128² fits i32
+        for kern in simd_tables() {
+            let a = vec![-128i8; 256];
+            let b = vec![127i8; 256];
+            assert_eq!((kern.dot_i8)(&a, &b), 256 * -128 * 127, "{}", kern.level.name());
+            assert_eq!((kern.dot_i8)(&a, &a), 256 * 128 * 128, "{}", kern.level.name());
+        }
+    }
+}

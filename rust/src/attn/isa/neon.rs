@@ -1,0 +1,177 @@
+//! AArch64 NEON microkernels (the `sdot` dot-product extension tier).
+//!
+//! `vdotq_s32` is natively signed×signed, so no bias trick is needed:
+//! the i32 accumulation is exact and bit-identical to scalar by
+//! associativity. The f32 kernels use explicit `vmulq`+`vaddq` (never
+//! `vmlaq`/`fmla`, which would fuse the rounding) so each lane performs
+//! the same two IEEE operations as the scalar loop.
+//!
+//! Safety: the `unsafe` `#[target_feature]` functions are only reachable
+//! through the [`super::Kernels`] table that [`super::for_level`] hands
+//! out behind [`super::cpu::supported`] runtime `dotprod` detection.
+
+#![allow(unsafe_op_in_unsafe_fn)]
+
+use std::arch::aarch64::*;
+
+use super::cpu::{supported, IsaLevel};
+
+pub(super) fn dot_i8_neon(a: &[i8], b: &[i8]) -> i32 {
+    debug_assert!(supported(IsaLevel::Neon), "neon kernel on an unsupported host");
+    debug_assert_eq!(a.len(), b.len());
+    // SAFETY: reachable only via a table gated on runtime dotprod detection.
+    unsafe { dot_i8_neon_imp(a, b) }
+}
+
+#[target_feature(enable = "neon", enable = "dotprod")]
+unsafe fn dot_i8_neon_imp(a: &[i8], b: &[i8]) -> i32 {
+    let n = a.len();
+    let nv = n - n % 16;
+    let mut acc = vdupq_n_s32(0);
+    let mut i = 0;
+    while i < nv {
+        acc = vdotq_s32(acc, vld1q_s8(a.as_ptr().add(i)), vld1q_s8(b.as_ptr().add(i)));
+        i += 16;
+    }
+    let mut dot = vaddvq_s32(acc);
+    while i < n {
+        dot += a[i] as i32 * b[i] as i32;
+        i += 1;
+    }
+    dot
+}
+
+pub(super) fn qk_tile_i8_neon(
+    q: &[i8],
+    k: &[i8],
+    d: usize,
+    bq: usize,
+    bk: usize,
+    out: &mut [i32],
+    stride: usize,
+) {
+    debug_assert!(supported(IsaLevel::Neon), "neon kernel on an unsupported host");
+    debug_assert!(q.len() >= bq * d && k.len() >= bk * d);
+    debug_assert!(bq == 0 || out.len() >= (bq - 1) * stride + bk);
+    // SAFETY: reachable only via a table gated on runtime dotprod detection.
+    unsafe { qk_tile_i8_neon_imp(q, k, d, bq, bk, out, stride) }
+}
+
+/// 4 Q-row accumulators share each K chunk load (the multi-accumulator
+/// unrolling that amortizes K traffic across the Q block).
+#[target_feature(enable = "neon", enable = "dotprod")]
+unsafe fn qk_tile_i8_neon_imp(
+    q: &[i8],
+    k: &[i8],
+    d: usize,
+    bq: usize,
+    bk: usize,
+    out: &mut [i32],
+    stride: usize,
+) {
+    let dv = d - d % 16;
+    let mut r = 0;
+    while r < bq {
+        let rn = (r + 4).min(bq);
+        for c in 0..bk {
+            let kp = k.as_ptr().add(c * d);
+            let mut acc = [vdupq_n_s32(0); 4];
+            let mut j = 0;
+            while j < dv {
+                let kv = vld1q_s8(kp.add(j));
+                for t in 0..rn - r {
+                    let qv = vld1q_s8(q.as_ptr().add((r + t) * d + j));
+                    acc[t] = vdotq_s32(acc[t], qv, kv);
+                }
+                j += 16;
+            }
+            for t in 0..rn - r {
+                let mut dot = vaddvq_s32(acc[t]);
+                for j in dv..d {
+                    dot += q[(r + t) * d + j] as i32 * k[c * d + j] as i32;
+                }
+                out[(r + t) * stride + c] = dot;
+            }
+        }
+        r = rn;
+    }
+}
+
+pub(super) fn pv_accum_i8_neon(acc: &mut [i32], v: &[i8], p: i32) {
+    debug_assert!(supported(IsaLevel::Neon), "neon kernel on an unsupported host");
+    debug_assert_eq!(acc.len(), v.len());
+    // SAFETY: reachable only via a table gated on runtime NEON detection.
+    unsafe { pv_accum_i8_neon_imp(acc, v, p) }
+}
+
+#[target_feature(enable = "neon")]
+unsafe fn pv_accum_i8_neon_imp(acc: &mut [i32], v: &[i8], p: i32) {
+    let n = acc.len();
+    let nv = n - n % 8;
+    let pl = vdupq_n_s32(p);
+    let mut i = 0;
+    while i < nv {
+        let v16 = vmovl_s8(vld1_s8(v.as_ptr().add(i)));
+        let lo = vmovl_s16(vget_low_s16(v16));
+        let hi = vmovl_s16(vget_high_s16(v16));
+        let a0 = vld1q_s32(acc.as_ptr().add(i));
+        let a1 = vld1q_s32(acc.as_ptr().add(i + 4));
+        vst1q_s32(acc.as_mut_ptr().add(i), vaddq_s32(a0, vmulq_s32(lo, pl)));
+        vst1q_s32(acc.as_mut_ptr().add(i + 4), vaddq_s32(a1, vmulq_s32(hi, pl)));
+        i += 8;
+    }
+    while i < n {
+        acc[i] += p * v[i] as i32;
+        i += 1;
+    }
+}
+
+pub(super) fn axpy_f32_neon(out: &mut [f32], x: &[f32], a: f32) {
+    debug_assert!(supported(IsaLevel::Neon), "neon kernel on an unsupported host");
+    debug_assert_eq!(out.len(), x.len());
+    // SAFETY: reachable only via a table gated on runtime NEON detection.
+    unsafe { axpy_f32_neon_imp(out, x, a) }
+}
+
+#[target_feature(enable = "neon")]
+unsafe fn axpy_f32_neon_imp(out: &mut [f32], x: &[f32], a: f32) {
+    let n = out.len();
+    let nv = n - n % 4;
+    let av = vdupq_n_f32(a);
+    let mut i = 0;
+    while i < nv {
+        let o = vld1q_f32(out.as_ptr().add(i));
+        let xv = vld1q_f32(x.as_ptr().add(i));
+        // explicit mul then add — vmlaq would contract to fma and break
+        // bit-identity with the scalar reference
+        vst1q_f32(out.as_mut_ptr().add(i), vaddq_f32(o, vmulq_f32(av, xv)));
+        i += 4;
+    }
+    while i < n {
+        out[i] += a * x[i];
+        i += 1;
+    }
+}
+
+pub(super) fn scale_f32_neon(out: &mut [f32], a: f32) {
+    debug_assert!(supported(IsaLevel::Neon), "neon kernel on an unsupported host");
+    // SAFETY: reachable only via a table gated on runtime NEON detection.
+    unsafe { scale_f32_neon_imp(out, a) }
+}
+
+#[target_feature(enable = "neon")]
+unsafe fn scale_f32_neon_imp(out: &mut [f32], a: f32) {
+    let n = out.len();
+    let nv = n - n % 4;
+    let av = vdupq_n_f32(a);
+    let mut i = 0;
+    while i < nv {
+        let o = vld1q_f32(out.as_ptr().add(i));
+        vst1q_f32(out.as_mut_ptr().add(i), vmulq_f32(o, av));
+        i += 4;
+    }
+    while i < n {
+        out[i] *= a;
+        i += 1;
+    }
+}

@@ -1,0 +1,74 @@
+//! Portable reference microkernels — the numerics contract every SIMD
+//! tier must reproduce bit-exactly. The INT8 kernels accumulate in i32
+//! (associative, so any summation order is the same integer); the f32
+//! kernels are strictly element-wise (one mul + one add per lane, never
+//! fused), so vector reimplementations are IEEE-identical per element.
+
+/// INT8 dot product with i32 accumulation — the mma(u8.u8.s32) primitive
+/// (§4.3). Eight independent accumulator lanes let LLVM vectorize the
+/// i8→i32 widening MACs (pmaddwd-shaped codegen on x86) even at this
+/// portable tier.
+pub(super) fn dot_i8(a: &[i8], b: &[i8]) -> i32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut lanes = [0i32; 8];
+    let mut ca = a.chunks_exact(8);
+    let mut cb = b.chunks_exact(8);
+    for (xa, xb) in ca.by_ref().zip(cb.by_ref()) {
+        for i in 0..8 {
+            lanes[i] += xa[i] as i32 * xb[i] as i32;
+        }
+    }
+    let mut acc: i32 = lanes.iter().sum();
+    for (x, y) in ca.remainder().iter().zip(cb.remainder()) {
+        acc += *x as i32 * *y as i32;
+    }
+    acc
+}
+
+/// Score tile: `out[r*stride + c] = dot(q_row_r, k_row_c)` for a
+/// `bq × bk` block of row-major (len-`d`) INT8 rows.
+pub(super) fn qk_tile_i8(
+    q: &[i8],
+    k: &[i8],
+    d: usize,
+    bq: usize,
+    bk: usize,
+    out: &mut [i32],
+    stride: usize,
+) {
+    debug_assert!(q.len() >= bq * d, "q block too short");
+    debug_assert!(k.len() >= bk * d, "k block too short");
+    debug_assert!(bq == 0 || out.len() >= (bq - 1) * stride + bk, "out tile too short");
+    for r in 0..bq {
+        let qr = &q[r * d..(r + 1) * d];
+        let orow = &mut out[r * stride..r * stride + bk];
+        for (c, o) in orow.iter_mut().enumerate() {
+            *o = dot_i8(qr, &k[c * d..(c + 1) * d]);
+        }
+    }
+}
+
+/// INT8 P·V accumulation lane: `acc[i] += p * v[i]` in exact i32
+/// (the per-row inner loop of the §4.3 INT8 P·V mode).
+pub(super) fn pv_accum_i8(acc: &mut [i32], v: &[i8], p: i32) {
+    debug_assert_eq!(acc.len(), v.len());
+    for (a, &x) in acc.iter_mut().zip(v) {
+        *a += p * x as i32;
+    }
+}
+
+/// f32 axpy: `out[i] += a * x[i]`, element-wise, mul-then-add (no FMA
+/// contraction) — the P·V accumulation step of the fp16/fp32 modes.
+pub(super) fn axpy_f32(out: &mut [f32], x: &[f32], a: f32) {
+    debug_assert_eq!(out.len(), x.len());
+    for (o, &xv) in out.iter_mut().zip(x) {
+        *o += a * xv;
+    }
+}
+
+/// f32 rescale: `out[i] *= a` (the online-softmax α correction).
+pub(super) fn scale_f32(out: &mut [f32], a: f32) {
+    for o in out.iter_mut() {
+        *o *= a;
+    }
+}

@@ -1,0 +1,314 @@
+//! x86-64 microkernels: AVX2 (i8→i16 widening + `pmaddwd`) and AVX-512
+//! VNNI (`vpdpbusd`) tiers.
+//!
+//! Bit-identity argument: every INT8 kernel accumulates in i32 — integer
+//! addition is associative, so lane order is irrelevant and the result
+//! equals the scalar reference exactly. `vpdpbusd` multiplies an
+//! *unsigned* byte by a signed one, so the signed×signed dot is computed
+//! with a bias trick: `Σ(a+128)·b = Σa·b + 128·Σb`, all in exact i32,
+//! corrected after the loop. The f32 kernels are element-wise with an
+//! explicit mul-then-add (never `fmadd`), so each lane performs the same
+//! two IEEE operations as the scalar loop.
+//!
+//! Safety: the `unsafe` `#[target_feature]` functions are only reachable
+//! through the [`super::Kernels`] tables, which [`super::for_level`]
+//! hands out strictly behind [`super::cpu::supported`] runtime detection.
+
+#![allow(unsafe_op_in_unsafe_fn)]
+
+use std::arch::x86_64::*;
+
+use super::cpu::{supported, IsaLevel};
+
+// ---------------------------------------------------------------------------
+// AVX2 tier
+// ---------------------------------------------------------------------------
+
+pub(super) fn dot_i8_avx2(a: &[i8], b: &[i8]) -> i32 {
+    debug_assert!(supported(IsaLevel::Avx2), "avx2 kernel on an unsupported host");
+    debug_assert_eq!(a.len(), b.len());
+    // SAFETY: reachable only via a table gated on runtime AVX2 detection.
+    unsafe { dot_i8_avx2_imp(a, b) }
+}
+
+#[target_feature(enable = "avx", enable = "avx2")]
+unsafe fn dot_i8_avx2_imp(a: &[i8], b: &[i8]) -> i32 {
+    let n = a.len();
+    let nv = n - n % 32;
+    let mut acc = _mm256_setzero_si256();
+    let mut i = 0;
+    while i < nv {
+        let a0 = _mm256_cvtepi8_epi16(_mm_loadu_si128(a.as_ptr().add(i) as *const _));
+        let a1 = _mm256_cvtepi8_epi16(_mm_loadu_si128(a.as_ptr().add(i + 16) as *const _));
+        let b0 = _mm256_cvtepi8_epi16(_mm_loadu_si128(b.as_ptr().add(i) as *const _));
+        let b1 = _mm256_cvtepi8_epi16(_mm_loadu_si128(b.as_ptr().add(i + 16) as *const _));
+        acc = _mm256_add_epi32(acc, _mm256_madd_epi16(a0, b0));
+        acc = _mm256_add_epi32(acc, _mm256_madd_epi16(a1, b1));
+        i += 32;
+    }
+    let mut dot = hsum_epi32(acc);
+    while i < n {
+        dot += a[i] as i32 * b[i] as i32;
+        i += 1;
+    }
+    dot
+}
+
+/// Horizontal i32 sum of one 256-bit accumulator.
+#[target_feature(enable = "avx", enable = "avx2")]
+unsafe fn hsum_epi32(v: __m256i) -> i32 {
+    let s = _mm_add_epi32(_mm256_castsi256_si128(v), _mm256_extracti128_si256::<1>(v));
+    let s = _mm_add_epi32(s, _mm_shuffle_epi32::<0x4E>(s)); // swap 64-bit halves
+    let s = _mm_add_epi32(s, _mm_shuffle_epi32::<0xB1>(s)); // swap 32-bit pairs
+    _mm_cvtsi128_si32(s)
+}
+
+pub(super) fn qk_tile_i8_avx2(
+    q: &[i8],
+    k: &[i8],
+    d: usize,
+    bq: usize,
+    bk: usize,
+    out: &mut [i32],
+    stride: usize,
+) {
+    debug_assert!(supported(IsaLevel::Avx2), "avx2 kernel on an unsupported host");
+    debug_assert!(q.len() >= bq * d && k.len() >= bk * d);
+    debug_assert!(bq == 0 || out.len() >= (bq - 1) * stride + bk);
+    // SAFETY: reachable only via a table gated on runtime AVX2 detection.
+    unsafe { qk_tile_i8_avx2_imp(q, k, d, bq, bk, out, stride) }
+}
+
+/// Register-blocked tile: 4 Q-row accumulators share each widened K
+/// chunk, so K is loaded (and sign-extended) once per 4 Q rows instead
+/// of once per scoreline — the multi-accumulator unrolling that
+/// amortizes K traffic across the Q block.
+#[target_feature(enable = "avx", enable = "avx2")]
+unsafe fn qk_tile_i8_avx2_imp(
+    q: &[i8],
+    k: &[i8],
+    d: usize,
+    bq: usize,
+    bk: usize,
+    out: &mut [i32],
+    stride: usize,
+) {
+    let dv = d - d % 32;
+    let mut r = 0;
+    while r < bq {
+        let rn = (r + 4).min(bq);
+        for c in 0..bk {
+            let kp = k.as_ptr().add(c * d);
+            let mut acc = [_mm256_setzero_si256(); 4];
+            let mut j = 0;
+            while j < dv {
+                let k0 = _mm256_cvtepi8_epi16(_mm_loadu_si128(kp.add(j) as *const _));
+                let k1 = _mm256_cvtepi8_epi16(_mm_loadu_si128(kp.add(j + 16) as *const _));
+                for t in 0..rn - r {
+                    let qp = q.as_ptr().add((r + t) * d + j);
+                    let q0 = _mm256_cvtepi8_epi16(_mm_loadu_si128(qp as *const _));
+                    let q1 = _mm256_cvtepi8_epi16(_mm_loadu_si128(qp.add(16) as *const _));
+                    acc[t] = _mm256_add_epi32(acc[t], _mm256_madd_epi16(q0, k0));
+                    acc[t] = _mm256_add_epi32(acc[t], _mm256_madd_epi16(q1, k1));
+                }
+                j += 32;
+            }
+            for t in 0..rn - r {
+                let mut dot = hsum_epi32(acc[t]);
+                for j in dv..d {
+                    dot += q[(r + t) * d + j] as i32 * k[c * d + j] as i32;
+                }
+                out[(r + t) * stride + c] = dot;
+            }
+        }
+        r = rn;
+    }
+}
+
+pub(super) fn pv_accum_i8_avx2(acc: &mut [i32], v: &[i8], p: i32) {
+    debug_assert!(supported(IsaLevel::Avx2), "avx2 kernel on an unsupported host");
+    debug_assert_eq!(acc.len(), v.len());
+    // SAFETY: reachable only via a table gated on runtime AVX2 detection.
+    unsafe { pv_accum_i8_avx2_imp(acc, v, p) }
+}
+
+#[target_feature(enable = "avx", enable = "avx2")]
+unsafe fn pv_accum_i8_avx2_imp(acc: &mut [i32], v: &[i8], p: i32) {
+    let n = acc.len();
+    let nv = n - n % 8;
+    let pv = _mm256_set1_epi32(p);
+    let mut i = 0;
+    while i < nv {
+        let vv = _mm256_cvtepi8_epi32(_mm_loadl_epi64(v.as_ptr().add(i) as *const _));
+        let av = _mm256_loadu_si256(acc.as_ptr().add(i) as *const _);
+        let sum = _mm256_add_epi32(av, _mm256_mullo_epi32(pv, vv));
+        _mm256_storeu_si256(acc.as_mut_ptr().add(i) as *mut _, sum);
+        i += 8;
+    }
+    while i < n {
+        acc[i] += p * v[i] as i32;
+        i += 1;
+    }
+}
+
+pub(super) fn axpy_f32_avx(out: &mut [f32], x: &[f32], a: f32) {
+    debug_assert!(supported(IsaLevel::Avx2), "avx2 kernel on an unsupported host");
+    debug_assert_eq!(out.len(), x.len());
+    // SAFETY: reachable only via a table gated on runtime AVX2 detection
+    // (which implies AVX).
+    unsafe { axpy_f32_avx_imp(out, x, a) }
+}
+
+#[target_feature(enable = "avx")]
+unsafe fn axpy_f32_avx_imp(out: &mut [f32], x: &[f32], a: f32) {
+    let n = out.len();
+    let nv = n - n % 8;
+    let av = _mm256_set1_ps(a);
+    let mut i = 0;
+    while i < nv {
+        let o = _mm256_loadu_ps(out.as_ptr().add(i));
+        let xv = _mm256_loadu_ps(x.as_ptr().add(i));
+        // mul then add — same two IEEE ops per lane as the scalar loop
+        _mm256_storeu_ps(out.as_mut_ptr().add(i), _mm256_add_ps(o, _mm256_mul_ps(av, xv)));
+        i += 8;
+    }
+    while i < n {
+        out[i] += a * x[i];
+        i += 1;
+    }
+}
+
+pub(super) fn scale_f32_avx(out: &mut [f32], a: f32) {
+    debug_assert!(supported(IsaLevel::Avx2), "avx2 kernel on an unsupported host");
+    // SAFETY: reachable only via a table gated on runtime AVX2 detection.
+    unsafe { scale_f32_avx_imp(out, a) }
+}
+
+#[target_feature(enable = "avx")]
+unsafe fn scale_f32_avx_imp(out: &mut [f32], a: f32) {
+    let n = out.len();
+    let nv = n - n % 8;
+    let av = _mm256_set1_ps(a);
+    let mut i = 0;
+    while i < nv {
+        let o = _mm256_loadu_ps(out.as_ptr().add(i));
+        _mm256_storeu_ps(out.as_mut_ptr().add(i), _mm256_mul_ps(o, av));
+        i += 8;
+    }
+    while i < n {
+        out[i] *= a;
+        i += 1;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// AVX-512 VNNI tier (dot/tile only; the f32 and P·V lanes reuse AVX2).
+// `sage_avx512` is emitted by build.rs on rustc ≥ 1.89, where the
+// AVX-512 intrinsics and target features are stable; older toolchains
+// compile without this tier and top out at AVX2.
+// ---------------------------------------------------------------------------
+
+#[cfg(sage_avx512)]
+pub(super) fn dot_i8_vnni(a: &[i8], b: &[i8]) -> i32 {
+    debug_assert!(supported(IsaLevel::Vnni), "vnni kernel on an unsupported host");
+    debug_assert_eq!(a.len(), b.len());
+    // SAFETY: reachable only via a table gated on runtime AVX-512
+    // F/BW/VNNI detection.
+    unsafe { dot_i8_vnni_imp(a, b) }
+}
+
+/// `vpdpbusd`-shaped signed dot: bias `a` into unsigned bytes
+/// (`a ^ 0x80 == a + 128`), accumulate `Σ(a+128)·b` and `Σb` with two
+/// dpbusd streams, and undo the bias with `- 128·Σb` — exact in i32.
+#[cfg(sage_avx512)]
+#[target_feature(enable = "avx512f", enable = "avx512bw", enable = "avx512vnni")]
+unsafe fn dot_i8_vnni_imp(a: &[i8], b: &[i8]) -> i32 {
+    let n = a.len();
+    let nv = n - n % 64;
+    let bias = _mm512_set1_epi8(-128);
+    let ones = _mm512_set1_epi8(1);
+    let mut acc = _mm512_setzero_si512();
+    let mut bsum = _mm512_setzero_si512();
+    let mut i = 0;
+    while i < nv {
+        let av = _mm512_loadu_si512(a.as_ptr().add(i) as *const _);
+        let bv = _mm512_loadu_si512(b.as_ptr().add(i) as *const _);
+        acc = _mm512_dpbusd_epi32(acc, _mm512_xor_si512(av, bias), bv);
+        bsum = _mm512_dpbusd_epi32(bsum, ones, bv);
+        i += 64;
+    }
+    let mut dot = _mm512_reduce_add_epi32(acc) - 128 * _mm512_reduce_add_epi32(bsum);
+    while i < n {
+        dot += a[i] as i32 * b[i] as i32;
+        i += 1;
+    }
+    dot
+}
+
+#[cfg(sage_avx512)]
+pub(super) fn qk_tile_i8_vnni(
+    q: &[i8],
+    k: &[i8],
+    d: usize,
+    bq: usize,
+    bk: usize,
+    out: &mut [i32],
+    stride: usize,
+) {
+    debug_assert!(supported(IsaLevel::Vnni), "vnni kernel on an unsupported host");
+    debug_assert!(q.len() >= bq * d && k.len() >= bk * d);
+    debug_assert!(bq == 0 || out.len() >= (bq - 1) * stride + bk);
+    // SAFETY: reachable only via a table gated on runtime AVX-512
+    // F/BW/VNNI detection.
+    unsafe { qk_tile_i8_vnni_imp(q, k, d, bq, bk, out, stride) }
+}
+
+/// VNNI tile: K is the biased (unsigned) dpbusd operand, loaded and
+/// biased once per 4 Q-row accumulators; the per-Q-row `Σq` bias
+/// correction is computed once per tile row-group.
+#[cfg(sage_avx512)]
+#[target_feature(enable = "avx512f", enable = "avx512bw", enable = "avx512vnni")]
+unsafe fn qk_tile_i8_vnni_imp(
+    q: &[i8],
+    k: &[i8],
+    d: usize,
+    bq: usize,
+    bk: usize,
+    out: &mut [i32],
+    stride: usize,
+) {
+    let dv = d - d % 64;
+    let bias = _mm512_set1_epi8(-128);
+    let mut r = 0;
+    while r < bq {
+        let rn = (r + 4).min(bq);
+        // Σq over the vectorized prefix of each row in the group
+        // (Σ(k+128)·q = Σk·q + 128·Σq, so dot = acc - 128·Σq)
+        let mut qsum = [0i32; 4];
+        for (t, qs) in qsum.iter_mut().enumerate().take(rn - r) {
+            let row = &q[(r + t) * d..(r + t) * d + dv];
+            *qs = row.iter().map(|&x| x as i32).sum();
+        }
+        for c in 0..bk {
+            let kp = k.as_ptr().add(c * d);
+            let mut acc = [_mm512_setzero_si512(); 4];
+            let mut j = 0;
+            while j < dv {
+                let ku = _mm512_xor_si512(_mm512_loadu_si512(kp.add(j) as *const _), bias);
+                for t in 0..rn - r {
+                    let qv = _mm512_loadu_si512(q.as_ptr().add((r + t) * d + j) as *const _);
+                    acc[t] = _mm512_dpbusd_epi32(acc[t], ku, qv);
+                }
+                j += 64;
+            }
+            for t in 0..rn - r {
+                let mut dot = _mm512_reduce_add_epi32(acc[t]) - 128 * qsum[t];
+                for j in dv..d {
+                    dot += q[(r + t) * d + j] as i32 * k[c * d + j] as i32;
+                }
+                out[(r + t) * stride + c] = dot;
+            }
+        }
+        r = rn;
+    }
+}

@@ -8,15 +8,18 @@
 //! kernel selection (explicit, by registry name, or auto-dispatched),
 //! layout, causal/sliding-window masking, softmax scale and the GQA head
 //! mapping — plus [`api::PreparedKV`], quantize-once KV state for decode.
-//! [`registry`] is the kernel dispatch table behind both. The legacy
-//! `attention(q, k, v, imp, causal)` free function survives as a
-//! deprecated shim.
+//! [`registry`] is the kernel dispatch table behind both; underneath it,
+//! [`isa`] dispatches the INT8/f32 inner loops to runtime-detected SIMD
+//! microkernels (`SAGE_ISA` overrides; all tiers bit-identical to
+//! scalar). The legacy `attention(q, k, v, imp, causal)` free function
+//! survives as a deprecated shim.
 //!
 //! Layout: internally tensors are (B, H, N, d); per-(batch, head) planes
 //! are processed independently (parallelized with scoped threads).
 
 pub mod api;
 pub mod dtype_sim;
+pub mod isa;
 mod plane;
 mod prepared;
 pub mod registry;

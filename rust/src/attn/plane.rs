@@ -8,8 +8,12 @@
 //! a caller-owned [`Scratch`] so the online-softmax loop performs **zero**
 //! heap allocation — [`crate::attn::api::AttnSpec`] allocates one
 //! `Scratch` per worker thread and reuses it across every (batch, head)
-//! plane; since this PR the per-plane INT8 planes and scale vectors also
-//! live here (filled via [`crate::quant::quantize_into`]).
+//! plane; the per-plane INT8 planes and scale vectors also live here
+//! (filled via [`crate::quant::quantize_into`]). The INT8 arithmetic
+//! itself — whole QKᵀ score tiles, the INT8 P·V lanes and the f32
+//! axpy/rescale steps — dispatches through the
+//! [`crate::attn::isa`] microkernel tables (AVX2 / AVX-512 VNNI / NEON
+//! dotprod / scalar, selected at runtime, bit-identical across tiers).
 //! [`sage_plane_naive`] is a deliberately *unblocked* row-at-a-time
 //! reference (the textbook formulation, which the seed's kernels never
 //! shipped) kept as the measurable "before" for `sage bench-hotpath` and
@@ -24,6 +28,7 @@
 use crate::quant::{self, Fp8Format, Granularity};
 use crate::util::f16::{round_f16, round_f16_slice};
 
+use super::isa;
 use super::{PvMode, BLOCK_KV, BLOCK_Q};
 
 const NEG_BIG: f32 = -1e30;
@@ -85,6 +90,9 @@ impl PlaneOpts {
 pub struct Scratch {
     /// S tile: BLOCK_Q × BLOCK_KV dequantized scores.
     pub(super) s: Vec<f32>,
+    /// Raw i32 QKᵀ tile (the [`crate::attn::isa`] microkernel output,
+    /// dequantized into `s`).
+    pub(super) s_i32: Vec<i32>,
     /// INT8-quantized P̃ row (Int8 P·V mode).
     pub(super) p_i8: Vec<i8>,
     /// Per-Q-row online-softmax running max.
@@ -122,6 +130,7 @@ impl Scratch {
     pub fn new() -> Scratch {
         Scratch {
             s: vec![0.0; BLOCK_Q * BLOCK_KV],
+            s_i32: vec![0; BLOCK_Q * BLOCK_KV],
             p_i8: vec![0; BLOCK_KV],
             m: vec![0.0; BLOCK_Q],
             l: vec![0.0; BLOCK_Q],
@@ -218,6 +227,76 @@ pub fn exact_plane_opt(
         }
     }
     out
+}
+
+/// One INT8 score tile for Q block `[i0, i0+bq)` × KV block `[j0, jk)`:
+/// run the ISA `qk_tile_i8` microkernel over the contiguous hull of Q
+/// rows with any attendable key in the block (so fully-masked rows cost
+/// no dot products, exactly like the per-pair loops this replaces), then
+/// dequantize + mask into `s` as `dot · q_scale · k_scale` / `NEG_BIG`.
+/// `k_tile`/`k_scales` are the KV block's rows and per-row scales
+/// (tile-local, `bk = jk - j0` entries) — the one thing that differs
+/// between the plain, prepared and paged kernels.
+#[allow(clippy::too_many_arguments)]
+pub(super) fn qk_score_tile(
+    kern: &isa::Kernels,
+    opts: PlaneOpts,
+    q_i8: &[i8],
+    q_scales: &[f32],
+    k_tile: &[i8],
+    k_scales: &[f32],
+    s: &mut [f32],
+    s_i32: &mut [i32],
+    i0: usize,
+    bq: usize,
+    j0: usize,
+    jk: usize,
+    n_q: usize,
+    n_kv: usize,
+    d: usize,
+) {
+    let bk = jk - j0;
+    // contiguous hull of Q rows whose [lo, hi) overlaps [j0, jk)
+    let mut r0 = bq;
+    let mut r1 = 0;
+    for bi in 0..bq {
+        let (lo, hi) = opts.range(i0 + bi, n_q, n_kv);
+        if lo < jk && hi > j0 {
+            if r0 == bq {
+                r0 = bi;
+            }
+            r1 = bi + 1;
+        }
+    }
+    if r0 < r1 {
+        (kern.qk_tile_i8)(
+            &q_i8[(i0 + r0) * d..(i0 + r1) * d],
+            k_tile,
+            d,
+            r1 - r0,
+            bk,
+            &mut s_i32[r0 * BLOCK_KV..],
+            BLOCK_KV,
+        );
+    }
+    for bi in 0..bq {
+        let (lo, hi) = opts.range(i0 + bi, n_q, n_kv);
+        let qs = q_scales[i0 + bi];
+        let srow = &mut s[bi * BLOCK_KV..bi * BLOCK_KV + bk];
+        if bi < r0 || bi >= r1 {
+            srow.fill(NEG_BIG);
+            continue;
+        }
+        let irow = &s_i32[bi * BLOCK_KV..bi * BLOCK_KV + bk];
+        for (bj, sv) in srow.iter_mut().enumerate() {
+            let j = j0 + bj;
+            *sv = if j >= lo && j < hi {
+                irow[bj] as f32 * qs * k_scales[bj]
+            } else {
+                NEG_BIG
+            };
+        }
+    }
 }
 
 /// Highest attendable key index + 1 for query `i` (queries aligned to the
@@ -423,6 +502,7 @@ pub fn sage_plane_opt(
     scratch.ensure_head_dim(d);
     let Scratch {
         s,
+        s_i32,
         p_i8,
         m,
         l,
@@ -441,6 +521,7 @@ pub fn sage_plane_opt(
         v_i8,
         v_scales,
     } = scratch;
+    let kern = isa::kernels();
 
     // ---- quantize Q (with folded softmax scale) and K (after smooth-K),
     //      all into scratch-owned buffers (zero per-plane allocation) ----
@@ -484,23 +565,25 @@ pub fn sage_plane_opt(
         while j0 < n_kv {
             let jk = (j0 + BLOCK_KV).min(n_kv);
             let bk = jk - j0;
-            // ---- S tile: mma(u8.u8.s32) + dequant ----
-            for bi in 0..bq {
-                let (lo, hi) = opts.range(i0 + bi, n_q, n_kv);
-                let qi = &q_i8[(i0 + bi) * d..(i0 + bi + 1) * d];
-                let qs = q_scales[i0 + bi];
-                for bj in 0..bk {
-                    let j = j0 + bj;
-                    let s_val = if j >= lo && j < hi {
-                        let kj = &k_i8[j * d..(j + 1) * d];
-                        let dot = dot_i8(qi, kj);
-                        dot as f32 * qs * k_scales[j]
-                    } else {
-                        NEG_BIG
-                    };
-                    s[bi * BLOCK_KV + bj] = s_val;
-                }
-            }
+            // ---- S tile: mma(u8.u8.s32) via the ISA tile microkernel,
+            //      then dequant + mask into `s` ----
+            qk_score_tile(
+                kern,
+                opts,
+                q_i8,
+                q_scales,
+                &k_i8[j0 * d..jk * d],
+                &k_scales[j0..jk],
+                s,
+                s_i32,
+                i0,
+                bq,
+                j0,
+                jk,
+                n_q,
+                n_kv,
+                d,
+            );
             // ---- online softmax (fp32) + P·V ----
             for bi in 0..bq {
                 let row = &mut s[bi * BLOCK_KV..bi * BLOCK_KV + bk];
@@ -528,22 +611,17 @@ pub fn sage_plane_opt(
                         for (pq, &p) in prow.iter_mut().zip(row.iter()) {
                             *pq = (p * quant::INT8_MAX).round() as i8;
                         }
-                        for oc in o.iter_mut() {
-                            *oc *= alpha;
-                        }
+                        (kern.scale_f32)(o, alpha);
                         // int32 accumulate over the block (row-major V
-                        // walk — contiguous loads vectorize), dequant once
+                        // walk through the ISA lane), dequant once
                         let acc32 = &mut acc_i32[..d];
                         acc32.fill(0);
                         for (bj, &pq) in prow.iter().enumerate() {
                             if pq == 0 {
                                 continue;
                             }
-                            let p32 = pq as i32;
                             let vrow = &v_i8[(j0 + bj) * d..(j0 + bj + 1) * d];
-                            for (a, &vc) in acc32.iter_mut().zip(vrow) {
-                                *a += p32 * vc as i32;
-                            }
+                            (kern.pv_accum_i8)(acc32, vrow, pq as i32);
                         }
                         for (oc, (&a, &vs)) in
                             o.iter_mut().zip(acc32.iter().zip(&v_scales[..d]))
@@ -553,9 +631,7 @@ pub fn sage_plane_opt(
                     }
                     PvMode::Fp16Accum => {
                         // rescale in registers, store rounded to fp16
-                        for oc in o.iter_mut() {
-                            *oc *= alpha;
-                        }
+                        (kern.scale_f32)(o, alpha);
                         round_f16_slice(o);
                         // fp16 operands (P̃ rounded once per row, not per
                         // output channel); accumulator rounded every
@@ -576,9 +652,7 @@ pub fn sage_plane_opt(
                                     continue;
                                 }
                                 let vrow = &v_f16[(j0 + t) * d..(j0 + t + 1) * d];
-                                for (pc, &vc) in partd.iter_mut().zip(vrow) {
-                                    *pc += p * vc;
-                                }
+                                (kern.axpy_f32)(partd, vrow, p);
                             }
                             round_f16_slice(partd);
                             for (oc, &pc) in o.iter_mut().zip(partd.iter()) {
@@ -589,9 +663,7 @@ pub fn sage_plane_opt(
                         }
                     }
                     PvMode::Fp32Accum => {
-                        for oc in o.iter_mut() {
-                            *oc *= alpha;
-                        }
+                        (kern.scale_f32)(o, alpha);
                         let p16b = &mut p16[..bk];
                         p16b.copy_from_slice(&row[..bk]);
                         round_f16_slice(p16b);
@@ -600,9 +672,7 @@ pub fn sage_plane_opt(
                                 continue;
                             }
                             let vrow = &v_f16[(j0 + bj) * d..(j0 + bj + 1) * d];
-                            for (oc, &vc) in o.iter_mut().zip(vrow) {
-                                *oc += p * vc;
-                            }
+                            (kern.axpy_f32)(o, vrow, p);
                         }
                     }
                 }
@@ -675,7 +745,7 @@ pub fn sage_plane_naive(
         let mut mx = NEG_BIG;
         for (j, sj) in s.iter_mut().enumerate().take(limit) {
             let kj = &kq.data[j * d..(j + 1) * d];
-            *sj = dot_i8(qi, kj) as f32 * qs * kq.scales[j];
+            *sj = isa::dot_i8(qi, kj) as f32 * qs * kq.scales[j];
             mx = mx.max(*sj);
         }
         let mut lsum = 0.0f32;
@@ -770,27 +840,6 @@ pub fn fp8_plane_opt(
         }
     }
     out
-}
-
-/// INT8 dot product with i32 accumulation — the mma(u8.u8.s32) primitive.
-/// Eight independent accumulator lanes let LLVM vectorize the i8→i32
-/// widening MACs (pmaddwd-shaped codegen on x86).
-#[inline]
-pub fn dot_i8(a: &[i8], b: &[i8]) -> i32 {
-    debug_assert_eq!(a.len(), b.len());
-    let mut lanes = [0i32; 8];
-    let mut ca = a.chunks_exact(8);
-    let mut cb = b.chunks_exact(8);
-    for (xa, xb) in ca.by_ref().zip(cb.by_ref()) {
-        for i in 0..8 {
-            lanes[i] += xa[i] as i32 * xb[i] as i32;
-        }
-    }
-    let mut acc: i32 = lanes.iter().sum();
-    for (x, y) in ca.remainder().iter().zip(cb.remainder()) {
-        acc += *x as i32 * *y as i32;
-    }
-    acc
 }
 
 #[cfg(test)]

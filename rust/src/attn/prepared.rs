@@ -29,7 +29,8 @@ use crate::quant::{self, Granularity};
 use crate::util::error::Result;
 use crate::util::f16::round_f16_slice;
 
-use super::plane::{self, dot_i8, PlaneOpts, Scratch};
+use super::isa;
+use super::plane::{self, qk_score_tile, PlaneOpts, Scratch};
 use super::registry::{self, KernelReq};
 use super::{AttnImpl, PvMode, BLOCK_KV, BLOCK_Q};
 
@@ -219,7 +220,9 @@ pub(crate) fn sage_plane_prepared(
         "prepared KV supports PerToken/PerBlock Q/K granularity"
     );
     scratch.ensure_head_dim(d);
-    let Scratch { s, p_i8, m, l, acc, p16, part, acc_i32, qbuf, q_i8, q_scales, .. } = scratch;
+    let Scratch { s, s_i32, p_i8, m, l, acc, p16, part, acc_i32, qbuf, q_i8, q_scales, .. } =
+        scratch;
+    let kern = isa::kernels();
 
     let scale = opts.scale(d);
     qbuf.clear();
@@ -242,22 +245,24 @@ pub(crate) fn sage_plane_prepared(
         while j0 < n_kv {
             let jk = (j0 + BLOCK_KV).min(n_kv);
             let bk = jk - j0;
-            // ---- S tile from the prepared INT8 K ----
-            for bi in 0..bq {
-                let (lo, hi) = opts.range(i0 + bi, n_q, n_kv);
-                let qi = &q_i8[(i0 + bi) * d..(i0 + bi + 1) * d];
-                let qs = q_scales[i0 + bi];
-                for bj in 0..bk {
-                    let j = j0 + bj;
-                    let s_val = if j >= lo && j < hi {
-                        let kj = &prep.k_i8[j * d..(j + 1) * d];
-                        dot_i8(qi, kj) as f32 * qs * prep.k_scales[j]
-                    } else {
-                        NEG_BIG
-                    };
-                    s[bi * BLOCK_KV + bj] = s_val;
-                }
-            }
+            // ---- S tile from the prepared INT8 K (ISA microkernel) ----
+            qk_score_tile(
+                kern,
+                opts,
+                q_i8,
+                q_scales,
+                &prep.k_i8[j0 * d..jk * d],
+                &prep.k_scales[j0..jk],
+                s,
+                s_i32,
+                i0,
+                bq,
+                j0,
+                jk,
+                n_q,
+                n_kv,
+                d,
+            );
             // ---- online softmax (fp32) + P·V ----
             // per-block V scales for this tile (Int8 mode)
             let vs_base = (j0 / BLOCK_KV) * d;
@@ -283,20 +288,15 @@ pub(crate) fn sage_plane_prepared(
                         for (pq, &p) in prow.iter_mut().zip(row.iter()) {
                             *pq = (p * quant::INT8_MAX).round() as i8;
                         }
-                        for oc in o.iter_mut() {
-                            *oc *= alpha;
-                        }
+                        (kern.scale_f32)(o, alpha);
                         let acc32 = &mut acc_i32[..d];
                         acc32.fill(0);
                         for (bj, &pq) in prow.iter().enumerate() {
                             if pq == 0 {
                                 continue;
                             }
-                            let p32 = pq as i32;
                             let vrow = &prep.v_i8[(j0 + bj) * d..(j0 + bj + 1) * d];
-                            for (a, &vc) in acc32.iter_mut().zip(vrow) {
-                                *a += p32 * vc as i32;
-                            }
+                            (kern.pv_accum_i8)(acc32, vrow, pq as i32);
                         }
                         let vs = &prep.v_scales[vs_base..vs_base + d];
                         for (oc, (&a, &vsc)) in o.iter_mut().zip(acc32.iter().zip(vs)) {
@@ -304,9 +304,7 @@ pub(crate) fn sage_plane_prepared(
                         }
                     }
                     PvMode::Fp16Accum => {
-                        for oc in o.iter_mut() {
-                            *oc *= alpha;
-                        }
+                        (kern.scale_f32)(o, alpha);
                         round_f16_slice(o);
                         let p16b = &mut p16[..bk];
                         p16b.copy_from_slice(&row[..bk]);
@@ -322,9 +320,7 @@ pub(crate) fn sage_plane_prepared(
                                     continue;
                                 }
                                 let vrow = &prep.v_f16[(j0 + t) * d..(j0 + t + 1) * d];
-                                for (pc, &vc) in partd.iter_mut().zip(vrow) {
-                                    *pc += p * vc;
-                                }
+                                (kern.axpy_f32)(partd, vrow, p);
                             }
                             round_f16_slice(partd);
                             for (oc, &pc) in o.iter_mut().zip(partd.iter()) {
@@ -335,9 +331,7 @@ pub(crate) fn sage_plane_prepared(
                         }
                     }
                     PvMode::Fp32Accum => {
-                        for oc in o.iter_mut() {
-                            *oc *= alpha;
-                        }
+                        (kern.scale_f32)(o, alpha);
                         let p16b = &mut p16[..bk];
                         p16b.copy_from_slice(&row[..bk]);
                         round_f16_slice(p16b);
@@ -346,9 +340,7 @@ pub(crate) fn sage_plane_prepared(
                                 continue;
                             }
                             let vrow = &prep.v_f16[(j0 + bj) * d..(j0 + bj + 1) * d];
-                            for (oc, &vc) in o.iter_mut().zip(vrow) {
-                                *oc += p * vc;
-                            }
+                            (kern.axpy_f32)(o, vrow, p);
                         }
                     }
                 }
@@ -664,7 +656,9 @@ pub(crate) fn sage_plane_paged(
         "paged KV supports PerToken/PerBlock Q/K granularity"
     );
     scratch.ensure_head_dim(d);
-    let Scratch { s, p_i8, m, l, acc, p16, part, acc_i32, qbuf, q_i8, q_scales, .. } = scratch;
+    let Scratch { s, s_i32, p_i8, m, l, acc, p16, part, acc_i32, qbuf, q_i8, q_scales, .. } =
+        scratch;
+    let kern = isa::kernels();
 
     let scale = opts.scale(d);
     qbuf.clear();
@@ -689,22 +683,24 @@ pub(crate) fn sage_plane_paged(
             let bk = jk - j0;
             // page ↔ tile correspondence: PAGE_ROWS == BLOCK_KV
             let pg = pages[j0 / PAGE_ROWS];
-            // ---- S tile from the page's INT8 K ----
-            for bi in 0..bq {
-                let (lo, hi) = opts.range(i0 + bi, n_q, n_kv);
-                let qi = &q_i8[(i0 + bi) * d..(i0 + bi + 1) * d];
-                let qs = q_scales[i0 + bi];
-                for bj in 0..bk {
-                    let j = j0 + bj;
-                    let s_val = if j >= lo && j < hi {
-                        let kj = &pg.k_i8[bj * d..(bj + 1) * d];
-                        dot_i8(qi, kj) as f32 * qs * pg.k_scales[bj]
-                    } else {
-                        NEG_BIG
-                    };
-                    s[bi * BLOCK_KV + bj] = s_val;
-                }
-            }
+            // ---- S tile from the page's INT8 K (ISA microkernel) ----
+            qk_score_tile(
+                kern,
+                opts,
+                q_i8,
+                q_scales,
+                &pg.k_i8[..bk * d],
+                &pg.k_scales[..bk],
+                s,
+                s_i32,
+                i0,
+                bq,
+                j0,
+                jk,
+                n_q,
+                n_kv,
+                d,
+            );
             // ---- online softmax (fp32) + P·V ----
             for bi in 0..bq {
                 let row = &mut s[bi * BLOCK_KV..bi * BLOCK_KV + bk];
@@ -728,20 +724,15 @@ pub(crate) fn sage_plane_paged(
                         for (pq, &p) in prow.iter_mut().zip(row.iter()) {
                             *pq = (p * quant::INT8_MAX).round() as i8;
                         }
-                        for oc in o.iter_mut() {
-                            *oc *= alpha;
-                        }
+                        (kern.scale_f32)(o, alpha);
                         let acc32 = &mut acc_i32[..d];
                         acc32.fill(0);
                         for (bj, &pq) in prow.iter().enumerate() {
                             if pq == 0 {
                                 continue;
                             }
-                            let p32 = pq as i32;
                             let vrow = &pg.v_i8[bj * d..(bj + 1) * d];
-                            for (a, &vc) in acc32.iter_mut().zip(vrow) {
-                                *a += p32 * vc as i32;
-                            }
+                            (kern.pv_accum_i8)(acc32, vrow, pq as i32);
                         }
                         let vs = &pg.v_scales[..d];
                         for (oc, (&a, &vsc)) in o.iter_mut().zip(acc32.iter().zip(vs)) {
@@ -749,9 +740,7 @@ pub(crate) fn sage_plane_paged(
                         }
                     }
                     PvMode::Fp16Accum => {
-                        for oc in o.iter_mut() {
-                            *oc *= alpha;
-                        }
+                        (kern.scale_f32)(o, alpha);
                         round_f16_slice(o);
                         let p16b = &mut p16[..bk];
                         p16b.copy_from_slice(&row[..bk]);
@@ -767,9 +756,7 @@ pub(crate) fn sage_plane_paged(
                                     continue;
                                 }
                                 let vrow = &pg.v_f16[t * d..(t + 1) * d];
-                                for (pc, &vc) in partd.iter_mut().zip(vrow) {
-                                    *pc += p * vc;
-                                }
+                                (kern.axpy_f32)(partd, vrow, p);
                             }
                             round_f16_slice(partd);
                             for (oc, &pc) in o.iter_mut().zip(partd.iter()) {
@@ -780,9 +767,7 @@ pub(crate) fn sage_plane_paged(
                         }
                     }
                     PvMode::Fp32Accum => {
-                        for oc in o.iter_mut() {
-                            *oc *= alpha;
-                        }
+                        (kern.scale_f32)(o, alpha);
                         let p16b = &mut p16[..bk];
                         p16b.copy_from_slice(&row[..bk]);
                         round_f16_slice(p16b);
@@ -791,9 +776,7 @@ pub(crate) fn sage_plane_paged(
                                 continue;
                             }
                             let vrow = &pg.v_f16[bj * d..(bj + 1) * d];
-                            for (oc, &vc) in o.iter_mut().zip(vrow) {
-                                *oc += p * vc;
-                            }
+                            (kern.axpy_f32)(o, vrow, p);
                         }
                     }
                 }

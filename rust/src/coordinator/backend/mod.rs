@@ -58,7 +58,11 @@ pub struct StepOutcome {
 /// accounting over one model replica. The scheduler owns the logical
 /// [`KvCacheManager`] and threads it through so logical accounting and
 /// the backend's physical storage stay in lockstep.
-pub trait EngineBackend {
+///
+/// `Send` so a replica (and the scheduler that owns it) can be driven
+/// from its own thread — the multi-replica serve loop runs one thread
+/// per replica, as a real fleet would.
+pub trait EngineBackend: Send {
     /// Backend discriminator ("pjrt" / "native") for reports and flags.
     fn backend_name(&self) -> &'static str;
 

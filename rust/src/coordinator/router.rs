@@ -26,6 +26,28 @@ pub enum RoutingPolicy {
     PowerOfK(usize),
 }
 
+impl RoutingPolicy {
+    /// Parse the `sage serve --route` vocabulary (`rr|least|power2`).
+    pub fn by_name(name: &str) -> Option<RoutingPolicy> {
+        match name {
+            "rr" => Some(RoutingPolicy::RoundRobin),
+            "least" => Some(RoutingPolicy::LeastLoaded),
+            "power2" => Some(RoutingPolicy::PowerOfK(2)),
+            _ => None,
+        }
+    }
+
+    /// The `--route` name this policy parses from (inverse of
+    /// [`RoutingPolicy::by_name`] for the named policies).
+    pub fn name(&self) -> &'static str {
+        match self {
+            RoutingPolicy::RoundRobin => "rr",
+            RoutingPolicy::LeastLoaded => "least",
+            RoutingPolicy::PowerOfK(_) => "power2",
+        }
+    }
+}
+
 /// A scheduler-backed replica: any [`super::backend::EngineBackend`]
 /// behind the [`super::Engine`] facade, fronted by its own batcher + KV
 /// accountant. Load is outstanding decode work plus queued requests, so
@@ -190,6 +212,16 @@ mod tests {
         reps[0].cap = 0;
         reps[1].cap = 0;
         assert!(r.route(&mut reps, &req(1)).is_none());
+    }
+
+    #[test]
+    fn policy_names_round_trip() {
+        for name in ["rr", "least", "power2"] {
+            let p = RoutingPolicy::by_name(name).expect(name);
+            assert_eq!(p.name(), name);
+        }
+        assert_eq!(RoutingPolicy::by_name("random"), None);
+        assert_eq!(RoutingPolicy::by_name("power2"), Some(RoutingPolicy::PowerOfK(2)));
     }
 
     #[test]

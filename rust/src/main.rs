@@ -3,16 +3,20 @@
 //! Subcommands:
 //!   smoke                         artifact round-trip sanity check
 //!   serve [--plan sage] [...]     run the serving coordinator on a
-//!                                 synthetic workload and print telemetry
+//!                                 synthetic workload and print telemetry;
+//!                                 --replicas N --route rr|least|power2
+//!                                 drives a routed multi-replica fleet
 //!   calibrate [--out plan.json]   §4.5 adaptive-quantization calibration
 //!   accuracy [--profile P]        kernel accuracy vs full precision
 //!   speed [--device 4090]         cost-model kernel speed sweep
-//!   kernels                       list the attention kernel registry
+//!   kernels                       list the attention kernel registry and
+//!                                 the detected ISA microkernel dispatch
 //!   bench-hotpath [--seq 4096]    before/after GFLOPS on the blocked
 //!                                 sage_plane hot path vs the naive loop,
-//!                                 plus the PreparedKV decode lane; with
-//!                                 --check FILE asserts no-regression
-//!                                 against the checked-in baseline
+//!                                 plus the PreparedKV decode lane and the
+//!                                 dot-i8 microkernel lane; with --check
+//!                                 FILE asserts no-regression against the
+//!                                 checked-in baseline
 //!
 //! (arg parsing is hand-rolled: clap is unavailable offline; unknown
 //! subcommands and flags exit 2 with usage instead of being ignored)
@@ -21,16 +25,17 @@ use std::collections::HashMap;
 use std::time::Duration;
 
 use sageattention::adaptive;
+use sageattention::attn::isa::{self, IsaLevel};
 use sageattention::attn::{
     registry, sage_plane_naive, sage_plane_with, AttnImpl, AttnSpec, KvPage, PagedSegment,
     PlaneOpts, PvMode, Scratch, BLOCK_Q, PAGE_ROWS,
 };
 use sageattention::bench::{bench, bench_budget, f2, pct, sci, Sample, Table};
 use sageattention::coordinator::{
-    BatchPolicy, Batcher, DecodeMode, Engine, EngineBackend, GenParams, KvCacheManager,
-    NativeEngine, Request, Scheduler,
+    BatchPolicy, Batcher, DecodeMode, Engine, EngineBackend, EngineReplica, GenParams,
+    KvCacheManager, NativeEngine, Request, Router, RoutingPolicy, Scheduler,
 };
-use sageattention::metrics::{accuracy, attention_ops};
+use sageattention::metrics::{accuracy, attention_ops, LatencyStats};
 use sageattention::perfmodel::{predict_tops, AttnKernel, DeviceSpec, Workpoint};
 use sageattention::quant::Granularity;
 use sageattention::runtime::{ModelCfg, Runtime, Value};
@@ -48,11 +53,12 @@ subcommands:
                  round-trip sanity check (pjrt: artifact vs native kernels;
                  native: paged-decode bit-identity + end-to-end serve)
   serve          [--backend pjrt|native] [--config C] [--plan P] [--requests N]
-                 [--seed S] [--slots N] [--kv-blocks N]
+                 [--seed S] [--slots N] [--kv-blocks N] [--replicas N]
+                 [--route rr|least|power2]
   calibrate      [--layers N] [--profile P] [--out FILE] [--seed S]
   accuracy       [--profile P] [--seq N] [--headdim D] [--kernel NAME]
   speed          [--device 4090|3090] [--headdim D] [--causal]
-  kernels                                             list the kernel registry
+  kernels                              list the kernel registry + ISA dispatch
   bench-hotpath  [--seq N] [--headdim D] [--batch B] [--heads H] [--secs S]
                  [--decode-tokens T] [--serve-seq N] [--serve-decode-tokens T]
                  [--check FILE] [--update FILE]";
@@ -76,7 +82,17 @@ fn main() {
     }
     let allowed: &[&str] = match cmd.as_str() {
         "smoke" => &["artifact", "backend"],
-        "serve" => &["config", "plan", "requests", "seed", "backend", "slots", "kv-blocks"],
+        "serve" => &[
+            "config",
+            "plan",
+            "requests",
+            "seed",
+            "backend",
+            "slots",
+            "kv-blocks",
+            "replicas",
+            "route",
+        ],
         "calibrate" => &["layers", "profile", "out", "seed"],
         "accuracy" => &["profile", "seq", "headdim", "kernel"],
         "speed" => &["device", "headdim", "causal"],
@@ -287,7 +303,12 @@ fn smoke_native() -> Result<()> {
     Ok(())
 }
 
-/// Serve a synthetic workload through the full coordinator.
+/// Serve a synthetic workload through the full coordinator. With
+/// `--replicas N` the workload is routed over N independent replicas
+/// (each its own batcher + KV accountant + engine) through the
+/// [`Router`] under the `--route` policy — the multi-engine front door,
+/// with per-replica counts in the final report. `--replicas 1` (the
+/// default) is the same machinery with a single replica.
 fn serve(flags: &HashMap<String, String>) -> Result<()> {
     // validate CLI input before touching the runtime, so flag misuse
     // reports as misuse (exit 2) rather than a late runtime error
@@ -296,13 +317,34 @@ fn serve(flags: &HashMap<String, String>) -> Result<()> {
     let n_req: usize = parsed_flag(flags, "requests", "16");
     let seed: u64 = parsed_flag(flags, "seed", "1");
     let backend = flag(flags, "backend", "pjrt");
+    let replicas: usize = parsed_flag(flags, "replicas", "1");
+    if replicas == 0 {
+        usage_error("--replicas must be non-zero");
+    }
+    let route = flag(flags, "route", "rr");
+    let policy = RoutingPolicy::by_name(route)
+        .unwrap_or_else(|| usage_error(&format!("unknown route '{route}' (rr|least|power2)")));
+    // --kv-blocks is validated here (before any engine is built) so flag
+    // misuse still exits 2 without paying N model constructions; the
+    // per-replica default is resolved later, once slots/max_seq are known
+    let kv_blocks: Option<usize> = flags.get("kv-blocks").map(|_| {
+        let blocks: usize = parsed_flag(flags, "kv-blocks", "0");
+        if blocks == 0 {
+            usage_error("--kv-blocks must be non-zero");
+        }
+        blocks
+    });
 
-    let (engine, vocab, max_seq) = match backend {
+    // all replicas share one seed: a fleet serves replicas of one model
+    let mut engines = Vec::with_capacity(replicas);
+    let (vocab, max_seq) = match backend {
         "pjrt" => {
             let rt = Runtime::open(Runtime::default_dir())?;
-            let engine = Engine::pjrt(&rt, config, plan, seed)?;
+            for _ in 0..replicas {
+                engines.push(Engine::pjrt(&rt, config, plan, seed)?);
+            }
             let cfg = &rt.manifest.configs[config];
-            (engine, cfg.vocab, cfg.max_seq)
+            (cfg.vocab, cfg.max_seq)
         }
         "native" => {
             let cfg = ModelCfg::builtin(config)
@@ -311,64 +353,122 @@ fn serve(flags: &HashMap<String, String>) -> Result<()> {
             if slots == 0 {
                 usage_error("--slots must be non-zero");
             }
-            let engine = Engine::native_with(cfg.clone(), plan, seed, slots)?;
-            (engine, cfg.vocab, cfg.max_seq)
+            for _ in 0..replicas {
+                engines.push(Engine::native_with(cfg.clone(), plan, seed, slots)?);
+            }
+            (cfg.vocab, cfg.max_seq)
         }
         other => usage_error(&format!("unknown backend '{other}' (expected pjrt|native)")),
     };
     println!(
-        "backend '{}', plan '{plan}' → kernel {} ({})",
-        engine.backend_name(),
-        engine.kernel().name,
-        engine.kernel().summary
+        "backend '{}', plan '{plan}' → kernel {} ({}); {replicas} replica(s), '{}' routing",
+        engines[0].backend_name(),
+        engines[0].kernel().name,
+        engines[0].kernel().summary,
+        policy.name()
     );
-    let slots = engine.batch_slots();
 
     // block math: pjrt commits dense caches (block 16, legacy sizing);
     // native pages physically at PAGE_ROWS and takes --kv-blocks to
     // shrink the pool (exercises the preemption policy)
-    let kv = match backend {
-        "native" => {
-            let default_blocks = slots * max_seq.div_ceil(PAGE_ROWS);
-            let blocks: usize =
-                parsed_flag(flags, "kv-blocks", &default_blocks.to_string());
-            if blocks == 0 {
-                usage_error("--kv-blocks must be non-zero");
+    let kv_for = |engine: &Engine| -> KvCacheManager {
+        let slots = engine.batch_slots();
+        match backend {
+            "native" => {
+                let default_blocks = slots * max_seq.div_ceil(PAGE_ROWS);
+                KvCacheManager::new(kv_blocks.unwrap_or(default_blocks), PAGE_ROWS)
             }
-            KvCacheManager::new(blocks, PAGE_ROWS)
+            _ => KvCacheManager::new(slots * max_seq / 16, 16),
         }
-        _ => KvCacheManager::new(slots * max_seq / 16, 16),
     };
-    let mut gen = WorkloadGen::new(seed, vocab, 50.0, engine.prefill_sizes(), 24);
-    let mut sched = Scheduler::new(Batcher::new(BatchPolicy::Fifo), kv, engine);
+    let prefill_sizes = engines[0].prefill_sizes();
+    let mut reps: Vec<EngineReplica> = engines
+        .into_iter()
+        .enumerate()
+        .map(|(id, engine)| {
+            let kv = kv_for(&engine);
+            EngineReplica::new(id, Scheduler::new(Batcher::new(BatchPolicy::Fifo), kv, engine))
+        })
+        .collect();
+
+    let mut gen = WorkloadGen::new(seed, vocab, 50.0, prefill_sizes, 24);
+    let mut router = Router::new(policy, reps.len());
     for (i, r) in gen.generate(n_req).into_iter().enumerate() {
-        sched.submit(Request::new(
+        let req = Request::new(
             i as u64,
             r.prompt,
             GenParams { max_new_tokens: r.max_new_tokens, ..Default::default() },
-        ));
+        );
+        ensure!(router.route(&mut reps, &req).is_some(), "no replica accepted request {i}");
     }
-    let report = sched.run_to_completion()?;
+
+    // drive every replica on its own thread, as a real fleet would —
+    // ticking them round-robin on one thread would bill each request's
+    // wall-clock TTFT/TPOT for the other replicas' compute
+    let t0 = std::time::Instant::now();
+    let drive_errs: Vec<String> = std::thread::scope(|scope| {
+        let handles: Vec<_> = reps
+            .iter_mut()
+            .map(|rep| {
+                scope.spawn(move || -> std::result::Result<(), String> {
+                    while rep.sched.has_work() {
+                        rep.sched.tick().map_err(|e| format!("{e:#}"))?;
+                    }
+                    Ok(())
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .filter_map(|h| h.join().expect("replica thread panicked").err())
+            .collect()
+    });
+    ensure!(drive_errs.is_empty(), "replica error(s): {}", drive_errs.join("; "));
+    let wall = t0.elapsed().as_secs_f64();
+
+    let routed = router.routed.clone();
+    let (mut total_resp, mut total_tokens) = (0usize, 0u64);
+    let (mut total_preempt, mut total_requeued) = (0u64, 0u64);
+    let (mut fleet_ttft, mut fleet_tpot) = (LatencyStats::default(), LatencyStats::default());
+    let mut t =
+        Table::new(&["replica", "routed", "served", "tokens", "TTFT p50 ms", "TPOT p50 ms"]);
+    for EngineReplica { id, sched } in reps {
+        let rep = sched.into_report(wall);
+        total_resp += rep.responses.len();
+        total_tokens += rep.tokens_out;
+        total_preempt += rep.preemptions;
+        total_requeued += rep.requeued;
+        fleet_ttft.merge(&rep.ttft);
+        fleet_tpot.merge(&rep.tpot);
+        t.row(&[
+            id.to_string(),
+            routed[id].to_string(),
+            rep.responses.len().to_string(),
+            rep.tokens_out.to_string(),
+            format!("{:.1}", rep.ttft.percentile(50.0)),
+            format!("{:.1}", rep.tpot.percentile(50.0)),
+        ]);
+    }
+    t.print(&format!("serving report ({replicas} replica(s), '{}' routing)", policy.name()));
+    let tok_s = if wall > 0.0 { total_tokens as f64 / wall } else { 0.0 };
     println!(
-        "served {} requests, {} tokens in {:.2}s ({:.1} tok/s)",
-        report.responses.len(),
-        report.tokens_out,
-        report.wall_s,
-        report.throughput_tok_s()
+        "\nfleet: served {total_resp} requests, {total_tokens} tokens in {wall:.2}s \
+         ({tok_s:.1} tok/s)"
     );
     println!(
         "TTFT p50/p99: {:.1}/{:.1} ms   TPOT p50/p99: {:.1}/{:.1} ms",
-        report.ttft.percentile(50.0),
-        report.ttft.percentile(99.0),
-        report.tpot.percentile(50.0),
-        report.tpot.percentile(99.0)
+        fleet_ttft.percentile(50.0),
+        fleet_ttft.percentile(99.0),
+        fleet_tpot.percentile(50.0),
+        fleet_tpot.percentile(99.0)
     );
-    if report.preemptions > 0 || report.requeued > 0 {
+    if total_preempt > 0 || total_requeued > 0 {
         println!(
-            "preemptions: {} (recompute-on-resume)   requeued admissions: {}",
-            report.preemptions, report.requeued
+            "preemptions: {total_preempt} (recompute-on-resume)   \
+             requeued admissions: {total_requeued}"
         );
     }
+    ensure!(total_resp == n_req, "fleet served {total_resp} of {n_req} routed requests");
     Ok(())
 }
 
@@ -466,34 +566,60 @@ fn speed(flags: &HashMap<String, String>) -> Result<()> {
 }
 
 /// List the attention kernel registry (the `core.py:sageattn` dispatch
-/// table, as data).
+/// table, as data) plus the detected ISA microkernel dispatch.
 fn kernels_cmd() -> Result<()> {
-    let mut t = Table::new(&["name", "impl", "prepared-kv", "summary"]);
+    let caps = isa::cpu::caps();
+    let act = isa::cpu::active();
+    let override_note = match act.requested {
+        None => "none".to_string(),
+        Some(req) if req == act.level => format!("SAGE_ISA={}", req.name()),
+        Some(req) => {
+            format!("SAGE_ISA={} (unsupported on this host, falling back to scalar)", req.name())
+        }
+    };
+    println!(
+        "cpu ISA: active {} (detected best {}, f16c {}; override: {override_note})\n",
+        act.level.name(),
+        caps.best.name(),
+        if isa::cpu::f16c_enabled() { "on" } else { "off" }
+    );
+    let mut t = Table::new(&["name", "impl", "prepared-kv", "microkernel", "summary"]);
     for e in registry::entries() {
         let prep = registry::supports(
             &e.imp,
             &registry::KernelReq { prepared: true, ..Default::default() },
         );
+        // the INT8 microkernel tier this row's inner loops dispatch to;
+        // the fp32/fp8 references have no INT8 hot loop
+        let micro = match e.imp {
+            AttnImpl::Sage { .. } => act.level.name(),
+            _ => "-",
+        };
         t.row(&[
             e.name.to_string(),
             e.imp.name(),
             (if prep { "yes" } else { "no" }).to_string(),
+            micro.to_string(),
             e.summary.to_string(),
         ]);
     }
     t.print("registered attention kernels (auto-dispatch priority order)");
     println!("\nparameterized forms also resolve, e.g. 'SageAttn-B64' or 'fp8(E4M3,E5M2)'");
+    println!("SAGE_ISA=scalar|avx2|vnni|neon forces a microkernel tier (bit-identical output)");
     Ok(())
 }
 
-/// Before/after GFLOPS on the sage_plane hot path, in two parts:
+/// Before/after GFLOPS on the sage_plane hot path, in four lanes:
 /// (1) the blocked, scratch-reusing kernel vs the unblocked row-at-a-time
-/// reference, and (2) the PreparedKV decode lane — per-token cost of
+/// reference; (2) the PreparedKV decode lane — per-token cost of
 /// decoding against an N-long prefix with quantize-once state vs a full
 /// `sage_plane` call (which re-runs smooth-K + INT8 quantization of the
-/// whole prefix) per token. With --check FILE the measured speedups are
-/// asserted against the checked-in floors (CI regression gate); --update
-/// FILE rewrites the baseline with the measured numbers.
+/// whole prefix) per token; (3) the serve-decode lane (the same claim at
+/// engine granularity); (4) the dot-i8 microkernel lane — the hardware's
+/// best `attn::isa` SIMD tier vs forced scalar. With --check FILE the
+/// measured speedups are asserted against the checked-in floors (CI
+/// regression gate); --update FILE rewrites the baseline with the
+/// measured numbers.
 fn bench_hotpath(flags: &HashMap<String, String>) -> Result<()> {
     let n: usize = parsed_flag(flags, "seq", "4096");
     let d: usize = parsed_flag(flags, "headdim", "128");
@@ -678,6 +804,62 @@ fn bench_hotpath(flags: &HashMap<String, String>) -> Result<()> {
     );
     println!("acceptance bar: >= 2.00x at max_seq 2048");
 
+    // ---- dot-i8 microkernel lane: the §4.3 mma(s8.s8.s32) primitive,
+    //      hardware SIMD tier vs forced scalar (GB/s of operand bytes;
+    //      2 bytes per MAC). Measures the hardware's best tier directly
+    //      (independent of any SAGE_ISA override), one query row
+    //      streamed against a resident K plane ----
+    let hw_best = isa::cpu::caps().best;
+    let mut tiers = vec![isa::for_level(IsaLevel::Scalar).expect("scalar table")];
+    if hw_best != IsaLevel::Scalar {
+        tiers.push(isa::for_level(hw_best).expect("detected tier table"));
+    }
+    let dot_rows = 4096usize;
+    let mut dot_ratio = None;
+    let mut rng = Pcg32::seeded(77);
+    let mut td8 = Table::new(&["d", "tier", "GB/s", "iters"]);
+    for dd in [64usize, 128] {
+        let mut qrow = vec![0i8; dd];
+        let mut kplane = vec![0i8; dot_rows * dd];
+        for x in qrow.iter_mut().chain(kplane.iter_mut()) {
+            *x = (rng.next_u32() & 0xFF) as u8 as i8;
+        }
+        let bytes = (dot_rows * dd * 2) as f64;
+        let mut gbps = Vec::with_capacity(tiers.len());
+        for kern in &tiers {
+            let s = bench_budget(
+                &format!("dot-i8 d={dd} {}", kern.level.name()),
+                budget / 4,
+                10,
+                || {
+                    let mut acc = 0i64;
+                    for r in 0..dot_rows {
+                        acc += (kern.dot_i8)(&qrow, &kplane[r * dd..(r + 1) * dd]) as i64;
+                    }
+                    std::hint::black_box(acc);
+                },
+            );
+            gbps.push(bytes / s.median_s() / 1e9);
+            td8.row(&[
+                dd.to_string(),
+                kern.level.name().to_string(),
+                f2(*gbps.last().unwrap()),
+                s.iters.to_string(),
+            ]);
+        }
+        if dd == 128 && gbps.len() == 2 {
+            dot_ratio = Some(gbps[1] / gbps[0]);
+        }
+    }
+    td8.print("dot-i8 microkernel lane (SIMD vs forced scalar)");
+    match dot_ratio {
+        Some(r) => {
+            println!("\ndot-i8 speedup: {r:.2}x ({} vs scalar, d=128)", hw_best.name());
+            println!("acceptance bar: >= 2.00x at d=128 on an AVX2-capable host");
+        }
+        None => println!("\ndot-i8 lane: no SIMD tier on this host (scalar only)"),
+    }
+
     // ---- tab09 kernel-accuracy lane (persisted alongside the ratio
     //      floors): same setup as benches/tab09_kernel_accuracy.rs ----
     let acc_measured = tab09_accuracy();
@@ -699,11 +881,14 @@ fn bench_hotpath(flags: &HashMap<String, String>) -> Result<()> {
         ("serve_requant", 1.0 / s_srv_requant.median_s()),
         ("serve_prepared", 1.0 / s_srv_prep.median_s()),
     ];
-    let ratios: Vec<(&str, f64)> = vec![
+    let mut ratios: Vec<(&str, f64)> = vec![
         ("blocked_over_naive", speedup),
         ("prepared_decode_speedup", dec_speedup),
         ("serve_decode_speedup", serve_speedup),
     ];
+    if let Some(r) = dot_ratio {
+        ratios.push(("dot_i8_simd_over_scalar", r));
+    }
 
     if let Some(path) = flags.get("check") {
         check_baseline(path, &gflops_measured, &decode_tok_s, &ratios, &acc_measured)?;
@@ -794,6 +979,12 @@ fn check_baseline(
     for (name, floor) in floors {
         let floor = floor.as_f64().with_context(|| format!("floor '{name}' not a number"))?;
         let Some(&(_, got)) = ratios.iter().find(|(r, _)| *r == name.as_str()) else {
+            // the dot-i8 lane only produces a ratio when the host has a
+            // SIMD tier at all; a scalar-only host skips that floor
+            if name == "dot_i8_simd_over_scalar" {
+                println!("  SKIP {name}: no SIMD tier on this host");
+                continue;
+            }
             sageattention::bail!("baseline floor '{name}' is not a measured ratio");
         };
         let ok = got >= floor;
@@ -872,6 +1063,7 @@ fn update_baseline(
                 ("blocked_over_naive", Json::num(1.5)),
                 ("prepared_decode_speedup", Json::num(3.0)),
                 ("serve_decode_speedup", Json::num(2.0)),
+                ("dot_i8_simd_over_scalar", Json::num(2.0)),
             ])
         });
     let acc_floors = existing

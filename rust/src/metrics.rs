@@ -125,6 +125,13 @@ impl LatencyStats {
         self.samples_us.push(dur.as_micros() as u64);
     }
 
+    /// Fold another sink's samples into this one (fleet-level aggregation
+    /// across serving replicas — percentiles of the merged set are exact,
+    /// unlike averaging per-replica percentiles).
+    pub fn merge(&mut self, other: &LatencyStats) {
+        self.samples_us.extend_from_slice(&other.samples_us);
+    }
+
     pub fn len(&self) -> usize {
         self.samples_us.len()
     }

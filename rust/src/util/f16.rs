@@ -111,11 +111,16 @@ pub fn round_f16(x: f32) -> f32 {
 /// conversion instructions (8 lanes per op) when available — the software
 /// fallback is bit-identical (§Perf: the fp16-accumulator simulation is
 /// the native sage kernel's hot spot).
+///
+/// Feature detection goes through the shared
+/// [`crate::attn::isa::cpu`] capability cache (the crate's single
+/// detection surface), so `SAGE_ISA=scalar` forces this portable path
+/// along with every other scalar microkernel.
 pub fn round_f16_slice(xs: &mut [f32]) {
     #[cfg(target_arch = "x86_64")]
     {
-        if std::arch::is_x86_feature_detected!("f16c") {
-            // SAFETY: feature checked above.
+        if crate::attn::isa::cpu::f16c_enabled() {
+            // SAFETY: `f16c_enabled` requires the detected F16C bit.
             unsafe { round_f16_slice_f16c(xs) };
             return;
         }

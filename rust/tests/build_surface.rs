@@ -5,6 +5,7 @@
 //! cheap paths break it at run time.
 
 use sageattention::adaptive::{Plan, COS_THRESHOLD};
+use sageattention::attn::isa::{self, ActiveIsa, CpuCaps, IsaLevel, Kernels};
 use sageattention::attn::{
     attention_dtype_sim, exact_plane, online_plane, online_plane_with, registry, sage_plane,
     sage_plane_naive, sage_plane_opt, sage_plane_with, AttnImpl, AttnSpec, Fmt, Layout,
@@ -67,6 +68,29 @@ fn attn_impl_variants_construct_and_run() {
     }
     assert!(AttnImpl::by_name("no-such-kernel").is_none());
     assert!(BLOCK_Q >= BLOCK_KV && MAX_HEAD_DIM >= 128);
+}
+
+/// The `attn::isa` surface: capability cache, level names, dispatch
+/// tables and the dispatched dot primitive stay exported and coherent.
+#[test]
+fn attn_isa_surface() {
+    let caps: &CpuCaps = isa::cpu::caps();
+    let act: &ActiveIsa = isa::cpu::active();
+    assert!(isa::cpu::supported(act.level));
+    for level in IsaLevel::ALL {
+        assert_eq!(IsaLevel::from_name(level.name()), Some(level));
+        if let Some(table) = isa::for_level(level) {
+            assert_eq!(table.level, level);
+        }
+    }
+    let active_table: &Kernels = isa::kernels();
+    assert_eq!(active_table.level, act.level);
+    // the dispatched dot is the active table's dot, and matches scalar
+    let a: Vec<i8> = (0..100).map(|i| (i * 7 % 255 - 127) as i8).collect();
+    let b: Vec<i8> = (0..100).map(|i| (i * 13 % 255 - 127) as i8).collect();
+    let scalar = isa::for_level(IsaLevel::Scalar).expect("scalar is unconditional");
+    assert_eq!(isa::dot_i8(&a, &b), (scalar.dot_i8)(&a, &b));
+    assert!(caps.best == act.level || act.requested.is_some());
 }
 
 /// The `attn::api` surface: spec builder, layouts, registry and

@@ -1,0 +1,242 @@
+//! Differential fuzz of the `attn::isa` microkernel tiers against the
+//! scalar reference, plus the `SAGE_ISA` override round-trip through the
+//! `sage` binary.
+//!
+//! The bit-identity contract is hard equality: every compiled tier must
+//! return the scalar tier's exact bits across odd lengths, unaligned
+//! slices and remainder tails (lengths not a multiple of any vector
+//! width). The INT8 kernels accumulate in i32, so this is not a
+//! tolerance check — one differing bit is a bug.
+
+use std::process::Command;
+
+use sageattention::attn::isa::{self, IsaLevel, Kernels};
+use sageattention::util::rng::Pcg32;
+
+fn rand_i8(rng: &mut Pcg32, n: usize) -> Vec<i8> {
+    (0..n).map(|_| (rng.next_u32() & 0xFF) as u8 as i8).collect()
+}
+
+/// Every tier this host can execute beyond scalar.
+fn simd_tiers() -> Vec<&'static Kernels> {
+    IsaLevel::ALL
+        .iter()
+        .filter(|&&l| l != IsaLevel::Scalar)
+        .filter_map(|&l| isa::for_level(l))
+        .collect()
+}
+
+const ODD_LENGTHS: &[usize] = &[
+    0, 1, 2, 3, 5, 7, 8, 9, 15, 16, 17, 23, 31, 32, 33, 47, 63, 64, 65, 95, 96, 97, 127, 128,
+    129, 191, 255, 256, 257, 320,
+];
+
+#[test]
+fn dot_i8_all_tiers_bit_identical_with_unaligned_tails() {
+    let scalar = isa::for_level(IsaLevel::Scalar).unwrap();
+    let mut rng = Pcg32::seeded(2024);
+    for kern in simd_tiers() {
+        for &n in ODD_LENGTHS {
+            // over-allocate so sub-slices at offsets 0..4 stay in bounds:
+            // unaligned starts must not change the result (all loads are
+            // unaligned-safe) or read out of bounds (tails are scalar)
+            let a = rand_i8(&mut rng, n + 4);
+            let b = rand_i8(&mut rng, n + 4);
+            for off in 0..4 {
+                let (aa, bb) = (&a[off..off + n], &b[off..off + n]);
+                assert_eq!(
+                    (kern.dot_i8)(aa, bb),
+                    (scalar.dot_i8)(aa, bb),
+                    "{} dot len {n} offset {off}",
+                    kern.level.name()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn dot_i8_saturated_extremes_are_exact() {
+    // ±128/±127 everywhere: the widening/bias paths must not saturate
+    let scalar = isa::for_level(IsaLevel::Scalar).unwrap();
+    for kern in simd_tiers() {
+        for &n in &[1usize, 63, 64, 65, 128, 320] {
+            for (x, y) in [(-128i8, 127i8), (127, 127), (-128, -128), (127, -128)] {
+                let a = vec![x; n];
+                let b = vec![y; n];
+                assert_eq!(
+                    (kern.dot_i8)(&a, &b),
+                    (scalar.dot_i8)(&a, &b),
+                    "{} extremes ({x},{y}) len {n}",
+                    kern.level.name()
+                );
+                assert_eq!((scalar.dot_i8)(&a, &b), n as i32 * x as i32 * y as i32);
+            }
+        }
+    }
+}
+
+#[test]
+fn qk_tile_i8_all_tiers_bit_identical() {
+    let scalar = isa::for_level(IsaLevel::Scalar).unwrap();
+    let mut rng = Pcg32::seeded(31337);
+    // shapes crossing the 4-row unroll, the vector widths, and odd d
+    let shapes: &[(usize, usize, usize)] = &[
+        (1, 1, 1),
+        (1, 64, 128),
+        (2, 3, 5),
+        (3, 7, 17),
+        (4, 4, 64),
+        (5, 64, 63),
+        (7, 5, 65),
+        (8, 64, 128),
+        (9, 2, 96),
+        (128, 64, 64),
+        (2, 2, 320),
+    ];
+    for kern in simd_tiers() {
+        for &(bq, bk, d) in shapes {
+            let q = rand_i8(&mut rng, bq * d + 3);
+            let k = rand_i8(&mut rng, bk * d + 3);
+            for off in [0usize, 3] {
+                let qs = &q[off..off + bq * d];
+                let ks = &k[off..off + bk * d];
+                // a stride wider than bk exercises the row addressing
+                let stride = bk + 5;
+                let mut want = vec![i32::MIN; bq * stride];
+                let mut got = vec![i32::MIN; bq * stride];
+                (scalar.qk_tile_i8)(qs, ks, d, bq, bk, &mut want, stride);
+                (kern.qk_tile_i8)(qs, ks, d, bq, bk, &mut got, stride);
+                assert_eq!(
+                    got,
+                    want,
+                    "{} tile bq={bq} bk={bk} d={d} offset {off}",
+                    kern.level.name()
+                );
+                // the gap columns between stride rows stay untouched
+                for r in 0..bq {
+                    assert!(
+                        got[r * stride + bk..(r + 1) * stride].iter().all(|&x| x == i32::MIN),
+                        "tile wrote past bk into the stride gap (row {r})"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn pv_accum_and_f32_lanes_all_tiers_bit_identical() {
+    let scalar = isa::for_level(IsaLevel::Scalar).unwrap();
+    let mut rng = Pcg32::seeded(55);
+    for kern in simd_tiers() {
+        for &n in ODD_LENGTHS {
+            let v = rand_i8(&mut rng, n);
+            let base: Vec<i32> = (0..n).map(|i| (i as i32) * 977 - 40_000).collect();
+            for p in [-127i32, -1, 1, 3, 127] {
+                let mut want = base.clone();
+                let mut got = base.clone();
+                (scalar.pv_accum_i8)(&mut want, &v, p);
+                (kern.pv_accum_i8)(&mut got, &v, p);
+                assert_eq!(got, want, "{} pv_accum n={n} p={p}", kern.level.name());
+            }
+
+            let x: Vec<f32> = (0..n).map(|_| rng.normal() * 3.0).collect();
+            let fbase: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+            for a in [0.0f32, -0.0, 1.0, -2.5e-4, 17.25, f32::MIN_POSITIVE] {
+                let mut want = fbase.clone();
+                let mut got = fbase.clone();
+                (scalar.axpy_f32)(&mut want, &x, a);
+                (kern.axpy_f32)(&mut got, &x, a);
+                let wb: Vec<u32> = want.iter().map(|f| f.to_bits()).collect();
+                let gb: Vec<u32> = got.iter().map(|f| f.to_bits()).collect();
+                assert_eq!(gb, wb, "{} axpy n={n} a={a}", kern.level.name());
+
+                (scalar.scale_f32)(&mut want, a);
+                (kern.scale_f32)(&mut got, a);
+                let wb: Vec<u32> = want.iter().map(|f| f.to_bits()).collect();
+                let gb: Vec<u32> = got.iter().map(|f| f.to_bits()).collect();
+                assert_eq!(gb, wb, "{} scale n={n} a={a}", kern.level.name());
+            }
+        }
+    }
+}
+
+#[test]
+fn qk_tile_agrees_with_dot_per_pair() {
+    // the tile kernel is definitionally a batched dot: pin the scalar
+    // tile to the scalar dot so the differential tests above anchor to
+    // the same reference the plane kernels used before the tile rewrite
+    let scalar = isa::for_level(IsaLevel::Scalar).unwrap();
+    let mut rng = Pcg32::seeded(7);
+    let (bq, bk, d) = (6, 9, 67);
+    let q = rand_i8(&mut rng, bq * d);
+    let k = rand_i8(&mut rng, bk * d);
+    let mut tile = vec![0i32; bq * bk];
+    (scalar.qk_tile_i8)(&q, &k, d, bq, bk, &mut tile, bk);
+    for r in 0..bq {
+        for c in 0..bk {
+            let want = (scalar.dot_i8)(&q[r * d..(r + 1) * d], &k[c * d..(c + 1) * d]);
+            assert_eq!(tile[r * bk + c], want, "tile ({r},{c})");
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// SAGE_ISA override round-trip (through the sage binary: the override is
+// read once per process, so each case gets a fresh process)
+// ---------------------------------------------------------------------------
+
+fn sage_kernels_with(isa_env: Option<&str>) -> (bool, String, String) {
+    let mut cmd = Command::new(env!("CARGO_BIN_EXE_sage"));
+    cmd.arg("kernels");
+    match isa_env {
+        Some(v) => cmd.env("SAGE_ISA", v),
+        None => cmd.env_remove("SAGE_ISA"),
+    };
+    let out = cmd.output().expect("spawn sage kernels");
+    (
+        out.status.success(),
+        String::from_utf8_lossy(&out.stdout).into_owned(),
+        String::from_utf8_lossy(&out.stderr).into_owned(),
+    )
+}
+
+#[test]
+fn sage_isa_override_round_trips_through_the_cli() {
+    // no override: active == detected best, report says so
+    let (ok, stdout, _) = sage_kernels_with(None);
+    assert!(ok, "sage kernels failed");
+    let best = isa::cpu::caps().best;
+    assert!(
+        stdout.contains(&format!("detected best {}", best.name())),
+        "missing detection report: {stdout}"
+    );
+    assert!(stdout.contains("override: none"), "expected no override: {stdout}");
+
+    // every level round-trips: honored when supported, scalar otherwise
+    for level in IsaLevel::ALL {
+        let (ok, stdout, _) = sage_kernels_with(Some(level.name()));
+        assert!(ok, "sage kernels SAGE_ISA={} failed", level.name());
+        assert!(
+            stdout.contains(&format!("SAGE_ISA={}", level.name())),
+            "override not reported for {}: {stdout}",
+            level.name()
+        );
+        let expect_active =
+            if isa::cpu::supported(level) { level } else { IsaLevel::Scalar };
+        assert!(
+            stdout.contains(&format!("cpu ISA: active {}", expect_active.name())),
+            "SAGE_ISA={} should activate {}: {stdout}",
+            level.name(),
+            expect_active.name()
+        );
+    }
+}
+
+#[test]
+fn invalid_sage_isa_fails_loudly() {
+    let (ok, _, stderr) = sage_kernels_with(Some("avx9000"));
+    assert!(!ok, "an invalid SAGE_ISA value must not silently run");
+    assert!(stderr.contains("SAGE_ISA"), "error should name the variable: {stderr}");
+}
