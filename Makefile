@@ -3,13 +3,16 @@
 #   make verify          tier-1 (release build + tests) plus the format gate,
 #                        a second test pass with SAGE_ISA=scalar (keeps the
 #                        portable microkernel fallback covered even on SIMD
-#                        hosts), the native-backend serve smoke (end-to-end
-#                        decode with zero PJRT; fails on panic/nonzero
-#                        exit), and the bench-hotpath no-regression check
-#                        against the checked-in bench_baseline.json
-#                        (speedup floors: blocked-vs-naive, PreparedKV
-#                        decode, serve-decode, dot-i8 SIMD-vs-scalar;
-#                        tab09 kernel-accuracy cosine floors)
+#                        hosts), the native-backend serve smokes (end-to-end
+#                        decode with zero PJRT, plus the shared-prefix
+#                        workload through the radix prefix cache; fails on
+#                        panic/nonzero exit), and the bench-hotpath
+#                        no-regression check against the checked-in
+#                        bench_baseline.json (speedup floors:
+#                        blocked-vs-naive, PreparedKV decode, serve-decode,
+#                        dot-i8 SIMD-vs-scalar, shared-prefix
+#                        prefill-tokens-saved; tab09 kernel-accuracy
+#                        cosine floors)
 #   make build           release build only
 #   make test            test suite only
 #   make fmt             rewrite sources with rustfmt
@@ -23,6 +26,7 @@ verify:
 	cargo build --release && cargo test -q && cargo fmt --check
 	SAGE_ISA=scalar cargo test -q
 	./target/release/sage serve --backend native --requests 8
+	./target/release/sage serve --backend native --requests 8 --prefix-cache --workload shared
 	./target/release/sage bench-hotpath --secs 1 --check bench_baseline.json
 
 build:

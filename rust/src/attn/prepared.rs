@@ -459,6 +459,45 @@ impl PagedSegment {
         rows.div_ceil(PAGE_ROWS)
     }
 
+    /// A copy of this segment truncated to its first `rows` rows — the
+    /// metadata half of forking a sequence for prefix sharing (the rows
+    /// themselves stay in shared pages resolved through block tables, so
+    /// only this O(d) state is cloned). `rows` must equal the resident
+    /// count or cut on a page boundary: page-local quantization plus the
+    /// frozen smooth-K anchor make such a truncated view bit-identical
+    /// to a one-shot build of the same rows.
+    pub fn fork_prefix(&self, rows: usize) -> Result<PagedSegment> {
+        crate::ensure!(
+            rows <= self.n,
+            "prefix fork of {rows} rows but only {} resident",
+            self.n
+        );
+        crate::ensure!(
+            rows == self.n || rows % PAGE_ROWS == 0,
+            "prefix fork must cut on a page boundary, got {rows} rows"
+        );
+        Ok(PagedSegment {
+            imp: self.imp,
+            d: self.d,
+            n: rows,
+            kmean: self.kmean.clone(),
+            anchor_rows: self.anchor_rows.min(rows),
+        })
+    }
+
+    /// First row index an append starting at row `n` may rewrite: the
+    /// start of the trailing partial K scale group. Block-granular K
+    /// scales can span pages (`BLOCK_Q` > [`PAGE_ROWS`]), so a
+    /// copy-on-write barrier must cover every block from this row on —
+    /// all other per-row state (raw rows, per-token K scales, V in
+    /// either mode) is page-local to the appended rows themselves.
+    pub fn mutation_horizon(&self, n: usize) -> usize {
+        match self.imp {
+            AttnImpl::Sage { qk: Granularity::PerBlock(b), .. } => n - n % b,
+            _ => n,
+        }
+    }
+
     /// Append new K/V rows (row-major, `rows × d` each) into `pages`,
     /// requantizing only the bounded suffix they can affect. `pages`
     /// must be the segment's pages in block-table order with capacity

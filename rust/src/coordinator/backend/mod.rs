@@ -105,6 +105,25 @@ pub trait EngineBackend: Send {
     fn step(&mut self, kv: &mut KvCacheManager) -> Result<StepOutcome>;
 
     fn stats(&self) -> &EngineStats;
+
+    /// Prefill tokens of `req` servable from shared cached state (see
+    /// [`crate::coordinator::batcher::AdmitGate::prefix_credit`]).
+    fn prefix_credit(&self, _req: &Request) -> usize {
+        0
+    }
+
+    /// Free reclaimable blocks until `kv` has at least `need` free (see
+    /// [`crate::coordinator::batcher::AdmitGate::reclaim_blocks`]).
+    fn reclaim_blocks(&mut self, _kv: &mut KvCacheManager, _need: usize) -> Result<bool> {
+        Ok(false)
+    }
+
+    /// Sequences resident in `kv` that belong to the backend's caches
+    /// rather than live requests — the scheduler's stall detector must
+    /// not mistake them for forgotten work.
+    fn cached_sequences(&self) -> usize {
+        0
+    }
 }
 
 #[derive(Clone, Debug, Default)]
@@ -118,6 +137,16 @@ pub struct EngineStats {
     pub occupancy_sum: f64,
     /// requests preempted for KV blocks (native backend)
     pub preemptions: u64,
+    /// prefix-cache lookups at prefill (native backend, `--prefix-cache`)
+    pub prefix_lookups: u64,
+    /// prefix-cache hits (prefill served partly from cached pages)
+    pub prefix_hits: u64,
+    /// prefill rows forked from cached pages instead of recomputed
+    pub prefill_tokens_saved: u64,
+    /// cached prefixes LRU-evicted under pool pressure
+    pub cache_evictions: u64,
+    /// blocks copied by the copy-on-write barrier
+    pub cow_copies: u64,
 }
 
 impl EngineStats {

@@ -27,6 +27,7 @@ use crate::attn::{
     exact_plane_opt, fp8_plane_opt, online_plane_opt, registry, sage_plane_opt, AttnImpl,
     PlaneOpts, Scratch, PAGE_ROWS,
 };
+use crate::quant::Granularity;
 use crate::runtime::{ModelCfg, Value};
 use crate::tensor::{default_threads, parallel_map};
 use crate::util::error::{bail, ensure, Context, Result};
@@ -34,6 +35,7 @@ use crate::util::rng::Pcg32;
 
 use super::super::kv_cache::{AllocError, BlockId, KvCacheManager};
 use super::super::paged_kv::PagedKvStore;
+use super::super::prefix_cache::PrefixCache;
 use super::super::request::{Request, RequestId, ResumeState};
 use super::{advance_slot, sample, EngineBackend, EngineStats, ReserveMode, Slot, StepOutcome};
 
@@ -58,6 +60,8 @@ pub struct NativeEngine {
     decode_mode: DecodeMode,
     params: Vec<Value>,
     paged: PagedKvStore,
+    /// Radix prefix cache (`--prefix-cache`; None = disabled).
+    cache: Option<PrefixCache>,
     slots: Vec<Option<Slot>>,
     batch: usize,
     inv_freq: Vec<f32>,
@@ -113,6 +117,7 @@ impl NativeEngine {
             decode_mode,
             params,
             paged,
+            cache: None,
             slots: (0..slots).map(|_| None).collect(),
             batch: slots,
             inv_freq,
@@ -128,6 +133,91 @@ impl NativeEngine {
     /// The physical paged store (telemetry / tests).
     pub fn paged_store(&self) -> &PagedKvStore {
         &self.paged
+    }
+
+    /// Switch on the radix prefix cache (`sage serve --prefix-cache`).
+    ///
+    /// The cache chunk is [`PAGE_ROWS`]-aligned (pages are
+    /// quantization-self-contained only as wholes) and additionally
+    /// coarsened to the plan's Q scale-group size: block-granular Q
+    /// scales (`BLOCK_Q` rows per group, spanning two pages) are formed
+    /// relative to each forward call's chunk, so a suffix prefill is
+    /// bit-identical to an unshared run only when the cached prefix
+    /// ends on a Q-group boundary.
+    pub fn enable_prefix_cache(&mut self) {
+        let chunk = match self.imp {
+            AttnImpl::Sage { qk: Granularity::PerBlock(g), .. } => {
+                let mut c = PAGE_ROWS;
+                while c % g != 0 {
+                    c += PAGE_ROWS;
+                }
+                c
+            }
+            _ => PAGE_ROWS,
+        };
+        self.cache = Some(PrefixCache::new(chunk));
+    }
+
+    pub fn prefix_cache_enabled(&self) -> bool {
+        self.cache.is_some()
+    }
+
+    /// Fork a live request into a new id occupying a free slot —
+    /// parallel-sampling-style fan-out. The forked sequence shares
+    /// every KV block with its source under the accountant's refcounts
+    /// (zero copies); the first decode append on either side hits the
+    /// copy-on-write barrier ([`PagedKvStore::prepare_append`]) and
+    /// copies the shared tail block(s) then. Returns false when no
+    /// decode slot is free.
+    pub fn fork_request(
+        &mut self,
+        src: RequestId,
+        dst: RequestId,
+        kv: &mut KvCacheManager,
+    ) -> Result<bool> {
+        let Some(slot_idx) = self.slots.iter().position(Option::is_none) else {
+            return Ok(false);
+        };
+        ensure!(
+            kv.seq_tokens(dst).is_none() && !self.paged.is_registered(dst),
+            "destination id {dst} already in use"
+        );
+        let src_slot = self
+            .slots
+            .iter()
+            .flatten()
+            .find(|s| s.id == src)
+            .with_context(|| format!("request {src} not live in any slot"))?;
+        let new_slot = Slot {
+            id: dst,
+            prompt: src_slot.prompt.clone(),
+            pos: src_slot.pos,
+            next_token: src_slot.next_token,
+            generated: src_slot.generated.clone(),
+            params: src_slot.params,
+            arrival: src_slot.arrival,
+            first_token_at: src_slot.first_token_at,
+            rng: src_slot.rng.clone(),
+        };
+        ensure!(kv.fork(src, dst).is_ok(), "request {src} unknown to the accountant");
+        if let Err(e) = self.paged.fork(src, dst) {
+            let _ = kv.release(dst);
+            return Err(e);
+        }
+        self.slots[slot_idx] = Some(new_slot);
+        Ok(true)
+    }
+
+    /// Evict one LRU cached prefix — the OutOfBlocks relief valve,
+    /// tried before preempting live work.
+    fn evict_one(&mut self, kv: &mut KvCacheManager) -> Result<bool> {
+        let Some(cache) = self.cache.as_mut() else {
+            return Ok(false);
+        };
+        let evicted =
+            cache.evict_lru(kv, &mut self.paged).context("prefix-cache eviction failed")?;
+        self.stats.cache_evictions = cache.stats.evictions;
+        Ok(evicted)
     }
 
     /// Longest-tail preemption victim: the live slot with the most
@@ -155,11 +245,9 @@ impl NativeEngine {
     /// return the recompute-on-resume request for the scheduler's queue.
     fn preempt_slot(&mut self, idx: usize, kv: &mut KvCacheManager) -> Result<Request> {
         let s = self.slots[idx].take().context("preempting an empty slot")?;
-        let table: Vec<BlockId> = kv
-            .seq_blocks(s.id)
-            .with_context(|| format!("victim {} unknown to the accountant", s.id))?
-            .to_vec();
-        self.paged.release(s.id, &table)?;
+        // physical before logical: the rc-aware release reads the table
+        // and drops only payloads this release takes to rc 0
+        self.paged.release(s.id, kv)?;
         if kv.release(s.id).is_err() {
             bail!("logical release failed for preempted request {}", s.id);
         }
@@ -257,17 +345,82 @@ impl EngineBackend for NativeEngine {
             bail!("request would overflow the context window");
         }
         let toks = req.prefill_tokens();
-        // the batcher reserves exactly the prefill rows up front
-        // (incremental mode); anything else is an accounting bug
+        // the batcher reserves at most the prefill rows up front
+        // (incremental mode; the prefix-credit gate may have shrunk the
+        // reservation to the unshared suffix) — more is an accounting bug
+        let reserved = kv
+            .seq_tokens(req.id)
+            .with_context(|| format!("request {} has no KV reservation", req.id))?;
         ensure!(
-            kv.seq_tokens(req.id) == Some(toks.len()),
-            "request {} reserved {:?} tokens but prefill needs {}",
+            reserved <= toks.len(),
+            "request {} reserved {reserved} tokens but prefill needs only {}",
             req.id,
-            kv.seq_tokens(req.id),
             toks.len()
         );
+
+        let hit = match self.cache.as_mut() {
+            Some(c) => {
+                self.stats.prefix_lookups += 1;
+                c.lookup(&toks)
+            }
+            None => None,
+        };
+        let prefix_len = match hit {
+            Some((cseq, hlen)) => {
+                // swap the batcher's reservation for a fork of the cached
+                // prefix, then grow the logical table to the full prompt
+                ensure!(
+                    kv.release(req.id).is_ok(),
+                    "cannot release reservation of request {}",
+                    req.id
+                );
+                ensure!(
+                    kv.fork_prefix(cseq, req.id, hlen).is_ok(),
+                    "cannot fork {hlen} cached tokens of sequence {cseq}"
+                );
+                if kv.extend(req.id, toks.len() - hlen).is_err() {
+                    // stale admission credit (the cache shrank since the
+                    // batcher sized the reservation): bounce — the caller
+                    // releases the logical fork and requeues
+                    return Ok(false);
+                }
+                self.paged.fork_prefix(cseq, req.id, hlen)?;
+                self.stats.prefix_hits += 1;
+                self.stats.prefill_tokens_saved += hlen as u64;
+                hlen
+            }
+            None => {
+                if reserved < toks.len()
+                    && kv.extend(req.id, toks.len() - reserved).is_err()
+                {
+                    return Ok(false); // stale credit, no hit to back it
+                }
+                self.paged.register(req.id)?;
+                0
+            }
+        };
+
+        // copy-on-write barrier: blocks the suffix append will touch may
+        // be shared with the cache (or still carry a stale-credit fork)
+        loop {
+            match self.paged.prepare_append(req.id, kv, toks.len() - prefix_len) {
+                Ok(copied) => {
+                    self.stats.cow_copies += copied as u64;
+                    break;
+                }
+                Err(AllocError::OutOfBlocks) => {
+                    if self.evict_one(kv)? {
+                        continue;
+                    }
+                    // pool exhausted and nothing evictable: bounce
+                    let _ = self.paged.release(req.id, kv);
+                    return Ok(false);
+                }
+                Err(e) => bail!("CoW barrier failed for request {}: {e:?}", req.id),
+            }
+        }
+        // fetch the table only now — CoW may have swapped entries
         let table: Vec<BlockId> = kv.seq_blocks(req.id).unwrap().to_vec();
-        self.paged.register(req.id)?;
 
         let t0 = Instant::now();
         let logits = match forward_rows(
@@ -280,18 +433,21 @@ impl EngineBackend for NativeEngine {
             &mut self.scratch,
             req.id,
             &table,
-            &toks,
-            0,
+            &toks[prefix_len..],
+            prefix_len,
         ) {
             Ok(l) => l,
             Err(e) => {
                 // leave no physical residue behind a failed admission
-                let _ = self.paged.release(req.id, &table);
+                let _ = self.paged.release(req.id, kv);
                 return Err(e);
             }
         };
         self.stats.prefill_time += t0.elapsed();
         self.stats.prefills += 1;
+        if let Some(c) = self.cache.as_mut() {
+            c.insert(&toks, req.id, kv, &mut self.paged)?;
+        }
 
         let (first_token_at, rng, generated) = match &req.resume {
             Some(res) => (res.first_token_at, res.rng.clone(), res.generated.clone()),
@@ -326,11 +482,15 @@ impl EngineBackend for NativeEngine {
             let Some(s) = self.slots[b].as_ref() else { continue };
             let id = s.id;
             // grow the logical KV by this step's row; on OutOfBlocks,
-            // preempt-and-requeue the longest-tail victim and retry
+            // evict a cached prefix if possible, else preempt-and-requeue
+            // the longest-tail victim and retry
             loop {
                 match kv.extend(id, 1) {
                     Ok(()) => break,
                     Err(AllocError::OutOfBlocks) => {
+                        if self.evict_one(kv)? {
+                            continue;
+                        }
                         let victim = self
                             .pick_victim()
                             .context("OutOfBlocks with no live slot to preempt")?;
@@ -340,8 +500,38 @@ impl EngineBackend for NativeEngine {
                             break; // preempted ourselves; nothing to decode
                         }
                     }
-                    Err(AllocError::UnknownSequence) => {
-                        bail!("slot {b} request {id} unknown to the KV accountant");
+                    Err(e) => {
+                        bail!("KV extend failed for slot {b} request {id}: {e:?}");
+                    }
+                }
+            }
+            if self.slots[b].is_none() {
+                continue; // preempted ourselves above
+            }
+            // copy-on-write barrier: the appended row may land in (or
+            // requantize into) a block shared with the prefix cache or a
+            // forked sibling — give this writer private copies first
+            loop {
+                match self.paged.prepare_append(id, kv, 1) {
+                    Ok(copied) => {
+                        self.stats.cow_copies += copied as u64;
+                        break;
+                    }
+                    Err(AllocError::OutOfBlocks) => {
+                        if self.evict_one(kv)? {
+                            continue;
+                        }
+                        let victim = self
+                            .pick_victim()
+                            .context("OutOfBlocks with no live slot to preempt")?;
+                        let evicted = self.preempt_slot(victim, kv)?;
+                        outcome.preempted.push(evicted);
+                        if victim == b {
+                            break;
+                        }
+                    }
+                    Err(e) => {
+                        bail!("CoW barrier failed for slot {b} request {id}: {e:?}");
                     }
                 }
             }
@@ -368,7 +558,7 @@ impl EngineBackend for NativeEngine {
                 outcome.finished.push(resp);
                 // reclaim the physical pages; the scheduler releases the
                 // logical reservation when it records the response
-                self.paged.release(id, &table)?;
+                self.paged.release(id, kv)?;
                 self.slots[b] = None;
             }
         }
@@ -380,6 +570,28 @@ impl EngineBackend for NativeEngine {
 
     fn stats(&self) -> &EngineStats {
         &self.stats
+    }
+
+    fn prefix_credit(&self, req: &Request) -> usize {
+        match &self.cache {
+            Some(c) => c.lookup_len(&req.prefill_tokens()),
+            None => 0,
+        }
+    }
+
+    fn reclaim_blocks(&mut self, kv: &mut KvCacheManager, need: usize) -> Result<bool> {
+        let Some(cache) = self.cache.as_mut() else {
+            return Ok(false);
+        };
+        let freed = cache
+            .reclaim(kv, &mut self.paged, need)
+            .context("prefix-cache eviction failed")?;
+        self.stats.cache_evictions = cache.stats.evictions;
+        Ok(freed)
+    }
+
+    fn cached_sequences(&self) -> usize {
+        self.cache.as_ref().map_or(0, |c| c.entries())
     }
 }
 

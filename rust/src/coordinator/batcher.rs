@@ -6,9 +6,38 @@
 
 use std::collections::VecDeque;
 
+use crate::util::error::Result;
+
 use super::backend::ReserveMode;
 use super::kv_cache::KvCacheManager;
 use super::request::Request;
+
+/// Admission-time hooks a backend may provide. The default
+/// implementation is a no-op gate (no prefix cache, nothing to
+/// reclaim); the native backend credits cached prefixes so admission
+/// reserves only the unshared suffix, and LRU-evicts unreferenced
+/// cached prefixes when the pool runs low.
+pub trait AdmitGate {
+    /// Prefill tokens of `req` servable from shared cached state — the
+    /// batcher subtracts this credit when sizing an
+    /// [`ReserveMode::Incremental`] reservation.
+    fn prefix_credit(&self, _req: &Request) -> usize {
+        0
+    }
+
+    /// Try to raise the accountant's free-block count to at least
+    /// `need` by releasing reclaimable state (e.g. LRU-evicting
+    /// unreferenced cached prefixes). Returns whether anything was
+    /// freed; errors signal corrupted cache bookkeeping.
+    fn reclaim_blocks(&mut self, _kv: &mut KvCacheManager, _need: usize) -> Result<bool> {
+        Ok(false)
+    }
+}
+
+/// The no-op [`AdmitGate`].
+pub struct NoGate;
+
+impl AdmitGate for NoGate {}
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum BatchPolicy {
@@ -75,6 +104,23 @@ impl Batcher {
         kv: &mut KvCacheManager,
         mode: ReserveMode,
     ) -> Vec<Request> {
+        self.admit_gated(free_slots, kv, mode, &mut NoGate)
+            .expect("NoGate cannot fail")
+    }
+
+    /// [`Batcher::admit_with`] through a backend [`AdmitGate`]:
+    /// cached-prefix credit shrinks [`ReserveMode::Incremental`]
+    /// reservations to the unshared suffix (capped one token short of
+    /// the prefill — the engine always computes the last prompt
+    /// position), and a request that doesn't fit right now may still be
+    /// admitted after the gate reclaims evictable blocks.
+    pub fn admit_gated(
+        &mut self,
+        free_slots: usize,
+        kv: &mut KvCacheManager,
+        mode: ReserveMode,
+        gate: &mut dyn AdmitGate,
+    ) -> Result<Vec<Request>> {
         let mut admitted = Vec::new();
         let window = match self.policy {
             BatchPolicy::Fifo => 0,
@@ -85,16 +131,24 @@ impl Batcher {
             let req = &self.queue[i];
             // allocate() claims at least one block even for zero tokens,
             // so probe with max(1) to keep can_admit and allocate aligned
-            let (fits, reserve) = match mode {
+            let (mut fits, reserve) = match mode {
                 ReserveMode::Full => {
                     (kv.can_admit(req.max_tokens().max(1)), req.max_tokens())
                 }
-                ReserveMode::Incremental => (
-                    kv.can_admit(req.prefill_len().max(1))
-                        && kv.blocks_for(req.max_tokens()) <= kv.total_blocks(),
-                    req.prefill_len(),
-                ),
+                ReserveMode::Incremental => {
+                    let credit =
+                        gate.prefix_credit(req).min(req.prefill_len().saturating_sub(1));
+                    let reserve = req.prefill_len() - credit;
+                    let eventual = kv.blocks_for(req.max_tokens()) <= kv.total_blocks();
+                    (eventual && kv.can_admit(reserve.max(1)), reserve)
+                }
             };
+            if !fits
+                && kv.blocks_for(req.max_tokens()) <= kv.total_blocks()
+                && gate.reclaim_blocks(kv, kv.blocks_for(reserve.max(1)))?
+            {
+                fits = kv.can_admit(reserve.max(1));
+            }
             if fits {
                 let req = self.queue.remove(i).unwrap();
                 kv.allocate(req.id, reserve).expect("can_admit checked");
@@ -107,7 +161,7 @@ impl Batcher {
             }
         }
         self.admitted += admitted.len() as u64;
-        admitted
+        Ok(admitted)
     }
 }
 

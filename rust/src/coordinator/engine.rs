@@ -14,6 +14,7 @@ use crate::util::error::{Context, Result};
 use super::backend::native::{DecodeMode, NativeEngine};
 use super::backend::pjrt::PjrtEngine;
 use super::backend::{EngineBackend, EngineStats, ReserveMode, StepOutcome};
+use super::batcher::AdmitGate;
 use super::kv_cache::KvCacheManager;
 use super::request::Request;
 
@@ -48,6 +49,15 @@ impl Engine {
         Ok(Engine {
             backend: Box::new(NativeEngine::new(cfg, plan, seed, slots, DecodeMode::Prepared)?),
         })
+    }
+
+    /// [`Engine::native_with`] plus the radix prefix cache
+    /// (`sage serve --prefix-cache`): shared-prefix prefills fork cached
+    /// pages and compute only the suffix.
+    pub fn native_cached(cfg: ModelCfg, plan: &str, seed: u64, slots: usize) -> Result<Engine> {
+        let mut backend = NativeEngine::new(cfg, plan, seed, slots, DecodeMode::Prepared)?;
+        backend.enable_prefix_cache();
+        Ok(Engine { backend: Box::new(backend) })
     }
 
     /// Wrap an already-built backend (custom implementations, benches).
@@ -109,5 +119,24 @@ impl Engine {
 
     pub fn stats(&self) -> &EngineStats {
         self.backend.stats()
+    }
+
+    /// Sequences held by backend-internal caches (see
+    /// [`EngineBackend::cached_sequences`]).
+    pub fn cached_sequences(&self) -> usize {
+        self.backend.cached_sequences()
+    }
+}
+
+/// The scheduler admits through its engine: cached-prefix credit shrinks
+/// incremental reservations and LRU eviction of unreferenced cached
+/// prefixes can make room for an admission that would otherwise wait.
+impl AdmitGate for Engine {
+    fn prefix_credit(&self, req: &Request) -> usize {
+        self.backend.prefix_credit(req)
+    }
+
+    fn reclaim_blocks(&mut self, kv: &mut KvCacheManager, need: usize) -> Result<bool> {
+        self.backend.reclaim_blocks(kv, need)
     }
 }

@@ -11,13 +11,20 @@ use crate::coordinator::request::RequestId;
 
 pub type BlockId = u32;
 
-/// Errors are admission decisions, not failures.
+/// Errors are admission decisions, not failures — except [`Corrupt`],
+/// which reports a table/refcount disagreement (double allocate, rc
+/// underflow, out-of-range table index) loudly in release builds
+/// instead of silently corrupting shared state.
+///
+/// [`Corrupt`]: AllocError::Corrupt
 #[derive(Debug, PartialEq, Eq)]
 pub enum AllocError {
     /// Not enough free blocks right now.
     OutOfBlocks,
     /// Sequence unknown.
     UnknownSequence,
+    /// Logical state disagrees with itself or with its caller.
+    Corrupt,
 }
 
 #[derive(Clone, Debug)]
@@ -69,6 +76,9 @@ impl KvCacheManager {
 
     /// Register a sequence and reserve blocks for `tokens` tokens.
     pub fn allocate(&mut self, id: RequestId, tokens: usize) -> Result<(), AllocError> {
+        if self.seqs.contains_key(&id) {
+            return Err(AllocError::Corrupt); // double allocate would leak the old table
+        }
         let need = self.blocks_for(tokens.max(1));
         if need > self.free.len() {
             return Err(AllocError::OutOfBlocks);
@@ -102,13 +112,20 @@ impl KvCacheManager {
         Ok(())
     }
 
-    /// Release all blocks of a sequence (decrement refs; shared blocks
-    /// survive until their last reference drops).
+    /// Release all blocks of a sequence: decrement refs, returning a
+    /// block to the free list only when its last reference drops
+    /// (`rc == 0`) — shared blocks survive for their other owners. A
+    /// table block with `rc == 0` means the table and the refcounts
+    /// disagree; that errors loudly (release builds included) with the
+    /// state untouched rather than underflowing.
     pub fn release(&mut self, id: RequestId) -> Result<(), AllocError> {
-        let seq = self.seqs.remove(&id).ok_or(AllocError::UnknownSequence)?;
+        let seq = self.seqs.get(&id).ok_or(AllocError::UnknownSequence)?;
+        if seq.blocks.iter().any(|&b| self.ref_counts[b as usize] == 0) {
+            return Err(AllocError::Corrupt);
+        }
+        let seq = self.seqs.remove(&id).expect("checked above");
         for b in seq.blocks {
             let rc = &mut self.ref_counts[b as usize];
-            debug_assert!(*rc > 0);
             *rc -= 1;
             if *rc == 0 {
                 self.free.push(b);
@@ -120,13 +137,94 @@ impl KvCacheManager {
     /// Fork: share all of `src`'s blocks with a new sequence (prefix
     /// sharing / beam search). Copy-on-write is the caller's concern at
     /// the physical layer; here it is pure ref-counting.
+    ///
+    /// ```
+    /// use sageattention::coordinator::kv_cache::KvCacheManager;
+    /// let mut kv = KvCacheManager::new(4, 16);
+    /// kv.allocate(1, 32).unwrap(); // 2 blocks
+    /// kv.fork(1, 2).unwrap(); // shares both blocks, no copies
+    /// assert_eq!(kv.free_blocks(), 2);
+    /// assert_eq!(kv.seq_blocks(1), kv.seq_blocks(2));
+    /// // the first append into the shared tail must go through
+    /// // `cow_block`, which gives the writer a private copy:
+    /// let (old, new) = kv.cow_block(2, 1).unwrap();
+    /// assert_ne!(old, new);
+    /// assert_eq!(kv.free_blocks(), 1);
+    /// ```
     pub fn fork(&mut self, src: RequestId, dst: RequestId) -> Result<(), AllocError> {
+        if self.seqs.contains_key(&dst) {
+            return Err(AllocError::Corrupt);
+        }
         let state = self.seqs.get(&src).ok_or(AllocError::UnknownSequence)?.clone();
         for &b in &state.blocks {
             self.ref_counts[b as usize] += 1;
         }
         self.seqs.insert(dst, state);
         Ok(())
+    }
+
+    /// Fork only the first `tokens` tokens of `src` into `dst` —
+    /// the accountant half of a prefix-cache hit. `tokens` must be
+    /// non-zero and at most `src`'s token count; the shared prefix's
+    /// blocks get an extra reference, nothing is copied.
+    pub fn fork_prefix(
+        &mut self,
+        src: RequestId,
+        dst: RequestId,
+        tokens: usize,
+    ) -> Result<(), AllocError> {
+        if self.seqs.contains_key(&dst) {
+            return Err(AllocError::Corrupt);
+        }
+        let state = self.seqs.get(&src).ok_or(AllocError::UnknownSequence)?;
+        if tokens == 0 || tokens > state.tokens {
+            return Err(AllocError::Corrupt);
+        }
+        let keep = self.blocks_for(tokens).min(state.blocks.len());
+        let blocks: Vec<BlockId> = state.blocks[..keep].to_vec();
+        for &b in &blocks {
+            self.ref_counts[b as usize] += 1;
+        }
+        self.seqs.insert(dst, SeqState { blocks, tokens });
+        Ok(())
+    }
+
+    /// Copy-on-write support: give `id` exclusive ownership of the
+    /// block at table position `idx`. An unshared block is returned
+    /// unchanged (`old == new`); a shared one (`rc > 1`) is swapped for
+    /// a freshly allocated block — the old block keeps its remaining
+    /// references, the table entry now points at the new block with
+    /// `rc == 1`. The *payload* copy is the physical layer's job
+    /// ([`PagedKvStore::prepare_append`]); here it is pure accounting.
+    ///
+    /// Returns `(old, new)` so the caller knows which payload to clone.
+    ///
+    /// [`PagedKvStore::prepare_append`]: crate::coordinator::paged_kv::PagedKvStore::prepare_append
+    pub fn cow_block(
+        &mut self,
+        id: RequestId,
+        idx: usize,
+    ) -> Result<(BlockId, BlockId), AllocError> {
+        let seq = self.seqs.get(&id).ok_or(AllocError::UnknownSequence)?;
+        let &old = seq.blocks.get(idx).ok_or(AllocError::Corrupt)?;
+        match self.ref_counts[old as usize] {
+            0 => Err(AllocError::Corrupt), // referenced block with rc 0
+            1 => Ok((old, old)),
+            _ => {
+                let Some(new) = self.free.pop() else {
+                    return Err(AllocError::OutOfBlocks);
+                };
+                self.ref_counts[new as usize] = 1;
+                self.ref_counts[old as usize] -= 1;
+                self.seqs.get_mut(&id).expect("checked above").blocks[idx] = new;
+                Ok((old, new))
+            }
+        }
+    }
+
+    /// Current reference count of a block (0 for free or out of range).
+    pub fn ref_count(&self, b: BlockId) -> u32 {
+        self.ref_counts.get(b as usize).copied().unwrap_or(0)
     }
 
     pub fn seq_tokens(&self, id: RequestId) -> Option<usize> {
@@ -221,5 +319,53 @@ mod tests {
         let mut kv = KvCacheManager::new(2, 8);
         assert_eq!(kv.release(9), Err(AllocError::UnknownSequence));
         assert_eq!(kv.extend(9, 1), Err(AllocError::UnknownSequence));
+    }
+
+    #[test]
+    fn double_allocate_rejected() {
+        let mut kv = KvCacheManager::new(4, 16);
+        kv.allocate(1, 16).unwrap();
+        assert_eq!(kv.allocate(1, 16), Err(AllocError::Corrupt));
+        kv.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn cow_block_swaps_only_shared_blocks() {
+        let mut kv = KvCacheManager::new(4, 16);
+        kv.allocate(1, 32).unwrap(); // blocks [a, b]
+        // unshared: no-op
+        let (old, new) = kv.cow_block(1, 1).unwrap();
+        assert_eq!(old, new);
+        assert_eq!(kv.free_blocks(), 2);
+        kv.fork(1, 2).unwrap();
+        let (old, new) = kv.cow_block(2, 1).unwrap();
+        assert_ne!(old, new);
+        assert_eq!(kv.ref_count(old), 1); // back to exclusive for seq 1
+        assert_eq!(kv.ref_count(new), 1);
+        assert_eq!(kv.seq_blocks(1).unwrap()[1], old);
+        assert_eq!(kv.seq_blocks(2).unwrap()[1], new);
+        kv.check_invariants().unwrap();
+        // pool exhausted: CoW propagates OutOfBlocks
+        kv.allocate(3, 16).unwrap();
+        kv.fork(1, 4).unwrap();
+        assert_eq!(kv.cow_block(4, 0), Err(AllocError::OutOfBlocks));
+        kv.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn fork_prefix_shares_leading_blocks_only() {
+        let mut kv = KvCacheManager::new(8, 16);
+        kv.allocate(1, 40).unwrap(); // 3 blocks
+        kv.fork_prefix(1, 2, 16).unwrap(); // 1 block shared
+        assert_eq!(kv.seq_tokens(2), Some(16));
+        assert_eq!(kv.seq_blocks(2).unwrap(), &kv.seq_blocks(1).unwrap()[..1]);
+        assert_eq!(kv.free_blocks(), 5);
+        assert_eq!(kv.fork_prefix(1, 3, 0), Err(AllocError::Corrupt));
+        assert_eq!(kv.fork_prefix(1, 3, 41), Err(AllocError::Corrupt));
+        kv.release(1).unwrap();
+        assert_eq!(kv.free_blocks(), 7); // shared head block survives
+        kv.release(2).unwrap();
+        assert_eq!(kv.free_blocks(), 8);
+        kv.check_invariants().unwrap();
     }
 }

@@ -17,6 +17,7 @@ pub mod batcher;
 pub mod engine;
 pub mod kv_cache;
 pub mod paged_kv;
+pub mod prefix_cache;
 pub mod request;
 pub mod router;
 pub mod scheduler;
@@ -24,10 +25,11 @@ pub mod scheduler;
 pub use backend::native::{DecodeMode, NativeEngine};
 pub use backend::pjrt::PjrtEngine;
 pub use backend::{EngineBackend, EngineStats, ReserveMode, StepOutcome};
-pub use batcher::{BatchPolicy, Batcher};
+pub use batcher::{AdmitGate, BatchPolicy, Batcher, NoGate};
 pub use engine::Engine;
-pub use kv_cache::{BlockId, KvCacheManager};
+pub use kv_cache::{AllocError, BlockId, KvCacheManager};
 pub use paged_kv::PagedKvStore;
+pub use prefix_cache::PrefixCache;
 pub use request::{FinishReason, GenParams, Request, RequestId, Response, ResumeState};
 pub use router::{EngineReplica, Replica, Router, RoutingPolicy};
 pub use scheduler::{Scheduler, SchedulerReport};

@@ -16,12 +16,14 @@
 //! re-quantizing a resident prefix — bit-identical to the one-shot
 //! [`crate::attn::AttnSpec::prepare`]/`run_prepared` path.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 
-use crate::attn::{gather_raw, AttnImpl, KvPage, PagedSegment, PlaneOpts, Scratch, PAGE_ROWS};
+use crate::attn::{
+    gather_raw, AttnImpl, KvPage, PagedSegment, PlaneOpts, PvMode, Scratch, PAGE_ROWS,
+};
 use crate::util::error::{ensure, Context, Result};
 
-use super::kv_cache::BlockId;
+use super::kv_cache::{AllocError, BlockId, KvCacheManager};
 use super::request::RequestId;
 
 /// Physical paged KV storage (see module docs).
@@ -199,13 +201,105 @@ impl PagedKvStore {
         Ok(gather_raw(&pages, n, self.d))
     }
 
-    /// Drop a sequence and reclaim its physical blocks. The caller is
-    /// the accountant's mirror: `table` must be the sequence's block
-    /// table (fetched before the logical release).
-    pub fn release(&mut self, id: RequestId, table: &[BlockId]) -> Result<()> {
-        ensure!(self.segs.remove(&id).is_some(), "sequence {id} not registered");
-        for b in table {
-            self.blocks.remove(b);
+    /// Share `src`'s entire resident state with a new sequence `dst`
+    /// (parallel-sampling / beam fan-out). Pages are *not* copied: both
+    /// sequences resolve the same blocks through their tables, under
+    /// the accountant's refcounts (`KvCacheManager::fork`); the first
+    /// append on either side goes through [`PagedKvStore::prepare_append`],
+    /// which copies any still-shared block it would dirty.
+    pub fn fork(&mut self, src: RequestId, dst: RequestId) -> Result<()> {
+        let rows = self.rows(src).with_context(|| format!("sequence {src} not registered"))?;
+        self.fork_prefix(src, dst, rows)
+    }
+
+    /// Share the first `rows` resident rows of `src` with a new
+    /// sequence `dst` — the physical half of a prefix-cache hit. Only
+    /// the O(d)-per-plane segment metadata is cloned
+    /// ([`PagedSegment::fork_prefix`]); the rows stay in shared pages.
+    /// `rows` must equal `src`'s resident count or cut on a page
+    /// boundary (pages are quantization-self-contained only as wholes).
+    pub fn fork_prefix(&mut self, src: RequestId, dst: RequestId, rows: usize) -> Result<()> {
+        ensure!(!self.segs.contains_key(&dst), "sequence {dst} already registered");
+        let src_segs = self
+            .segs
+            .get(&src)
+            .with_context(|| format!("sequence {src} not registered"))?;
+        let mut segs = Vec::with_capacity(src_segs.len());
+        for s in src_segs {
+            segs.push(s.fork_prefix(rows)?);
+        }
+        self.segs.insert(dst, segs);
+        Ok(())
+    }
+
+    /// Copy-on-write barrier: before appending `t` rows to `id`, give it
+    /// exclusive ownership of every block the append will rewrite — the
+    /// tail span of the new rows plus the trailing partial K scale group
+    /// ([`PagedSegment::mutation_horizon`]; block-granular K scales can
+    /// reach one page further back than the tail). Shared blocks are
+    /// swapped for fresh ones by the accountant ([`KvCacheManager::cow_block`])
+    /// and their payload cloned here; returns the number of payload
+    /// copies made. `Err(OutOfBlocks)` feeds the caller's preemption
+    /// path — a partial CoW left behind is consistent (already-copied
+    /// blocks are exclusively owned and skipped on retry). The caller
+    /// must have extended the logical table to cover `t` more rows.
+    pub fn prepare_append(
+        &mut self,
+        id: RequestId,
+        kv: &mut KvCacheManager,
+        t: usize,
+    ) -> std::result::Result<usize, AllocError> {
+        let Some(segs) = self.segs.get(&id) else {
+            return Err(AllocError::UnknownSequence);
+        };
+        if t == 0 {
+            return Ok(0);
+        }
+        let n = segs[0].n();
+        let first = segs[0].mutation_horizon(n) / PAGE_ROWS;
+        let last = (n + t - 1) / PAGE_ROWS;
+        let table_len = kv.seq_blocks(id).ok_or(AllocError::Corrupt)?.len();
+        if last >= table_len {
+            return Err(AllocError::Corrupt); // caller skipped the logical extend
+        }
+        let mut copied = 0;
+        for idx in first..=last {
+            let (old, new) = kv.cow_block(id, idx)?;
+            if old == new {
+                continue;
+            }
+            // a shared-but-unbound block (reserved, no rows yet) has no
+            // payload to carry over — the swap alone suffices
+            if let Some(payload) = self.blocks.get(&old).cloned() {
+                self.blocks.insert(new, payload);
+                copied += 1;
+            }
+        }
+        Ok(copied)
+    }
+
+    /// Drop a sequence and reclaim the payload of blocks this release
+    /// takes to `rc == 0`. Call *before* the logical
+    /// [`KvCacheManager::release`]: the accountant still holds the
+    /// table, and a block with `rc > 1` is still owned by another
+    /// sequence (or a cached prefix), so its payload must survive. A
+    /// missing table or a zero refcount on a table block means the
+    /// table and the refcounts disagree — a loud error in release
+    /// builds too, with the store untouched.
+    pub fn release(&mut self, id: RequestId, kv: &KvCacheManager) -> Result<()> {
+        ensure!(self.segs.contains_key(&id), "sequence {id} not registered");
+        let table = kv.seq_blocks(id).with_context(|| {
+            format!("sequence {id}: physical pages but no logical table (table/refcount disagreement)")
+        })?;
+        ensure!(
+            table.iter().all(|&b| kv.ref_count(b) > 0),
+            "sequence {id}: table references a block with rc 0 (table/refcount disagreement)"
+        );
+        self.segs.remove(&id);
+        for &b in table {
+            if kv.ref_count(b) == 1 {
+                self.blocks.remove(&b);
+            }
         }
         Ok(())
     }
@@ -242,8 +336,109 @@ impl PagedKvStore {
                 ));
             }
             for (i, b) in table.iter().enumerate() {
-                if i * PAGE_ROWS < n && !self.blocks.contains_key(b) {
+                let expect = n.saturating_sub(i * PAGE_ROWS).min(PAGE_ROWS);
+                if expect == 0 {
+                    continue; // reserved but not yet written
+                }
+                let Some(blk) = self.blocks.get(b) else {
                     return Err(format!("sequence {id}: row-bearing block {b} unbound"));
+                };
+                // shared blocks may hold more rows than a prefix-forked
+                // sequence expects, never fewer
+                let have = blk[0].rows(self.d);
+                if have < expect {
+                    return Err(format!(
+                        "sequence {id}: block {b} holds {have} rows, expected ≥ {expect}"
+                    ));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Deep physical↔logical audit for the invariant harness:
+    /// everything [`PagedKvStore::check_agreement`] checks, plus
+    /// per-page internal consistency (plane row agreement and quantized
+    /// payload lengths per the store's kernel), refcount agreement (a
+    /// row-bearing block is referenced; an *exclusively* owned one holds
+    /// exactly the rows its sequence expects), and leak detection (every
+    /// bound payload is reachable from some live table).
+    pub fn audit(
+        &self,
+        tables: impl Fn(RequestId) -> Option<Vec<BlockId>>,
+        ref_count: impl Fn(BlockId) -> u32,
+    ) -> std::result::Result<(), String> {
+        self.check_agreement(&tables)?;
+        let mut reachable: HashSet<BlockId> = HashSet::new();
+        for (&id, segs) in &self.segs {
+            let n = segs[0].n();
+            let table = tables(id).expect("checked by check_agreement");
+            for (i, &b) in table.iter().enumerate() {
+                reachable.insert(b);
+                let expect = n.saturating_sub(i * PAGE_ROWS).min(PAGE_ROWS);
+                if expect == 0 {
+                    continue;
+                }
+                let blk = self.blocks.get(&b).expect("checked by check_agreement");
+                let rows = blk[0].rows(self.d);
+                for (p, pg) in blk.iter().enumerate() {
+                    if pg.rows(self.d) != rows {
+                        return Err(format!(
+                            "block {b}: plane {p} holds {} rows, plane 0 holds {rows}",
+                            pg.rows(self.d)
+                        ));
+                    }
+                    if let Err(e) = self.page_consistent(pg, rows) {
+                        return Err(format!("block {b} plane {p}: {e}"));
+                    }
+                }
+                let rc = ref_count(b);
+                if rc == 0 {
+                    return Err(format!("row-bearing block {b} has rc 0"));
+                }
+                if rc == 1 && rows != expect {
+                    return Err(format!(
+                        "block {b}: exclusively owned with {rows} rows but sequence {id} expects {expect}"
+                    ));
+                }
+            }
+        }
+        for &b in self.blocks.keys() {
+            if !reachable.contains(&b) {
+                return Err(format!(
+                    "block {b}: payload bound but no live table references it (leak)"
+                ));
+            }
+        }
+        Ok(())
+    }
+
+    /// One page's internal consistency against its resident row count.
+    fn page_consistent(&self, pg: &KvPage, rows: usize) -> std::result::Result<(), String> {
+        let d = self.d;
+        if pg.k_raw.len() != rows * d || pg.v_raw.len() != rows * d {
+            return Err(format!(
+                "raw payload covers {}/{} K and {}/{} V rows",
+                pg.k_raw.len() / d,
+                rows,
+                pg.v_raw.len() / d,
+                rows
+            ));
+        }
+        if let AttnImpl::Sage { pv, .. } = self.imp {
+            if pg.k_i8.len() != rows * d || pg.k_scales.len() != rows {
+                return Err(format!("INT8 K covers {}/{rows} rows", pg.k_i8.len() / d));
+            }
+            match pv {
+                PvMode::Int8 => {
+                    if pg.v_i8.len() != rows * d || (rows > 0 && pg.v_scales.len() != d) {
+                        return Err(format!("INT8 V covers {}/{rows} rows", pg.v_i8.len() / d));
+                    }
+                }
+                _ => {
+                    if pg.v_f16.len() != rows * d {
+                        return Err(format!("f16 V covers {}/{rows} rows", pg.v_f16.len() / d));
+                    }
                 }
             }
         }
@@ -330,15 +525,64 @@ mod tests {
         let (n, d) = (100usize, 16usize);
         let (_, k, v) = make_qkv(62, [1, 1, n, d], Profile::llama_like());
         let mut store = PagedKvStore::new(1, 1, d, SAGE_B).unwrap();
+        let mut kv = KvCacheManager::new(8, PAGE_ROWS);
+        kv.allocate(1, n).unwrap();
         store.register(1).unwrap();
-        let table: Vec<BlockId> = vec![4, 9];
+        let table = kv.seq_blocks(1).unwrap().to_vec();
         store.append_layer(1, &table, 0, &k.data, &v.data, n).unwrap();
         assert!(store.resident_bytes() > 0);
         assert_eq!(store.live_sequences(), 1);
-        store.release(1, &table).unwrap();
+        store.release(1, &kv).unwrap();
+        kv.release(1).unwrap();
         assert_eq!(store.live_sequences(), 0);
         assert_eq!(store.resident_bytes(), 0);
-        assert!(store.release(1, &table).is_err());
+        assert!(store.release(1, &kv).is_err());
+    }
+
+    #[test]
+    fn cow_gives_writer_private_copies_and_preserves_shared_rows() {
+        let d = 16usize;
+        let n = PAGE_ROWS + 10; // partial tail block
+        let (_, k, v) = make_qkv(64, [1, 1, n + 1, d], Profile::llama_like());
+        let mut store = PagedKvStore::new(1, 1, d, SAGE_B).unwrap();
+        let mut kv = KvCacheManager::new(8, PAGE_ROWS);
+        kv.allocate(1, n).unwrap();
+        store.register(1).unwrap();
+        let t1 = kv.seq_blocks(1).unwrap().to_vec();
+        store.append_layer(1, &t1, 0, &k.data[..n * d], &v.data[..n * d], n).unwrap();
+
+        kv.fork(1, 2).unwrap();
+        store.fork(1, 2).unwrap();
+
+        // seq 2 appends one row: SAGE_B's K scale group (BLOCK_Q = 128)
+        // spans both pages, so the CoW barrier must copy *both* shared
+        // blocks, not just the tail
+        let free_before = kv.free_blocks();
+        kv.extend(2, 1).unwrap();
+        let copied = store.prepare_append(2, &mut kv, 1).unwrap();
+        assert_eq!(copied, 2);
+        assert_eq!(kv.free_blocks(), free_before - 2);
+        let t2 = kv.seq_blocks(2).unwrap().to_vec();
+        assert_ne!(t1, t2, "writer must have private blocks after CoW");
+        store.append_layer(2, &t2, 0, &k.data[n * d..], &v.data[n * d..], 1).unwrap();
+
+        // seq 1's rows are bit-identical to before the fork
+        let (k1, v1) = store.gather_layer_raw(1, &t1, 0, 0).unwrap();
+        assert_eq!(k1, k.data[..n * d]);
+        assert_eq!(v1, v.data[..n * d]);
+        // and the full audit holds
+        kv.check_invariants().unwrap();
+        store
+            .audit(|id| kv.seq_blocks(id).map(<[BlockId]>::to_vec), |b| kv.ref_count(b))
+            .unwrap();
+
+        // releases reclaim exactly the unshared payloads
+        store.release(2, &kv).unwrap();
+        kv.release(2).unwrap();
+        store.release(1, &kv).unwrap();
+        kv.release(1).unwrap();
+        assert_eq!(store.resident_bytes(), 0);
+        assert_eq!(kv.free_blocks(), 8);
     }
 
     #[test]

@@ -1,0 +1,373 @@
+//! Radix-tree prefix cache over the paged KV store.
+//!
+//! SageAttention's quantize-once economics (§3) amortizes K/V smoothing
+//! and quantization across *queries*; this module amortizes it across
+//! *requests*. Each tree node covers one chunk of token ids and pins an
+//! already-prefilled, already-quantized prefix as a cache-owned sequence
+//! in the [`KvCacheManager`] / [`PagedKvStore`] pair — prefix sharing is
+//! plain ref-counted block sharing, the same machinery that backs
+//! copy-on-write forking. A prefill that matches a cached path forks the
+//! deepest node's pages ([`PagedKvStore::fork_prefix`]) and computes only
+//! the suffix.
+//!
+//! The chunk size is the caller's choice of alignment, a multiple of
+//! [`PAGE_ROWS`]: pages are quantization-self-contained only as wholes,
+//! and kernels with block-granular Q scales (`BLOCK_Q` rows per group)
+//! additionally need hit lengths on a Q-group boundary for the suffix
+//! forward to be bit-identical to an unshared run — so the native
+//! backend passes `lcm(PAGE_ROWS, BLOCK_Q)` for such plans and
+//! `PAGE_ROWS` otherwise.
+//!
+//! Eviction is LRU over *leaves* only (an inner node's blocks are prefix
+//! of its children's, so freeing it alone would reclaim nothing), and a
+//! node's blocks physically free only when their refcount drops to zero
+//! — an entry currently forked by a live request is safe to evict
+//! logically, its pages survive under the live reference.
+
+use std::collections::HashMap;
+
+use crate::attn::PAGE_ROWS;
+use crate::util::error::{ensure, Result};
+
+use super::kv_cache::KvCacheManager;
+use super::paged_kv::PagedKvStore;
+use super::request::RequestId;
+
+/// Cache-owned sequences live in a reserved id namespace so they can
+/// never collide with scheduler-issued request ids.
+pub const CACHE_SEQ_BASE: RequestId = 1 << 62;
+
+#[derive(Debug)]
+struct Node {
+    /// Token ids of this node's chunk (the edge label from the parent).
+    key: Vec<i32>,
+    parent: usize,
+    /// Child node index per next-chunk token ids.
+    children: HashMap<Vec<i32>, usize>,
+    /// The cache-owned sequence pinning `depth * chunk` prefilled
+    /// tokens (`None` only for the root and recycled slab entries).
+    seq: Option<RequestId>,
+    /// LRU clock value of the last lookup that traversed this node.
+    last_hit: u64,
+}
+
+/// Telemetry counters (mirrored into `EngineStats` by the backend).
+#[derive(Debug, Default, Clone, Copy)]
+pub struct PrefixCacheStats {
+    pub inserts: u64,
+    pub evictions: u64,
+}
+
+/// Radix-tree prefix cache (see module docs).
+#[derive(Debug)]
+pub struct PrefixCache {
+    /// Slab of nodes; index 0 is the root. Evicted slots are recycled
+    /// through `free_slots`.
+    nodes: Vec<Node>,
+    free_slots: Vec<usize>,
+    chunk: usize,
+    next_seq: RequestId,
+    clock: u64,
+    pub stats: PrefixCacheStats,
+}
+
+impl PrefixCache {
+    /// A cache at `chunk`-token granularity (multiple of [`PAGE_ROWS`];
+    /// see the module docs for why kernels with block-granular Q scales
+    /// need a coarser chunk).
+    pub fn new(chunk: usize) -> PrefixCache {
+        assert!(chunk > 0 && chunk % PAGE_ROWS == 0, "chunk must be a PAGE_ROWS multiple");
+        PrefixCache {
+            nodes: vec![Node {
+                key: Vec::new(),
+                parent: 0,
+                children: HashMap::new(),
+                seq: None,
+                last_hit: 0,
+            }],
+            free_slots: Vec::new(),
+            chunk,
+            next_seq: CACHE_SEQ_BASE,
+            clock: 0,
+            stats: PrefixCacheStats::default(),
+        }
+    }
+
+    pub fn chunk(&self) -> usize {
+        self.chunk
+    }
+
+    /// Materialized entries (= cache-owned sequences resident in the
+    /// accountant and the store).
+    pub fn entries(&self) -> usize {
+        self.nodes.iter().filter(|n| n.seq.is_some()).count()
+    }
+
+    /// Whole chunks of `toks` usable as a cached prefix: capped one
+    /// token short of the prompt so a hit always leaves at least one
+    /// suffix token to prefill (the engine needs its logits).
+    fn usable_chunks(&self, len: usize) -> usize {
+        len.saturating_sub(1) / self.chunk
+    }
+
+    /// Longest cached prefix of `toks` in tokens, without touching LRU
+    /// state — the admission-time credit estimate.
+    pub fn lookup_len(&self, toks: &[i32]) -> usize {
+        let (_, depth) = self.walk(toks, self.usable_chunks(toks.len()));
+        depth * self.chunk
+    }
+
+    /// Longest cached prefix of `toks`: the pinning sequence id and the
+    /// prefix length in tokens. Bumps the LRU clock of every node on
+    /// the matched path.
+    pub fn lookup(&mut self, toks: &[i32]) -> Option<(RequestId, usize)> {
+        let (node, depth) = self.walk(toks, self.usable_chunks(toks.len()));
+        if depth == 0 {
+            return None;
+        }
+        self.clock += 1;
+        let mut cur = node;
+        while cur != 0 {
+            self.nodes[cur].last_hit = self.clock;
+            cur = self.nodes[cur].parent;
+        }
+        let seq = self.nodes[node].seq.expect("non-root nodes are materialized");
+        Some((seq, depth * self.chunk))
+    }
+
+    /// Cache every whole chunk of `toks` along its radix path, pinning
+    /// new depths by prefix-forking `src` (a live sequence holding at
+    /// least `toks.len()` prefilled rows). Depths already cached are
+    /// shared, not re-pinned. Requires enough free blocks only for the
+    /// accountant's table clones — pages are shared, never copied.
+    pub fn insert(
+        &mut self,
+        toks: &[i32],
+        src: RequestId,
+        kv: &mut KvCacheManager,
+        store: &mut PagedKvStore,
+    ) -> Result<()> {
+        let chunks = toks.len() / self.chunk;
+        let mut cur = 0usize;
+        for c in 0..chunks {
+            let key = toks[c * self.chunk..(c + 1) * self.chunk].to_vec();
+            cur = match self.nodes[cur].children.get(&key) {
+                Some(&child) => child,
+                None => {
+                    let sid = self.next_seq;
+                    let rows = (c + 1) * self.chunk;
+                    ensure!(
+                        kv.fork_prefix(src, sid, rows).is_ok(),
+                        "prefix-cache insert: cannot fork {rows} tokens of sequence {src}"
+                    );
+                    if let Err(e) = store.fork_prefix(src, sid, rows) {
+                        let _ = kv.release(sid);
+                        return Err(e);
+                    }
+                    self.next_seq += 1;
+                    let node = Node {
+                        key: key.clone(),
+                        parent: cur,
+                        children: HashMap::new(),
+                        seq: Some(sid),
+                        last_hit: self.clock,
+                    };
+                    let idx = match self.free_slots.pop() {
+                        Some(i) => {
+                            self.nodes[i] = node;
+                            i
+                        }
+                        None => {
+                            self.nodes.push(node);
+                            self.nodes.len() - 1
+                        }
+                    };
+                    self.nodes[cur].children.insert(key, idx);
+                    self.stats.inserts += 1;
+                    idx
+                }
+            };
+        }
+        Ok(())
+    }
+
+    /// Evict the least-recently-used *leaf* entry, releasing its
+    /// sequence from the accountant and the store (blocks physically
+    /// free only at refcount zero — entries still forked by live
+    /// requests are safe to drop). Returns false when the cache is
+    /// empty.
+    pub fn evict_lru(
+        &mut self,
+        kv: &mut KvCacheManager,
+        store: &mut PagedKvStore,
+    ) -> Result<bool> {
+        let victim = self
+            .nodes
+            .iter()
+            .enumerate()
+            .skip(1)
+            .filter(|(_, n)| n.seq.is_some() && n.children.is_empty())
+            .min_by_key(|(_, n)| n.last_hit)
+            .map(|(i, _)| i);
+        let Some(idx) = victim else {
+            return Ok(false);
+        };
+        let seq = self.nodes[idx].seq.expect("filtered on seq");
+        store.release(seq, kv)?;
+        ensure!(kv.release(seq).is_ok(), "prefix-cache entry {seq} unknown to the accountant");
+        let parent = self.nodes[idx].parent;
+        let key = std::mem::take(&mut self.nodes[idx].key);
+        self.nodes[parent].children.remove(&key);
+        self.nodes[idx].seq = None;
+        self.nodes[idx].children = HashMap::new();
+        self.free_slots.push(idx);
+        self.stats.evictions += 1;
+        Ok(true)
+    }
+
+    /// Evict LRU entries until the accountant has at least `need` free
+    /// blocks or the cache is empty. Returns whether anything was
+    /// evicted.
+    pub fn reclaim(
+        &mut self,
+        kv: &mut KvCacheManager,
+        store: &mut PagedKvStore,
+        need: usize,
+    ) -> Result<bool> {
+        let mut any = false;
+        while kv.free_blocks() < need && self.evict_lru(kv, store)? {
+            any = true;
+        }
+        Ok(any)
+    }
+
+    /// Walk the radix path of `toks`, at most `max_chunks` deep.
+    /// Returns the deepest matched node and its depth in chunks.
+    fn walk(&self, toks: &[i32], max_chunks: usize) -> (usize, usize) {
+        let mut cur = 0usize;
+        let mut depth = 0usize;
+        for c in 0..max_chunks {
+            let key = &toks[c * self.chunk..(c + 1) * self.chunk];
+            match self.nodes[cur].children.get(key) {
+                Some(&child) => {
+                    cur = child;
+                    depth += 1;
+                }
+                None => break,
+            }
+        }
+        (cur, depth)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attn::SAGE_B;
+    use crate::synth::{make_qkv, Profile};
+
+    /// A store + accountant pair with one live sequence of `n` prefilled
+    /// rows under id 1.
+    fn fixture(n: usize, pool: usize) -> (PagedKvStore, KvCacheManager) {
+        let d = 16;
+        let (_, k, v) = make_qkv(71, [1, 1, n, d], Profile::llama_like());
+        let mut store = PagedKvStore::new(1, 1, d, SAGE_B).unwrap();
+        let mut kv = KvCacheManager::new(pool, PAGE_ROWS);
+        kv.allocate(1, n).unwrap();
+        store.register(1).unwrap();
+        let table = kv.seq_blocks(1).unwrap().to_vec();
+        store.append_layer(1, &table, 0, &k.data, &v.data, n).unwrap();
+        (store, kv)
+    }
+
+    #[test]
+    fn lookup_walks_longest_cached_prefix() {
+        let n = 3 * PAGE_ROWS;
+        let (mut store, mut kv) = fixture(n, 16);
+        let mut cache = PrefixCache::new(PAGE_ROWS);
+        let toks: Vec<i32> = (0..n as i32).collect();
+        cache.insert(&toks, 1, &mut kv, &mut store).unwrap();
+        assert_eq!(cache.entries(), 3);
+
+        // full match, capped one token short of the prompt: a prompt of
+        // exactly n tokens may only use 2 chunks
+        assert_eq!(cache.lookup_len(&toks), 2 * PAGE_ROWS);
+        // longer prompt with the same prefix uses all 3 chunks
+        let mut longer = toks.clone();
+        longer.extend([9999, 9998]);
+        let (seq, len) = cache.lookup(&longer).unwrap();
+        assert_eq!(len, 3 * PAGE_ROWS);
+        assert!(seq >= CACHE_SEQ_BASE);
+        // diverging second chunk matches only the first
+        let mut diverge = toks.clone();
+        diverge[PAGE_ROWS] ^= 1;
+        assert_eq!(cache.lookup_len(&diverge), PAGE_ROWS);
+        // diverging first token matches nothing
+        let mut miss = toks.clone();
+        miss[0] ^= 1;
+        assert!(cache.lookup(&miss).is_none());
+
+        kv.check_invariants().unwrap();
+        store
+            .audit(|id| kv.seq_blocks(id).map(<[_]>::to_vec), |b| kv.ref_count(b))
+            .unwrap();
+    }
+
+    #[test]
+    fn eviction_is_lru_leaf_first_and_frees_unshared_blocks() {
+        let n = 2 * PAGE_ROWS;
+        let (mut store, mut kv) = fixture(n, 16);
+        let mut cache = PrefixCache::new(PAGE_ROWS);
+        let toks: Vec<i32> = (0..n as i32).collect();
+        cache.insert(&toks, 1, &mut kv, &mut store).unwrap();
+        // release the live source; the cache alone pins the blocks now
+        store.release(1, &kv).unwrap();
+        kv.release(1).unwrap();
+        assert_eq!(kv.free_blocks(), 16 - 2);
+
+        // first eviction takes the leaf (depth 2), freeing its private
+        // tail block only; the root child (depth 1) still pins block 0
+        assert!(cache.evict_lru(&mut kv, &mut store).unwrap());
+        assert_eq!(cache.entries(), 1);
+        assert_eq!(kv.free_blocks(), 16 - 1);
+        assert!(cache.evict_lru(&mut kv, &mut store).unwrap());
+        assert_eq!(cache.entries(), 0);
+        assert_eq!(kv.free_blocks(), 16);
+        assert_eq!(store.resident_bytes(), 0);
+        assert!(!cache.evict_lru(&mut kv, &mut store).unwrap());
+        kv.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn reclaim_respects_lru_order_across_paths() {
+        let n = PAGE_ROWS;
+        let (mut store, mut kv) = fixture(n, 4);
+        let toks_a: Vec<i32> = (0..n as i32).collect();
+        let mut cache = PrefixCache::new(PAGE_ROWS);
+        cache.insert(&toks_a, 1, &mut kv, &mut store).unwrap();
+        store.release(1, &kv).unwrap();
+        kv.release(1).unwrap();
+
+        // a second, diverging cached path
+        let d = 16;
+        let (_, k, v) = make_qkv(72, [1, 1, n, d], Profile::llama_like());
+        kv.allocate(2, n).unwrap();
+        store.register(2).unwrap();
+        let t2 = kv.seq_blocks(2).unwrap().to_vec();
+        store.append_layer(2, &t2, 0, &k.data, &v.data, n).unwrap();
+        let toks_b: Vec<i32> = (1000..1000 + n as i32).collect();
+        cache.insert(&toks_b, 2, &mut kv, &mut store).unwrap();
+        store.release(2, &kv).unwrap();
+        kv.release(2).unwrap();
+
+        // touch path A so B becomes the LRU victim
+        let mut probe = toks_a.clone();
+        probe.push(7);
+        assert!(cache.lookup(&probe).is_some());
+        assert!(cache.evict_lru(&mut kv, &mut store).unwrap());
+        let mut probe_b = toks_b.clone();
+        probe_b.push(7);
+        assert!(cache.lookup(&probe_b).is_none(), "LRU must have evicted path B");
+        assert!(cache.lookup(&probe).is_some(), "path A must survive");
+    }
+}

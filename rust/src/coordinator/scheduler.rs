@@ -26,11 +26,22 @@ pub struct SchedulerReport {
     /// Requests preempted for KV blocks and requeued (native backend's
     /// recompute-on-resume policy).
     pub preemptions: u64,
-    /// Admissions bounced by the engine (no slot after all) and requeued
-    /// with their blocks released — never silently dropped.
+    /// Admissions bounced by the engine (no slot after all, or a stale
+    /// prefix-cache credit) and requeued with their blocks released —
+    /// never silently dropped.
     pub requeued: u64,
     /// Responses whose TPOT was undefined (single-token).
     pub tpot_undefined: u64,
+    /// Prefix-cache lookups at prefill (`--prefix-cache`).
+    pub prefix_lookups: u64,
+    /// Prefills that forked a cached prefix instead of recomputing it.
+    pub prefix_hits: u64,
+    /// Prefill rows served from cached pages (never recomputed).
+    pub prefill_tokens_saved: u64,
+    /// Cached prefixes LRU-evicted under pool pressure.
+    pub cache_evictions: u64,
+    /// Blocks privately copied by the copy-on-write barrier.
+    pub cow_copies: u64,
 }
 
 impl SchedulerReport {
@@ -39,6 +50,15 @@ impl SchedulerReport {
             0.0
         } else {
             self.tokens_out as f64 / self.wall_s
+        }
+    }
+
+    /// Fraction of prefix-cache lookups that hit.
+    pub fn prefix_hit_rate(&self) -> f64 {
+        if self.prefix_lookups == 0 {
+            0.0
+        } else {
+            self.prefix_hits as f64 / self.prefix_lookups as f64
         }
     }
 }
@@ -72,7 +92,8 @@ impl Scheduler {
         let mode = self.engine.reserve_mode();
         let free = self.engine.free_slots();
         if free > 0 && !self.batcher.is_empty() {
-            let mut admitted = self.batcher.admit_with(free, &mut self.kv, mode);
+            let mut admitted =
+                self.batcher.admit_gated(free, &mut self.kv, mode, &mut self.engine)?;
             let mut placed = 0;
             let mut admit_err = None;
             while placed < admitted.len() {
@@ -109,12 +130,14 @@ impl Scheduler {
                 return Err(e);
             }
         }
-        // stall detection: the engine is idle, the pool is completely
-        // free, and the queue head still did not fit — that can never
-        // change, so fail loudly instead of spinning forever
+        // stall detection: the engine is idle, every resident sequence
+        // (if any) belongs to the backend's reclaimable prefix cache,
+        // and the queue head still did not fit — admission already tried
+        // evicting that cache, so this can never change; fail loudly
+        // instead of spinning forever
         if self.engine.live_slots() == 0
             && !self.batcher.is_empty()
-            && self.kv.live_sequences() == 0
+            && self.kv.live_sequences() == self.engine.cached_sequences()
         {
             bail!(
                 "queued request can never be admitted: it needs more KV blocks \
@@ -154,6 +177,18 @@ impl Scheduler {
         Ok(done)
     }
 
+    /// Copy the engine's cumulative prefix-cache / CoW counters into the
+    /// report (they live engine-side because the hits happen inside
+    /// `add_request` / `step`).
+    fn absorb_engine_stats(&mut self) {
+        let s = self.engine.stats();
+        self.report.prefix_lookups = s.prefix_lookups;
+        self.report.prefix_hits = s.prefix_hits;
+        self.report.prefill_tokens_saved = s.prefill_tokens_saved;
+        self.report.cache_evictions = s.cache_evictions;
+        self.report.cow_copies = s.cow_copies;
+    }
+
     /// Drive to completion and return the report.
     pub fn run_to_completion(mut self) -> Result<SchedulerReport> {
         let t0 = std::time::Instant::now();
@@ -161,11 +196,13 @@ impl Scheduler {
             self.tick()?;
         }
         self.report.wall_s = t0.elapsed().as_secs_f64();
+        self.absorb_engine_stats();
         Ok(self.report)
     }
 
     pub fn into_report(mut self, wall_s: f64) -> SchedulerReport {
         self.report.wall_s = wall_s;
+        self.absorb_engine_stats();
         std::mem::take(&mut self.report)
     }
 }

@@ -33,7 +33,7 @@ use sageattention::attn::{
 use sageattention::bench::{bench, bench_budget, f2, pct, sci, Sample, Table};
 use sageattention::coordinator::{
     BatchPolicy, Batcher, DecodeMode, Engine, EngineBackend, EngineReplica, GenParams,
-    KvCacheManager, NativeEngine, Request, Router, RoutingPolicy, Scheduler,
+    KvCacheManager, NativeEngine, Request, Router, RoutingPolicy, Scheduler, SchedulerReport,
 };
 use sageattention::metrics::{accuracy, attention_ops, LatencyStats};
 use sageattention::perfmodel::{predict_tops, AttnKernel, DeviceSpec, Workpoint};
@@ -54,7 +54,9 @@ subcommands:
                  native: paged-decode bit-identity + end-to-end serve)
   serve          [--backend pjrt|native] [--config C] [--plan P] [--requests N]
                  [--seed S] [--slots N] [--kv-blocks N] [--replicas N]
-                 [--route rr|least|power2]
+                 [--route rr|least|power2] [--prefix-cache] [--workload mixed|shared]
+                 (--prefix-cache: radix prefix cache + CoW forking, native only;
+                  --workload shared: every prompt opens with one system prompt)
   calibrate      [--layers N] [--profile P] [--out FILE] [--seed S]
   accuracy       [--profile P] [--seq N] [--headdim D] [--kernel NAME]
   speed          [--device 4090|3090] [--headdim D] [--causal]
@@ -64,7 +66,7 @@ subcommands:
                  [--check FILE] [--update FILE]";
 
 /// Flags that are bare switches (no value); every other flag requires one.
-const BOOLEAN_FLAGS: &[&str] = &["causal"];
+const BOOLEAN_FLAGS: &[&str] = &["causal", "prefix-cache"];
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -92,6 +94,8 @@ fn main() {
             "kv-blocks",
             "replicas",
             "route",
+            "prefix-cache",
+            "workload",
         ],
         "calibrate" => &["layers", "profile", "out", "seed"],
         "accuracy" => &["profile", "seq", "headdim", "kernel"],
@@ -324,6 +328,14 @@ fn serve(flags: &HashMap<String, String>) -> Result<()> {
     let route = flag(flags, "route", "rr");
     let policy = RoutingPolicy::by_name(route)
         .unwrap_or_else(|| usage_error(&format!("unknown route '{route}' (rr|least|power2)")));
+    let prefix_cache = flags.contains_key("prefix-cache");
+    if prefix_cache && backend != "native" {
+        usage_error("--prefix-cache requires --backend native (paged physical KV)");
+    }
+    let workload = flag(flags, "workload", "mixed");
+    if !matches!(workload, "mixed" | "shared") {
+        usage_error(&format!("unknown workload '{workload}' (expected mixed|shared)"));
+    }
     // --kv-blocks is validated here (before any engine is built) so flag
     // misuse still exits 2 without paying N model constructions; the
     // per-replica default is resolved later, once slots/max_seq are known
@@ -354,7 +366,11 @@ fn serve(flags: &HashMap<String, String>) -> Result<()> {
                 usage_error("--slots must be non-zero");
             }
             for _ in 0..replicas {
-                engines.push(Engine::native_with(cfg.clone(), plan, seed, slots)?);
+                engines.push(if prefix_cache {
+                    Engine::native_cached(cfg.clone(), plan, seed, slots)?
+                } else {
+                    Engine::native_with(cfg.clone(), plan, seed, slots)?
+                });
             }
             (cfg.vocab, cfg.max_seq)
         }
@@ -391,9 +407,27 @@ fn serve(flags: &HashMap<String, String>) -> Result<()> {
         })
         .collect();
 
-    let mut gen = WorkloadGen::new(seed, vocab, 50.0, prefill_sizes, 24);
+    // shared workload: half the context window is one system prompt every
+    // request opens with; suffix lengths shrink to keep prompt + budget
+    // inside max_seq
+    let max_new = 24;
+    let shared_prefix = max_seq / 2;
+    let sizes = match workload {
+        "shared" => {
+            let cap = max_seq.saturating_sub(shared_prefix + max_new);
+            let kept: Vec<usize> =
+                prefill_sizes.iter().copied().filter(|&s| s <= cap).collect();
+            if kept.is_empty() { vec![cap.max(1)] } else { kept }
+        }
+        _ => prefill_sizes,
+    };
+    let mut gen = WorkloadGen::new(seed, vocab, 50.0, sizes, max_new);
+    let reqs = match workload {
+        "shared" => gen.generate_shared(n_req, shared_prefix),
+        _ => gen.generate(n_req),
+    };
     let mut router = Router::new(policy, reps.len());
-    for (i, r) in gen.generate(n_req).into_iter().enumerate() {
+    for (i, r) in reqs.into_iter().enumerate() {
         let req = Request::new(
             i as u64,
             r.prompt,
@@ -429,6 +463,8 @@ fn serve(flags: &HashMap<String, String>) -> Result<()> {
     let routed = router.routed.clone();
     let (mut total_resp, mut total_tokens) = (0usize, 0u64);
     let (mut total_preempt, mut total_requeued) = (0u64, 0u64);
+    let (mut total_lookups, mut total_hits) = (0u64, 0u64);
+    let (mut total_saved, mut total_evict, mut total_cow) = (0u64, 0u64, 0u64);
     let (mut fleet_ttft, mut fleet_tpot) = (LatencyStats::default(), LatencyStats::default());
     let mut t =
         Table::new(&["replica", "routed", "served", "tokens", "TTFT p50 ms", "TPOT p50 ms"]);
@@ -438,6 +474,11 @@ fn serve(flags: &HashMap<String, String>) -> Result<()> {
         total_tokens += rep.tokens_out;
         total_preempt += rep.preemptions;
         total_requeued += rep.requeued;
+        total_lookups += rep.prefix_lookups;
+        total_hits += rep.prefix_hits;
+        total_saved += rep.prefill_tokens_saved;
+        total_evict += rep.cache_evictions;
+        total_cow += rep.cow_copies;
         fleet_ttft.merge(&rep.ttft);
         fleet_tpot.merge(&rep.tpot);
         t.row(&[
@@ -466,6 +507,16 @@ fn serve(flags: &HashMap<String, String>) -> Result<()> {
         println!(
             "preemptions: {total_preempt} (recompute-on-resume)   \
              requeued admissions: {total_requeued}"
+        );
+    }
+    if prefix_cache {
+        let hit_rate =
+            if total_lookups > 0 { total_hits as f64 / total_lookups as f64 } else { 0.0 };
+        println!(
+            "prefix cache: {total_hits}/{total_lookups} hits ({:.0}%), \
+             {total_saved} prefill tokens saved, {total_evict} evictions, \
+             {total_cow} CoW block copies",
+            hit_rate * 100.0
         );
     }
     ensure!(total_resp == n_req, "fleet served {total_resp} of {n_req} routed requests");
@@ -804,6 +855,26 @@ fn bench_hotpath(flags: &HashMap<String, String>) -> Result<()> {
     );
     println!("acceptance bar: >= 2.00x at max_seq 2048");
 
+    // ---- shared-prefix lane: the radix prefix cache end to end — eight
+    //      requests behind one 128-token system prompt; the first seeds
+    //      the cache, the other seven fork its pages and prefill only
+    //      their suffix. The gated number is the fraction of prefill
+    //      rows served from cached pages instead of recomputed ----
+    let (shared_rep, shared_prefill) = shared_prefix_lane()?;
+    let shared_frac = shared_rep.prefill_tokens_saved as f64 / shared_prefill as f64;
+    println!(
+        "\nshared-prefix lane: {}/{shared_prefill} prefill tokens served from cache \
+         ({:.0}%), hit rate {:.0}%, {} CoW block copies",
+        shared_rep.prefill_tokens_saved,
+        shared_frac * 100.0,
+        shared_rep.prefix_hit_rate() * 100.0,
+        shared_rep.cow_copies
+    );
+    println!(
+        "acceptance bar: prefill_tokens_saved_frac >= 0.50 \
+         (8 requests, 128-token shared prefix)"
+    );
+
     // ---- dot-i8 microkernel lane: the §4.3 mma(s8.s8.s32) primitive,
     //      hardware SIMD tier vs forced scalar (GB/s of operand bytes;
     //      2 bytes per MAC). Measures the hardware's best tier directly
@@ -885,6 +956,7 @@ fn bench_hotpath(flags: &HashMap<String, String>) -> Result<()> {
         ("blocked_over_naive", speedup),
         ("prepared_decode_speedup", dec_speedup),
         ("serve_decode_speedup", serve_speedup),
+        ("prefill_tokens_saved_frac", shared_frac),
     ];
     if let Some(r) = dot_ratio {
         ratios.push(("dot_i8_simd_over_scalar", r));
@@ -932,6 +1004,34 @@ fn serve_decode_lane(max_seq: usize, t_dec: usize) -> Result<(Sample, Sample)> {
     let requant = run(DecodeMode::RequantEachStep, "serve-decode/requant-each-step")?;
     let prepared = run(DecodeMode::Prepared, "serve-decode/prepared (paged)")?;
     Ok((requant, prepared))
+}
+
+/// Shared-prefix serving through the prefix-cached native backend: eight
+/// requests opening with the same 128-token system prompt (the cache
+/// chunk of the sage plan, `lcm(PAGE_ROWS, BLOCK_Q)`), ample KV so the
+/// measured fraction reflects cache hits, not preemption. Returns the
+/// report and the total prefill rows submitted.
+fn shared_prefix_lane() -> Result<(SchedulerReport, u64)> {
+    let n_req = 8usize;
+    let (prefix, suffix, max_new) = (128usize, 32usize, 4usize);
+    let cfg = ModelCfg::gpt("bench-shared", 256, 128, 2, 2, 64, 256, 256);
+    let engine = Engine::native_cached(cfg.clone(), "sage", 1, 4)?;
+    let kv = KvCacheManager::new(64, PAGE_ROWS);
+    let mut sched = Scheduler::new(Batcher::new(BatchPolicy::Fifo), kv, engine);
+    let mut corpus = Corpus::new(cfg.vocab, 11);
+    let shared = corpus.batch(1, prefix);
+    for i in 0..n_req {
+        let mut prompt = shared.clone();
+        prompt.extend(corpus.batch(1, suffix));
+        sched.submit(Request::new(
+            i as u64,
+            prompt,
+            GenParams { max_new_tokens: max_new, ..Default::default() },
+        ));
+    }
+    let report = sched.run_to_completion()?;
+    ensure!(report.responses.len() == n_req, "shared-prefix lane lost requests");
+    Ok((report, (n_req * (prefix + suffix)) as u64))
 }
 
 /// The tab09 accuracy numbers (cosine similarity vs exact fp32 on
@@ -1064,6 +1164,7 @@ fn update_baseline(
                 ("prepared_decode_speedup", Json::num(3.0)),
                 ("serve_decode_speedup", Json::num(2.0)),
                 ("dot_i8_simd_over_scalar", Json::num(2.0)),
+                ("prefill_tokens_saved_frac", Json::num(0.5)),
             ])
         });
     let acc_floors = existing

@@ -286,6 +286,26 @@ impl WorkloadGen {
             })
             .collect()
     }
+
+    /// A shared-prefix workload: every prompt starts with the same
+    /// `prefix_len`-token system prompt followed by a per-request suffix
+    /// drawn from the mixed length distribution — the chat-serving shape
+    /// a radix prefix cache exists for (`sage serve --workload shared`).
+    pub fn generate_shared(&mut self, n: usize, prefix_len: usize) -> Vec<SynthRequest> {
+        let shared = self.corpus.batch(1, prefix_len);
+        let mut t = 0.0f64;
+        (0..n)
+            .map(|_| {
+                t += self.rng.exponential(self.rate_per_s) as f64 * 1000.0;
+                let slen = self.prompt_lens
+                    [self.rng.below(self.prompt_lens.len() as u32) as usize];
+                let mut prompt = shared.clone();
+                prompt.extend(self.corpus.batch(1, slen));
+                let max_new = 1 + self.rng.below(self.max_new as u32) as usize;
+                SynthRequest { arrival_ms: t, prompt, max_new_tokens: max_new }
+            })
+            .collect()
+    }
 }
 
 #[cfg(test)]

@@ -2,8 +2,12 @@
 //! and cleanly on corrupt artifacts, bad manifests, and over-budget
 //! requests — never with a wrong answer.
 
-use sageattention::coordinator::{Engine, GenParams, KvCacheManager, Request};
-use sageattention::runtime::{Manifest, Runtime, Value};
+use sageattention::attn::PAGE_ROWS;
+use sageattention::coordinator::{
+    DecodeMode, Engine, GenParams, KvCacheManager, NativeEngine, Request,
+};
+use sageattention::runtime::{Manifest, ModelCfg, Runtime, Value};
+use sageattention::synth::Corpus;
 
 #[test]
 fn missing_artifact_dir_errors() {
@@ -139,4 +143,86 @@ fn value_dtype_confusion_rejected_at_run() {
     let f = Value::zeros_f32(&[1, 2, 256, 64]);
     let i = Value::i32(vec![0; 1 * 2 * 256 * 64], &[1, 2, 256, 64]);
     assert!(art.run(&[f.clone(), f.clone(), i]).is_err(), "dtype mismatch must fail");
+}
+
+/// Pool exhaustion *inside the copy-on-write barrier*: two sequences
+/// share one block after a fork, the pool has no spare for the private
+/// copy the first write needs, so the barrier's `OutOfBlocks` must feed
+/// the preemption path — one sequence is evicted mid-CoW, the survivor
+/// retries the barrier (now exclusive, no copy) and completes, and the
+/// preempted sequence resumes via recompute to a bit-exact stream. The
+/// roomy control run takes the successful-CoW path instead; both runs
+/// must emit identical tokens per request.
+#[test]
+fn out_of_blocks_during_cow_preempts_and_resumes_bit_exact() {
+    let cfg = ModelCfg::builtin("tiny").unwrap();
+    // 60-token prompt + 4 new tokens = exactly one 64-row block per
+    // sequence, so the only allocation decode ever needs is the CoW copy
+    let prompt = Corpus::new(cfg.vocab, 9).batch(1, 60);
+    let mk = |id| {
+        Request::new(id, prompt.clone(), GenParams { max_new_tokens: 4, ..Default::default() })
+    };
+
+    let run = |blocks: usize| -> (Vec<(u64, Vec<i32>)>, u64, u64) {
+        let mut eng = NativeEngine::new(cfg.clone(), "fp", 5, 2, DecodeMode::Prepared).unwrap();
+        let mut kv = KvCacheManager::new(blocks, PAGE_ROWS);
+        let r0 = mk(0);
+        kv.allocate(0, r0.prefill_len()).unwrap();
+        assert!(eng.add_request(&r0, &mut kv).unwrap());
+        // fork after prefill: both sequences now reference the same
+        // block, and the first decode write must go through CoW
+        assert!(eng.fork_request(0, 1, &mut kv).unwrap());
+
+        let mut finished = Vec::new();
+        let mut parked: Vec<Request> = Vec::new();
+        for _ in 0..40 {
+            let out = eng.step(&mut kv).unwrap();
+            for r in &out.finished {
+                kv.release(r.id).unwrap();
+            }
+            finished.extend(out.finished);
+            parked.extend(out.preempted);
+            kv.check_invariants().unwrap();
+            eng.paged_store()
+                .check_agreement(|id| kv.seq_blocks(id).map(<[_]>::to_vec))
+                .unwrap();
+            if finished.len() == 2 {
+                break;
+            }
+            // resume a preempted request once a slot and blocks free up
+            if !parked.is_empty() && eng.free_slots() > 0 {
+                let r = parked.remove(0);
+                if kv.allocate(r.id, r.prefill_len()).is_ok() {
+                    if !eng.add_request(&r, &mut kv).unwrap() {
+                        kv.release(r.id).unwrap();
+                        parked.insert(0, r);
+                    }
+                } else {
+                    parked.insert(0, r);
+                }
+            }
+        }
+        assert_eq!(finished.len(), 2, "both sequences must complete");
+        let preemptions = eng.stats().preemptions;
+        let cow_copies = eng.stats().cow_copies;
+        let mut tokens: Vec<(u64, Vec<i32>)> =
+            finished.into_iter().map(|r| (r.id, r.tokens)).collect();
+        tokens.sort_by_key(|(id, _)| *id);
+        kv.check_invariants().unwrap();
+        assert_eq!(kv.free_blocks(), blocks, "all KV must be returned");
+        (tokens, preemptions, cow_copies)
+    };
+
+    // one block total: the shared block is resident, the CoW copy has
+    // nowhere to go — the barrier must preempt, never corrupt
+    let (tight, preempted_tight, _) = run(1);
+    // eight blocks: the CoW copy succeeds, nobody is preempted
+    let (roomy, preempted_roomy, copies_roomy) = run(8);
+    assert!(preempted_tight >= 1, "tight pool must preempt inside the CoW barrier");
+    assert_eq!(preempted_roomy, 0, "roomy pool must not preempt");
+    assert!(copies_roomy >= 1, "roomy pool must take the successful-CoW path");
+    assert_eq!(tight, roomy, "preempt-during-CoW changed the decoded tokens");
+    // the fork shares the whole state: greedy decode must agree across
+    // the forked pair as well
+    assert_eq!(tight[0].1, tight[1].1, "forked twin diverged from its source");
 }

@@ -19,7 +19,7 @@ fn prop_kv_cache_invariants_under_random_ops() {
         let mut live: Vec<u64> = Vec::new();
         let mut next_id = 0u64;
         for _ in 0..200 {
-            match rng.below(4) {
+            match rng.below(6) {
                 0 => {
                     let tokens = gen::usize_in(rng, 1, bs * 8);
                     if kv.allocate(next_id, tokens).is_ok() {
@@ -31,6 +31,9 @@ fn prop_kv_cache_invariants_under_random_ops() {
                     let idx = gen::usize_in(rng, 0, live.len() - 1);
                     let id = live.swap_remove(idx);
                     kv.release(id).unwrap();
+                    // double release of a (possibly forked) table must be
+                    // rejected, not decrement shared refcounts again
+                    assert!(kv.release(id).is_err(), "double release accepted");
                 }
                 2 if !live.is_empty() => {
                     let idx = gen::usize_in(rng, 0, live.len() - 1);
@@ -43,10 +46,43 @@ fn prop_kv_cache_invariants_under_random_ops() {
                     }
                     next_id += 1;
                 }
+                4 if !live.is_empty() => {
+                    // copy-on-write a random table slot: either a no-op on
+                    // an exclusive block or a swap that must keep both
+                    // sides' refcounts consistent
+                    let idx = gen::usize_in(rng, 0, live.len() - 1);
+                    let id = live[idx];
+                    let len = kv.seq_blocks(id).unwrap().len();
+                    let slot = gen::usize_in(rng, 0, len - 1);
+                    let before = kv.seq_blocks(id).unwrap()[slot];
+                    match kv.cow_block(id, slot) {
+                        Ok((old, new)) => {
+                            assert_eq!(old, before);
+                            assert_eq!(kv.seq_blocks(id).unwrap()[slot], new);
+                            assert_eq!(kv.ref_count(new), 1);
+                        }
+                        Err(e) => assert_eq!(e, sageattention::coordinator::AllocError::OutOfBlocks),
+                    }
+                }
+                5 if !live.is_empty() => {
+                    let idx = gen::usize_in(rng, 0, live.len() - 1);
+                    let src = live[idx];
+                    let tokens = gen::usize_in(rng, 1, kv.seq_tokens(src).unwrap());
+                    if kv.fork_prefix(src, next_id, tokens).is_ok() {
+                        live.push(next_id);
+                    }
+                    next_id += 1;
+                }
                 _ => {}
             }
             kv.check_invariants().unwrap();
             assert!(kv.free_blocks() <= kv.total_blocks());
+            // the free list must never hold a block any live table references
+            for id in &live {
+                for b in kv.seq_blocks(*id).unwrap() {
+                    assert!(kv.ref_count(*b) > 0, "referenced block {b} has rc 0");
+                }
+            }
         }
         for id in live {
             kv.release(id).unwrap();
