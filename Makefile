@@ -6,13 +6,16 @@
 #                        hosts), the native-backend serve smokes (end-to-end
 #                        decode with zero PJRT, plus the shared-prefix
 #                        workload through the radix prefix cache; fails on
-#                        panic/nonzero exit), and the bench-hotpath
-#                        no-regression check against the checked-in
-#                        bench_baseline.json (speedup floors:
+#                        panic/nonzero exit), the chaos-soak smokes (a
+#                        faulted 2-replica serve plus the `sage chaos`
+#                        determinism gate — both exit nonzero on leaked
+#                        blocks, silent drops, or a replay mismatch), and
+#                        the bench-hotpath no-regression check against the
+#                        checked-in bench_baseline.json (speedup floors:
 #                        blocked-vs-naive, PreparedKV decode, serve-decode,
 #                        dot-i8 SIMD-vs-scalar, shared-prefix
-#                        prefill-tokens-saved; tab09 kernel-accuracy
-#                        cosine floors)
+#                        prefill-tokens-saved, goodput-under-faults; tab09
+#                        kernel-accuracy cosine floors)
 #   make build           release build only
 #   make test            test suite only
 #   make fmt             rewrite sources with rustfmt
@@ -27,6 +30,9 @@ verify:
 	SAGE_ISA=scalar cargo test -q
 	./target/release/sage serve --backend native --requests 8
 	./target/release/sage serve --backend native --requests 8 --prefix-cache --workload shared
+	./target/release/sage serve --backend native --config tiny --requests 12 \
+		--replicas 2 --faults step_err:0.02,oom:0.05 --seed 7
+	./target/release/sage chaos --requests 12
 	./target/release/sage bench-hotpath --secs 1 --check bench_baseline.json
 
 build:

@@ -1,0 +1,58 @@
+//! Numeric guard for the degraded-mode fallback (ISSUE 7 tentpole §3):
+//! cheap NaN/inf detection on kernel outputs so the serving stack can
+//! catch a quantization blow-up on a sage plan, evict the offending
+//! request, and retry it on the fp path instead of streaming garbage.
+//!
+//! The guard is deliberately dumb — a finite-ness sweep, no tolerance
+//! knobs — because the only numeric failure it must catch is the
+//! catastrophic one (NaN/±inf propagating out of a tile). Accuracy
+//! regressions short of non-finite stay the calibrator's business.
+
+/// Marker embedded in error messages produced when a non-finite value is
+/// detected, so upstream recovery code can distinguish "numerics blew up,
+/// retry degraded" from ordinary hard errors without a typed error enum.
+pub const NONFINITE_MARKER: &str = "[nonfinite]";
+
+/// Does this error message report a non-finite numeric failure?
+pub fn is_nonfinite_err(msg: &str) -> bool {
+    msg.contains(NONFINITE_MARKER)
+}
+
+/// Index of the first non-finite element, if any.
+pub fn first_nonfinite(xs: &[f32]) -> Option<usize> {
+    xs.iter().position(|x| !x.is_finite())
+}
+
+/// Scan a tile/row buffer; `Ok(())` when every element is finite, else a
+/// marker-tagged description (`what` names the tensor, e.g. `"attn l3 h1"`).
+pub fn check_finite(what: &str, xs: &[f32]) -> Result<(), String> {
+    match first_nonfinite(xs) {
+        None => Ok(()),
+        Some(i) => Err(format!(
+            "{NONFINITE_MARKER} {what}: element {i}/{} is {}",
+            xs.len(),
+            xs[i]
+        )),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn finite_buffers_pass() {
+        assert!(check_finite("x", &[0.0, -1.5, 3.0e37]).is_ok());
+        assert_eq!(first_nonfinite(&[1.0, 2.0]), None);
+    }
+
+    #[test]
+    fn nan_and_inf_are_caught_and_marked() {
+        for bad in [f32::NAN, f32::INFINITY, f32::NEG_INFINITY] {
+            let e = check_finite("logits", &[0.0, bad, 1.0]).unwrap_err();
+            assert!(is_nonfinite_err(&e), "unmarked: {e}");
+            assert!(e.contains("element 1/3"), "bad index: {e}");
+        }
+        assert!(!is_nonfinite_err("ordinary error"));
+    }
+}

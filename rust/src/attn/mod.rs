@@ -19,12 +19,14 @@
 
 pub mod api;
 pub mod dtype_sim;
+pub mod guard;
 pub mod isa;
 mod plane;
 mod prepared;
 pub mod registry;
 
 pub use api::{AttnSpec, Layout, PreparedKV};
+pub use guard::{check_finite, is_nonfinite_err, NONFINITE_MARKER};
 pub use dtype_sim::{attention_dtype_sim, qk_product_dtype_sim, Fmt};
 pub use prepared::{gather_raw, KvPage, PagedSegment, PAGE_ROWS};
 pub use plane::{

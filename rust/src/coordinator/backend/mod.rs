@@ -52,6 +52,11 @@ pub struct StepOutcome {
     /// (their logical + physical KV is already released; decode
     /// progress rides in [`Request::resume`]).
     pub preempted: Vec<Request>,
+    /// Requests evicted by the numeric guard (non-finite output on the
+    /// quantized plan), ready to requeue with [`Request::degraded`] set
+    /// so the retry runs attention on the fp path. KV released like
+    /// `preempted`.
+    pub degraded: Vec<Request>,
 }
 
 /// Execution engine contract: admission, decode stepping and slot
@@ -124,6 +129,40 @@ pub trait EngineBackend: Send {
     fn cached_sequences(&self) -> usize {
         0
     }
+
+    /// Evict *every* live slot into resumable [`Request`]s, releasing
+    /// each slot's physical **and** logical KV (unlike `step`'s
+    /// preemption path the backend releases both here, because drain is
+    /// called on error exits where the scheduler may not get another
+    /// clean look at the slot set). Used by the tick-error recovery path
+    /// and by crash failover; a drained backend is empty but reusable.
+    fn drain(&mut self, _kv: &mut KvCacheManager) -> Result<Vec<Request>> {
+        Ok(Vec::new())
+    }
+
+    /// Cancel one live request (deadline expiry): drop its slot and
+    /// release its physical KV. Logical release stays with the caller —
+    /// mirroring `step`'s finish path. Returns false if `id` is not live.
+    fn cancel(&mut self, _id: super::request::RequestId, _kv: &mut KvCacheManager) -> Result<bool> {
+        Ok(false)
+    }
+
+    /// Ids of requests currently occupying slots.
+    fn live_ids(&self) -> Vec<super::request::RequestId> {
+        Vec::new()
+    }
+
+    /// Fault hook: arm a one-shot NaN injection into the next step's
+    /// logits (flows through the real numeric guard). Returns false when
+    /// the backend has no poisoning support (pjrt).
+    fn inject_poison(&mut self) -> bool {
+        false
+    }
+
+    /// Injected-fault counters when this backend is a fault wrapper.
+    fn fault_stats(&self) -> Option<&crate::coordinator::fault::FaultStats> {
+        None
+    }
 }
 
 #[derive(Clone, Debug, Default)]
@@ -172,6 +211,8 @@ pub(crate) struct Slot {
     pub(crate) arrival: std::time::Instant,
     pub(crate) first_token_at: std::time::Instant,
     pub(crate) rng: Pcg32,
+    /// Numeric degraded mode: attention reads run on the fp path.
+    pub(crate) degraded: bool,
 }
 
 /// Greedy or temperature sampling over a logits row.
@@ -232,6 +273,7 @@ pub(crate) fn advance_slot(s: &mut Slot, next: i32, max_seq: usize) -> Option<Re
         tpot_ms: tpot_of(e2e, ttft, s.generated.len()),
         e2e_ms: e2e,
         tokens: std::mem::take(&mut s.generated),
+        error: None,
     })
 }
 

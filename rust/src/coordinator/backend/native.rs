@@ -24,13 +24,13 @@
 use std::time::Instant;
 
 use crate::attn::{
-    exact_plane_opt, fp8_plane_opt, online_plane_opt, registry, sage_plane_opt, AttnImpl,
+    exact_plane_opt, fp8_plane_opt, guard, online_plane_opt, registry, sage_plane_opt, AttnImpl,
     PlaneOpts, Scratch, PAGE_ROWS,
 };
 use crate::quant::Granularity;
 use crate::runtime::{ModelCfg, Value};
 use crate::tensor::{default_threads, parallel_map};
-use crate::util::error::{bail, ensure, Context, Result};
+use crate::util::error::{bail, ensure, Context, Error, Result};
 use crate::util::rng::Pcg32;
 
 use super::super::kv_cache::{AllocError, BlockId, KvCacheManager};
@@ -66,6 +66,9 @@ pub struct NativeEngine {
     batch: usize,
     inv_freq: Vec<f32>,
     scratch: Scratch,
+    /// One-shot fault hook: the next step NaN-poisons the first
+    /// non-degraded live slot's logits (flows through the real guard).
+    poison_armed: bool,
     pub stats: EngineStats,
 }
 
@@ -122,6 +125,7 @@ impl NativeEngine {
             batch: slots,
             inv_freq,
             scratch: Scratch::new(),
+            poison_armed: false,
             stats: EngineStats::default(),
         })
     }
@@ -198,6 +202,7 @@ impl NativeEngine {
             arrival: src_slot.arrival,
             first_token_at: src_slot.first_token_at,
             rng: src_slot.rng.clone(),
+            degraded: src_slot.degraded,
         };
         ensure!(kv.fork(src, dst).is_ok(), "request {src} unknown to the accountant");
         if let Err(e) = self.paged.fork(src, dst) {
@@ -242,16 +247,17 @@ impl NativeEngine {
     }
 
     /// Evict slot `idx`: release its logical and physical blocks and
-    /// return the recompute-on-resume request for the scheduler's queue.
-    fn preempt_slot(&mut self, idx: usize, kv: &mut KvCacheManager) -> Result<Request> {
-        let s = self.slots[idx].take().context("preempting an empty slot")?;
+    /// return the recompute-on-resume request. Shared by preemption,
+    /// drain (tick-error / crash recovery) and the numeric-guard
+    /// degraded-retry path.
+    fn evict_slot(&mut self, idx: usize, kv: &mut KvCacheManager) -> Result<Request> {
+        let s = self.slots[idx].take().context("evicting an empty slot")?;
         // physical before logical: the rc-aware release reads the table
         // and drops only payloads this release takes to rc 0
         self.paged.release(s.id, kv)?;
         if kv.release(s.id).is_err() {
-            bail!("logical release failed for preempted request {}", s.id);
+            bail!("logical release failed for evicted request {}", s.id);
         }
-        self.stats.preemptions += 1;
         Ok(Request {
             id: s.id,
             prompt: s.prompt,
@@ -262,7 +268,16 @@ impl NativeEngine {
                 rng: s.rng,
                 first_token_at: s.first_token_at,
             }),
+            degraded: s.degraded,
         })
+    }
+
+    /// [`NativeEngine::evict_slot`] under KV pressure — counted as a
+    /// preemption.
+    fn preempt_slot(&mut self, idx: usize, kv: &mut KvCacheManager) -> Result<Request> {
+        let req = self.evict_slot(idx, kv)?;
+        self.stats.preemptions += 1;
+        Ok(req)
     }
 }
 
@@ -422,12 +437,20 @@ impl EngineBackend for NativeEngine {
         // fetch the table only now — CoW may have swapped entries
         let table: Vec<BlockId> = kv.seq_blocks(req.id).unwrap().to_vec();
 
+        // degraded requests (numeric-guard retries) run attention on the
+        // fp path over raw resident rows; appends still quantize into the
+        // shared store, so their pages stay audit-clean and cache-sharable
+        let (imp, mode) = if req.degraded {
+            (AttnImpl::OnlineFp32, DecodeMode::RequantEachStep)
+        } else {
+            (self.imp, self.decode_mode)
+        };
         let t0 = Instant::now();
         let logits = match forward_rows(
             &self.cfg,
             &self.params,
-            self.imp,
-            self.decode_mode,
+            imp,
+            mode,
             &self.inv_freq,
             &mut self.paged,
             &mut self.scratch,
@@ -435,7 +458,11 @@ impl EngineBackend for NativeEngine {
             &table,
             &toks[prefix_len..],
             prefix_len,
-        ) {
+        )
+        .and_then(|l| {
+            guard::check_finite("prefill logits", &l).map_err(Error::msg)?;
+            Ok(l)
+        }) {
             Ok(l) => l,
             Err(e) => {
                 // leave no physical residue behind a failed admission
@@ -467,6 +494,7 @@ impl EngineBackend for NativeEngine {
             arrival: req.arrival,
             first_token_at,
             rng,
+            degraded: req.degraded,
         });
         Ok(true)
     }
@@ -538,11 +566,17 @@ impl EngineBackend for NativeEngine {
             let Some(s) = self.slots[b].as_ref() else { continue };
             let table: Vec<BlockId> = kv.seq_blocks(id).unwrap().to_vec();
             let (tok, pos, temperature) = (s.next_token, s.pos, s.params.temperature);
-            let logits = forward_rows(
+            let slot_degraded = s.degraded;
+            let (imp, mode) = if slot_degraded {
+                (AttnImpl::OnlineFp32, DecodeMode::RequantEachStep)
+            } else {
+                (self.imp, self.decode_mode)
+            };
+            let mut logits = match forward_rows(
                 &self.cfg,
                 &self.params,
-                self.imp,
-                self.decode_mode,
+                imp,
+                mode,
                 &self.inv_freq,
                 &mut self.paged,
                 &mut self.scratch,
@@ -550,7 +584,32 @@ impl EngineBackend for NativeEngine {
                 &table,
                 &[tok],
                 pos,
-            )?;
+            ) {
+                Ok(l) => l,
+                Err(e) if !slot_degraded && guard::is_nonfinite_err(&e.to_string()) => {
+                    // quantized plan blew up: evict for a degraded (fp
+                    // attention) retry; recompute-on-resume discards any
+                    // partially appended rows with the evicted blocks
+                    let mut evicted = self.evict_slot(b, kv)?;
+                    evicted.degraded = true;
+                    outcome.degraded.push(evicted);
+                    continue;
+                }
+                Err(e) => return Err(e),
+            };
+            if self.poison_armed && !slot_degraded {
+                self.poison_armed = false;
+                logits[0] = f32::NAN;
+            }
+            if let Err(e) = guard::check_finite("decode logits", &logits) {
+                if slot_degraded {
+                    bail!("request {id} non-finite even on the fp path: {e}");
+                }
+                let mut evicted = self.evict_slot(b, kv)?;
+                evicted.degraded = true;
+                outcome.degraded.push(evicted);
+                continue;
+            }
             let s = self.slots[b].as_mut().expect("slot checked live above");
             let next = sample(&logits, temperature, &mut s.rng);
             self.stats.tokens_generated += 1;
@@ -592,6 +651,40 @@ impl EngineBackend for NativeEngine {
 
     fn cached_sequences(&self) -> usize {
         self.cache.as_ref().map_or(0, |c| c.entries())
+    }
+
+    fn drain(&mut self, kv: &mut KvCacheManager) -> Result<Vec<Request>> {
+        let mut drained = Vec::new();
+        for i in 0..self.batch {
+            if self.slots[i].is_some() {
+                drained.push(self.evict_slot(i, kv)?);
+            }
+        }
+        Ok(drained)
+    }
+
+    fn cancel(&mut self, id: RequestId, kv: &mut KvCacheManager) -> Result<bool> {
+        let Some(idx) = self
+            .slots
+            .iter()
+            .position(|s| s.as_ref().is_some_and(|s| s.id == id))
+        else {
+            return Ok(false);
+        };
+        let s = self.slots[idx].take().expect("position() found a live slot");
+        // physical only — the logical release stays with the caller,
+        // mirroring the finish path
+        self.paged.release(s.id, kv)?;
+        Ok(true)
+    }
+
+    fn live_ids(&self) -> Vec<RequestId> {
+        self.slots.iter().flatten().map(|s| s.id).collect()
+    }
+
+    fn inject_poison(&mut self) -> bool {
+        self.poison_armed = true;
+        true
     }
 }
 
@@ -674,6 +767,10 @@ fn forward_rows(
                 out
             }
         };
+        // numeric guard: a quantization blow-up (NaN/inf tile) surfaces
+        // here as a marker-tagged error the serving stack can map to a
+        // degraded-mode (fp attention) retry instead of streaming garbage
+        guard::check_finite(&format!("attn layer {l}"), &attn).map_err(Error::msg)?;
         let merged = merge_heads(&attn, t, h, dh);
         let proj = matmul(&merged, t, h * dh, p(base + 4), dm);
         for (xi, pi) in x.iter_mut().zip(&proj) {

@@ -22,7 +22,7 @@ use crate::util::error::{bail, Context, Result};
 use crate::util::rng::Pcg32;
 
 use super::super::kv_cache::KvCacheManager;
-use super::super::request::Request;
+use super::super::request::{Request, RequestId, ResumeState};
 use super::{advance_slot, sample, EngineBackend, EngineStats, ReserveMode, Slot, StepOutcome};
 
 /// A model replica bound to one artifact family.
@@ -242,6 +242,7 @@ impl EngineBackend for PjrtEngine {
             arrival: req.arrival,
             first_token_at,
             rng,
+            degraded: req.degraded,
         });
         Ok(true)
     }
@@ -296,5 +297,43 @@ impl EngineBackend for PjrtEngine {
 
     fn stats(&self) -> &EngineStats {
         &self.stats
+    }
+
+    fn drain(&mut self, kv: &mut KvCacheManager) -> Result<Vec<Request>> {
+        // dense KV lives inside the decode-cache literals — nothing
+        // physical to free; release the logical reservations and hand
+        // back recompute-on-resume requests
+        let mut drained = Vec::new();
+        for slot in &mut self.slots {
+            let Some(s) = slot.take() else { continue };
+            let _ = kv.release(s.id);
+            drained.push(Request {
+                id: s.id,
+                prompt: s.prompt,
+                params: s.params,
+                arrival: s.arrival,
+                resume: Some(ResumeState {
+                    generated: s.generated,
+                    rng: s.rng,
+                    first_token_at: s.first_token_at,
+                }),
+                degraded: s.degraded,
+            });
+        }
+        Ok(drained)
+    }
+
+    fn cancel(&mut self, id: RequestId, _kv: &mut KvCacheManager) -> Result<bool> {
+        for slot in &mut self.slots {
+            if slot.as_ref().is_some_and(|s| s.id == id) {
+                *slot = None; // no physical pages; logical stays with the caller
+                return Ok(true);
+            }
+        }
+        Ok(false)
+    }
+
+    fn live_ids(&self) -> Vec<RequestId> {
+        self.slots.iter().flatten().map(|s| s.id).collect()
     }
 }

@@ -82,6 +82,22 @@ impl Batcher {
         self.queue.is_empty()
     }
 
+    /// Ids of queued requests, head first (deadline sweeps).
+    pub fn ids(&self) -> Vec<super::request::RequestId> {
+        self.queue.iter().map(|r| r.id).collect()
+    }
+
+    /// Pull one queued request out by id (deadline cancellation).
+    pub fn remove(&mut self, id: super::request::RequestId) -> Option<Request> {
+        let i = self.queue.iter().position(|r| r.id == id)?;
+        self.queue.remove(i)
+    }
+
+    /// Take the whole queue (crash failover: re-route everything).
+    pub fn drain_all(&mut self) -> Vec<Request> {
+        self.queue.drain(..).collect()
+    }
+
     /// Admit up to `free_slots` requests that fit in `kv`'s free capacity,
     /// reserving their KV budget in full ([`ReserveMode::Full`]).
     /// Returns admitted requests in queue order.

@@ -9,14 +9,16 @@
 
 use crate::attn::registry;
 use crate::runtime::{ModelCfg, Runtime, Value};
+use crate::synth::FaultSpec;
 use crate::util::error::{Context, Result};
 
 use super::backend::native::{DecodeMode, NativeEngine};
 use super::backend::pjrt::PjrtEngine;
 use super::backend::{EngineBackend, EngineStats, ReserveMode, StepOutcome};
 use super::batcher::AdmitGate;
+use super::fault::FaultStats;
 use super::kv_cache::KvCacheManager;
-use super::request::Request;
+use super::request::{Request, RequestId};
 
 /// A model replica behind the [`EngineBackend`] trait.
 pub struct Engine {
@@ -63,6 +65,22 @@ impl Engine {
     /// Wrap an already-built backend (custom implementations, benches).
     pub fn from_backend(backend: Box<dyn EngineBackend>) -> Engine {
         Engine { backend }
+    }
+
+    /// Interpose the deterministic fault plane (`sage serve --faults`):
+    /// the existing backend is wrapped in a [`FaultingBackend`] replaying
+    /// the `spec` schedule from `seed ^ replica`.
+    ///
+    /// [`FaultingBackend`]: super::fault::FaultingBackend
+    pub fn faulted(self, spec: FaultSpec, seed: u64, replica: usize) -> Engine {
+        Engine {
+            backend: Box::new(super::fault::FaultingBackend::new(
+                self.backend,
+                spec,
+                seed,
+                replica,
+            )),
+        }
     }
 
     pub fn backend_name(&self) -> &'static str {
@@ -125,6 +143,28 @@ impl Engine {
     /// [`EngineBackend::cached_sequences`]).
     pub fn cached_sequences(&self) -> usize {
         self.backend.cached_sequences()
+    }
+
+    /// Evict every live slot into resumable requests, releasing both
+    /// physical and logical KV (see [`EngineBackend::drain`]).
+    pub fn drain(&mut self, kv: &mut KvCacheManager) -> Result<Vec<Request>> {
+        self.backend.drain(kv)
+    }
+
+    /// Cancel one live request, releasing its physical KV; the logical
+    /// release stays with the caller (see [`EngineBackend::cancel`]).
+    pub fn cancel(&mut self, id: RequestId, kv: &mut KvCacheManager) -> Result<bool> {
+        self.backend.cancel(id, kv)
+    }
+
+    /// Ids of requests currently occupying slots.
+    pub fn live_ids(&self) -> Vec<RequestId> {
+        self.backend.live_ids()
+    }
+
+    /// Injected-fault counters when this engine carries a fault plane.
+    pub fn fault_stats(&self) -> Option<&FaultStats> {
+        self.backend.fault_stats()
     }
 }
 

@@ -1,0 +1,237 @@
+//! Deterministic fault-injection plane (ISSUE 7 tentpole §1).
+//!
+//! [`FaultingBackend`] wraps any [`EngineBackend`] and injects the fault
+//! mix described by a [`FaultSpec`] — step errors, latency spikes,
+//! spurious admission bounces (the `OutOfBlocks` shape), whole-replica
+//! crashes, and NaN-poisoned logits — all drawn from one `Pcg32` stream
+//! seeded from `seed ^ replica`, so a given `--seed` replays the
+//! identical fault schedule. Crashes are schedule-based
+//! (`crash:rN@tM`), not probabilistic: failover tests need to know
+//! exactly when a replica dies.
+//!
+//! Injected failures are distinguishable from organic ones by message
+//! markers ([`STEP_MARKER`], [`CRASH_MARKER`]); the fleet supervisor
+//! keys its recovery policy off [`is_crash`], never off string matching
+//! against organic error text.
+
+use crate::synth::FaultSpec;
+use crate::util::error::{Error, Result};
+use crate::util::rng::Pcg32;
+
+use super::backend::{EngineBackend, EngineStats, ReserveMode, StepOutcome};
+use super::kv_cache::KvCacheManager;
+use super::request::{Request, RequestId};
+
+/// Marker carried by injected transient step errors.
+pub const STEP_MARKER: &str = "[injected:step]";
+/// Marker carried by injected whole-replica crashes (permanent).
+pub const CRASH_MARKER: &str = "[injected:crash]";
+
+/// Was this error injected by the fault plane (either kind)?
+pub fn is_injected(msg: &str) -> bool {
+    msg.contains(STEP_MARKER) || msg.contains(CRASH_MARKER)
+}
+
+/// Is this error a whole-replica crash (permanent — the supervisor must
+/// fail over, not retry)?
+pub fn is_crash(msg: &str) -> bool {
+    msg.contains(CRASH_MARKER)
+}
+
+/// Injected-fault counters (per wrapped replica).
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct FaultStats {
+    pub step_errs: u64,
+    pub crashes: u64,
+    pub slow: u64,
+    pub oom: u64,
+    pub poison: u64,
+}
+
+impl FaultStats {
+    pub fn total(&self) -> u64 {
+        self.step_errs + self.crashes + self.slow + self.oom + self.poison
+    }
+}
+
+/// [`EngineBackend`] decorator injecting the [`FaultSpec`] fault mix.
+pub struct FaultingBackend {
+    inner: Box<dyn EngineBackend>,
+    spec: FaultSpec,
+    rng: Pcg32,
+    replica: usize,
+    /// Steps attempted so far (the crash schedule's clock).
+    steps: u64,
+    crashed: bool,
+    stats: FaultStats,
+}
+
+impl FaultingBackend {
+    pub fn new(
+        inner: Box<dyn EngineBackend>,
+        spec: FaultSpec,
+        seed: u64,
+        replica: usize,
+    ) -> FaultingBackend {
+        FaultingBackend {
+            inner,
+            spec,
+            rng: Pcg32::seeded(seed ^ (replica as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)),
+            replica,
+            steps: 0,
+            crashed: false,
+            stats: FaultStats::default(),
+        }
+    }
+
+    pub fn injected(&self) -> &FaultStats {
+        &self.stats
+    }
+}
+
+impl EngineBackend for FaultingBackend {
+    fn backend_name(&self) -> &'static str {
+        self.inner.backend_name()
+    }
+
+    fn plan(&self) -> &str {
+        self.inner.plan()
+    }
+
+    fn kernel(&self) -> &'static crate::attn::registry::KernelEntry {
+        self.inner.kernel()
+    }
+
+    fn batch_slots(&self) -> usize {
+        self.inner.batch_slots()
+    }
+
+    fn free_slots(&self) -> usize {
+        self.inner.free_slots()
+    }
+
+    fn outstanding_tokens(&self) -> usize {
+        self.inner.outstanding_tokens()
+    }
+
+    fn prefill_sizes(&self) -> Vec<usize> {
+        self.inner.prefill_sizes()
+    }
+
+    fn reserve_mode(&self) -> ReserveMode {
+        self.inner.reserve_mode()
+    }
+
+    fn set_params(&mut self, params: Vec<crate::runtime::Value>) -> Result<()> {
+        self.inner.set_params(params)
+    }
+
+    fn add_request(&mut self, req: &Request, kv: &mut KvCacheManager) -> Result<bool> {
+        if self.crashed {
+            // a dead replica refuses politely — the contract's Ok(false)
+            // keeps reservation ownership with the caller, and the next
+            // step()'s crash error triggers the supervisor's failover
+            return Ok(false);
+        }
+        if self.spec.oom > 0.0 && self.rng.bernoulli(self.spec.oom) {
+            // spurious OutOfBlocks shape: admission bounces, caller
+            // requeues (exactly what a genuinely full pool produces)
+            self.stats.oom += 1;
+            return Ok(false);
+        }
+        self.inner.add_request(req, kv)
+    }
+
+    fn step(&mut self, kv: &mut KvCacheManager) -> Result<StepOutcome> {
+        if self.crashed {
+            return Err(Error::msg(format!(
+                "{CRASH_MARKER} replica {} is down",
+                self.replica
+            )));
+        }
+        let t = self.steps;
+        self.steps += 1;
+        if self.spec.crashes.iter().any(|c| c.replica == self.replica && c.step == t) {
+            self.crashed = true;
+            self.stats.crashes += 1;
+            return Err(Error::msg(format!(
+                "{CRASH_MARKER} replica {} died at step {t}",
+                self.replica
+            )));
+        }
+        // fixed draw order, every draw taken unconditionally: one fault
+        // firing must not shift the schedule of later decisions
+        let fire_slow = self.rng.bernoulli(self.spec.slow_p);
+        let fire_poison = self.rng.bernoulli(self.spec.poison);
+        let fire_step = self.rng.bernoulli(self.spec.step_err);
+        if fire_slow && self.spec.slow_ms > 0.0 {
+            self.stats.slow += 1;
+            std::thread::sleep(std::time::Duration::from_micros(
+                (self.spec.slow_ms * 1000.0) as u64,
+            ));
+        }
+        if fire_poison && self.inner.inject_poison() {
+            self.stats.poison += 1;
+        }
+        if fire_step {
+            self.stats.step_errs += 1;
+            return Err(Error::msg(format!(
+                "{STEP_MARKER} replica {} transient step failure at step {t}",
+                self.replica
+            )));
+        }
+        self.inner.step(kv)
+    }
+
+    fn stats(&self) -> &EngineStats {
+        self.inner.stats()
+    }
+
+    fn prefix_credit(&self, req: &Request) -> usize {
+        self.inner.prefix_credit(req)
+    }
+
+    fn reclaim_blocks(&mut self, kv: &mut KvCacheManager, need: usize) -> Result<bool> {
+        self.inner.reclaim_blocks(kv, need)
+    }
+
+    fn cached_sequences(&self) -> usize {
+        self.inner.cached_sequences()
+    }
+
+    fn drain(&mut self, kv: &mut KvCacheManager) -> Result<Vec<Request>> {
+        // recovery paths bypass injection: a fleet must always be able
+        // to pull in-flight work off a (crashed) replica cleanly
+        self.inner.drain(kv)
+    }
+
+    fn cancel(&mut self, id: RequestId, kv: &mut KvCacheManager) -> Result<bool> {
+        self.inner.cancel(id, kv)
+    }
+
+    fn live_ids(&self) -> Vec<RequestId> {
+        self.inner.live_ids()
+    }
+
+    fn inject_poison(&mut self) -> bool {
+        self.inner.inject_poison()
+    }
+
+    fn fault_stats(&self) -> Option<&FaultStats> {
+        Some(&self.stats)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn markers_classify() {
+        assert!(is_injected(&format!("{STEP_MARKER} replica 0 ...")));
+        assert!(is_injected(&format!("outer context: {CRASH_MARKER} replica 1 died")));
+        assert!(is_crash(&format!("{CRASH_MARKER} x")));
+        assert!(!is_crash(&format!("{STEP_MARKER} x")));
+        assert!(!is_injected("CoW barrier failed"));
+    }
+}

@@ -15,6 +15,7 @@
 pub mod backend;
 pub mod batcher;
 pub mod engine;
+pub mod fault;
 pub mod kv_cache;
 pub mod paged_kv;
 pub mod prefix_cache;
@@ -27,9 +28,13 @@ pub use backend::pjrt::PjrtEngine;
 pub use backend::{EngineBackend, EngineStats, ReserveMode, StepOutcome};
 pub use batcher::{AdmitGate, BatchPolicy, Batcher, NoGate};
 pub use engine::Engine;
+pub use fault::{is_crash, is_injected, FaultStats, FaultingBackend};
 pub use kv_cache::{AllocError, BlockId, KvCacheManager};
 pub use paged_kv::PagedKvStore;
 pub use prefix_cache::PrefixCache;
 pub use request::{FinishReason, GenParams, Request, RequestId, Response, ResumeState};
-pub use router::{EngineReplica, Replica, Router, RoutingPolicy};
+pub use router::{
+    Breaker, EngineReplica, Fleet, FleetCfg, FleetReport, Replica, RouteError, Router,
+    RoutingPolicy,
+};
 pub use scheduler::{Scheduler, SchedulerReport};

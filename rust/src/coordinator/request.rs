@@ -15,11 +15,24 @@ pub struct GenParams {
     /// Stop token (model-dependent); `None` = run to max_new_tokens.
     pub stop_token: Option<i32>,
     pub seed: u64,
+    /// TTFT deadline in scheduler ticks (virtual time — deterministic
+    /// under replay); the request is cancelled if its first token has not
+    /// been produced within this many ticks of submission.
+    pub ttft_deadline: Option<u64>,
+    /// Total-completion deadline in scheduler ticks from submission.
+    pub total_deadline: Option<u64>,
 }
 
 impl Default for GenParams {
     fn default() -> Self {
-        GenParams { max_new_tokens: 32, temperature: 0.0, stop_token: None, seed: 0 }
+        GenParams {
+            max_new_tokens: 32,
+            temperature: 0.0,
+            stop_token: None,
+            seed: 0,
+            ttft_deadline: None,
+            total_deadline: None,
+        }
     }
 }
 
@@ -47,11 +60,15 @@ pub struct Request {
     pub arrival: Instant,
     /// `Some` when this request was preempted and requeued.
     pub resume: Option<ResumeState>,
+    /// Numeric degraded mode: a non-finite guard trip on the sage plan
+    /// flags the request, and every later (re)compute runs its attention
+    /// on the fp path while KV pages stay in the shared quantized store.
+    pub degraded: bool,
 }
 
 impl Request {
     pub fn new(id: RequestId, prompt: Vec<i32>, params: GenParams) -> Request {
-        Request { id, prompt, params, arrival: Instant::now(), resume: None }
+        Request { id, prompt, params, arrival: Instant::now(), resume: None, degraded: false }
     }
 
     /// Total KV footprint this request may need (prompt + generation).
@@ -91,6 +108,11 @@ pub enum FinishReason {
     StopToken,
     /// Evicted: would not fit (admission failure surfaced to the caller).
     Rejected,
+    /// Terminal failure after exhausting the retry budget (or a
+    /// non-retryable hard error) — never a silent drop.
+    Failed,
+    /// Cancelled because a TTFT/total deadline expired.
+    DeadlineExceeded,
 }
 
 /// A finished request with serving telemetry.
@@ -107,6 +129,25 @@ pub struct Response {
     pub tpot_ms: Option<f64>,
     /// End-to-end latency, ms.
     pub e2e_ms: f64,
+    /// `Some(why)` for terminal failures ([`FinishReason::Failed`] /
+    /// [`FinishReason::DeadlineExceeded`] / [`FinishReason::Rejected`]).
+    pub error: Option<String>,
+}
+
+impl Response {
+    /// A typed terminal failure: the request leaves the system through a
+    /// `Response`, never by vanishing from a queue.
+    pub fn failure(id: RequestId, finish: FinishReason, why: impl Into<String>) -> Response {
+        Response {
+            id,
+            tokens: Vec::new(),
+            finish,
+            ttft_ms: 0.0,
+            tpot_ms: None,
+            e2e_ms: 0.0,
+            error: Some(why.into()),
+        }
+    }
 }
 
 #[cfg(test)]

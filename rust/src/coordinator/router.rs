@@ -2,9 +2,26 @@
 //! vllm-project/router-shaped). Replicas expose a load score; policies
 //! pick a target. The router is generic over [`Replica`] so it is testable
 //! without PJRT and reusable for heterogeneous backends.
+//!
+//! [`Fleet`] is the fault-tolerant driver on top (ISSUE 7 tentpole §2):
+//! it owns one supervised [`Scheduler`] per replica and drives them
+//! round-robin in deterministic virtual time. Per-replica supervision
+//! tracks consecutive step failures behind a circuit breaker
+//! (closed → open → half-open), fails crashed replicas over by
+//! re-routing their drained queue + in-flight requests (recompute-on-
+//! resume), enforces per-request retry budgets with exponential backoff,
+//! and sweeps TTFT/total deadlines — every request terminates in a typed
+//! [`Response`], never a silent drop.
 
-use super::request::Request;
-use super::scheduler::Scheduler;
+use std::collections::{BTreeMap, VecDeque};
+use std::fmt;
+use std::time::Instant;
+
+use crate::util::error::{ensure, Result};
+
+use super::fault::is_crash;
+use super::request::{FinishReason, Request, RequestId, Response};
+use super::scheduler::{Scheduler, SchedulerReport};
 
 /// Anything that can accept routed requests.
 pub trait Replica {
@@ -79,6 +96,29 @@ impl Replica for EngineReplica {
     }
 }
 
+/// Why a request could not be routed. Callers must handle this —
+/// typically by requeueing with backoff at the fleet level — never by
+/// dropping the request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RouteError {
+    /// The replica set is empty.
+    NoReplicas,
+    /// Every replica refused the request (full queues, open breakers,
+    /// crashed replicas).
+    AllRefused,
+}
+
+impl fmt::Display for RouteError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            RouteError::NoReplicas => write!(f, "no replicas to route to"),
+            RouteError::AllRefused => write!(f, "every replica refused the request"),
+        }
+    }
+}
+
+impl std::error::Error for RouteError {}
+
 /// Stateless-per-request router with per-replica counters.
 pub struct Router {
     policy: RoutingPolicy,
@@ -92,15 +132,16 @@ impl Router {
     }
 
     /// Route one request (clone-on-try: replicas may refuse and the
-    /// router falls through to the next candidate).
+    /// router falls through to the next candidate). An all-refuse
+    /// outcome is a typed [`RouteError`], not a silent drop.
     pub fn route<R: Replica>(
         &mut self,
         replicas: &mut [R],
         req: &Request,
-    ) -> Option<usize> {
+    ) -> Result<usize, RouteError> {
         let n = replicas.len();
         if n == 0 {
-            return None;
+            return Err(RouteError::NoReplicas);
         }
         let order: Vec<usize> = match self.policy {
             RoutingPolicy::RoundRobin => (0..n).map(|i| (self.next + i) % n).collect(),
@@ -125,10 +166,490 @@ impl Router {
         for &i in &order {
             if replicas[i].submit(req.clone()) {
                 self.routed[i] += 1;
-                return Some(i);
+                return Ok(i);
             }
         }
-        None
+        Err(RouteError::AllRefused)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Fleet: supervised replicas + recovery (ISSUE 7 tentpole §2)
+// ---------------------------------------------------------------------------
+
+/// Circuit-breaker state for one replica.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Breaker {
+    /// Healthy: admissions flow.
+    Closed,
+    /// Tripped: refuses admissions and is not stepped until virtual
+    /// tick `until` (crashes use `u64::MAX` — permanently open).
+    Open { until: u64 },
+    /// Cooldown elapsed: accepting probe traffic; the next step result
+    /// decides between `Closed` and another `Open` period.
+    HalfOpen,
+}
+
+/// Fleet recovery policy knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct FleetCfg {
+    /// Per-request retry budget: a request drained off an errored
+    /// replica more than this many times terminally fails.
+    pub max_retries: u32,
+    /// Exponential backoff base (ticks): retry `k` waits `base^k`.
+    pub backoff_base: u64,
+    /// Consecutive step failures that open a replica's breaker.
+    pub breaker_threshold: u32,
+    /// Ticks an opened breaker stays open before half-opening.
+    pub breaker_cooldown: u64,
+    /// Hard stop for the driving loop (defense against a fault spec
+    /// that can never make progress, e.g. `oom:1.0`).
+    pub max_ticks: u64,
+}
+
+impl Default for FleetCfg {
+    fn default() -> FleetCfg {
+        FleetCfg {
+            max_retries: 3,
+            backoff_base: 2,
+            breaker_threshold: 2,
+            breaker_cooldown: 8,
+            max_ticks: 1_000_000,
+        }
+    }
+}
+
+/// One supervised replica: a scheduler plus its health state.
+struct Supervised {
+    id: usize,
+    sched: Scheduler,
+    breaker: Breaker,
+    consec_failures: u32,
+    crashed: bool,
+}
+
+impl Replica for Supervised {
+    fn id(&self) -> usize {
+        self.id
+    }
+
+    fn load(&self) -> f64 {
+        if self.crashed {
+            return f64::INFINITY;
+        }
+        self.sched.engine.outstanding_tokens() as f64 + self.sched.batcher.pending() as f64
+    }
+
+    fn submit(&mut self, req: Request) -> bool {
+        // open breakers and dead replicas refuse; half-open accepts the
+        // probe traffic that decides recovery
+        if self.crashed || matches!(self.breaker, Breaker::Open { .. }) {
+            return false;
+        }
+        self.sched.submit(req);
+        true
+    }
+}
+
+/// Per-request supervision state.
+struct Meta {
+    retries: u32,
+    submitted_at: u64,
+    ttft_deadline: Option<u64>,
+    total_deadline: Option<u64>,
+    done: bool,
+}
+
+/// A request waiting (or backing off) at the fleet level.
+struct Pending {
+    req: Request,
+    not_before: u64,
+}
+
+/// Aggregated outcome of a fleet run.
+#[derive(Debug, Default)]
+pub struct FleetReport {
+    pub submitted: u64,
+    /// Successful completions.
+    pub served: u64,
+    /// Typed terminal failures (retry budget, unservable, fleet down).
+    pub failed: u64,
+    /// Deadline cancellations.
+    pub cancelled_deadline: u64,
+    /// Requests re-dispatched after a transient replica error.
+    pub retried: u64,
+    /// Requests re-routed off a crashed replica.
+    pub failed_over: u64,
+    /// Faults injected across all replicas (fault plane active).
+    pub injected: u64,
+    /// Numeric-guard fp-path retries across all replicas.
+    pub degraded_fallbacks: u64,
+    /// Requests that left without any terminal response — must be 0.
+    pub dropped: u64,
+    /// Virtual ticks the run took.
+    pub ticks: u64,
+    pub wall_s: f64,
+    /// `hist[k]` = requests that needed exactly `k` retries
+    /// (`hist.last()` buckets `>= max_retries + 1`).
+    pub retries_hist: Vec<u64>,
+    /// Every terminal response, sorted by request id.
+    pub responses: Vec<Response>,
+    /// Per-replica scheduler reports (routing/latency detail).
+    pub replicas: Vec<SchedulerReport>,
+}
+
+impl FleetReport {
+    /// Terminal accounting: every submitted request left through a
+    /// response (`served + failed + cancelled == submitted`).
+    pub fn fully_accounted(&self) -> bool {
+        self.dropped == 0
+            && self.served + self.failed + self.cancelled_deadline == self.submitted
+    }
+
+    pub fn tokens_out(&self) -> u64 {
+        self.responses.iter().map(|r| r.tokens.len() as u64).sum()
+    }
+}
+
+/// Deterministic fault-tolerant driver over supervised replicas.
+///
+/// Single-threaded by design: virtual time (one `tick()` = one round
+/// over the fleet) makes recovery decisions — breaker cooldowns,
+/// backoff, deadlines — replayable from a seed, which the chaos tests
+/// and `sage chaos` rely on. Throughput-oriented serving without faults
+/// keeps the thread-per-replica path in `main.rs`.
+pub struct Fleet {
+    replicas: Vec<Supervised>,
+    router: Router,
+    cfg: FleetCfg,
+    now: u64,
+    pending: VecDeque<Pending>,
+    meta: BTreeMap<RequestId, Meta>,
+    failures: Vec<Response>,
+    submitted: u64,
+    retried: u64,
+    failed_over: u64,
+    cancelled_deadline: u64,
+    route_refusals: u64,
+}
+
+impl Fleet {
+    pub fn new(scheds: Vec<Scheduler>, policy: RoutingPolicy, cfg: FleetCfg) -> Fleet {
+        let n = scheds.len();
+        Fleet {
+            replicas: scheds
+                .into_iter()
+                .enumerate()
+                .map(|(id, sched)| Supervised {
+                    id,
+                    sched,
+                    breaker: Breaker::Closed,
+                    consec_failures: 0,
+                    crashed: false,
+                })
+                .collect(),
+            router: Router::new(policy, n),
+            cfg,
+            now: 0,
+            pending: VecDeque::new(),
+            meta: BTreeMap::new(),
+            failures: Vec::new(),
+            submitted: 0,
+            retried: 0,
+            failed_over: 0,
+            cancelled_deadline: 0,
+            route_refusals: 0,
+        }
+    }
+
+    pub fn submit(&mut self, req: Request) {
+        self.submitted += 1;
+        self.meta.insert(
+            req.id,
+            Meta {
+                retries: 0,
+                submitted_at: self.now,
+                ttft_deadline: req.params.ttft_deadline,
+                total_deadline: req.params.total_deadline,
+                done: false,
+            },
+        );
+        self.pending.push_back(Pending { req, not_before: 0 });
+    }
+
+    pub fn has_work(&self) -> bool {
+        !self.pending.is_empty() || self.replicas.iter().any(|s| s.sched.has_work())
+    }
+
+    /// All-refuse routing outcomes that were requeued with backoff.
+    pub fn route_refusals(&self) -> u64 {
+        self.route_refusals
+    }
+
+    /// Replica breaker states (telemetry / tests).
+    pub fn breaker_states(&self) -> Vec<Breaker> {
+        self.replicas.iter().map(|s| s.breaker).collect()
+    }
+
+    /// KV audit over every replica (chaos soaks): the accountant's
+    /// structural invariants always hold; with `expect_empty` — a
+    /// drained fleet — every block must be back in the pool (leaks on
+    /// any recovery path fail here).
+    pub fn audit_kv(&self, expect_empty: bool) -> Result<()> {
+        for sup in &self.replicas {
+            let kv = &sup.sched.kv;
+            if let Err(e) = kv.check_invariants() {
+                crate::bail!("replica {} KV invariants broken: {e}", sup.id);
+            }
+            if expect_empty {
+                ensure!(
+                    kv.free_blocks() == kv.total_blocks(),
+                    "replica {} leaked {} block(s)",
+                    sup.id,
+                    kv.total_blocks() - kv.free_blocks()
+                );
+            }
+        }
+        Ok(())
+    }
+
+    fn record_terminal(&mut self, resp: Response) {
+        if let Some(m) = self.meta.get_mut(&resp.id) {
+            m.done = true;
+        }
+        self.failures.push(resp);
+    }
+
+    /// Cancel `id` wherever it lives (fleet queue, replica queue, live
+    /// slot — rc-correct). Returns whether anything was cancelled.
+    fn cancel_anywhere(&mut self, id: RequestId) -> Result<bool> {
+        if let Some(i) = self.pending.iter().position(|p| p.req.id == id) {
+            self.pending.remove(i);
+            return Ok(true);
+        }
+        for sup in &mut self.replicas {
+            if sup.sched.cancel(id)? {
+                return Ok(true);
+            }
+        }
+        Ok(false)
+    }
+
+    /// Cancel `id` only if it is still queued (TTFT deadlines: a live
+    /// slot already produced its first token at prefill).
+    fn cancel_queued(&mut self, id: RequestId) -> bool {
+        if let Some(i) = self.pending.iter().position(|p| p.req.id == id) {
+            self.pending.remove(i);
+            return true;
+        }
+        self.replicas.iter_mut().any(|sup| sup.sched.batcher.remove(id).is_some())
+    }
+
+    fn sweep_deadlines(&mut self) -> Result<()> {
+        let now = self.now;
+        let expired: Vec<(RequestId, &'static str)> = self
+            .meta
+            .iter()
+            .filter(|(_, m)| !m.done)
+            .filter_map(|(&id, m)| {
+                let age = now.saturating_sub(m.submitted_at);
+                if m.total_deadline.is_some_and(|d| age > d) {
+                    Some((id, "total"))
+                } else if m.ttft_deadline.is_some_and(|d| age > d) {
+                    Some((id, "ttft"))
+                } else {
+                    None
+                }
+            })
+            .collect();
+        for (id, kind) in expired {
+            let cancelled = if kind == "total" {
+                self.cancel_anywhere(id)?
+            } else {
+                self.cancel_queued(id)
+            };
+            if cancelled {
+                self.cancelled_deadline += 1;
+                self.record_terminal(Response::failure(
+                    id,
+                    FinishReason::DeadlineExceeded,
+                    format!("{kind} deadline exceeded at tick {now}"),
+                ));
+            }
+            // not found anywhere queued/live → already terminal (or, for
+            // ttft, already past its first token): nothing to cancel
+        }
+        Ok(())
+    }
+
+    /// One round of fleet virtual time: deadline sweep → dispatch due
+    /// pending requests → step every healthy replica, applying the
+    /// supervision policy to each outcome.
+    pub fn tick(&mut self) -> Result<()> {
+        self.now += 1;
+        // breaker cooldowns elapse at the top of the tick
+        for sup in &mut self.replicas {
+            if let Breaker::Open { until } = sup.breaker {
+                if until <= self.now {
+                    sup.breaker = Breaker::HalfOpen;
+                }
+            }
+        }
+        self.sweep_deadlines()?;
+        // dispatch: route everything whose backoff has elapsed
+        if !self.pending.is_empty() && self.replicas.iter().all(|s| s.crashed) {
+            // nobody left to run anything: terminal-fail the backlog
+            // rather than spinning to max_ticks
+            let backlog: Vec<Pending> = self.pending.drain(..).collect();
+            for p in backlog {
+                self.record_terminal(Response::failure(
+                    p.req.id,
+                    FinishReason::Failed,
+                    "no healthy replicas: entire fleet is down",
+                ));
+            }
+        }
+        let mut waiting = VecDeque::new();
+        while let Some(p) = self.pending.pop_front() {
+            if p.not_before > self.now {
+                waiting.push_back(p);
+                continue;
+            }
+            match self.router.route(&mut self.replicas, &p.req) {
+                Ok(_) => {}
+                Err(RouteError::NoReplicas | RouteError::AllRefused) => {
+                    // typed route error → requeue with backoff, never drop
+                    self.route_refusals += 1;
+                    waiting.push_back(Pending {
+                        req: p.req,
+                        not_before: self.now + self.cfg.backoff_base.max(1),
+                    });
+                }
+            }
+        }
+        self.pending = waiting;
+        // drive the fleet one scheduler tick each
+        for i in 0..self.replicas.len() {
+            let sup = &mut self.replicas[i];
+            if sup.crashed
+                || matches!(sup.breaker, Breaker::Open { .. })
+                || !sup.sched.has_work()
+            {
+                continue;
+            }
+            match sup.sched.tick() {
+                Ok(done) => {
+                    sup.consec_failures = 0;
+                    sup.breaker = Breaker::Closed;
+                    for resp in done {
+                        if let Some(m) = self.meta.get_mut(&resp.id) {
+                            m.done = true;
+                        }
+                    }
+                }
+                Err(e) => {
+                    let msg = format!("{e:#}");
+                    if is_crash(&msg) {
+                        // permanent: fail the whole replica over. Its
+                        // engine was already drained by the errored tick;
+                        // drain() scoops the queue too.
+                        sup.crashed = true;
+                        sup.breaker = Breaker::Open { until: u64::MAX };
+                        let orphans = sup.sched.drain()?;
+                        self.failed_over += orphans.len() as u64;
+                        for req in orphans {
+                            self.pending.push_back(Pending { req, not_before: self.now + 1 });
+                        }
+                    } else {
+                        // transient: trip the breaker after consecutive
+                        // failures and pull the work off the wounded
+                        // replica — each drained request is billed one
+                        // retry (poison-pill requests must exhaust their
+                        // budget, not loop forever) and backs off
+                        // exponentially before re-routing
+                        sup.consec_failures += 1;
+                        if sup.consec_failures >= self.cfg.breaker_threshold
+                            || matches!(sup.breaker, Breaker::HalfOpen)
+                        {
+                            sup.breaker =
+                                Breaker::Open { until: self.now + self.cfg.breaker_cooldown };
+                        }
+                        let drained = sup.sched.drain()?;
+                        for req in drained {
+                            let Some(m) = self.meta.get_mut(&req.id) else { continue };
+                            m.retries += 1;
+                            if m.retries > self.cfg.max_retries {
+                                let retries = m.retries;
+                                self.record_terminal(Response::failure(
+                                    req.id,
+                                    FinishReason::Failed,
+                                    format!(
+                                        "retry budget exhausted after {retries} attempts \
+                                         (last error: {msg})"
+                                    ),
+                                ));
+                            } else {
+                                self.retried += 1;
+                                let backoff =
+                                    self.cfg.backoff_base.max(1).saturating_pow(m.retries);
+                                self.pending
+                                    .push_back(Pending { req, not_before: self.now + backoff });
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Drive to completion and aggregate the report. Every submitted
+    /// request is guaranteed a terminal response.
+    pub fn run_to_completion(mut self) -> Result<FleetReport> {
+        let t0 = Instant::now();
+        while self.has_work() {
+            ensure!(
+                self.now < self.cfg.max_ticks,
+                "fleet made no progress within {} ticks (fault spec too hostile?)",
+                self.cfg.max_ticks
+            );
+            self.tick()?;
+        }
+        let wall_s = t0.elapsed().as_secs_f64();
+        let mut report = FleetReport {
+            submitted: self.submitted,
+            retried: self.retried,
+            failed_over: self.failed_over,
+            cancelled_deadline: self.cancelled_deadline,
+            ticks: self.now,
+            wall_s,
+            responses: self.failures,
+            ..FleetReport::default()
+        };
+        for sup in self.replicas {
+            let rep = sup.sched.into_report(wall_s);
+            report.injected += rep.injected;
+            report.degraded_fallbacks += rep.degraded_fallbacks;
+            report.responses.extend(rep.responses.iter().cloned());
+            report.replicas.push(rep);
+        }
+        report.responses.sort_by_key(|r| r.id);
+        for r in &report.responses {
+            match r.finish {
+                FinishReason::MaxTokens | FinishReason::StopToken => report.served += 1,
+                FinishReason::DeadlineExceeded => {}
+                FinishReason::Failed | FinishReason::Rejected => report.failed += 1,
+            }
+        }
+        report.dropped = report
+            .submitted
+            .saturating_sub(report.served + report.failed + report.cancelled_deadline);
+        let buckets = self.cfg.max_retries as usize + 2;
+        report.retries_hist = vec![0; buckets];
+        for m in self.meta.values() {
+            report.retries_hist[(m.retries as usize).min(buckets - 1)] += 1;
+        }
+        Ok(report)
     }
 }
 
@@ -206,12 +727,20 @@ mod tests {
     }
 
     #[test]
-    fn all_refuse_returns_none() {
+    fn all_refuse_is_typed_error_not_a_drop() {
         let mut r = Router::new(RoutingPolicy::LeastLoaded, 2);
         let mut reps = mocks(&[0.0, 0.0]);
         reps[0].cap = 0;
         reps[1].cap = 0;
-        assert!(r.route(&mut reps, &req(1)).is_none());
+        // the caller keeps the request (route borrows it) and receives a
+        // typed error it must requeue on — see the fleet chaos tests for
+        // the requeue-with-backoff assertion end to end
+        let request = req(1);
+        assert_eq!(r.route(&mut reps, &request).unwrap_err(), RouteError::AllRefused);
+        assert_eq!(request.id, 1, "request must survive an all-refuse outcome");
+        let none: [Mock; 0] = [];
+        let mut empty = none;
+        assert_eq!(r.route(&mut empty, &request).unwrap_err(), RouteError::NoReplicas);
     }
 
     #[test]

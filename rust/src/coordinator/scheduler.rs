@@ -2,7 +2,15 @@
 //! the serving loop. One `tick()` = admit what fits, prefill admissions,
 //! advance the decode batch one token, release finished sequences and
 //! requeue preempted ones.
+//!
+//! Failure discipline (ISSUE 7): a request only ever leaves the
+//! scheduler through a [`Response`] — successful, or a typed terminal
+//! failure — never by silently vanishing. An errored `tick()` drains
+//! every in-flight slot back into the queue with its physical and
+//! logical KV released, so `check_invariants` / `audit` stay clean on
+//! the error path and a supervisor can re-drive or fail over the queue.
 
+use crate::attn::guard::is_nonfinite_err;
 use crate::util::error::{bail, Result};
 
 use crate::metrics::LatencyStats;
@@ -10,15 +18,17 @@ use crate::metrics::LatencyStats;
 use super::batcher::Batcher;
 use super::engine::Engine;
 use super::kv_cache::KvCacheManager;
-use super::request::{Request, Response};
+use super::request::{FinishReason, Request, RequestId, Response};
 
 /// Serving telemetry for one run.
 #[derive(Debug, Default)]
 pub struct SchedulerReport {
     pub responses: Vec<Response>,
+    /// TTFT over *successful* responses only — failed or cancelled
+    /// attempts would pollute the latency stats with zeros/partials.
     pub ttft: LatencyStats,
-    /// TPOT over multi-token responses only (single-token responses have
-    /// no inter-token interval and report `tpot_ms: None`).
+    /// TPOT over successful multi-token responses only (single-token
+    /// responses have no inter-token interval and report `tpot_ms: None`).
     pub tpot: LatencyStats,
     pub e2e: LatencyStats,
     pub wall_s: f64,
@@ -26,9 +36,9 @@ pub struct SchedulerReport {
     /// Requests preempted for KV blocks and requeued (native backend's
     /// recompute-on-resume policy).
     pub preemptions: u64,
-    /// Admissions bounced by the engine (no slot after all, or a stale
-    /// prefix-cache credit) and requeued with their blocks released —
-    /// never silently dropped.
+    /// Admissions bounced by the engine (no slot after all, a stale
+    /// prefix-cache credit, or an injected OutOfBlocks) and requeued
+    /// with their blocks released — never silently dropped.
     pub requeued: u64,
     /// Responses whose TPOT was undefined (single-token).
     pub tpot_undefined: u64,
@@ -42,6 +52,22 @@ pub struct SchedulerReport {
     pub cache_evictions: u64,
     /// Blocks privately copied by the copy-on-write barrier.
     pub cow_copies: u64,
+    /// Terminal failures ([`FinishReason::Failed`] / `Rejected`) —
+    /// requests that left through a typed failure response.
+    pub failed: u64,
+    /// Requests cancelled by a TTFT/total deadline.
+    pub cancelled_deadline: u64,
+    /// Numeric-guard trips retried on the fp attention path.
+    pub degraded_fallbacks: u64,
+    /// Faults injected into this replica (fault plane active).
+    pub injected: u64,
+    /// Step errors retried by the fleet supervisor (fleet runs only).
+    pub retried: u64,
+    /// Requests re-routed off a crashed replica (fleet runs only).
+    pub failed_over: u64,
+    /// Requests dropped without any response — must stay 0; counted by
+    /// the fleet's terminal accounting (`served + failed == submitted`).
+    pub dropped: u64,
 }
 
 impl SchedulerReport {
@@ -60,6 +86,16 @@ impl SchedulerReport {
         } else {
             self.prefix_hits as f64 / self.prefix_lookups as f64
         }
+    }
+
+    /// Successful responses (the complement of `failed + cancelled`).
+    pub fn served(&self) -> u64 {
+        self.responses
+            .iter()
+            .filter(|r| {
+                matches!(r.finish, FinishReason::MaxTokens | FinishReason::StopToken)
+            })
+            .count() as u64
     }
 }
 
@@ -84,58 +120,75 @@ impl Scheduler {
         !self.batcher.is_empty() || self.engine.live_slots() > 0
     }
 
-    /// One scheduling round. Returns responses that finished this tick.
+    /// One scheduling round. Returns responses that finished this tick
+    /// (successes *and* typed terminal failures).
     pub fn tick(&mut self) -> Result<Vec<Response>> {
         // 1. admission: fill free decode slots from the queue, gated by
         //    slot availability and KV capacity under the backend's
         //    reservation discipline
         let mode = self.engine.reserve_mode();
         let free = self.engine.free_slots();
+        let mut failures: Vec<Response> = Vec::new();
+        let mut bounced = false;
         if free > 0 && !self.batcher.is_empty() {
             let mut admitted =
                 self.batcher.admit_gated(free, &mut self.kv, mode, &mut self.engine)?;
-            let mut placed = 0;
-            let mut admit_err = None;
-            while placed < admitted.len() {
-                match self.engine.add_request(&admitted[placed], &mut self.kv) {
-                    Ok(true) => placed += 1,
+            let mut iter = admitted.drain(..);
+            while let Some(req) = iter.next() {
+                match self.engine.add_request(&req, &mut self.kv) {
+                    Ok(true) => {}
                     Ok(false) => {
                         // the engine bounced an admission the batcher had
-                        // already reserved blocks for (the release-builds
-                        // failure mode behind the old debug_assert!)
+                        // already reserved blocks for (full after all, a
+                        // stale prefix-cache credit, or an injected OOM):
+                        // release + requeue it and everything behind it,
+                        // head-first in original order — dropping any of
+                        // these would leak their blocks forever
+                        bounced = true;
                         self.report.requeued += 1;
+                        let rest: Vec<Request> = std::iter::once(req).chain(iter).collect();
+                        for r in rest.into_iter().rev() {
+                            let _ = self.kv.release(r.id);
+                            self.batcher.push_front(r);
+                        }
                         break;
                     }
                     Err(e) => {
-                        admit_err = Some(e);
-                        break;
+                        // the backend left no physical residue; drop the
+                        // logical reservation before deciding the fate
+                        let _ = self.kv.release(req.id);
+                        let msg = format!("{e:#}");
+                        if is_nonfinite_err(&msg) && !req.degraded {
+                            // quantized-plan blow-up at prefill: retry
+                            // this request on the fp attention path
+                            let mut retry = req;
+                            retry.degraded = true;
+                            self.report.degraded_fallbacks += 1;
+                            bounced = true; // suppress the stall bail
+                            self.batcher.push_front(retry);
+                        } else {
+                            // unservable (bad prompt, over budget, fp
+                            // path still non-finite): typed failure, keep
+                            // serving the rest of the batch
+                            failures.push(Response::failure(
+                                req.id,
+                                FinishReason::Failed,
+                                msg,
+                            ));
+                        }
                     }
                 }
-            }
-            // everything not placed still holds its reservation: release
-            // it and requeue at the head in original order — dropping any
-            // of these would leak their blocks forever. A hard-errored
-            // request is unservable (bad prompt, over budget): drop it
-            // with its blocks released and surface the error.
-            let mut not_placed = admitted.split_off(placed);
-            if admit_err.is_some() && !not_placed.is_empty() {
-                let failed = not_placed.remove(0);
-                let _ = self.kv.release(failed.id);
-            }
-            for req in not_placed.into_iter().rev() {
-                let _ = self.kv.release(req.id);
-                self.batcher.push_front(req);
-            }
-            if let Some(e) = admit_err {
-                return Err(e);
             }
         }
         // stall detection: the engine is idle, every resident sequence
         // (if any) belongs to the backend's reclaimable prefix cache,
         // and the queue head still did not fit — admission already tried
         // evicting that cache, so this can never change; fail loudly
-        // instead of spinning forever
-        if self.engine.live_slots() == 0
+        // instead of spinning forever. Skipped on any bounced/degraded
+        // requeue this tick: those heads *can* be admitted later.
+        if !bounced
+            && failures.is_empty()
+            && self.engine.live_slots() == 0
             && !self.batcher.is_empty()
             && self.kv.live_sequences() == self.engine.cached_sequences()
         {
@@ -147,39 +200,105 @@ impl Scheduler {
             );
         }
         // 2. decode step for the live batch
-        let outcome = self.engine.step(&mut self.kv)?;
+        let outcome = match self.engine.step(&mut self.kv) {
+            Ok(o) => o,
+            Err(e) => {
+                // drain every in-flight slot back into the queue with its
+                // physical AND logical KV released: the error path leaves
+                // the accountant/audit clean and loses no request
+                let drained = self.engine.drain(&mut self.kv)?;
+                for req in drained.into_iter().rev() {
+                    self.batcher.push_front(req);
+                }
+                for resp in failures {
+                    self.record_failure(resp);
+                }
+                return Err(e);
+            }
+        };
         // 3. requeue preempted requests at the head (their logical and
-        //    physical blocks were released inside the step)
+        //    physical blocks were released inside the step), and
+        //    numeric-guard evictions flagged for the fp path
         for req in outcome.preempted {
             self.report.preemptions += 1;
             self.batcher.push_front(req);
         }
+        for req in outcome.degraded {
+            self.report.degraded_fallbacks += 1;
+            self.batcher.push_front(req);
+        }
         // 4. release finished sequences' logical KV blocks (backends
         //    reclaim the physical side themselves)
-        let done = outcome.finished;
+        let mut done = outcome.finished;
         for resp in &done {
             let _ = self.kv.release(resp.id);
-            self.report.ttft.record(std::time::Duration::from_micros(
-                (resp.ttft_ms * 1000.0) as u64,
-            ));
-            match resp.tpot_ms {
-                Some(tpot) => self.report.tpot.record(std::time::Duration::from_micros(
-                    (tpot.max(0.0) * 1000.0) as u64,
-                )),
-                None => self.report.tpot_undefined += 1,
-            }
-            self.report.e2e.record(std::time::Duration::from_micros(
-                (resp.e2e_ms * 1000.0) as u64,
-            ));
-            self.report.tokens_out += resp.tokens.len() as u64;
+        }
+        done.extend(failures);
+        for resp in &done {
+            self.record_response(resp);
         }
         self.report.responses.extend(done.iter().cloned());
         Ok(done)
     }
 
-    /// Copy the engine's cumulative prefix-cache / CoW counters into the
-    /// report (they live engine-side because the hits happen inside
-    /// `add_request` / `step`).
+    /// Record telemetry for one terminal response. Latency stats cover
+    /// successful attempts only — failure/cancellation responses carry
+    /// no meaningful latency and would skew the percentiles.
+    fn record_response(&mut self, resp: &Response) {
+        match resp.finish {
+            FinishReason::MaxTokens | FinishReason::StopToken => {
+                self.report.ttft.record(std::time::Duration::from_micros(
+                    (resp.ttft_ms * 1000.0) as u64,
+                ));
+                match resp.tpot_ms {
+                    Some(tpot) => self.report.tpot.record(
+                        std::time::Duration::from_micros((tpot.max(0.0) * 1000.0) as u64),
+                    ),
+                    None => self.report.tpot_undefined += 1,
+                }
+                self.report.e2e.record(std::time::Duration::from_micros(
+                    (resp.e2e_ms * 1000.0) as u64,
+                ));
+                self.report.tokens_out += resp.tokens.len() as u64;
+            }
+            FinishReason::DeadlineExceeded => self.report.cancelled_deadline += 1,
+            FinishReason::Failed | FinishReason::Rejected => self.report.failed += 1,
+        }
+    }
+
+    /// Record a terminal failure produced outside `tick` (deadline
+    /// sweeps, retry-budget exhaustion at the fleet level).
+    pub fn record_failure(&mut self, resp: Response) {
+        self.record_response(&resp);
+        self.report.responses.push(resp);
+    }
+
+    /// Cancel one request wherever it lives: a queued copy is removed
+    /// (queued requests hold no KV), a live slot is cancelled with its
+    /// physical then logical KV released (audit-clean). Returns whether
+    /// anything was cancelled.
+    pub fn cancel(&mut self, id: RequestId) -> Result<bool> {
+        if self.batcher.remove(id).is_some() {
+            return Ok(true);
+        }
+        if self.engine.cancel(id, &mut self.kv)? {
+            let _ = self.kv.release(id);
+            return Ok(true);
+        }
+        Ok(false)
+    }
+
+    /// Evict everything — live slots (KV released) and the queue — for
+    /// crash failover: the returned requests are ready to re-route.
+    pub fn drain(&mut self) -> Result<Vec<Request>> {
+        let mut out = self.engine.drain(&mut self.kv)?;
+        out.extend(self.batcher.drain_all());
+        Ok(out)
+    }
+
+    /// Copy the engine's cumulative prefix-cache / CoW / fault counters
+    /// into the report (they live engine-side because the hits happen
+    /// inside `add_request` / `step`).
     fn absorb_engine_stats(&mut self) {
         let s = self.engine.stats();
         self.report.prefix_lookups = s.prefix_lookups;
@@ -187,6 +306,9 @@ impl Scheduler {
         self.report.prefill_tokens_saved = s.prefill_tokens_saved;
         self.report.cache_evictions = s.cache_evictions;
         self.report.cow_copies = s.cow_copies;
+        if let Some(f) = self.engine.fault_stats() {
+            self.report.injected = f.total();
+        }
     }
 
     /// Drive to completion and return the report.

@@ -5,7 +5,12 @@
 //!   serve [--plan sage] [...]     run the serving coordinator on a
 //!                                 synthetic workload and print telemetry;
 //!                                 --replicas N --route rr|least|power2
-//!                                 drives a routed multi-replica fleet
+//!                                 drives a routed multi-replica fleet;
+//!                                 --faults SPEC interposes the deterministic
+//!                                 fault plane and drives a supervised fleet
+//!                                 (breakers, retries, crash failover)
+//!   chaos [--faults SPEC] [...]   deterministic chaos soak: same seed →
+//!                                 identical fault schedule and responses
 //!   calibrate [--out plan.json]   §4.5 adaptive-quantization calibration
 //!   accuracy [--profile P]        kernel accuracy vs full precision
 //!   speed [--device 4090]         cost-model kernel speed sweep
@@ -32,14 +37,15 @@ use sageattention::attn::{
 };
 use sageattention::bench::{bench, bench_budget, f2, pct, sci, Sample, Table};
 use sageattention::coordinator::{
-    BatchPolicy, Batcher, DecodeMode, Engine, EngineBackend, EngineReplica, GenParams,
-    KvCacheManager, NativeEngine, Request, Router, RoutingPolicy, Scheduler, SchedulerReport,
+    BatchPolicy, Batcher, DecodeMode, Engine, EngineBackend, EngineReplica, Fleet, FleetCfg,
+    FleetReport, GenParams, KvCacheManager, NativeEngine, Request, Router, RoutingPolicy,
+    Scheduler, SchedulerReport,
 };
 use sageattention::metrics::{accuracy, attention_ops, LatencyStats};
 use sageattention::perfmodel::{predict_tops, AttnKernel, DeviceSpec, Workpoint};
 use sageattention::quant::Granularity;
 use sageattention::runtime::{ModelCfg, Runtime, Value};
-use sageattention::synth::{make_qkv, Corpus, Profile, WorkloadGen};
+use sageattention::synth::{make_qkv, Corpus, FaultSpec, Profile, WorkloadGen};
 use sageattention::tensor::{default_threads, parallel_map, parallel_map_with, Tensor};
 use sageattention::util::error::{ensure, Context, Result};
 use sageattention::util::json::Json;
@@ -55,8 +61,17 @@ subcommands:
   serve          [--backend pjrt|native] [--config C] [--plan P] [--requests N]
                  [--seed S] [--slots N] [--kv-blocks N] [--replicas N]
                  [--route rr|least|power2] [--prefix-cache] [--workload mixed|shared]
+                 [--faults SPEC] [--ttft-deadline T] [--total-deadline T]
                  (--prefix-cache: radix prefix cache + CoW forking, native only;
-                  --workload shared: every prompt opens with one system prompt)
+                  --workload shared: every prompt opens with one system prompt;
+                  --faults: deterministic fault plane + supervised fleet, native
+                  only — SPEC is e.g. step_err:0.01,crash:r1@t200,slow:5ms:0.05,
+                  oom:0.02,poison:0.001; deadlines are in virtual ticks)
+  chaos          [--config C] [--plan P] [--requests N] [--seed S] [--replicas N]
+                 [--slots N] [--kv-blocks N] [--route rr|least|power2]
+                 [--faults SPEC] [--ttft-deadline T] [--total-deadline T]
+                 deterministic chaos soak: runs the faulted fleet twice with the
+                 same seed and asserts identical fault schedules and responses
   calibrate      [--layers N] [--profile P] [--out FILE] [--seed S]
   accuracy       [--profile P] [--seq N] [--headdim D] [--kernel NAME]
   speed          [--device 4090|3090] [--headdim D] [--causal]
@@ -96,6 +111,22 @@ fn main() {
             "route",
             "prefix-cache",
             "workload",
+            "faults",
+            "ttft-deadline",
+            "total-deadline",
+        ],
+        "chaos" => &[
+            "config",
+            "plan",
+            "requests",
+            "seed",
+            "slots",
+            "kv-blocks",
+            "replicas",
+            "route",
+            "faults",
+            "ttft-deadline",
+            "total-deadline",
         ],
         "calibrate" => &["layers", "profile", "out", "seed"],
         "accuracy" => &["profile", "seq", "headdim", "kernel"],
@@ -143,6 +174,7 @@ fn main() {
     let result = match cmd.as_str() {
         "smoke" => smoke(&flags),
         "serve" => serve(&flags),
+        "chaos" => chaos(&flags),
         "calibrate" => calibrate(&flags),
         "accuracy" => accuracy_cmd(&flags),
         "speed" => speed(&flags),
@@ -347,6 +379,48 @@ fn serve(flags: &HashMap<String, String>) -> Result<()> {
         blocks
     });
 
+    // --faults switches to the supervised single-threaded fleet driver
+    // (virtual time: breaker cooldowns / backoff / deadlines replay
+    // deterministically from --seed); deadlines are virtual-tick-based
+    // and only meaningful there
+    let faults = parse_faults_flag(flags);
+    let deadlines = parse_deadline_flags(flags);
+    if faults.is_none() && (deadlines.0.is_some() || deadlines.1.is_some()) {
+        usage_error("--ttft-deadline/--total-deadline require --faults (virtual-tick fleet)");
+    }
+    if let Some(spec) = faults {
+        if backend != "native" {
+            usage_error("--faults requires --backend native (deterministic offline fleet)");
+        }
+        if prefix_cache {
+            usage_error("--faults with --prefix-cache is not supported yet");
+        }
+        let slots: usize = parsed_flag(flags, "slots", "4");
+        if slots == 0 {
+            usage_error("--slots must be non-zero");
+        }
+        let report = run_faulted_fleet(
+            config,
+            plan,
+            n_req,
+            seed,
+            replicas,
+            slots,
+            kv_blocks,
+            &spec,
+            policy,
+            deadlines,
+            FleetCfg::default(),
+        )?;
+        print_fleet_report(&report, &spec, policy);
+        ensure!(
+            report.fully_accounted(),
+            "fleet dropped {} request(s) without a terminal response",
+            report.dropped
+        );
+        return Ok(());
+    }
+
     // all replicas share one seed: a fleet serves replicas of one model
     let mut engines = Vec::with_capacity(replicas);
     let (vocab, max_seq) = match backend {
@@ -433,7 +507,7 @@ fn serve(flags: &HashMap<String, String>) -> Result<()> {
             r.prompt,
             GenParams { max_new_tokens: r.max_new_tokens, ..Default::default() },
         );
-        ensure!(router.route(&mut reps, &req).is_some(), "no replica accepted request {i}");
+        ensure!(router.route(&mut reps, &req).is_ok(), "no replica accepted request {i}");
     }
 
     // drive every replica on its own thread, as a real fleet would —
@@ -520,6 +594,237 @@ fn serve(flags: &HashMap<String, String>) -> Result<()> {
         );
     }
     ensure!(total_resp == n_req, "fleet served {total_resp} of {n_req} routed requests");
+    Ok(())
+}
+
+/// Parse `--faults SPEC` (CLI misuse exits 2); `None` when absent or empty.
+fn parse_faults_flag(flags: &HashMap<String, String>) -> Option<FaultSpec> {
+    let raw = flags.get("faults")?;
+    match FaultSpec::parse(raw) {
+        Ok(spec) if spec.is_empty() => None,
+        Ok(spec) => Some(spec),
+        Err(e) => usage_error(&format!("invalid --faults spec: {e:#}")),
+    }
+}
+
+/// Parse the virtual-tick deadline flags: (ttft, total).
+fn parse_deadline_flags(flags: &HashMap<String, String>) -> (Option<u64>, Option<u64>) {
+    let get = |key: &str| -> Option<u64> {
+        flags.get(key).map(|_| {
+            let t: u64 = parsed_flag(flags, key, "0");
+            if t == 0 {
+                usage_error(&format!("--{key} must be non-zero (virtual ticks)"));
+            }
+            t
+        })
+    };
+    (get("ttft-deadline"), get("total-deadline"))
+}
+
+/// Build a supervised native fleet with the fault plane interposed on
+/// every replica, submit the standard synthetic workload, and drive it
+/// to completion in virtual time. Fully deterministic for a given
+/// (config, plan, seed, spec, workload) — the chaos soak replays it.
+#[allow(clippy::too_many_arguments)]
+fn run_faulted_fleet(
+    config: &str,
+    plan: &str,
+    n_req: usize,
+    seed: u64,
+    replicas: usize,
+    slots: usize,
+    kv_blocks: Option<usize>,
+    spec: &FaultSpec,
+    policy: RoutingPolicy,
+    (ttft_deadline, total_deadline): (Option<u64>, Option<u64>),
+    fleet_cfg: FleetCfg,
+) -> Result<FleetReport> {
+    let cfg = ModelCfg::builtin(config)
+        .with_context(|| format!("'{config}' is not a built-in config (tiny|small)"))?;
+    let mut scheds = Vec::with_capacity(replicas);
+    for i in 0..replicas {
+        let engine =
+            Engine::native_with(cfg.clone(), plan, seed, slots)?.faulted(spec.clone(), seed, i);
+        let default_blocks = slots * cfg.max_seq.div_ceil(PAGE_ROWS);
+        let kv = KvCacheManager::new(kv_blocks.unwrap_or(default_blocks), PAGE_ROWS);
+        scheds.push(Scheduler::new(Batcher::new(BatchPolicy::Fifo), kv, engine));
+    }
+    let sizes = scheds[0].engine.prefill_sizes();
+    let mut fleet = Fleet::new(scheds, policy, fleet_cfg);
+    let max_new = 16;
+    let mut gen = WorkloadGen::new(seed, cfg.vocab, 50.0, sizes, max_new);
+    for (i, r) in gen.generate(n_req).into_iter().enumerate() {
+        fleet.submit(Request::new(
+            i as u64,
+            r.prompt,
+            GenParams {
+                max_new_tokens: r.max_new_tokens,
+                ttft_deadline,
+                total_deadline,
+                ..Default::default()
+            },
+        ));
+    }
+    fleet.run_to_completion()
+}
+
+/// Print the fleet's fault-tolerance telemetry (per-replica table,
+/// terminal accounting, injected/recovery counters, retries histogram).
+fn print_fleet_report(rep: &FleetReport, spec: &FaultSpec, policy: RoutingPolicy) {
+    let mut t =
+        Table::new(&["replica", "served", "tokens", "injected", "degraded", "preempt"]);
+    for (i, r) in rep.replicas.iter().enumerate() {
+        t.row(&[
+            i.to_string(),
+            r.served().to_string(),
+            r.tokens_out.to_string(),
+            r.injected.to_string(),
+            r.degraded_fallbacks.to_string(),
+            r.preemptions.to_string(),
+        ]);
+    }
+    t.print(&format!(
+        "fleet under faults '{}' ('{}' routing)",
+        spec.summary(),
+        policy.name()
+    ));
+    println!(
+        "\nsubmitted {} | served {} | failed {} | deadline-cancelled {} | dropped {}",
+        rep.submitted, rep.served, rep.failed, rep.cancelled_deadline, rep.dropped
+    );
+    println!(
+        "injected {} | retried {} | failed-over {} | degraded fallbacks {}",
+        rep.injected, rep.retried, rep.failed_over, rep.degraded_fallbacks
+    );
+    // latency stats (replica-side) cover first-success attempts only;
+    // the histogram shows how many re-dispatches each request needed
+    let hist = rep
+        .retries_hist
+        .iter()
+        .enumerate()
+        .map(|(k, n)| {
+            if k + 1 == rep.retries_hist.len() {
+                format!("{k}+:{n}")
+            } else {
+                format!("{k}:{n}")
+            }
+        })
+        .collect::<Vec<_>>()
+        .join("  ");
+    println!("retries histogram (re-dispatches per request): {hist}");
+    println!(
+        "{} tokens over {} virtual ticks ({:.2}s wall); accounting {}",
+        rep.tokens_out(),
+        rep.ticks,
+        rep.wall_s,
+        if rep.fully_accounted() { "clean (served+failed+cancelled == submitted)" } else { "BROKEN" }
+    );
+}
+
+/// `sage chaos` — the deterministic chaos soak. Runs the faulted fleet
+/// twice with the identical seed + spec and asserts that the injected
+/// fault schedule and every terminal response replay bit-identically
+/// (ISSUE 7 acceptance), and that no run drops a request.
+fn chaos(flags: &HashMap<String, String>) -> Result<()> {
+    let config = flag(flags, "config", "tiny");
+    let plan = flag(flags, "plan", "sage");
+    let n_req: usize = parsed_flag(flags, "requests", "24");
+    let seed: u64 = parsed_flag(flags, "seed", "7");
+    let replicas: usize = parsed_flag(flags, "replicas", "2");
+    if replicas == 0 {
+        usage_error("--replicas must be non-zero");
+    }
+    let slots: usize = parsed_flag(flags, "slots", "4");
+    if slots == 0 {
+        usage_error("--slots must be non-zero");
+    }
+    let route = flag(flags, "route", "rr");
+    let policy = RoutingPolicy::by_name(route)
+        .unwrap_or_else(|| usage_error(&format!("unknown route '{route}' (rr|least|power2)")));
+    let kv_blocks: Option<usize> = flags.get("kv-blocks").map(|_| {
+        let blocks: usize = parsed_flag(flags, "kv-blocks", "0");
+        if blocks == 0 {
+            usage_error("--kv-blocks must be non-zero");
+        }
+        blocks
+    });
+    let deadlines = parse_deadline_flags(flags);
+    let spec = match parse_faults_flag(flags) {
+        Some(spec) => spec,
+        None => {
+            // default soak mix: transient step errors, admission bounces,
+            // occasional poisoned logits — plus a mid-run crash of the
+            // last replica when there is someone to fail over to
+            let mut s = String::from("step_err:0.02,oom:0.05,poison:0.01");
+            if replicas > 1 {
+                s.push_str(&format!(",crash:r{}@t40", replicas - 1));
+            }
+            FaultSpec::parse(&s).expect("default chaos spec parses")
+        }
+    };
+
+    println!(
+        "chaos soak: {n_req} requests, {replicas} replica(s), seed {seed}, \
+         faults '{}' — running twice\n",
+        spec.summary()
+    );
+    let run = || {
+        run_faulted_fleet(
+            config,
+            plan,
+            n_req,
+            seed,
+            replicas,
+            slots,
+            kv_blocks,
+            &spec,
+            policy,
+            deadlines,
+            FleetCfg::default(),
+        )
+    };
+    let a = run()?;
+    let b = run()?;
+    print_fleet_report(&a, &spec, policy);
+
+    // 1. identical injected-fault schedule, per replica and in total
+    let inj = |r: &FleetReport| -> Vec<u64> { r.replicas.iter().map(|s| s.injected).collect() };
+    ensure!(
+        inj(&a) == inj(&b),
+        "fault schedules diverged across replays: {:?} vs {:?}",
+        inj(&a),
+        inj(&b)
+    );
+    // 2. identical terminal responses (id, tokens, finish reason)
+    ensure!(
+        a.responses.len() == b.responses.len(),
+        "replay produced {} responses vs {}",
+        a.responses.len(),
+        b.responses.len()
+    );
+    for (ra, rb) in a.responses.iter().zip(&b.responses) {
+        ensure!(
+            ra.id == rb.id && ra.tokens == rb.tokens && ra.finish == rb.finish,
+            "response {} diverged across replays ({:?} vs {:?})",
+            ra.id,
+            ra.finish,
+            rb.finish
+        );
+    }
+    // 3. no silent drops in either run
+    for (name, r) in [("first", &a), ("second", &b)] {
+        ensure!(
+            r.fully_accounted(),
+            "{name} run dropped {} request(s) without a terminal response",
+            r.dropped
+        );
+    }
+    println!(
+        "\nchaos OK: two runs with seed {seed} replayed {} injected faults and \
+         {} terminal responses bit-identically",
+        a.injected,
+        a.responses.len()
+    );
     Ok(())
 }
 
@@ -875,6 +1180,23 @@ fn bench_hotpath(flags: &HashMap<String, String>) -> Result<()> {
          (8 requests, 128-token shared prefix)"
     );
 
+    // ---- faulted-serve lane: goodput of the supervised fleet under the
+    //      default mild fault mix, as a fraction of an unfaulted control
+    //      on the identical workload. Virtual-time fleet + seeded faults
+    //      → the fraction is deterministic (no timing dependence) ----
+    let (goodput_frac, faulted_rep) = faulted_serve_lane()?;
+    println!(
+        "\nfaulted-serve lane: {}/{} requests served under 'step_err:0.02,oom:0.05' \
+         (goodput {:.0}% of unfaulted tokens; {} injected, {} retried, {} degraded)",
+        faulted_rep.served,
+        faulted_rep.submitted,
+        goodput_frac * 100.0,
+        faulted_rep.injected,
+        faulted_rep.retried,
+        faulted_rep.degraded_fallbacks
+    );
+    println!("acceptance bar: goodput_under_faults_frac >= 0.90 (deterministic, seed 7)");
+
     // ---- dot-i8 microkernel lane: the §4.3 mma(s8.s8.s32) primitive,
     //      hardware SIMD tier vs forced scalar (GB/s of operand bytes;
     //      2 bytes per MAC). Measures the hardware's best tier directly
@@ -957,6 +1279,7 @@ fn bench_hotpath(flags: &HashMap<String, String>) -> Result<()> {
         ("prepared_decode_speedup", dec_speedup),
         ("serve_decode_speedup", serve_speedup),
         ("prefill_tokens_saved_frac", shared_frac),
+        ("goodput_under_faults_frac", goodput_frac),
     ];
     if let Some(r) = dot_ratio {
         ratios.push(("dot_i8_simd_over_scalar", r));
@@ -1032,6 +1355,50 @@ fn shared_prefix_lane() -> Result<(SchedulerReport, u64)> {
     let report = sched.run_to_completion()?;
     ensure!(report.responses.len() == n_req, "shared-prefix lane lost requests");
     Ok((report, (n_req * (prefix + suffix)) as u64))
+}
+
+/// Faulted-serve lane: useful output (tokens of successfully completed
+/// requests) of the supervised fleet under the default mild fault mix,
+/// as a fraction of an unfaulted control on the identical workload —
+/// both runs drive the same virtual-time fleet machinery, so the
+/// fraction measures what the recovery policy loses to terminal
+/// failures, deterministically (seeded faults, no timing dependence).
+fn faulted_serve_lane() -> Result<(f64, FleetReport)> {
+    let mild = FaultSpec::parse("step_err:0.02,oom:0.05").expect("lane spec parses");
+    let clean = FaultSpec::default();
+    // a roomier retry budget than the serving default: the lane measures
+    // goodput under sustained mild faults, not budget-exhaustion policy
+    let fleet_cfg = FleetCfg { max_retries: 5, ..FleetCfg::default() };
+    let run = |spec: &FaultSpec| {
+        run_faulted_fleet(
+            "tiny",
+            "sage",
+            16,
+            7,
+            2,
+            4,
+            None,
+            spec,
+            RoutingPolicy::RoundRobin,
+            (None, None),
+            fleet_cfg,
+        )
+    };
+    let control = run(&clean)?;
+    let faulted = run(&mild)?;
+    ensure!(
+        control.fully_accounted() && faulted.fully_accounted(),
+        "faulted-serve lane dropped requests (control {}, faulted {})",
+        control.dropped,
+        faulted.dropped
+    );
+    let good_tokens = |r: &FleetReport| -> f64 { r.tokens_out() as f64 };
+    let frac = if good_tokens(&control) > 0.0 {
+        good_tokens(&faulted) / good_tokens(&control)
+    } else {
+        0.0
+    };
+    Ok((frac, faulted))
 }
 
 /// The tab09 accuracy numbers (cosine similarity vs exact fp32 on
@@ -1165,6 +1532,7 @@ fn update_baseline(
                 ("serve_decode_speedup", Json::num(2.0)),
                 ("dot_i8_simd_over_scalar", Json::num(2.0)),
                 ("prefill_tokens_saved_frac", Json::num(0.5)),
+                ("goodput_under_faults_frac", Json::num(0.9)),
             ])
         });
     let acc_floors = existing

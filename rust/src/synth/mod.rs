@@ -9,6 +9,7 @@
 //!   lengths) for the serving benches.
 
 use crate::tensor::Tensor;
+use crate::util::error::{bail, ensure, Context, Error, Result};
 use crate::util::rng::Pcg32;
 
 /// Distribution profile mirroring `python/compile/kernels/synth.py`.
@@ -308,9 +309,165 @@ impl WorkloadGen {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Fault-spec grammar (the chaos plane's declarative input)
+// ---------------------------------------------------------------------------
+
+/// A scheduled whole-replica crash: replica `replica` dies permanently at
+/// its `step`-th engine step.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CrashPoint {
+    pub replica: usize,
+    pub step: u64,
+}
+
+/// Declarative fault mix for the deterministic chaos plane
+/// (`sage serve --faults <spec>` / `sage chaos`). Parsed from a
+/// comma-separated clause list:
+///
+/// ```text
+/// step_err:P        inject a step error with probability P per step
+/// slow:Xms:P        sleep X ms before a step with probability P
+/// oom:P             bounce an admission (spurious OutOfBlocks) with prob P
+/// poison:P          NaN-poison the next step's logits with probability P
+/// crash:rN@tM       replica N dies permanently at its M-th step
+/// ```
+///
+/// e.g. `step_err:0.01,crash:r1@t200,slow:5ms:0.05,oom:0.02,poison:0.001`.
+/// All probabilistic faults draw from one seeded stream per replica, so a
+/// given `--seed` replays the identical fault schedule.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct FaultSpec {
+    pub step_err: f32,
+    pub oom: f32,
+    pub poison: f32,
+    /// Injected latency spike: (delay in ms, probability per step).
+    pub slow_ms: f32,
+    pub slow_p: f32,
+    pub crashes: Vec<CrashPoint>,
+}
+
+impl FaultSpec {
+    pub fn parse(s: &str) -> Result<FaultSpec> {
+        let mut spec = FaultSpec::default();
+        let prob = |kind: &str, raw: &str| -> Result<f32> {
+            let p: f32 = raw
+                .parse()
+                .map_err(|_| Error::msg(format!("fault '{kind}': bad probability '{raw}'")))?;
+            ensure!((0.0..=1.0).contains(&p), "fault '{kind}': probability {p} not in [0,1]");
+            Ok(p)
+        };
+        for clause in s.split(',').map(str::trim).filter(|c| !c.is_empty()) {
+            let (kind, rest) = clause
+                .split_once(':')
+                .with_context(|| format!("fault clause '{clause}' missing ':'"))?;
+            match kind {
+                "step_err" => spec.step_err = prob(kind, rest)?,
+                "oom" => spec.oom = prob(kind, rest)?,
+                "poison" => spec.poison = prob(kind, rest)?,
+                "slow" => {
+                    let (ms, p) = rest.split_once(':').with_context(|| {
+                        format!("fault 'slow' wants slow:<X>ms:<P>, got '{clause}'")
+                    })?;
+                    let ms = ms.strip_suffix("ms").unwrap_or(ms);
+                    spec.slow_ms = ms
+                        .parse()
+                        .map_err(|_| Error::msg(format!("fault 'slow': bad delay '{ms}'")))?;
+                    ensure!(spec.slow_ms >= 0.0, "fault 'slow': negative delay");
+                    spec.slow_p = prob(kind, p)?;
+                }
+                "crash" => {
+                    let (r, t) = rest.split_once('@').with_context(|| {
+                        format!("fault 'crash' wants crash:rN@tM, got '{clause}'")
+                    })?;
+                    let replica = r
+                        .strip_prefix('r')
+                        .and_then(|n| n.parse().ok())
+                        .with_context(|| format!("fault 'crash': bad replica '{r}'"))?;
+                    let step = t
+                        .strip_prefix('t')
+                        .and_then(|n| n.parse().ok())
+                        .with_context(|| format!("fault 'crash': bad step '{t}'"))?;
+                    spec.crashes.push(CrashPoint { replica, step });
+                }
+                other => bail!(
+                    "unknown fault kind '{other}' \
+                     (expected step_err|slow|oom|poison|crash)"
+                ),
+            }
+        }
+        Ok(spec)
+    }
+
+    /// No fault would ever fire under this spec.
+    pub fn is_empty(&self) -> bool {
+        self.step_err == 0.0
+            && self.oom == 0.0
+            && self.poison == 0.0
+            && (self.slow_p == 0.0 || self.slow_ms == 0.0)
+            && self.crashes.is_empty()
+    }
+
+    /// One-line human summary for reports.
+    pub fn summary(&self) -> String {
+        let mut parts = Vec::new();
+        if self.step_err > 0.0 {
+            parts.push(format!("step_err:{}", self.step_err));
+        }
+        if self.slow_p > 0.0 && self.slow_ms > 0.0 {
+            parts.push(format!("slow:{}ms:{}", self.slow_ms, self.slow_p));
+        }
+        if self.oom > 0.0 {
+            parts.push(format!("oom:{}", self.oom));
+        }
+        if self.poison > 0.0 {
+            parts.push(format!("poison:{}", self.poison));
+        }
+        for c in &self.crashes {
+            parts.push(format!("crash:r{}@t{}", c.replica, c.step));
+        }
+        if parts.is_empty() {
+            "none".to_owned()
+        } else {
+            parts.join(",")
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn fault_spec_parses_full_grammar() {
+        let s = FaultSpec::parse("step_err:0.01,crash:r1@t200,slow:5ms:0.05,oom:0.02,poison:0.001")
+            .unwrap();
+        assert_eq!(s.step_err, 0.01);
+        assert_eq!(s.oom, 0.02);
+        assert_eq!(s.poison, 0.001);
+        assert_eq!(s.slow_ms, 5.0);
+        assert_eq!(s.slow_p, 0.05);
+        assert_eq!(s.crashes, vec![CrashPoint { replica: 1, step: 200 }]);
+        assert!(!s.is_empty());
+        // round-trips through its own summary
+        assert_eq!(FaultSpec::parse(&s.summary()).unwrap(), s);
+    }
+
+    #[test]
+    fn fault_spec_rejects_malformed_clauses() {
+        for bad in [
+            "step_err:2.0",   // probability out of range
+            "step_err:x",     // not a number
+            "crash:1@200",    // missing r prefix
+            "crash:r1t200",   // missing @
+            "slow:5ms",       // missing probability
+            "explode:0.5",    // unknown kind
+            "step_err",       // missing ':'
+        ] {
+            assert!(FaultSpec::parse(bad).is_err(), "accepted: {bad}");
+        }
+        assert!(FaultSpec::parse("").unwrap().is_empty());
+    }
 
     #[test]
     fn k_has_channel_bias_structure() {

@@ -4,10 +4,11 @@
 
 use sageattention::attn::PAGE_ROWS;
 use sageattention::coordinator::{
-    DecodeMode, Engine, GenParams, KvCacheManager, NativeEngine, Request,
+    is_crash, BatchPolicy, Batcher, DecodeMode, Engine, FinishReason, Fleet, FleetCfg,
+    FleetReport, GenParams, KvCacheManager, NativeEngine, Request, RoutingPolicy, Scheduler,
 };
 use sageattention::runtime::{Manifest, ModelCfg, Runtime, Value};
-use sageattention::synth::Corpus;
+use sageattention::synth::{Corpus, FaultSpec, WorkloadGen};
 
 #[test]
 fn missing_artifact_dir_errors() {
@@ -225,4 +226,198 @@ fn out_of_blocks_during_cow_preempts_and_resumes_bit_exact() {
     // the fork shares the whole state: greedy decode must agree across
     // the forked pair as well
     assert_eq!(tight[0].1, tight[1].1, "forked twin diverged from its source");
+}
+
+// ---------------------------------------------------------------------------
+// ISSUE 7: deterministic fault plane + fleet fault tolerance
+// ---------------------------------------------------------------------------
+
+/// A supervised fleet of faulted tiny-config native replicas with the
+/// standard synthetic workload submitted (deterministic for a given
+/// seed + spec — the chaos soak replays it).
+fn faulted_fleet(
+    plan: &str,
+    replicas: usize,
+    spec: &FaultSpec,
+    seed: u64,
+    n_req: usize,
+    (ttft_deadline, total_deadline): (Option<u64>, Option<u64>),
+    fleet_cfg: FleetCfg,
+) -> Fleet {
+    let cfg = ModelCfg::builtin("tiny").unwrap();
+    let slots = 2;
+    let mut scheds = Vec::with_capacity(replicas);
+    for i in 0..replicas {
+        let engine = Engine::native_with(cfg.clone(), plan, seed, slots)
+            .unwrap()
+            .faulted(spec.clone(), seed, i);
+        let kv = KvCacheManager::new(slots * cfg.max_seq.div_ceil(PAGE_ROWS), PAGE_ROWS);
+        scheds.push(Scheduler::new(Batcher::new(BatchPolicy::Fifo), kv, engine));
+    }
+    let mut fleet = Fleet::new(scheds, RoutingPolicy::RoundRobin, fleet_cfg);
+    let mut gen = WorkloadGen::new(seed, cfg.vocab, 50.0, vec![24, 40], 8);
+    for (i, r) in gen.generate(n_req).into_iter().enumerate() {
+        fleet.submit(Request::new(
+            i as u64,
+            r.prompt,
+            GenParams {
+                max_new_tokens: r.max_new_tokens,
+                ttft_deadline,
+                total_deadline,
+                ..Default::default()
+            },
+        ));
+    }
+    fleet
+}
+
+/// Satellite 1 pin: an errored `Scheduler::tick` must drain every
+/// in-flight slot back into the queue with physical AND logical KV
+/// released — the old error exit abandoned the reserved blocks forever.
+#[test]
+fn errored_tick_drains_slots_and_releases_blocks() {
+    let cfg = ModelCfg::builtin("tiny").unwrap();
+    // crash at engine step 2: admission and the first steps succeed,
+    // then the replica dies with both requests mid-decode
+    let spec = FaultSpec::parse("crash:r0@t2").unwrap();
+    let engine = Engine::native_with(cfg.clone(), "fp", 3, 2).unwrap().faulted(spec, 3, 0);
+    let kv = KvCacheManager::new(2 * cfg.max_seq.div_ceil(PAGE_ROWS), PAGE_ROWS);
+    let mut sched = Scheduler::new(Batcher::new(BatchPolicy::Fifo), kv, engine);
+    let mut corpus = Corpus::new(cfg.vocab, 1);
+    for id in 0..2u64 {
+        sched.submit(Request::new(
+            id,
+            corpus.batch(1, 24),
+            GenParams { max_new_tokens: 8, ..Default::default() },
+        ));
+    }
+    let mut crashed = false;
+    for _ in 0..10 {
+        match sched.tick() {
+            Ok(_) => {}
+            Err(e) => {
+                assert!(is_crash(&format!("{e:#}")), "expected the injected crash");
+                crashed = true;
+                break;
+            }
+        }
+    }
+    assert!(crashed, "the scheduled crash must surface");
+    sched.kv.check_invariants().unwrap();
+    assert_eq!(
+        sched.kv.free_blocks(),
+        sched.kv.total_blocks(),
+        "errored tick leaked reserved blocks"
+    );
+    assert_eq!(sched.batcher.pending(), 2, "in-flight requests must return to the queue");
+    assert_eq!(sched.engine.live_slots(), 0);
+}
+
+/// Satellite 3 + acceptance: deterministic chaos soak — one seed and a
+/// mixed fault spec (step errors, spurious OOM, poisoned logits, a
+/// mid-run crash) replay the identical fault schedule and terminal
+/// responses across two runs; KV invariants hold after every tick,
+/// nothing leaks, and nothing is silently dropped.
+#[test]
+fn chaos_soak_is_deterministic_and_fully_accounted() {
+    let spec = FaultSpec::parse("step_err:0.05,oom:0.1,poison:0.02,crash:r1@t10").unwrap();
+    let run = || -> FleetReport {
+        let mut fleet =
+            faulted_fleet("sage", 2, &spec, 11, 12, (None, None), FleetCfg::default());
+        let mut guard = 0;
+        while fleet.has_work() {
+            fleet.tick().unwrap();
+            fleet.audit_kv(false).unwrap();
+            guard += 1;
+            assert!(guard < 100_000, "chaos soak made no progress");
+        }
+        fleet.audit_kv(true).unwrap();
+        fleet.run_to_completion().unwrap()
+    };
+    let a = run();
+    let b = run();
+    let inj = |r: &FleetReport| -> Vec<u64> { r.replicas.iter().map(|s| s.injected).collect() };
+    assert_eq!(inj(&a), inj(&b), "fault schedule must replay identically");
+    assert!(a.injected > 0, "the spec must actually inject faults");
+    let key = |r: &FleetReport| -> Vec<(u64, Vec<i32>, FinishReason)> {
+        r.responses.iter().map(|x| (x.id, x.tokens.clone(), x.finish)).collect()
+    };
+    assert_eq!(key(&a), key(&b), "terminal responses must replay identically");
+    assert!(a.fully_accounted(), "dropped {} of {} submitted", a.dropped, a.submitted);
+    assert_eq!(a.submitted, 12);
+}
+
+/// Tentpole §2 pin: a crash fails queued + in-flight work over to the
+/// surviving replica through recompute-on-resume; on the fp plan the
+/// final token streams are bit-exact vs an unfaulted control fleet.
+#[test]
+fn crash_failover_is_bit_exact_on_fp_plan() {
+    let crash = FaultSpec::parse("crash:r0@t6").unwrap();
+    let clean = FaultSpec::default();
+    let run = |spec: &FaultSpec| -> FleetReport {
+        faulted_fleet("fp", 2, spec, 5, 8, (None, None), FleetCfg::default())
+            .run_to_completion()
+            .unwrap()
+    };
+    let faulted = run(&crash);
+    let control = run(&clean);
+    assert!(faulted.failed_over > 0, "the crash must fail work over");
+    assert_eq!(faulted.served, 8, "every request must survive the crash");
+    assert_eq!(faulted.failed, 0);
+    assert_eq!(control.served, 8);
+    let toks = |r: &FleetReport| -> Vec<(u64, Vec<i32>)> {
+        r.responses.iter().map(|x| (x.id, x.tokens.clone())).collect()
+    };
+    assert_eq!(toks(&faulted), toks(&control), "failover changed the decoded tokens");
+}
+
+/// Tentpole §3 pin: total deadlines cancel queued AND in-flight work
+/// rc-correctly — typed `DeadlineExceeded` responses, audit-clean pools
+/// after every tick, full terminal accounting.
+#[test]
+fn total_deadline_cancels_in_flight_work_cleanly() {
+    let clean = FaultSpec::default();
+    let mut fleet =
+        faulted_fleet("sage", 1, &clean, 3, 6, (None, Some(2)), FleetCfg::default());
+    let mut guard = 0;
+    while fleet.has_work() {
+        fleet.tick().unwrap();
+        fleet.audit_kv(false).unwrap();
+        guard += 1;
+        assert!(guard < 10_000, "deadline run made no progress");
+    }
+    fleet.audit_kv(true).unwrap();
+    let rep = fleet.run_to_completion().unwrap();
+    assert!(rep.cancelled_deadline > 0, "a 2-tick total deadline must cancel something");
+    assert!(rep.fully_accounted(), "dropped {} of {} submitted", rep.dropped, rep.submitted);
+    for r in &rep.responses {
+        assert!(
+            matches!(
+                r.finish,
+                FinishReason::MaxTokens
+                    | FinishReason::StopToken
+                    | FinishReason::DeadlineExceeded
+            ),
+            "unexpected finish reason {:?}",
+            r.finish
+        );
+    }
+}
+
+/// Tentpole §3 pin: NaN-poisoned logits on the sage plan trip the
+/// numeric guard, the request retries on the fp attention path (counted
+/// in `degraded_fallbacks`) and still completes — never a wrong answer,
+/// never a silent drop.
+#[test]
+fn poisoned_logits_degrade_to_fp_and_complete() {
+    let spec = FaultSpec::parse("poison:1").unwrap();
+    let rep = faulted_fleet("sage", 1, &spec, 9, 3, (None, None), FleetCfg::default())
+        .run_to_completion()
+        .unwrap();
+    assert!(rep.degraded_fallbacks > 0, "poison must trip the numeric guard");
+    assert_eq!(rep.served, 3, "degraded requests must still complete");
+    assert!(rep.fully_accounted());
+    for r in &rep.responses {
+        assert!(!r.tokens.is_empty(), "served responses must carry tokens");
+    }
 }

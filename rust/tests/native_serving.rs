@@ -340,7 +340,7 @@ fn router_routes_over_native_replicas() {
             prompt(i, 16),
             GenParams { max_new_tokens: 2, ..Default::default() },
         );
-        assert!(router.route(&mut reps, &req).is_some());
+        assert!(router.route(&mut reps, &req).is_ok());
     }
     assert_eq!(router.routed, vec![2, 2], "round robin over trait-backed replicas");
     let mut total = 0;
