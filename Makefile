@@ -9,12 +9,16 @@
 #                        panic/nonzero exit), the chaos-soak smokes (a
 #                        faulted 2-replica serve plus the `sage chaos`
 #                        determinism gate — both exit nonzero on leaked
-#                        blocks, silent drops, or a replay mismatch), and
-#                        the bench-hotpath no-regression check against the
-#                        checked-in bench_baseline.json (speedup floors:
-#                        blocked-vs-naive, PreparedKV decode, serve-decode,
-#                        dot-i8 SIMD-vs-scalar, shared-prefix
-#                        prefill-tokens-saved, goodput-under-faults; tab09
+#                        blocks, silent drops, or a replay mismatch), the
+#                        traffic-plane smoke (open-loop scenario-mix serve
+#                        with chunked prefill, token streaming, and SLO
+#                        admission; exits nonzero on a silently dropped
+#                        request), and the bench-hotpath no-regression
+#                        check against the checked-in bench_baseline.json
+#                        (speedup floors: blocked-vs-naive, PreparedKV
+#                        decode, serve-decode, dot-i8 SIMD-vs-scalar,
+#                        shared-prefix prefill-tokens-saved,
+#                        goodput-under-faults, goodput-under-SLO; tab09
 #                        kernel-accuracy cosine floors)
 #   make build           release build only
 #   make test            test suite only
@@ -32,6 +36,9 @@ verify:
 	./target/release/sage serve --backend native --requests 8 --prefix-cache --workload shared
 	./target/release/sage serve --backend native --config tiny --requests 12 \
 		--replicas 2 --faults step_err:0.02,oom:0.05 --seed 7
+	./target/release/sage serve --backend native --config tiny --plan fp --requests 12 \
+		--replicas 2 --workload mix:chat=0.5,rag=0.3,bursty=0.2 \
+		--prefill-chunk 16 --tick-rows 32 --slo-ttft 12 --slo-tpot 8 --open-loop --seed 7
 	./target/release/sage chaos --requests 12
 	./target/release/sage bench-hotpath --secs 1 --check bench_baseline.json
 

@@ -30,6 +30,7 @@ use crate::util::rng::Pcg32;
 
 use super::kv_cache::KvCacheManager;
 use super::request::{FinishReason, Request, Response};
+use super::traffic::{ChunkCfg, StreamedToken};
 
 /// How a backend wants KV blocks reserved at admission.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -57,6 +58,11 @@ pub struct StepOutcome {
     /// so the retry runs attention on the fp path. KV released like
     /// `preempted`.
     pub degraded: Vec<Request>,
+    /// Tokens emitted this step, in sample order (the per-token
+    /// streaming surface): every sampled-but-unsent token of every live
+    /// slot, each tagged with its absolute index in the response so
+    /// sinks can detect gaps/duplicates across preemption and failover.
+    pub streamed: Vec<StreamedToken>,
 }
 
 /// Execution engine contract: admission, decode stepping and slot
@@ -163,6 +169,21 @@ pub trait EngineBackend: Send {
     fn fault_stats(&self) -> Option<&crate::coordinator::fault::FaultStats> {
         None
     }
+
+    /// Enable chunked prefill: admission defers the prefill compute and
+    /// `step` interleaves fixed-size prefill chunks with decode under a
+    /// per-tick row budget. Returns false when the backend does not
+    /// support chunking (pjrt — dense artifacts prefill in one call).
+    fn set_chunked_prefill(&mut self, _cfg: ChunkCfg) -> bool {
+        false
+    }
+
+    /// Prefill rows admitted but not yet computed (chunked prefill
+    /// backlog) — the admission controller folds this into its
+    /// queue-delay estimate.
+    fn pending_prefill_rows(&self) -> usize {
+        0
+    }
 }
 
 #[derive(Clone, Debug, Default)]
@@ -213,6 +234,14 @@ pub(crate) struct Slot {
     pub(crate) rng: Pcg32,
     /// Numeric degraded mode: attention reads run on the fp path.
     pub(crate) degraded: bool,
+    /// When this slot was admitted into the engine (queue-delay split).
+    pub(crate) admitted_at: std::time::Instant,
+    /// Prompt rows admitted but not yet prefilled (chunked prefill):
+    /// `step` consumes them chunk-by-chunk before the slot decodes.
+    /// Empty on unchunked backends/slots.
+    pub(crate) pending_prefill: Vec<i32>,
+    /// How many of `generated` have been emitted to [`StepOutcome::streamed`].
+    pub(crate) streamed: usize,
 }
 
 /// Greedy or temperature sampling over a logits row.
@@ -247,18 +276,38 @@ pub(crate) fn tpot_of(e2e_ms: f64, ttft_ms: f64, n_tokens: usize) -> Option<f64>
     Some((e2e_ms - ttft_ms) / (n_tokens - 1) as f64)
 }
 
+/// Emit every sampled-but-unsent token of slot `s` into `out` (the
+/// per-token streaming surface). Indices are absolute positions in the
+/// response, and `s.streamed` advances with the emission — a token is
+/// streamed exactly once per request lifetime, even across
+/// preemption/failover (the watermark rides in [`ResumeState::streamed`]).
+///
+/// [`ResumeState::streamed`]: super::request::ResumeState::streamed
+pub(crate) fn flush_stream(s: &mut Slot, out: &mut Vec<StreamedToken>) {
+    for (i, &token) in s.generated.iter().enumerate().skip(s.streamed) {
+        out.push(StreamedToken { id: s.id, index: i, token });
+    }
+    s.streamed = s.generated.len();
+}
+
 /// Advance slot `s` with the freshly sampled token `next` — the finish
 /// epilogue both backends share: stop-token / budget / context-window
-/// checks, latency telemetry, and the Response when the request is done
-/// (the slot's `generated` is drained into it; the caller clears the
-/// slot and reclaims KV).
-pub(crate) fn advance_slot(s: &mut Slot, next: i32, max_seq: usize) -> Option<Response> {
+/// checks, streaming emission, latency telemetry, and the Response when
+/// the request is done (the slot's `generated` is drained into it; the
+/// caller clears the slot and reclaims KV).
+pub(crate) fn advance_slot(
+    s: &mut Slot,
+    next: i32,
+    max_seq: usize,
+    streamed: &mut Vec<StreamedToken>,
+) -> Option<Response> {
     s.pos += 1;
     let stop_hit = s.params.stop_token == Some(next);
     if !stop_hit {
         s.generated.push(next);
         s.next_token = next;
     }
+    flush_stream(s, streamed);
     let len_hit = s.generated.len() >= s.params.max_new_tokens || s.pos + 1 >= max_seq;
     if !(stop_hit || len_hit) {
         return None;
@@ -270,6 +319,7 @@ pub(crate) fn advance_slot(s: &mut Slot, next: i32, max_seq: usize) -> Option<Re
         id: s.id,
         finish: if stop_hit { FinishReason::StopToken } else { FinishReason::MaxTokens },
         ttft_ms: ttft,
+        queue_ms: s.admitted_at.duration_since(s.arrival).as_secs_f64() * 1e3,
         tpot_ms: tpot_of(e2e, ttft, s.generated.len()),
         e2e_ms: e2e,
         tokens: std::mem::take(&mut s.generated),

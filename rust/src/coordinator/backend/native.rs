@@ -37,7 +37,11 @@ use super::super::kv_cache::{AllocError, BlockId, KvCacheManager};
 use super::super::paged_kv::PagedKvStore;
 use super::super::prefix_cache::PrefixCache;
 use super::super::request::{Request, RequestId, ResumeState};
-use super::{advance_slot, sample, EngineBackend, EngineStats, ReserveMode, Slot, StepOutcome};
+use super::super::traffic::ChunkCfg;
+use super::{
+    advance_slot, flush_stream, sample, EngineBackend, EngineStats, ReserveMode, Slot,
+    StepOutcome,
+};
 
 /// How decode-step attention reads the KV prefix.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -69,6 +73,11 @@ pub struct NativeEngine {
     /// One-shot fault hook: the next step NaN-poisons the first
     /// non-degraded live slot's logits (flows through the real guard).
     poison_armed: bool,
+    /// Chunked prefill (`None` = whole-prompt prefill at admission):
+    /// admission defers the compute into `Slot::pending_prefill` and
+    /// `step` drains it chunk-by-chunk under the per-tick row budget,
+    /// interleaved with decode.
+    chunk: Option<ChunkCfg>,
     pub stats: EngineStats,
 }
 
@@ -126,6 +135,7 @@ impl NativeEngine {
             inv_freq,
             scratch: Scratch::new(),
             poison_armed: false,
+            chunk: None,
             stats: EngineStats::default(),
         })
     }
@@ -203,6 +213,11 @@ impl NativeEngine {
             first_token_at: src_slot.first_token_at,
             rng: src_slot.rng.clone(),
             degraded: src_slot.degraded,
+            admitted_at: src_slot.admitted_at,
+            pending_prefill: src_slot.pending_prefill.clone(),
+            // the fork is a new stream: every inherited token is emitted
+            // fresh under the destination id
+            streamed: 0,
         };
         ensure!(kv.fork(src, dst).is_ok(), "request {src} unknown to the accountant");
         if let Err(e) = self.paged.fork(src, dst) {
@@ -258,16 +273,24 @@ impl NativeEngine {
         if kv.release(s.id).is_err() {
             bail!("logical release failed for evicted request {}", s.id);
         }
+        // a chunked slot evicted mid-prefill has no decode progress to
+        // carry — it resumes as a fresh admission (full re-prefill)
+        let resume = if s.generated.is_empty() {
+            None
+        } else {
+            Some(ResumeState {
+                generated: s.generated,
+                rng: s.rng,
+                first_token_at: s.first_token_at,
+                streamed: s.streamed,
+            })
+        };
         Ok(Request {
             id: s.id,
             prompt: s.prompt,
             params: s.params,
             arrival: s.arrival,
-            resume: Some(ResumeState {
-                generated: s.generated,
-                rng: s.rng,
-                first_token_at: s.first_token_at,
-            }),
+            resume,
             degraded: s.degraded,
         })
     }
@@ -437,6 +460,42 @@ impl EngineBackend for NativeEngine {
         // fetch the table only now — CoW may have swapped entries
         let table: Vec<BlockId> = kv.seq_blocks(req.id).unwrap().to_vec();
 
+        // chunked prefill: defer the compute — `step` drains the prompt
+        // chunk-by-chunk under the tick budget (the admission barrier
+        // above already covered the whole suffix horizon). Tokens are
+        // validated here so a bad prompt still fails at admission
+        // instead of surfacing as a step-time drain.
+        if self.chunk.is_some() {
+            if let Some(&bad) =
+                toks.iter().find(|&&t| !(0..self.cfg.vocab as i32).contains(&t))
+            {
+                let _ = self.paged.release(req.id, kv);
+                bail!("token {bad} outside vocab {}", self.cfg.vocab);
+            }
+            let (first_token_at, rng, generated, streamed) = match &req.resume {
+                Some(res) => {
+                    (res.first_token_at, res.rng.clone(), res.generated.clone(), res.streamed)
+                }
+                None => (Instant::now(), Pcg32::seeded(req.params.seed ^ req.id), Vec::new(), 0),
+            };
+            self.slots[slot_idx] = Some(Slot {
+                id: req.id,
+                prompt: req.prompt.clone(),
+                pos: prefix_len,
+                next_token: generated.last().copied().unwrap_or(0),
+                generated,
+                params: req.params,
+                arrival: req.arrival,
+                first_token_at,
+                rng,
+                degraded: req.degraded,
+                admitted_at: Instant::now(),
+                pending_prefill: toks[prefix_len..].to_vec(),
+                streamed,
+            });
+            return Ok(true);
+        }
+
         // degraded requests (numeric-guard retries) run attention on the
         // fp path over raw resident rows; appends still quantize into the
         // shared store, so their pages stay audit-clean and cache-sharable
@@ -476,12 +535,14 @@ impl EngineBackend for NativeEngine {
             c.insert(&toks, req.id, kv, &mut self.paged)?;
         }
 
-        let (first_token_at, rng, generated) = match &req.resume {
-            Some(res) => (res.first_token_at, res.rng.clone(), res.generated.clone()),
+        let (first_token_at, rng, generated, streamed) = match &req.resume {
+            Some(res) => {
+                (res.first_token_at, res.rng.clone(), res.generated.clone(), res.streamed)
+            }
             None => {
                 let mut rng = Pcg32::seeded(req.params.seed ^ req.id);
                 let first = sample(&logits, req.params.temperature, &mut rng);
-                (Instant::now(), rng, vec![first])
+                (Instant::now(), rng, vec![first], 0)
             }
         };
         self.slots[slot_idx] = Some(Slot {
@@ -495,6 +556,9 @@ impl EngineBackend for NativeEngine {
             first_token_at,
             rng,
             degraded: req.degraded,
+            admitted_at: Instant::now(),
+            pending_prefill: Vec::new(),
+            streamed,
         });
         Ok(true)
     }
@@ -506,8 +570,105 @@ impl EngineBackend for NativeEngine {
         }
         let t0 = Instant::now();
         let live_at_entry = self.live_slots();
+
+        // --- chunked-prefill phase: drain pending prompts chunk-by-chunk
+        // under the per-tick row budget, before (and never instead of)
+        // the decode phase — decode slots advance every tick even with a
+        // max-length prefill in flight (no head-of-line blocking).
+        if let Some(chunk_cfg) = self.chunk {
+            let mut budget = chunk_cfg.tick_rows;
+            for b in 0..self.batch {
+                let Some(s) = self.slots[b].as_ref() else { continue };
+                if s.pending_prefill.is_empty() {
+                    continue;
+                }
+                let rows = chunk_cfg.chunk_rows.min(s.pending_prefill.len());
+                if rows > budget {
+                    continue; // tick budget spent; next tick resumes here
+                }
+                budget -= rows;
+                let id = s.id;
+                let slot_degraded = s.degraded;
+                let pos0 = s.pos;
+                let chunk_toks: Vec<i32> = s.pending_prefill[..rows].to_vec();
+                let (imp, mode) = if slot_degraded {
+                    (AttnImpl::OnlineFp32, DecodeMode::RequantEachStep)
+                } else {
+                    (self.imp, self.decode_mode)
+                };
+                let table: Vec<BlockId> = kv.seq_blocks(id).unwrap().to_vec();
+                let tp = Instant::now();
+                let logits = match forward_rows(
+                    &self.cfg,
+                    &self.params,
+                    imp,
+                    mode,
+                    &self.inv_freq,
+                    &mut self.paged,
+                    &mut self.scratch,
+                    id,
+                    &table,
+                    &chunk_toks,
+                    pos0,
+                ) {
+                    Ok(l) => l,
+                    Err(e) if !slot_degraded && guard::is_nonfinite_err(&e.to_string()) => {
+                        let mut evicted = self.evict_slot(b, kv)?;
+                        evicted.degraded = true;
+                        outcome.degraded.push(evicted);
+                        continue;
+                    }
+                    Err(e) => return Err(e),
+                };
+                self.stats.prefill_time += tp.elapsed();
+                let s = self.slots[b].as_mut().expect("slot checked live above");
+                s.pending_prefill.drain(..rows);
+                s.pos += rows;
+                if !s.pending_prefill.is_empty() {
+                    continue; // intermediate chunk: its logits are discarded
+                }
+                // final chunk — the prefill is complete
+                if let Err(e) = guard::check_finite("prefill logits", &logits) {
+                    if slot_degraded {
+                        bail!("request {id} non-finite even on the fp path: {e}");
+                    }
+                    let mut evicted = self.evict_slot(b, kv)?;
+                    evicted.degraded = true;
+                    outcome.degraded.push(evicted);
+                    continue;
+                }
+                self.stats.prefills += 1;
+                if self.cache.is_some() {
+                    // reconstruct the fed token list (prompt + resumed
+                    // decode progress) exactly as the one-shot path fed it
+                    let s = self.slots[b].as_ref().expect("slot checked live above");
+                    let mut toks = s.prompt.clone();
+                    let fed = s.generated.len().saturating_sub(1);
+                    toks.extend_from_slice(&s.generated[..fed]);
+                    if let Some(c) = self.cache.as_mut() {
+                        c.insert(&toks, id, kv, &mut self.paged)?;
+                    }
+                }
+                let s = self.slots[b].as_mut().expect("slot checked live above");
+                if s.generated.is_empty() {
+                    // TTFT clock: the first token exists (and streams) now
+                    let first = sample(&logits, s.params.temperature, &mut s.rng);
+                    s.generated.push(first);
+                    s.next_token = first;
+                    s.first_token_at = Instant::now();
+                    self.stats.tokens_generated += 1;
+                } else {
+                    s.next_token = *s.generated.last().expect("generated checked non-empty");
+                }
+                flush_stream(s, &mut outcome.streamed);
+            }
+        }
+
         for b in 0..self.batch {
             let Some(s) = self.slots[b].as_ref() else { continue };
+            if !s.pending_prefill.is_empty() {
+                continue; // still prefilling: no decode step for this slot
+            }
             let id = s.id;
             // grow the logical KV by this step's row; on OutOfBlocks,
             // evict a cached prefix if possible, else preempt-and-requeue
@@ -613,7 +774,7 @@ impl EngineBackend for NativeEngine {
             let s = self.slots[b].as_mut().expect("slot checked live above");
             let next = sample(&logits, temperature, &mut s.rng);
             self.stats.tokens_generated += 1;
-            if let Some(resp) = advance_slot(s, next, self.cfg.max_seq) {
+            if let Some(resp) = advance_slot(s, next, self.cfg.max_seq, &mut outcome.streamed) {
                 outcome.finished.push(resp);
                 // reclaim the physical pages; the scheduler releases the
                 // logical reservation when it records the response
@@ -685,6 +846,28 @@ impl EngineBackend for NativeEngine {
     fn inject_poison(&mut self) -> bool {
         self.poison_armed = true;
         true
+    }
+
+    /// Chunked prefill is supported whenever chunk boundaries can stay
+    /// aligned with the plan's Q scale groups (per-forward-call groups
+    /// restart at each chunk, so alignment is what keeps chunked output
+    /// bit-identical to one-shot prefill). Per-tensor Q scales span the
+    /// whole call and cannot be chunk-aligned — refused.
+    fn set_chunked_prefill(&mut self, cfg: ChunkCfg) -> bool {
+        let ok = match self.imp {
+            AttnImpl::Sage { qk: Granularity::PerBlock(g), .. } => cfg.aligned_to(g),
+            AttnImpl::Sage { qk: Granularity::PerToken, .. } => true,
+            AttnImpl::Sage { .. } | AttnImpl::Fp8 { .. } => false,
+            AttnImpl::Exact | AttnImpl::OnlineFp32 => true,
+        };
+        if ok {
+            self.chunk = Some(cfg);
+        }
+        ok
+    }
+
+    fn pending_prefill_rows(&self) -> usize {
+        self.slots.iter().flatten().map(|s| s.pending_prefill.len()).sum()
     }
 }
 

@@ -224,12 +224,14 @@ impl EngineBackend for PjrtEngine {
         // fresh request: sample the first token off the prefill logits;
         // resumed request: decode progress (tokens, sampler state, TTFT
         // stamp) carries over and the prefill logits are recompute waste
-        let (first_token_at, rng, generated) = match &req.resume {
-            Some(res) => (res.first_token_at, res.rng.clone(), res.generated.clone()),
+        let (first_token_at, rng, generated, streamed) = match &req.resume {
+            Some(res) => {
+                (res.first_token_at, res.rng.clone(), res.generated.clone(), res.streamed)
+            }
             None => {
                 let mut rng = Pcg32::seeded(req.params.seed ^ req.id);
                 let first = sample(&logits, req.params.temperature, &mut rng);
-                (Instant::now(), rng, vec![first])
+                (Instant::now(), rng, vec![first], 0)
             }
         };
         self.slots[slot_idx] = Some(Slot {
@@ -243,6 +245,9 @@ impl EngineBackend for PjrtEngine {
             first_token_at,
             rng,
             degraded: req.degraded,
+            admitted_at: Instant::now(),
+            pending_prefill: Vec::new(),
+            streamed,
         });
         Ok(true)
     }
@@ -287,7 +292,7 @@ impl EngineBackend for PjrtEngine {
             let row = &logits[b * vocab..(b + 1) * vocab];
             let tok = sample(row, s.params.temperature, &mut s.rng);
             self.stats.tokens_generated += 1;
-            if let Some(resp) = advance_slot(s, tok, self.cfg.max_seq) {
+            if let Some(resp) = advance_slot(s, tok, self.cfg.max_seq, &mut outcome.streamed) {
                 outcome.finished.push(resp);
                 *slot = None;
             }
@@ -316,6 +321,7 @@ impl EngineBackend for PjrtEngine {
                     generated: s.generated,
                     rng: s.rng,
                     first_token_at: s.first_token_at,
+                    streamed: s.streamed,
                 }),
                 degraded: s.degraded,
             });

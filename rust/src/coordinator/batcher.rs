@@ -78,6 +78,13 @@ impl Batcher {
         self.queue.len()
     }
 
+    /// Prompt rows waiting in the queue — the queued half of the
+    /// prefill backlog the SLO admission estimator drains against
+    /// (the admitted half is the engine's `pending_prefill_rows`).
+    pub fn queued_prefill_rows(&self) -> usize {
+        self.queue.iter().map(|r| r.prefill_len()).sum()
+    }
+
     pub fn is_empty(&self) -> bool {
         self.queue.is_empty()
     }

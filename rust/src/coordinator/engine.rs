@@ -19,6 +19,7 @@ use super::batcher::AdmitGate;
 use super::fault::FaultStats;
 use super::kv_cache::KvCacheManager;
 use super::request::{Request, RequestId};
+use super::traffic::ChunkCfg;
 
 /// A model replica behind the [`EngineBackend`] trait.
 pub struct Engine {
@@ -165,6 +166,18 @@ impl Engine {
     /// Injected-fault counters when this engine carries a fault plane.
     pub fn fault_stats(&self) -> Option<&FaultStats> {
         self.backend.fault_stats()
+    }
+
+    /// Enable chunked prefill on the backend (see
+    /// [`EngineBackend::set_chunked_prefill`]). Returns `false` when the
+    /// plan cannot honor the chunk boundary alignment.
+    pub fn set_chunked_prefill(&mut self, cfg: ChunkCfg) -> bool {
+        self.backend.set_chunked_prefill(cfg)
+    }
+
+    /// Prompt rows admitted but not yet prefilled (chunked backlog).
+    pub fn pending_prefill_rows(&self) -> usize {
+        self.backend.pending_prefill_rows()
     }
 }
 

@@ -220,6 +220,14 @@ impl EngineBackend for FaultingBackend {
     fn fault_stats(&self) -> Option<&FaultStats> {
         Some(&self.stats)
     }
+
+    fn set_chunked_prefill(&mut self, cfg: super::traffic::ChunkCfg) -> bool {
+        self.inner.set_chunked_prefill(cfg)
+    }
+
+    fn pending_prefill_rows(&self) -> usize {
+        self.inner.pending_prefill_rows()
+    }
 }
 
 #[cfg(test)]

@@ -22,6 +22,7 @@ pub mod prefix_cache;
 pub mod request;
 pub mod router;
 pub mod scheduler;
+pub mod traffic;
 
 pub use backend::native::{DecodeMode, NativeEngine};
 pub use backend::pjrt::PjrtEngine;
@@ -38,3 +39,4 @@ pub use router::{
     RoutingPolicy,
 };
 pub use scheduler::{Scheduler, SchedulerReport};
+pub use traffic::{ChunkCfg, SloTargets, StreamLedger, StreamedToken, TokenSink, TrafficCfg};

@@ -21,6 +21,13 @@ pub struct GenParams {
     pub ttft_deadline: Option<u64>,
     /// Total-completion deadline in scheduler ticks from submission.
     pub total_deadline: Option<u64>,
+    /// SLO *target* (not a hard deadline): desired TTFT in scheduler
+    /// ticks. Unlike `ttft_deadline`, missing it never cancels work —
+    /// the admission controller sheds at saturation and the fleet
+    /// reports goodput-under-SLO (fraction of requests meeting targets).
+    pub slo_ttft: Option<u64>,
+    /// SLO target: desired mean ticks per output token after the first.
+    pub slo_tpot: Option<f64>,
 }
 
 impl Default for GenParams {
@@ -32,6 +39,8 @@ impl Default for GenParams {
             seed: 0,
             ttft_deadline: None,
             total_deadline: None,
+            slo_ttft: None,
+            slo_tpot: None,
         }
     }
 }
@@ -49,6 +58,10 @@ pub struct ResumeState {
     pub generated: Vec<i32>,
     pub rng: Pcg32,
     pub first_token_at: Instant,
+    /// How many of `generated` were already streamed to the token sink
+    /// before the preemption — the resumed slot starts emitting at this
+    /// index, so failover/recompute never double-emits a token.
+    pub streamed: usize,
 }
 
 /// An inference request.
@@ -113,6 +126,11 @@ pub enum FinishReason {
     Failed,
     /// Cancelled because a TTFT/total deadline expired.
     DeadlineExceeded,
+    /// Shed by SLO-aware admission: the controller judged (from the live
+    /// queue-delay estimate) that the request could not meet its TTFT
+    /// target at current load, and rejected it instead of serving a
+    /// guaranteed SLO miss.
+    Shed,
 }
 
 /// A finished request with serving telemetry.
@@ -123,6 +141,10 @@ pub struct Response {
     pub finish: FinishReason,
     /// Time to first token (prefill + queueing), ms.
     pub ttft_ms: f64,
+    /// Queue delay — arrival to engine admission, ms. Splitting this out
+    /// of TTFT keeps open-loop replay honest: a flattering TTFT can no
+    /// longer hide time spent waiting in the batcher queue.
+    pub queue_ms: f64,
     /// Mean time per output token after the first, ms; `None` for
     /// single-token responses (no inter-token interval exists — a
     /// fabricated denominator would understate tail TPOT).
@@ -143,6 +165,7 @@ impl Response {
             tokens: Vec::new(),
             finish,
             ttft_ms: 0.0,
+            queue_ms: 0.0,
             tpot_ms: None,
             e2e_ms: 0.0,
             error: Some(why.into()),
@@ -178,6 +201,7 @@ mod tests {
             generated: vec![10, 11, 12],
             rng: Pcg32::seeded(0),
             first_token_at: Instant::now(),
+            streamed: 0,
         });
         // the last sampled token (12) has not been fed yet: the re-prefill
         // covers prompt + fed tokens, and 12 rides as the next decode input

@@ -15,6 +15,7 @@
 
 use std::collections::{BTreeMap, VecDeque};
 use std::fmt;
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use crate::util::error::{ensure, Result};
@@ -22,6 +23,7 @@ use crate::util::error::{ensure, Result};
 use super::fault::is_crash;
 use super::request::{FinishReason, Request, RequestId, Response};
 use super::scheduler::{Scheduler, SchedulerReport};
+use super::traffic::{estimate_ttft_ticks, ChunkCfg, SloTargets, StreamLedger, TokenSink};
 
 /// Anything that can accept routed requests.
 pub trait Replica {
@@ -205,6 +207,11 @@ pub struct FleetCfg {
     /// Hard stop for the driving loop (defense against a fault spec
     /// that can never make progress, e.g. `oom:1.0`).
     pub max_ticks: u64,
+    /// Prefill rows one replica tick can absorb (the chunked-prefill
+    /// tick budget) — the drain rate the SLO admission estimator uses.
+    /// `None` = whole-prompt prefill at admission: a tick absorbs any
+    /// prompt, so the estimator only sees queueing, not prefill length.
+    pub tick_prefill_rows: Option<usize>,
 }
 
 impl Default for FleetCfg {
@@ -215,6 +222,7 @@ impl Default for FleetCfg {
             breaker_threshold: 2,
             breaker_cooldown: 8,
             max_ticks: 1_000_000,
+            tick_prefill_rows: None,
         }
     }
 }
@@ -258,12 +266,43 @@ struct Meta {
     ttft_deadline: Option<u64>,
     total_deadline: Option<u64>,
     done: bool,
+    /// SLO *targets* (soft, shed/report) — distinct from the hard
+    /// deadlines above (cancel).
+    slo: SloTargets,
+    /// Virtual tick the first streamed token appeared (needs the
+    /// streaming ledger installed via [`Fleet::enable_streaming`]).
+    first_token_tick: Option<u64>,
+    /// Whether the finished response met its SLO targets; `None` until
+    /// terminal (and for untracked requests).
+    slo_met: Option<bool>,
 }
 
 /// A request waiting (or backing off) at the fleet level.
 struct Pending {
     req: Request,
     not_before: u64,
+}
+
+/// Did a *successful* response land inside its SLO targets? TTFT is
+/// first-streamed-token tick minus arrival; TPOT is the mean decode
+/// interval after the first token (vacuously met for single-token
+/// responses). A tracked request that never streamed — possible only
+/// when the ledger is not installed — counts as a miss rather than a
+/// silent pass.
+fn slo_satisfied(m: &Meta, tokens: usize, now: u64) -> bool {
+    let ttft_ok = match (m.slo.ttft_ticks, m.first_token_tick) {
+        (Some(target), Some(first)) => first.saturating_sub(m.submitted_at) <= target,
+        (Some(_), None) => false,
+        (None, _) => true,
+    };
+    let tpot_ok = match (m.slo.tpot_ticks, m.first_token_tick) {
+        (Some(target), Some(first)) if tokens > 1 => {
+            now.saturating_sub(first) as f64 / (tokens - 1) as f64 <= target
+        }
+        (Some(_), None) => false,
+        _ => true,
+    };
+    ttft_ok && tpot_ok
 }
 
 /// Aggregated outcome of a fleet run.
@@ -276,6 +315,13 @@ pub struct FleetReport {
     pub failed: u64,
     /// Deadline cancellations.
     pub cancelled_deadline: u64,
+    /// Requests shed by SLO admission control (estimated TTFT beyond
+    /// target at dispatch — turned away, never started).
+    pub shed: u64,
+    /// Requests carrying SLO targets (the goodput denominator).
+    pub slo_tracked: u64,
+    /// Tracked requests that finished within their targets.
+    pub slo_met: u64,
     /// Requests re-dispatched after a transient replica error.
     pub retried: u64,
     /// Requests re-routed off a crashed replica.
@@ -286,6 +332,14 @@ pub struct FleetReport {
     pub degraded_fallbacks: u64,
     /// Requests that left without any terminal response — must be 0.
     pub dropped: u64,
+    /// Tokens streamed through the fleet ledger (0 when streaming was
+    /// not enabled).
+    pub streamed_tokens: u64,
+    /// Duplicate streamed indices the ledger flagged — double emission
+    /// across failover/preemption; must stay 0.
+    pub stream_duplicates: u64,
+    /// Skipped streamed indices the ledger flagged — must stay 0.
+    pub stream_gaps: u64,
     /// Virtual ticks the run took.
     pub ticks: u64,
     pub wall_s: f64,
@@ -300,10 +354,23 @@ pub struct FleetReport {
 
 impl FleetReport {
     /// Terminal accounting: every submitted request left through a
-    /// response (`served + failed + cancelled == submitted`).
+    /// response (`served + failed + cancelled + shed == submitted`).
     pub fn fully_accounted(&self) -> bool {
         self.dropped == 0
-            && self.served + self.failed + self.cancelled_deadline == self.submitted
+            && self.served + self.failed + self.cancelled_deadline + self.shed
+                == self.submitted
+    }
+
+    /// Goodput under SLO: fraction of SLO-tracked requests that were
+    /// served within their targets. Shed and failed tracked requests
+    /// count as misses — shedding trades individual misses for keeping
+    /// the admitted set on target, it does not launder them away.
+    pub fn goodput_under_slo_frac(&self) -> f64 {
+        if self.slo_tracked == 0 {
+            1.0
+        } else {
+            self.slo_met as f64 / self.slo_tracked as f64
+        }
     }
 
     pub fn tokens_out(&self) -> u64 {
@@ -330,7 +397,13 @@ pub struct Fleet {
     retried: u64,
     failed_over: u64,
     cancelled_deadline: u64,
+    shed: u64,
     route_refusals: u64,
+    /// Fleet-wide streaming audit, shared with every replica's sink
+    /// (see [`Fleet::enable_streaming`]); also the TTFT clock — a
+    /// request's first token is the tick its ledger count went
+    /// positive.
+    ledger: Option<Arc<Mutex<StreamLedger>>>,
 }
 
 impl Fleet {
@@ -358,23 +431,65 @@ impl Fleet {
             retried: 0,
             failed_over: 0,
             cancelled_deadline: 0,
+            shed: 0,
             route_refusals: 0,
+            ledger: None,
         }
     }
 
     pub fn submit(&mut self, req: Request) {
+        let now = self.now;
+        self.submit_at(req, now);
+    }
+
+    /// Submit with an open-loop arrival time: the request enters the
+    /// dispatch queue at virtual tick `due` (its `arrival_ms` mapped
+    /// through the tick scale), and its deadlines/SLO clocks start
+    /// there — not at tick 0 when the workload was generated.
+    pub fn submit_at(&mut self, req: Request, due: u64) {
         self.submitted += 1;
         self.meta.insert(
             req.id,
             Meta {
                 retries: 0,
-                submitted_at: self.now,
+                submitted_at: due.max(self.now),
                 ttft_deadline: req.params.ttft_deadline,
                 total_deadline: req.params.total_deadline,
                 done: false,
+                slo: SloTargets {
+                    ttft_ticks: req.params.slo_ttft,
+                    tpot_ticks: req.params.slo_tpot,
+                },
+                first_token_tick: None,
+                slo_met: None,
             },
         );
-        self.pending.push_back(Pending { req, not_before: 0 });
+        self.pending.push_back(Pending { req, not_before: due });
+    }
+
+    /// Install a fleet-wide [`StreamLedger`] as every replica's token
+    /// sink. Tokens stream through it as replicas decode; the returned
+    /// handle lets the caller read totals / assert `is_clean()` after
+    /// the run. Also arms SLO tracking's TTFT clock.
+    pub fn enable_streaming(&mut self) -> Arc<Mutex<StreamLedger>> {
+        let ledger: Arc<Mutex<StreamLedger>> = Arc::new(Mutex::new(StreamLedger::new()));
+        for sup in &mut self.replicas {
+            let sink: Arc<Mutex<dyn TokenSink>> = ledger.clone();
+            sup.sched.set_sink(sink);
+        }
+        self.ledger = Some(ledger.clone());
+        ledger
+    }
+
+    /// Enable chunked prefill on every replica. Returns false (leaving
+    /// refusing replicas unchunked) if any backend cannot honor the
+    /// chunk alignment for its plan.
+    pub fn set_chunked_prefill(&mut self, cfg: ChunkCfg) -> bool {
+        let mut all = true;
+        for sup in &mut self.replicas {
+            all &= sup.sched.engine.set_chunked_prefill(cfg);
+        }
+        all
     }
 
     pub fn has_work(&self) -> bool {
@@ -416,8 +531,45 @@ impl Fleet {
     fn record_terminal(&mut self, resp: Response) {
         if let Some(m) = self.meta.get_mut(&resp.id) {
             m.done = true;
+            if !m.slo.is_empty() && m.slo_met.is_none() {
+                // shed / failed / cancelled tracked requests miss
+                m.slo_met = Some(false);
+            }
         }
         self.failures.push(resp);
+    }
+
+    /// Estimated TTFT (ticks) for a request dispatched now: the healthy
+    /// replicas' outstanding prefill backlog — queued prompt rows plus
+    /// admitted-but-unprefilled chunk rows — drained at the per-tick
+    /// prefill budget.
+    fn estimate_ttft(&self, own_rows: usize) -> u64 {
+        let mut backlog = 0usize;
+        let mut healthy = 0usize;
+        for sup in &self.replicas {
+            if sup.crashed || matches!(sup.breaker, Breaker::Open { .. }) {
+                continue;
+            }
+            healthy += 1;
+            backlog += sup.sched.batcher.queued_prefill_rows()
+                + sup.sched.engine.pending_prefill_rows();
+        }
+        // with chunking off a tick prefills whole prompts, so the
+        // effective drain rate is unbounded and only queueing remains
+        let rows_per_tick = self.cfg.tick_prefill_rows.unwrap_or(usize::MAX / 2);
+        estimate_ttft_ticks(backlog, own_rows, rows_per_tick, healthy)
+    }
+
+    /// Stamp the TTFT clock: any tracked request whose ledger count
+    /// just went positive streamed its first token this tick.
+    fn stamp_first_tokens(&mut self) {
+        let Some(ledger) = &self.ledger else { return };
+        let ledger = ledger.lock().expect("stream ledger poisoned");
+        for (&id, m) in self.meta.iter_mut() {
+            if m.first_token_tick.is_none() && ledger.streamed_of(id) > 0 {
+                m.first_token_tick = Some(self.now);
+            }
+        }
     }
 
     /// Cancel `id` wherever it lives (fleet queue, replica queue, live
@@ -515,6 +667,31 @@ impl Fleet {
                 waiting.push_back(p);
                 continue;
             }
+            // SLO admission control: at *first* dispatch (retries keep
+            // whatever admission already promised them), estimate TTFT
+            // from the live prefill backlog and shed a request whose
+            // target is already unreachable — a typed terminal
+            // response, counted against goodput, never a silent drop.
+            if let Some(target) = p.req.params.slo_ttft {
+                let first_try =
+                    self.meta.get(&p.req.id).map_or(true, |m| m.retries == 0);
+                if first_try {
+                    let est = self.estimate_ttft(p.req.prefill_len());
+                    if est > target {
+                        self.shed += 1;
+                        let now = self.now;
+                        self.record_terminal(Response::failure(
+                            p.req.id,
+                            FinishReason::Shed,
+                            format!(
+                                "shed at tick {now}: estimated TTFT {est} ticks \
+                                 exceeds target {target}"
+                            ),
+                        ));
+                        continue;
+                    }
+                }
+            }
             match self.router.route(&mut self.replicas, &p.req) {
                 Ok(_) => {}
                 Err(RouteError::NoReplicas | RouteError::AllRefused) => {
@@ -541,9 +718,19 @@ impl Fleet {
                 Ok(done) => {
                     sup.consec_failures = 0;
                     sup.breaker = Breaker::Closed;
+                    self.stamp_first_tokens();
+                    let now = self.now;
                     for resp in done {
                         if let Some(m) = self.meta.get_mut(&resp.id) {
                             m.done = true;
+                            if !m.slo.is_empty() {
+                                m.slo_met = Some(match resp.finish {
+                                    FinishReason::MaxTokens | FinishReason::StopToken => {
+                                        slo_satisfied(m, resp.tokens.len(), now)
+                                    }
+                                    _ => false,
+                                });
+                            }
                         }
                     }
                 }
@@ -621,11 +808,26 @@ impl Fleet {
             retried: self.retried,
             failed_over: self.failed_over,
             cancelled_deadline: self.cancelled_deadline,
+            shed: self.shed,
             ticks: self.now,
             wall_s,
             responses: self.failures,
             ..FleetReport::default()
         };
+        for m in self.meta.values() {
+            if !m.slo.is_empty() {
+                report.slo_tracked += 1;
+                if m.slo_met == Some(true) {
+                    report.slo_met += 1;
+                }
+            }
+        }
+        if let Some(ledger) = &self.ledger {
+            let ledger = ledger.lock().expect("stream ledger poisoned");
+            report.streamed_tokens = ledger.tokens;
+            report.stream_duplicates = ledger.duplicates;
+            report.stream_gaps = ledger.gaps;
+        }
         for sup in self.replicas {
             let rep = sup.sched.into_report(wall_s);
             report.injected += rep.injected;
@@ -637,13 +839,13 @@ impl Fleet {
         for r in &report.responses {
             match r.finish {
                 FinishReason::MaxTokens | FinishReason::StopToken => report.served += 1,
-                FinishReason::DeadlineExceeded => {}
+                FinishReason::DeadlineExceeded | FinishReason::Shed => {}
                 FinishReason::Failed | FinishReason::Rejected => report.failed += 1,
             }
         }
-        report.dropped = report
-            .submitted
-            .saturating_sub(report.served + report.failed + report.cancelled_deadline);
+        report.dropped = report.submitted.saturating_sub(
+            report.served + report.failed + report.cancelled_deadline + report.shed,
+        );
         let buckets = self.cfg.max_retries as usize + 2;
         report.retries_hist = vec![0; buckets];
         for m in self.meta.values() {

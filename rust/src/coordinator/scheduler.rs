@@ -15,10 +15,13 @@ use crate::util::error::{bail, Result};
 
 use crate::metrics::LatencyStats;
 
+use std::sync::{Arc, Mutex};
+
 use super::batcher::Batcher;
 use super::engine::Engine;
 use super::kv_cache::KvCacheManager;
 use super::request::{FinishReason, Request, RequestId, Response};
+use super::traffic::TokenSink;
 
 /// Serving telemetry for one run.
 #[derive(Debug, Default)]
@@ -30,6 +33,10 @@ pub struct SchedulerReport {
     /// TPOT over successful multi-token responses only (single-token
     /// responses have no inter-token interval and report `tpot_ms: None`).
     pub tpot: LatencyStats,
+    /// Arrival→admission wait over successful responses — the queueing
+    /// component of TTFT, split out so saturation shows up as queue
+    /// growth rather than as mysterious prefill slowness.
+    pub queue_delay: LatencyStats,
     pub e2e: LatencyStats,
     pub wall_s: f64,
     pub tokens_out: u64,
@@ -57,6 +64,10 @@ pub struct SchedulerReport {
     pub failed: u64,
     /// Requests cancelled by a TTFT/total deadline.
     pub cancelled_deadline: u64,
+    /// Requests shed by SLO admission control — turned away up front
+    /// because their TTFT target was already unreachable at the offered
+    /// load ([`FinishReason::Shed`]).
+    pub shed: u64,
     /// Numeric-guard trips retried on the fp attention path.
     pub degraded_fallbacks: u64,
     /// Faults injected into this replica (fault plane active).
@@ -105,11 +116,20 @@ pub struct Scheduler {
     pub kv: KvCacheManager,
     pub engine: Engine,
     report: SchedulerReport,
+    /// Per-token streaming receiver; shared so one fleet-level ledger
+    /// can audit every replica's stream.
+    sink: Option<Arc<Mutex<dyn TokenSink>>>,
 }
 
 impl Scheduler {
     pub fn new(batcher: Batcher, kv: KvCacheManager, engine: Engine) -> Scheduler {
-        Scheduler { batcher, kv, engine, report: SchedulerReport::default() }
+        Scheduler { batcher, kv, engine, report: SchedulerReport::default(), sink: None }
+    }
+
+    /// Install a streaming sink: every token the engine samples from
+    /// here on is forwarded as it is produced.
+    pub fn set_sink(&mut self, sink: Arc<Mutex<dyn TokenSink>>) {
+        self.sink = Some(sink);
     }
 
     pub fn submit(&mut self, req: Request) {
@@ -216,6 +236,18 @@ impl Scheduler {
                 return Err(e);
             }
         };
+        // stream tokens sampled this tick. Only a *successful* step
+        // streams: an errored step drains slots with their `streamed`
+        // watermarks intact, so failover resumes exactly past the last
+        // token the sink saw — no duplicates, no gaps.
+        if let Some(sink) = &self.sink {
+            if !outcome.streamed.is_empty() {
+                let mut sink = sink.lock().expect("token sink poisoned");
+                for tok in &outcome.streamed {
+                    sink.on_token(*tok);
+                }
+            }
+        }
         // 3. requeue preempted requests at the head (their logical and
         //    physical blocks were released inside the step), and
         //    numeric-guard evictions flagged for the fp path
@@ -250,6 +282,9 @@ impl Scheduler {
                 self.report.ttft.record(std::time::Duration::from_micros(
                     (resp.ttft_ms * 1000.0) as u64,
                 ));
+                self.report.queue_delay.record(std::time::Duration::from_micros(
+                    (resp.queue_ms.max(0.0) * 1000.0) as u64,
+                ));
                 match resp.tpot_ms {
                     Some(tpot) => self.report.tpot.record(
                         std::time::Duration::from_micros((tpot.max(0.0) * 1000.0) as u64),
@@ -262,6 +297,7 @@ impl Scheduler {
                 self.report.tokens_out += resp.tokens.len() as u64;
             }
             FinishReason::DeadlineExceeded => self.report.cancelled_deadline += 1,
+            FinishReason::Shed => self.report.shed += 1,
             FinishReason::Failed | FinishReason::Rejected => self.report.failed += 1,
         }
     }

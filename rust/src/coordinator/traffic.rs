@@ -1,0 +1,220 @@
+//! Traffic plane: chunked prefill, per-token streaming, and SLO-aware
+//! admission — the pieces that make the serving stack behave under
+//! *open-loop* load instead of batch replay.
+//!
+//! * **Chunked prefill** ([`ChunkCfg`]): admission defers the prefill
+//!   compute; the engine's `step` consumes each admitted prompt in
+//!   fixed-size row chunks under a per-tick row budget, interleaved
+//!   with decode steps, so one long-context prefill can no longer
+//!   head-of-line-block every decoding stream. Chunk boundaries stay
+//!   aligned to the plan's Q scale-group size, which keeps chunked
+//!   prefill bit-identical to one-shot prefill on the sage plans (Q
+//!   scale groups are per-forward-call and restart at every chunk
+//!   boundary; K scales are position-absolute).
+//! * **Streaming** ([`TokenSink`] / [`StreamedToken`]): responses emit
+//!   tokens as they are sampled, each tagged with its absolute index,
+//!   so TTFT is first-streamed-token time and sinks can prove no
+//!   duplicate/gap slipped through preemption or crash failover
+//!   ([`StreamLedger`]).
+//! * **SLO admission** ([`SloTargets`], [`estimate_ttft_ticks`]):
+//!   per-request TTFT/TPOT *targets* — distinct from the fault plane's
+//!   hard deadlines. The fleet estimates queue delay from the live
+//!   prefill backlog and *sheds* work that cannot meet its target at
+//!   saturation ([`crate::coordinator::FinishReason::Shed`]), reporting
+//!   goodput-under-SLO instead of serving guaranteed misses.
+
+use std::collections::HashMap;
+
+use crate::util::error::{ensure, Result};
+
+use super::request::RequestId;
+
+/// One streamed token: request, absolute index within the response, and
+/// the token itself. Indices let any sink detect duplicates and gaps.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct StreamedToken {
+    pub id: RequestId,
+    pub index: usize,
+    pub token: i32,
+}
+
+/// Receiver for per-token streaming output. `Send` so a sink can be
+/// shared across per-replica scheduler threads behind a mutex.
+pub trait TokenSink: Send {
+    fn on_token(&mut self, tok: StreamedToken);
+}
+
+/// Chunked-prefill configuration.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ChunkCfg {
+    /// Rows per prefill chunk. Must be a multiple of the plan's Q
+    /// scale-group size (BLOCK_Q = 128 on the sage plans — enforced by
+    /// the backend at [`set_chunked_prefill`] time) so requant horizons
+    /// and the CoW barrier stay aligned and chunked output is
+    /// bit-identical to unchunked.
+    ///
+    /// [`set_chunked_prefill`]: super::backend::EngineBackend::set_chunked_prefill
+    pub chunk_rows: usize,
+    /// Prefill row budget per engine tick, across all prefilling slots.
+    /// Bounds the prefill work a tick can absorb so decode TPOT stays
+    /// bounded. At least `chunk_rows`.
+    pub tick_rows: usize,
+}
+
+impl ChunkCfg {
+    pub fn new(chunk_rows: usize, tick_rows: usize) -> Result<ChunkCfg> {
+        ensure!(chunk_rows >= 1, "prefill chunk must be at least 1 row");
+        ensure!(
+            tick_rows >= chunk_rows,
+            "per-tick prefill budget ({tick_rows}) below chunk size ({chunk_rows})"
+        );
+        Ok(ChunkCfg { chunk_rows, tick_rows })
+    }
+
+    /// One chunk per tick — the simplest fair schedule.
+    pub fn per_tick(chunk_rows: usize) -> Result<ChunkCfg> {
+        Self::new(chunk_rows, chunk_rows)
+    }
+
+    /// Whether every chunk boundary lands on a `group`-row boundary
+    /// (the plan's Q scale-group size; 1 for fp plans).
+    pub fn aligned_to(&self, group: usize) -> bool {
+        group <= 1 || self.chunk_rows % group == 0
+    }
+}
+
+/// Per-request SLO targets, in scheduler ticks (virtual time, so
+/// goodput-under-SLO is deterministic under replay).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct SloTargets {
+    /// Target ticks from arrival to first streamed token.
+    pub ttft_ticks: Option<u64>,
+    /// Target mean ticks per output token after the first.
+    pub tpot_ticks: Option<f64>,
+}
+
+impl SloTargets {
+    pub fn is_empty(&self) -> bool {
+        self.ttft_ticks.is_none() && self.tpot_ticks.is_none()
+    }
+}
+
+/// Traffic-plane knobs the serve driver threads through the fleet.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct TrafficCfg {
+    /// Chunked prefill; `None` = whole-prompt prefill at admission.
+    pub chunk: Option<ChunkCfg>,
+    /// SLO targets stamped onto every generated request.
+    pub slo: SloTargets,
+    /// Honor `SynthRequest::arrival_ms` as open-loop arrivals (one tick
+    /// = `tick_ms` of arrival time) instead of submitting everything at
+    /// tick 0.
+    pub open_loop: bool,
+    /// Virtual-time scale for open-loop arrival replay.
+    pub tick_ms: f64,
+}
+
+/// Estimated ticks until a newly admitted request streams its first
+/// token: the outstanding prefill backlog (queued rows + admitted but
+/// not-yet-computed chunk rows) plus the request's own prefill, drained
+/// at `rows_per_tick` per healthy replica, plus one tick to sample.
+/// With chunking off, a tick prefills a whole request, so callers pass
+/// the backlog in requests-worth of rows and a large `rows_per_tick`.
+pub fn estimate_ttft_ticks(
+    backlog_rows: usize,
+    own_rows: usize,
+    rows_per_tick: usize,
+    healthy_replicas: usize,
+) -> u64 {
+    let capacity = rows_per_tick.max(1) * healthy_replicas.max(1);
+    ((backlog_rows + own_rows).div_ceil(capacity) + 1) as u64
+}
+
+/// A [`TokenSink`] that audits the stream: counts tokens, flags
+/// duplicates (an index at or below the request's high-water mark —
+/// the double-emission failover must never produce) and gaps (an index
+/// that skips ahead). The chaos soaks assert `duplicates == 0 && gaps
+/// == 0` across crash failover and preemption.
+#[derive(Debug, Default)]
+pub struct StreamLedger {
+    next_index: HashMap<RequestId, usize>,
+    pub tokens: u64,
+    pub duplicates: u64,
+    pub gaps: u64,
+}
+
+impl StreamLedger {
+    pub fn new() -> StreamLedger {
+        StreamLedger::default()
+    }
+
+    /// Tokens streamed for one request so far.
+    pub fn streamed_of(&self, id: RequestId) -> usize {
+        self.next_index.get(&id).copied().unwrap_or(0)
+    }
+
+    pub fn is_clean(&self) -> bool {
+        self.duplicates == 0 && self.gaps == 0
+    }
+}
+
+impl TokenSink for StreamLedger {
+    fn on_token(&mut self, tok: StreamedToken) {
+        let next = self.next_index.entry(tok.id).or_insert(0);
+        if tok.index < *next {
+            self.duplicates += 1;
+            return;
+        }
+        if tok.index > *next {
+            self.gaps += 1;
+        }
+        *next = tok.index + 1;
+        self.tokens += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chunk_cfg_validates() {
+        assert!(ChunkCfg::new(0, 4).is_err());
+        assert!(ChunkCfg::new(8, 4).is_err(), "tick budget below chunk size");
+        let c = ChunkCfg::new(128, 256).unwrap();
+        assert!(c.aligned_to(128));
+        assert!(!c.aligned_to(96));
+        assert!(c.aligned_to(1), "fp plans accept any chunk");
+        assert_eq!(ChunkCfg::per_tick(64).unwrap(), ChunkCfg { chunk_rows: 64, tick_rows: 64 });
+    }
+
+    #[test]
+    fn ttft_estimate_scales_with_backlog_and_capacity() {
+        // empty system: own prefill in one tick + sample tick
+        assert_eq!(estimate_ttft_ticks(0, 64, 64, 1), 2);
+        // backlog drains ahead of us
+        assert_eq!(estimate_ttft_ticks(256, 64, 64, 1), 6);
+        // more replicas drain it faster
+        assert_eq!(estimate_ttft_ticks(256, 64, 64, 2), 4);
+        // zero guards
+        assert!(estimate_ttft_ticks(10, 10, 0, 0) >= 1);
+    }
+
+    #[test]
+    fn stream_ledger_flags_duplicates_and_gaps() {
+        let mut l = StreamLedger::new();
+        l.on_token(StreamedToken { id: 1, index: 0, token: 5 });
+        l.on_token(StreamedToken { id: 1, index: 1, token: 6 });
+        l.on_token(StreamedToken { id: 2, index: 0, token: 7 });
+        assert_eq!(l.tokens, 3);
+        assert!(l.is_clean());
+        assert_eq!(l.streamed_of(1), 2);
+        // duplicate: index below the watermark
+        l.on_token(StreamedToken { id: 1, index: 0, token: 5 });
+        assert_eq!(l.duplicates, 1);
+        // gap: index skips ahead
+        l.on_token(StreamedToken { id: 2, index: 3, token: 9 });
+        assert_eq!(l.gaps, 1);
+        assert!(!l.is_clean());
+    }
+}

@@ -310,6 +310,158 @@ impl WorkloadGen {
 }
 
 // ---------------------------------------------------------------------------
+// Scenario mixes (the traffic plane's declarative workload input)
+// ---------------------------------------------------------------------------
+
+/// A named traffic scenario for the open-loop driver
+/// (`sage serve --workload chat|rag|bursty|shared|mix:...`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Scenario {
+    /// Short prompts, medium generations, smooth Poisson arrivals.
+    Chat,
+    /// RAG-style long prefills (~max_seq/2+) with short generations —
+    /// the head-of-line-blocking stressor chunked prefill exists for.
+    Rag,
+    /// Chat-shaped requests arriving in tight bursts with long gaps.
+    Bursty,
+    /// Every prompt shares a common system-prompt prefix (radix-cache
+    /// shape, mirrors `generate_shared`).
+    Shared,
+}
+
+impl Scenario {
+    pub fn name(self) -> &'static str {
+        match self {
+            Scenario::Chat => "chat",
+            Scenario::Rag => "rag",
+            Scenario::Bursty => "bursty",
+            Scenario::Shared => "shared",
+        }
+    }
+
+    pub fn by_name(s: &str) -> Option<Scenario> {
+        match s {
+            "chat" => Some(Scenario::Chat),
+            "rag" => Some(Scenario::Rag),
+            "bursty" => Some(Scenario::Bursty),
+            "shared" => Some(Scenario::Shared),
+            _ => None,
+        }
+    }
+}
+
+/// Weighted mix of scenarios, parsed from either a bare scenario name
+/// (`chat`) or the weighted form `mix:chat=0.6,rag=0.3,bursty=0.1`.
+/// Weights need not sum to 1 — they are normalized at draw time.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ScenarioMix {
+    pub weights: Vec<(Scenario, f32)>,
+}
+
+impl ScenarioMix {
+    pub fn parse(s: &str) -> Result<ScenarioMix> {
+        if let Some(rest) = s.strip_prefix("mix:") {
+            let mut weights: Vec<(Scenario, f32)> = Vec::new();
+            for clause in rest.split(',').map(str::trim).filter(|c| !c.is_empty()) {
+                let (name, raw) = clause
+                    .split_once('=')
+                    .with_context(|| format!("mix clause '{clause}' missing '='"))?;
+                let sc = Scenario::by_name(name).with_context(|| {
+                    format!("unknown scenario '{name}' (expected chat|rag|bursty|shared)")
+                })?;
+                let w: f32 = raw
+                    .parse()
+                    .map_err(|_| Error::msg(format!("scenario '{name}': bad weight '{raw}'")))?;
+                ensure!(
+                    w > 0.0 && w.is_finite(),
+                    "scenario '{name}': weight {w} must be positive"
+                );
+                ensure!(
+                    !weights.iter().any(|(prev, _)| *prev == sc),
+                    "scenario '{name}' listed twice"
+                );
+                weights.push((sc, w));
+            }
+            ensure!(!weights.is_empty(), "mix: wants at least one scenario=weight clause");
+            Ok(ScenarioMix { weights })
+        } else {
+            let sc = Scenario::by_name(s).with_context(|| {
+                format!("unknown workload '{s}' (expected chat|rag|bursty|shared or mix:...)")
+            })?;
+            Ok(ScenarioMix { weights: vec![(sc, 1.0)] })
+        }
+    }
+
+    /// One-line summary; `parse` round-trips it exactly.
+    pub fn summary(&self) -> String {
+        if let [(sc, w)] = self.weights.as_slice() {
+            if *w == 1.0 {
+                return sc.name().to_owned();
+            }
+        }
+        let parts: Vec<String> =
+            self.weights.iter().map(|(sc, w)| format!("{}={}", sc.name(), w)).collect();
+        format!("mix:{}", parts.join(","))
+    }
+}
+
+impl WorkloadGen {
+    /// Open-loop request stream drawn from a weighted scenario mix.
+    /// Prompt and generation budgets are derived from (and clamped to)
+    /// `max_seq` so every request fits the serving context window.
+    pub fn generate_mix(
+        &mut self,
+        n: usize,
+        mix: &ScenarioMix,
+        max_seq: usize,
+    ) -> Vec<SynthRequest> {
+        let weights: Vec<f32> = mix.weights.iter().map(|(_, w)| *w).collect();
+        let shared_len = (max_seq / 4).max(4);
+        let shared = self.corpus.batch(1, shared_len);
+        let span = |rng: &mut Pcg32, lo: usize, hi: usize| -> usize {
+            lo + rng.below((hi.saturating_sub(lo)).max(1) as u32) as usize
+        };
+        let mut t = 0.0f64;
+        (0..n)
+            .map(|i| {
+                let sc = mix.weights[self.rng.categorical(&weights)].0;
+                let delta = self.rng.exponential(self.rate_per_s) as f64 * 1000.0;
+                // bursty traffic: tight intra-burst spacing, long gaps
+                // between bursts of ~4 — same mean offered load overall
+                t += if sc == Scenario::Bursty {
+                    if i % 4 == 0 {
+                        delta * 3.4
+                    } else {
+                        delta * 0.2
+                    }
+                } else {
+                    delta
+                };
+                let (prompt, budget) = match sc {
+                    Scenario::Chat | Scenario::Bursty => {
+                        let plen = span(&mut self.rng, (max_seq / 8).max(4), max_seq / 4);
+                        (self.corpus.batch(1, plen), (max_seq / 8).max(2))
+                    }
+                    Scenario::Rag => {
+                        let plen = span(&mut self.rng, max_seq / 2, max_seq * 3 / 4);
+                        (self.corpus.batch(1, plen), 8)
+                    }
+                    Scenario::Shared => {
+                        let slen = span(&mut self.rng, 4, (max_seq / 8).max(5));
+                        let mut p = shared.clone();
+                        p.extend(self.corpus.batch(1, slen));
+                        (p, (max_seq / 8).max(2))
+                    }
+                };
+                let max_new = 1 + self.rng.below(budget as u32) as usize;
+                let max_new = max_new.min(max_seq.saturating_sub(prompt.len() + 1)).max(1);
+                SynthRequest { arrival_ms: t, prompt, max_new_tokens: max_new }
+            })
+            .collect()
+    }
+}
+
+// ---------------------------------------------------------------------------
 // Fault-spec grammar (the chaos plane's declarative input)
 // ---------------------------------------------------------------------------
 
@@ -467,6 +619,78 @@ mod tests {
             assert!(FaultSpec::parse(bad).is_err(), "accepted: {bad}");
         }
         assert!(FaultSpec::parse("").unwrap().is_empty());
+    }
+
+    #[test]
+    fn scenario_mix_parses_and_round_trips() {
+        // bare names
+        for name in ["chat", "rag", "bursty", "shared"] {
+            let m = ScenarioMix::parse(name).unwrap();
+            assert_eq!(m.weights.len(), 1);
+            assert_eq!(m.summary(), name);
+            assert_eq!(ScenarioMix::parse(&m.summary()).unwrap(), m);
+        }
+        // weighted form round-trips through its own summary
+        let m = ScenarioMix::parse("mix:chat=0.6,rag=0.3,bursty=0.1").unwrap();
+        assert_eq!(
+            m.weights,
+            vec![
+                (Scenario::Chat, 0.6),
+                (Scenario::Rag, 0.3),
+                (Scenario::Bursty, 0.1)
+            ]
+        );
+        assert_eq!(m.summary(), "mix:chat=0.6,rag=0.3,bursty=0.1");
+        assert_eq!(ScenarioMix::parse(&m.summary()).unwrap(), m);
+    }
+
+    #[test]
+    fn scenario_mix_rejects_malformed() {
+        for bad in [
+            "mix:",                 // empty clause list
+            "mix:chat",             // missing '='
+            "mix:chat=x",           // weight not a number
+            "mix:chat=0",           // weight must be positive
+            "mix:chat=-1",          // negative weight
+            "mix:chat=0.5,chat=0.5", // duplicate scenario
+            "mix:warp=0.5",         // unknown scenario in mix
+            "quantum",              // unknown bare scenario
+        ] {
+            assert!(ScenarioMix::parse(bad).is_err(), "accepted: {bad}");
+        }
+    }
+
+    #[test]
+    fn generate_mix_respects_scenario_shapes() {
+        let max_seq = 256;
+        let mut w = WorkloadGen::new(5, 256, 100.0, vec![16, 32], 16);
+        let mix = ScenarioMix::parse("mix:chat=0.5,rag=0.5").unwrap();
+        let reqs = w.generate_mix(200, &mix, max_seq);
+        assert_eq!(reqs.len(), 200);
+        let mut long_prefills = 0;
+        for pair in reqs.windows(2) {
+            assert!(pair[1].arrival_ms >= pair[0].arrival_ms);
+        }
+        for r in &reqs {
+            assert!(!r.prompt.is_empty() && r.max_new_tokens >= 1);
+            assert!(r.prompt.len() + r.max_new_tokens <= max_seq, "request overflows window");
+            if r.prompt.len() >= max_seq / 2 {
+                long_prefills += 1;
+            }
+        }
+        assert!(long_prefills > 50, "rag half of the mix must produce long prefills");
+        // shared scenario: common prefix across requests
+        let mut w = WorkloadGen::new(5, 256, 100.0, vec![16], 16);
+        let shared = w.generate_mix(8, &ScenarioMix::parse("shared").unwrap(), max_seq);
+        let prefix = &shared[0].prompt[..max_seq / 4];
+        for r in &shared {
+            assert_eq!(&r.prompt[..max_seq / 4], prefix, "shared scenario must share a prefix");
+        }
+        // deterministic given seed
+        let mut w2 = WorkloadGen::new(5, 256, 100.0, vec![16, 32], 16);
+        let reqs2 = w2.generate_mix(200, &mix, max_seq);
+        assert_eq!(reqs.len(), reqs2.len());
+        assert!(reqs.iter().zip(&reqs2).all(|(a, b)| a.prompt == b.prompt));
     }
 
     #[test]

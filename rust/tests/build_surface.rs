@@ -14,8 +14,8 @@ use sageattention::attn::{
 };
 use sageattention::bench::{f1, f2, f3, f4, pct, sci, Table};
 use sageattention::coordinator::{
-    BatchPolicy, Batcher, FinishReason, GenParams, KvCacheManager, Request, Router,
-    RoutingPolicy,
+    BatchPolicy, Batcher, ChunkCfg, FinishReason, GenParams, KvCacheManager, Request, Router,
+    RoutingPolicy, SloTargets, StreamLedger, StreamedToken, TokenSink, TrafficCfg,
 };
 use sageattention::metrics::{accuracy, attention_ops, cos_sim, LatencyStats, Welford};
 use sageattention::perfmodel::{
@@ -26,7 +26,7 @@ use sageattention::quant::{
     QuantizedPlane,
 };
 use sageattention::runtime::{Manifest, Value};
-use sageattention::synth::{make_qkv, Corpus, Profile, WorkloadGen};
+use sageattention::synth::{make_qkv, Corpus, Profile, Scenario, ScenarioMix, WorkloadGen};
 use sageattention::tensor::{parallel_map, parallel_map_with, Tensor};
 use sageattention::testing::gen;
 use sageattention::util::f16::{round_f16, F16};
@@ -243,6 +243,24 @@ fn coordinator_surface() {
     let _ = FinishReason::MaxTokens;
     let _ = FinishReason::StopToken;
     let _ = FinishReason::Rejected;
+    let _ = FinishReason::Failed;
+    let _ = FinishReason::DeadlineExceeded;
+    let _ = FinishReason::Shed;
+
+    // traffic plane: chunk grammar, SLO targets, stream auditing
+    let chunk = ChunkCfg::new(128, 256).unwrap();
+    assert!(chunk.aligned_to(128) && !chunk.aligned_to(96));
+    assert!(ChunkCfg::new(16, 8).is_err(), "tick budget below chunk size");
+    assert!(SloTargets::default().is_empty());
+    let slo = SloTargets { ttft_ticks: Some(4), tpot_ticks: Some(2.0) };
+    assert!(!slo.is_empty());
+    let traffic = TrafficCfg { chunk: Some(chunk), slo, open_loop: true, tick_ms: 1.0 };
+    assert!(traffic.chunk.unwrap().tick_rows == 256 && traffic.open_loop);
+    let mut ledger = StreamLedger::new();
+    let sink: &mut dyn TokenSink = &mut ledger;
+    sink.on_token(StreamedToken { id: 9, index: 0, token: 7 });
+    sink.on_token(StreamedToken { id: 9, index: 1, token: 8 });
+    assert!(ledger.is_clean() && ledger.streamed_of(9) == 2 && ledger.tokens == 2);
 
     struct Mock(usize, f64);
     impl sageattention::coordinator::Replica for Mock {
@@ -340,6 +358,14 @@ fn support_module_surface() {
     assert_eq!(corpus.vocab(), 32);
     let mut wl = WorkloadGen::new(1, 32, 10.0, vec![4, 8], 4);
     assert_eq!(wl.generate(3).len(), 3);
+    let mix = ScenarioMix::parse("mix:chat=0.6,rag=0.3,bursty=0.1").unwrap();
+    assert_eq!(ScenarioMix::parse(&mix.summary()).unwrap(), mix);
+    assert_eq!(Scenario::by_name("chat"), Some(Scenario::Chat));
+    assert_eq!(ScenarioMix::parse("shared").unwrap().summary(), "shared");
+    assert!(ScenarioMix::parse("mix:chat=-1").is_err());
+    let reqs = wl.generate_mix(6, &mix, 128);
+    assert_eq!(reqs.len(), 6);
+    assert!(reqs.iter().all(|r| r.prompt.len() + r.max_new_tokens <= 128));
 
     // parallel substrates
     assert_eq!(parallel_map(4, 2, |i| i), vec![0, 1, 2, 3]);

@@ -4,7 +4,7 @@
 
 use sageattention::attn::PAGE_ROWS;
 use sageattention::coordinator::{
-    is_crash, BatchPolicy, Batcher, DecodeMode, Engine, FinishReason, Fleet, FleetCfg,
+    is_crash, BatchPolicy, Batcher, ChunkCfg, DecodeMode, Engine, FinishReason, Fleet, FleetCfg,
     FleetReport, GenParams, KvCacheManager, NativeEngine, Request, RoutingPolicy, Scheduler,
 };
 use sageattention::runtime::{Manifest, ModelCfg, Runtime, Value};
@@ -402,6 +402,84 @@ fn total_deadline_cancels_in_flight_work_cleanly() {
             r.finish
         );
     }
+}
+
+// ---------------------------------------------------------------------------
+// ISSUE 8: chaos under the traffic plane (chunked prefill + streaming + SLO)
+// ---------------------------------------------------------------------------
+
+/// Chaos soak with every traffic-plane feature armed at once: chunked
+/// prefill under a per-tick row budget, per-token streaming through the
+/// fleet ledger, and SLO admission on half the requests — against step
+/// errors, spurious OOM, poisoned logits, and a mid-run crash. The
+/// pins: exact terminal accounting (`served + failed + cancelled +
+/// shed == submitted`), audit-clean KV pools after every tick, zero
+/// duplicated and zero gapped streamed tokens through
+/// failover/preemption/retry, and a bit-identical replay.
+#[test]
+fn chaos_soak_under_chunked_prefill_and_streaming() {
+    let spec = FaultSpec::parse("step_err:0.05,oom:0.1,poison:0.02,crash:r1@t10").unwrap();
+    let cfg = ModelCfg::builtin("tiny").unwrap();
+    let run = || -> (FleetReport, Vec<(u64, usize)>) {
+        let slots = 2;
+        let mut scheds = Vec::new();
+        for i in 0..2 {
+            let engine = Engine::native_with(cfg.clone(), "fp", 11, slots)
+                .unwrap()
+                .faulted(spec.clone(), 11, i);
+            let kv = KvCacheManager::new(slots * cfg.max_seq.div_ceil(PAGE_ROWS), PAGE_ROWS);
+            scheds.push(Scheduler::new(Batcher::new(BatchPolicy::Fifo), kv, engine));
+        }
+        let fleet_cfg = FleetCfg { tick_prefill_rows: Some(32), ..Default::default() };
+        let mut fleet = Fleet::new(scheds, RoutingPolicy::RoundRobin, fleet_cfg);
+        assert!(fleet.set_chunked_prefill(ChunkCfg::new(16, 32).unwrap()));
+        let ledger = fleet.enable_streaming();
+        let mut gen = WorkloadGen::new(11, cfg.vocab, 50.0, vec![24, 40], 8);
+        for (i, r) in gen.generate(12).into_iter().enumerate() {
+            // SLO admission armed on odd ids: shedding must compose with
+            // faults without breaking the accounting identity
+            let slo_ttft = if i % 2 == 1 { Some(6) } else { None };
+            fleet.submit(Request::new(
+                i as u64,
+                r.prompt,
+                GenParams { max_new_tokens: r.max_new_tokens, slo_ttft, ..Default::default() },
+            ));
+        }
+        let mut guard = 0;
+        while fleet.has_work() {
+            fleet.tick().unwrap();
+            fleet.audit_kv(false).unwrap();
+            guard += 1;
+            assert!(guard < 100_000, "chaos soak made no progress");
+        }
+        fleet.audit_kv(true).unwrap();
+        let streamed: Vec<(u64, usize)> =
+            (0..12u64).map(|id| (id, ledger.lock().unwrap().streamed_of(id))).collect();
+        (fleet.run_to_completion().unwrap(), streamed)
+    };
+    let (a, streamed_a) = run();
+    let (b, streamed_b) = run();
+    assert!(a.injected > 0, "the spec must actually inject faults");
+    assert!(a.fully_accounted(), "dropped {} of {} submitted", a.dropped, a.submitted);
+    assert_eq!(a.submitted, 12);
+    assert_eq!(a.stream_duplicates, 0, "a replayed/failed-over token was double-streamed");
+    assert_eq!(a.stream_gaps, 0, "a token stream skipped an index");
+    assert!(a.streamed_tokens > 0, "streaming must be live under chaos");
+    for r in &a.responses {
+        let n = streamed_a.iter().find(|(id, _)| *id == r.id).unwrap().1;
+        match r.finish {
+            FinishReason::MaxTokens | FinishReason::StopToken => {
+                assert_eq!(n, r.tokens.len(), "request {} streamed != returned", r.id);
+            }
+            FinishReason::Shed => assert_eq!(n, 0, "shed request {} streamed tokens", r.id),
+            _ => {}
+        }
+    }
+    let key = |r: &FleetReport| -> Vec<(u64, Vec<i32>, FinishReason)> {
+        r.responses.iter().map(|x| (x.id, x.tokens.clone(), x.finish)).collect()
+    };
+    assert_eq!(key(&a), key(&b), "terminal responses must replay identically");
+    assert_eq!(streamed_a, streamed_b, "streamed counts must replay identically");
 }
 
 /// Tentpole §3 pin: NaN-poisoned logits on the sage plan trip the
