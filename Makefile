@@ -3,7 +3,11 @@
 #   make verify          tier-1 (release build + tests) plus the format gate,
 #                        a second test pass with SAGE_ISA=scalar (keeps the
 #                        portable microkernel fallback covered even on SIMD
-#                        hosts), the native-backend serve smokes (end-to-end
+#                        hosts) and a third with SAGE_ISA=avx2 on hosts whose
+#                        detected best tier is avx2 or vnni (pins the AVX2
+#                        lane even where VNNI would win dispatch; silently
+#                        skipped elsewhere), the native-backend serve smokes
+#                        (end-to-end
 #                        decode with zero PJRT, plus the shared-prefix
 #                        workload through the radix prefix cache; fails on
 #                        panic/nonzero exit), the chaos-soak smokes (a
@@ -17,9 +21,10 @@
 #                        check against the checked-in bench_baseline.json
 #                        (speedup floors: blocked-vs-naive, PreparedKV
 #                        decode, serve-decode, dot-i8 SIMD-vs-scalar,
-#                        shared-prefix prefill-tokens-saved,
-#                        goodput-under-faults, goodput-under-SLO; tab09
-#                        kernel-accuracy cosine floors)
+#                        fused-fp16-PV-vs-unfused, shared-prefix
+#                        prefill-tokens-saved, goodput-under-faults,
+#                        goodput-under-SLO; tab09 kernel-accuracy cosine
+#                        floors)
 #   make build           release build only
 #   make test            test suite only
 #   make fmt             rewrite sources with rustfmt
@@ -32,6 +37,9 @@
 verify:
 	cargo build --release && cargo test -q && cargo fmt --check
 	SAGE_ISA=scalar cargo test -q
+	if ./target/release/sage kernels | grep -Eq 'detected best (avx2|vnni)'; then \
+		SAGE_ISA=avx2 cargo test -q; \
+	fi
 	./target/release/sage serve --backend native --requests 8
 	./target/release/sage serve --backend native --requests 8 --prefix-cache --workload shared
 	./target/release/sage serve --backend native --config tiny --requests 12 \

@@ -4,12 +4,13 @@
 //! EXPERIMENTS.md §Perf.
 
 use sageattention::attn::isa::{self, IsaLevel};
-use sageattention::attn::AttnSpec;
+use sageattention::attn::{pv, AttnSpec};
 use sageattention::bench::{bench_budget, Table};
 use sageattention::coordinator::{Engine, GenParams, KvCacheManager, Request};
 use sageattention::quant::{self, Granularity};
 use sageattention::runtime::{Runtime, Value};
 use sageattention::synth::{make_qkv, Profile};
+use sageattention::util::f16::round_f16_slice;
 use std::time::Duration;
 
 fn main() {
@@ -67,6 +68,48 @@ fn main() {
                 || {
                     (kern.qk_tile_i8)(&qi, &ki, d, bq, bk, &mut tile, bk);
                     std::hint::black_box(&mut tile);
+                },
+            ));
+        }
+    }
+
+    // --- fused fp16-PV tile (attn::pv): the fused pv_f16_step walk vs
+    //     the original axpy + slice-round + add composition, per tier ---
+    {
+        let d = 128usize;
+        let (rows, bk) = (128usize, 64usize);
+        let mut vt: Vec<f32> = (0..bk * d).map(|i| ((i % 31) as f32 - 15.0) * 0.125).collect();
+        round_f16_slice(&mut vt);
+        let mut pr: Vec<f32> =
+            (0..rows * bk).map(|i| if i % 5 == 0 { 0.0 } else { (i % 13) as f32 * 0.07 }).collect();
+        round_f16_slice(&mut pr);
+        let mut o = vec![0.0f32; rows * d];
+        let mut part = vec![0.0f32; d];
+        for level in IsaLevel::ALL {
+            let Some(kern) = isa::for_level(level) else { continue };
+            push(bench_budget(
+                &format!("isa/pv-f16 fused {} 128x64 d128", level.name()),
+                budget,
+                10,
+                || {
+                    o.fill(0.0);
+                    for (r, p) in pr.chunks_exact(bk).enumerate() {
+                        pv::fp16_tile_fused(kern, &mut o[r * d..(r + 1) * d], p, &vt, d);
+                    }
+                    std::hint::black_box(&mut o);
+                },
+            ));
+            push(bench_budget(
+                &format!("isa/pv-f16 unfused {} 128x64 d128", level.name()),
+                budget,
+                10,
+                || {
+                    o.fill(0.0);
+                    for (r, p) in pr.chunks_exact(bk).enumerate() {
+                        let or = &mut o[r * d..(r + 1) * d];
+                        pv::fp16_tile_unfused(kern, or, p, &vt, &mut part, d);
+                    }
+                    std::hint::black_box(&mut o);
                 },
             ));
         }

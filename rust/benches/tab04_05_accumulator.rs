@@ -5,6 +5,11 @@
 //! are O(1), accumulating P̃·V in FP16 loses nothing vs FP32 — while
 //! running 2× faster on RTX4090-class hardware. Both tables should show
 //! *identical* metrics to the displayed precision.
+//!
+//! Both accumulator modes route through the shared `attn::pv` tile
+//! formulation (the fused `pv_f16_step` / `axpy_f32` ISA lanes), so the
+//! numbers here measure exactly what the plane, prepared and paged
+//! kernels execute.
 
 use sageattention::attn::{AttnImpl, AttnSpec, PvMode};
 use sageattention::bench::{f4, pct, sci, Table};

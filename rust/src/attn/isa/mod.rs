@@ -8,18 +8,31 @@
 //!   `SAGE_ISA` override (`scalar|avx2|vnni|neon`).
 //! * [`Kernels`] — one dispatch table per tier: [`dot_i8`] (the raw
 //!   mma primitive), [`Kernels::qk_tile_i8`] (a whole BLOCK_Q×BLOCK_KV
-//!   score tile per call, amortizing K loads across Q rows), and the
-//!   P·V accumulation lanes (`pv_accum_i8`, `axpy_f32`, `scale_f32`).
+//!   score tile per call, amortizing K loads across Q rows), the INT8
+//!   P·V lane (`pv_accum_i8`), the f32 lanes (`axpy_f32`, `scale_f32`;
+//!   8-wide AVX, 16-wide AVX-512 on the VNNI tier, 4-wide NEON), and
+//!   the fused fp16-accumulator lanes (`pv_f16_step`, a whole MMA_K
+//!   contraction block with the f16 round-trip folded into the
+//!   multiply-add, and `scale_round_f16`, the α-rescale with the f16
+//!   store folded in) that `attn::pv` drives.
 //! * [`kernels`] — the table for the active tier (what
 //!   `attn::plane` / `attn::prepared` call); [`for_level`] reaches a
 //!   specific tier for differential tests and benches.
+//! * [`prefetch`] / [`prefetch_head`] — best-effort software prefetch
+//!   (`prefetcht0` / `prfm pldl1keep`) for the paged-KV gather, where
+//!   the next physical page is a pointer chase the hardware streamer
+//!   cannot predict.
 //!
 //! **Bit-identity guarantee**: every tier returns exactly the scalar
 //! reference's bits. INT8 kernels accumulate in i32 (associative — any
 //! lane order gives the same integer); f32 kernels are element-wise
-//! mul-then-add with FMA contraction explicitly avoided. The existing
-//! plane/prepared bit-identity suites therefore pin all tiers at once,
-//! and `tests/isa_differential.rs` fuzzes the microkernels directly.
+//! mul-then-add with FMA contraction explicitly avoided; the fused f16
+//! lanes perform, per element, the same mul/add/round sequence as the
+//! `axpy_f32` + `round_f16_slice` composition they replace (hardware
+//! F16C rounding is pinned bit-for-bit against the software converter
+//! in `util::f16`). The existing plane/prepared bit-identity suites
+//! therefore pin all tiers at once, and `tests/isa_differential.rs`
+//! fuzzes the microkernels directly.
 
 pub mod cpu;
 
@@ -43,10 +56,27 @@ pub type PvAccumI8Fn = fn(&mut [i32], &[i8], i32);
 pub type AxpyF32Fn = fn(&mut [f32], &[f32], f32);
 /// `(out, a)`: `out[i] *= a`.
 pub type ScaleF32Fn = fn(&mut [f32], f32);
+/// `(o, p, v, d)`: one fused MMA_K contraction block of the
+/// fp16-accumulator P·V simulation. For every output channel `c < d`,
+/// accumulate `Σ_t p[t]·v[t*d + c]` over the (≤ 16) steps in f32
+/// registers — mul-then-add in `t` order, skipping `p[t] == 0.0` — then
+/// round the partial to f16 once and round `o[c] + partial` back into
+/// `o[c]`. Element-wise identical to axpy-into-part / round(part) /
+/// add / round(o).
+pub type PvF16StepFn = fn(&mut [f32], &[f32], &[f32], usize);
+/// `(out, a)`: `out[i] = round_f16(out[i] * a)` — the online-softmax α
+/// correction with the f16 store folded in (Fp16Accum keeps the
+/// accumulator in f16 between tiles).
+pub type ScaleRoundF16Fn = fn(&mut [f32], f32);
 
 /// One tier's microkernel dispatch table. Tables are only handed out for
 /// tiers the host supports ([`for_level`]), which is what makes the
 /// `#[target_feature]` implementations behind these pointers sound.
+///
+/// Eight entries per tier: the QKᵀ lanes (`dot_i8`, `qk_tile_i8`), the
+/// INT8 P·V lane (`pv_accum_i8`), the f32 lanes (`axpy_f32`,
+/// `scale_f32`), the fused fp16-accumulator lanes (`pv_f16_step`,
+/// `scale_round_f16`), and the advertised [`f32_width`](Self::f32_width).
 pub struct Kernels {
     pub level: IsaLevel,
     pub dot_i8: DotI8Fn,
@@ -54,6 +84,24 @@ pub struct Kernels {
     pub pv_accum_i8: PvAccumI8Fn,
     pub axpy_f32: AxpyF32Fn,
     pub scale_f32: ScaleF32Fn,
+    pub pv_f16_step: PvF16StepFn,
+    pub scale_round_f16: ScaleRoundF16Fn,
+    /// f32 elements per vector op in this tier's `axpy_f32`/`scale_f32`
+    /// lanes (1 scalar, 4 NEON, 8 AVX, 16 AVX-512).
+    pub f32_width: usize,
+}
+
+impl Kernels {
+    /// How this tier's fused `pv_f16_step` performs the f16 round-trip —
+    /// hardware F16C conversions or the bit-identical software
+    /// converter (`sage kernels` reporting; depends on runtime F16C
+    /// detection and the `SAGE_ISA` override, hence not a table field).
+    pub fn pv_f16_round_desc(&self) -> &'static str {
+        match self.level {
+            IsaLevel::Avx2 | IsaLevel::Vnni if cpu::f16c_enabled() => "fused (F16C round)",
+            _ => "fused (software round)",
+        }
+    }
 }
 
 static SCALAR: Kernels = Kernels {
@@ -63,6 +111,9 @@ static SCALAR: Kernels = Kernels {
     pv_accum_i8: scalar::pv_accum_i8,
     axpy_f32: scalar::axpy_f32,
     scale_f32: scalar::scale_f32,
+    pv_f16_step: scalar::pv_f16_step,
+    scale_round_f16: scalar::scale_round_f16,
+    f32_width: 1,
 };
 
 #[cfg(target_arch = "x86_64")]
@@ -73,12 +124,16 @@ static AVX2: Kernels = Kernels {
     pv_accum_i8: x86::pv_accum_i8_avx2,
     axpy_f32: x86::axpy_f32_avx,
     scale_f32: x86::scale_f32_avx,
+    pv_f16_step: x86::pv_f16_step_avx,
+    scale_round_f16: x86::scale_round_f16_avx,
+    f32_width: 8,
 };
 
-// the VNNI tier upgrades the QKᵀ dot/tile; the P·V lanes (byte-widening
-// multiplies and f32 axpy) have no VNNI-specific instruction and reuse
-// the AVX2 implementations. Compiled only on rustc ≥ 1.89 (build.rs
-// emits `sage_avx512` where the AVX-512 intrinsics are stable); older
+// the VNNI tier upgrades the QKᵀ dot/tile with `vpdpbusd`, widens the
+// f32 and fused-f16 lanes to 16 elements with AVX-512F (the byte-widening
+// INT8 P·V multiply has no VNNI-specific instruction and stays on the
+// AVX2 lane). Compiled only on rustc ≥ 1.89 (build.rs emits
+// `sage_avx512` where the AVX-512 intrinsics are stable); older
 // toolchains never detect `vnni`, so the table is never requested.
 #[cfg(all(target_arch = "x86_64", sage_avx512))]
 static VNNI: Kernels = Kernels {
@@ -86,8 +141,11 @@ static VNNI: Kernels = Kernels {
     dot_i8: x86::dot_i8_vnni,
     qk_tile_i8: x86::qk_tile_i8_vnni,
     pv_accum_i8: x86::pv_accum_i8_avx2,
-    axpy_f32: x86::axpy_f32_avx,
-    scale_f32: x86::scale_f32_avx,
+    axpy_f32: x86::axpy_f32_avx512,
+    scale_f32: x86::scale_f32_avx512,
+    pv_f16_step: x86::pv_f16_step_avx512,
+    scale_round_f16: x86::scale_round_f16_avx512,
+    f32_width: 16,
 };
 
 #[cfg(target_arch = "aarch64")]
@@ -98,6 +156,9 @@ static NEON: Kernels = Kernels {
     pv_accum_i8: neon::pv_accum_i8_neon,
     axpy_f32: neon::axpy_f32_neon,
     scale_f32: neon::scale_f32_neon,
+    pv_f16_step: neon::pv_f16_step_neon,
+    scale_round_f16: neon::scale_round_f16_neon,
+    f32_width: 4,
 };
 
 /// The dispatch table for one specific tier, or `None` when this host
@@ -133,6 +194,61 @@ pub fn kernels() -> &'static Kernels {
 #[inline]
 pub fn dot_i8(a: &[i8], b: &[i8]) -> i32 {
     (kernels().dot_i8)(a, b)
+}
+
+/// The prefetch instruction [`prefetch`] emits on this target (for
+/// `sage kernels` reporting).
+#[cfg(target_arch = "x86_64")]
+pub const PREFETCH_DESC: &str = "prefetcht0";
+#[cfg(target_arch = "aarch64")]
+pub const PREFETCH_DESC: &str = "prfm pldl1keep";
+#[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+pub const PREFETCH_DESC: &str = "none (portable no-op)";
+
+/// Best-effort software prefetch of the cache line holding `p` into L1.
+/// A pure scheduling hint: never faults (even on wild addresses), never
+/// changes architectural state — a no-op on targets without one.
+#[inline(always)]
+pub fn prefetch<T>(p: *const T) {
+    #[cfg(target_arch = "x86_64")]
+    // SAFETY: prefetcht0 is a hint that cannot fault; SSE is baseline
+    // on x86_64.
+    unsafe {
+        std::arch::x86_64::_mm_prefetch::<{ std::arch::x86_64::_MM_HINT_T0 }>(p as *const i8);
+    }
+    #[cfg(target_arch = "aarch64")]
+    // SAFETY: prfm is a hint that cannot fault and writes no registers.
+    unsafe {
+        std::arch::asm!(
+            "prfm pldl1keep, [{0}]",
+            in(reg) p as *const u8,
+            options(nostack, preserves_flags),
+        );
+    }
+    #[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+    let _ = p;
+}
+
+/// Cache lines touched by [`prefetch_head`]: enough to hide the
+/// pointer-chase latency of jumping to the next physical KV page — the
+/// hardware streamer takes over once the sequential row walk begins.
+const PREFETCH_HEAD_LINES: usize = 8;
+
+/// Prefetch the leading cache lines of a slice (up to
+/// [`PREFETCH_HEAD_LINES`] × 64 bytes). Used by the paged-KV gather to
+/// touch the *next* page's rows while the current tile computes; a
+/// no-op for empty slices.
+#[inline]
+pub fn prefetch_head<T>(s: &[T]) {
+    let bytes = std::mem::size_of_val(s).min(PREFETCH_HEAD_LINES * 64);
+    let base = s.as_ptr() as *const u8;
+    let mut off = 0;
+    while off < bytes {
+        // SAFETY: `off < bytes ≤ size_of_val(s)`, an in-bounds offset of
+        // a live allocation (and prefetch tolerates any address anyway).
+        prefetch(unsafe { base.add(off) });
+        off += 64;
+    }
 }
 
 // The scalar-vs-SIMD differential contract (odd lengths, unaligned
@@ -171,5 +287,31 @@ mod tests {
             assert_eq!((kern.dot_i8)(&a, &b), 256 * -128 * 127, "{}", kern.level.name());
             assert_eq!((kern.dot_i8)(&a, &a), 256 * 128 * 128, "{}", kern.level.name());
         }
+    }
+
+    #[test]
+    fn fused_f16_lanes_agree_across_tables_and_prefetch_is_safe() {
+        // table coherence smoke (the real fuzz — odd d, subnormals,
+        // overflow edges — lives in tests/isa_differential.rs)
+        let scalar = for_level(IsaLevel::Scalar).expect("scalar table");
+        let d = 13;
+        let p: Vec<f32> =
+            (0..16).map(|i| if i % 4 == 0 { 0.0 } else { 0.25 * i as f32 }).collect();
+        let v: Vec<f32> = (0..16 * d).map(|i| ((i % 29) as f32 - 14.0) * 0.5).collect();
+        for kern in simd_tables() {
+            let mut want = vec![1.0f32; d];
+            let mut got = vec![1.0f32; d];
+            (scalar.pv_f16_step)(&mut want, &p, &v, d);
+            (kern.pv_f16_step)(&mut got, &p, &v, d);
+            assert_eq!(want, got, "pv_f16_step {}", kern.level.name());
+            (scalar.scale_round_f16)(&mut want, 0.731);
+            (kern.scale_round_f16)(&mut got, 0.731);
+            assert_eq!(want, got, "scale_round_f16 {}", kern.level.name());
+            assert!(kern.f32_width >= 1);
+            assert!(!kern.pv_f16_round_desc().is_empty());
+        }
+        // prefetch is a hint: any slice (including empty) is fine
+        prefetch_head(&v);
+        prefetch_head::<f32>(&[]);
     }
 }

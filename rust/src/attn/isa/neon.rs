@@ -15,6 +15,7 @@
 use std::arch::aarch64::*;
 
 use super::cpu::{supported, IsaLevel};
+use crate::util::f16::round_f16;
 
 pub(super) fn dot_i8_neon(a: &[i8], b: &[i8]) -> i32 {
     debug_assert!(supported(IsaLevel::Neon), "neon kernel on an unsupported host");
@@ -174,4 +175,63 @@ unsafe fn scale_f32_neon_imp(out: &mut [f32], a: f32) {
         out[i] *= a;
         i += 1;
     }
+}
+
+// ---------------------------------------------------------------------------
+// Fused fp16-accumulator lanes. The f16 NEON intrinsics (`float16x4_t`,
+// `vcvt_f16_f32`) are still unstable in Rust, so the round-trip uses the
+// software converter per lane — the MAC accumulation is still the fused
+// register-blocked walk (one pass over `o` instead of three), which is
+// where the win is.
+// ---------------------------------------------------------------------------
+
+pub(super) fn pv_f16_step_neon(o: &mut [f32], p: &[f32], v: &[f32], d: usize) {
+    debug_assert!(supported(IsaLevel::Neon), "neon kernel on an unsupported host");
+    debug_assert!(o.len() >= d && v.len() >= p.len() * d);
+    // SAFETY: reachable only via a table gated on runtime NEON detection.
+    unsafe { pv_f16_step_neon_imp(o, p, v, d) }
+}
+
+#[target_feature(enable = "neon")]
+unsafe fn pv_f16_step_neon_imp(o: &mut [f32], p: &[f32], v: &[f32], d: usize) {
+    let dv = d - d % 4;
+    let mut buf = [0.0f32; 4];
+    let mut c = 0;
+    while c < dv {
+        let mut acc = vdupq_n_f32(0.0);
+        for (t, &pt) in p.iter().enumerate() {
+            if pt == 0.0 {
+                continue;
+            }
+            let vv = vld1q_f32(v.as_ptr().add(t * d + c));
+            // explicit mul then add — vmlaq would contract to fma and
+            // break bit-identity with the scalar reference
+            acc = vaddq_f32(acc, vmulq_f32(vdupq_n_f32(pt), vv));
+        }
+        vst1q_f32(buf.as_mut_ptr(), acc);
+        for (lane, &partial) in buf.iter().enumerate() {
+            let oc = &mut o[c + lane];
+            *oc = round_f16(*oc + round_f16(partial));
+        }
+        c += 4;
+    }
+    while c < d {
+        let mut acc = 0.0f32;
+        for (t, &pt) in p.iter().enumerate() {
+            if pt != 0.0 {
+                acc += pt * v[t * d + c];
+            }
+        }
+        acc = round_f16(acc);
+        o[c] = round_f16(o[c] + acc);
+        c += 1;
+    }
+}
+
+pub(super) fn scale_round_f16_neon(out: &mut [f32], a: f32) {
+    debug_assert!(supported(IsaLevel::Neon), "neon kernel on an unsupported host");
+    // the f16 store dominates and has no stable NEON round-trip; the
+    // fused scalar pass (one mul + one round per element) is the win
+    // over the old two-pass scale + slice-round
+    super::scalar::scale_round_f16(out, a);
 }

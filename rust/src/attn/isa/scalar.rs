@@ -2,7 +2,11 @@
 //! tier must reproduce bit-exactly. The INT8 kernels accumulate in i32
 //! (associative, so any summation order is the same integer); the f32
 //! kernels are strictly element-wise (one mul + one add per lane, never
-//! fused), so vector reimplementations are IEEE-identical per element.
+//! fused), so vector reimplementations are IEEE-identical per element;
+//! the fused f16 lanes perform per element exactly the operation
+//! sequence of the `axpy_f32` + `round_f16` composition they replace.
+
+use crate::util::f16::round_f16;
 
 /// INT8 dot product with i32 accumulation — the mma(u8.u8.s32) primitive
 /// (§4.3). Eight independent accumulator lanes let LLVM vectorize the
@@ -70,5 +74,38 @@ pub(super) fn axpy_f32(out: &mut [f32], x: &[f32], a: f32) {
 pub(super) fn scale_f32(out: &mut [f32], a: f32) {
     for o in out.iter_mut() {
         *o *= a;
+    }
+}
+
+/// Fused α-rescale + f16 store: `out[i] = round_f16(out[i] * a)` — one
+/// pass over the Fp16Accum accumulator where `scale_f32` +
+/// `round_f16_slice` made two. Element-wise identical to that
+/// composition (same mul, same round, per element).
+pub(super) fn scale_round_f16(out: &mut [f32], a: f32) {
+    for o in out.iter_mut() {
+        *o = round_f16(*o * a);
+    }
+}
+
+/// One fused contraction block of the fp16-accumulator P·V simulation
+/// (§4.4): for each output channel, up to 16 `p·v` MACs accumulate in an
+/// f32 register (mul-then-add in step order, skipping `p == 0.0` like
+/// the axpy walk), the partial is rounded to f16 once, and the f16-held
+/// accumulator absorbs it with one more round. Exactly the per-element
+/// operation sequence of the unfused axpy-into-part / round(part) /
+/// add / round(o) composition — in one pass over `o` instead of three.
+pub(super) fn pv_f16_step(o: &mut [f32], p: &[f32], v: &[f32], d: usize) {
+    debug_assert!(o.len() >= d, "accumulator shorter than head dim");
+    debug_assert!(v.len() >= p.len() * d, "v tile shorter than steps × d");
+    for (c, oc) in o.iter_mut().enumerate().take(d) {
+        let mut acc = 0.0f32;
+        for (t, &pt) in p.iter().enumerate() {
+            if pt == 0.0 {
+                continue;
+            }
+            acc += pt * v[t * d + c];
+        }
+        acc = round_f16(acc);
+        *oc = round_f16(*oc + acc);
     }
 }

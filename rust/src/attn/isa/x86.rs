@@ -18,7 +18,8 @@
 
 use std::arch::x86_64::*;
 
-use super::cpu::{supported, IsaLevel};
+use super::cpu::{self, supported, IsaLevel};
+use crate::util::f16::round_f16;
 
 // ---------------------------------------------------------------------------
 // AVX2 tier
@@ -202,7 +203,100 @@ unsafe fn scale_f32_avx_imp(out: &mut [f32], a: f32) {
 }
 
 // ---------------------------------------------------------------------------
-// AVX-512 VNNI tier (dot/tile only; the f32 and P·V lanes reuse AVX2).
+// Fused fp16-accumulator lanes (AVX + F16C). F16C is detected at runtime
+// separately from AVX2 (`cpu::f16c_enabled`, which `SAGE_ISA=scalar`
+// also pins off); without it the scalar formulation is bit-identical, so
+// the wrappers simply fall through to it.
+// ---------------------------------------------------------------------------
+
+/// 8-lane f32→f16→f32 round-trip (round-to-nearest-even — bit-identical
+/// to `util::f16::round_f16`, the contract `util::f16` tests pin).
+#[target_feature(enable = "avx", enable = "f16c")]
+unsafe fn round_f16_256(x: __m256) -> __m256 {
+    _mm256_cvtph_ps(_mm256_cvtps_ph::<_MM_FROUND_TO_NEAREST_INT>(x))
+}
+
+pub(super) fn pv_f16_step_avx(o: &mut [f32], p: &[f32], v: &[f32], d: usize) {
+    debug_assert!(supported(IsaLevel::Avx2), "avx2 kernel on an unsupported host");
+    debug_assert!(o.len() >= d && v.len() >= p.len() * d);
+    if !cpu::f16c_enabled() {
+        // no hardware round-trip (or SAGE_ISA pinned the software
+        // converter): the scalar fused formulation is bit-identical
+        return super::scalar::pv_f16_step(o, p, v, d);
+    }
+    // SAFETY: reachable only via a table gated on runtime AVX2 detection;
+    // `f16c_enabled` adds the detected F16C bit.
+    unsafe { pv_f16_step_f16c_imp(o, p, v, d) }
+}
+
+/// The whole MMA_K contraction block in registers: 8 output channels
+/// accumulate all ≤16 steps, then round the partial and the accumulator
+/// once each — one pass over `o` where the unfused composition made
+/// three (axpy into part, round part, add + round o).
+#[target_feature(enable = "avx", enable = "f16c")]
+unsafe fn pv_f16_step_f16c_imp(o: &mut [f32], p: &[f32], v: &[f32], d: usize) {
+    let dv = d - d % 8;
+    let mut c = 0;
+    while c < dv {
+        let mut acc = _mm256_setzero_ps();
+        for (t, &pt) in p.iter().enumerate() {
+            if pt == 0.0 {
+                continue;
+            }
+            let vv = _mm256_loadu_ps(v.as_ptr().add(t * d + c));
+            // mul then add — same two IEEE ops per lane as the axpy walk
+            acc = _mm256_add_ps(acc, _mm256_mul_ps(_mm256_set1_ps(pt), vv));
+        }
+        acc = round_f16_256(acc);
+        let ov = _mm256_loadu_ps(o.as_ptr().add(c));
+        _mm256_storeu_ps(o.as_mut_ptr().add(c), round_f16_256(_mm256_add_ps(ov, acc)));
+        c += 8;
+    }
+    while c < d {
+        let mut acc = 0.0f32;
+        for (t, &pt) in p.iter().enumerate() {
+            if pt != 0.0 {
+                acc += pt * v[t * d + c];
+            }
+        }
+        // software round == F16C round bit-for-bit (pinned in util::f16)
+        acc = round_f16(acc);
+        o[c] = round_f16(o[c] + acc);
+        c += 1;
+    }
+}
+
+pub(super) fn scale_round_f16_avx(out: &mut [f32], a: f32) {
+    debug_assert!(supported(IsaLevel::Avx2), "avx2 kernel on an unsupported host");
+    if !cpu::f16c_enabled() {
+        return super::scalar::scale_round_f16(out, a);
+    }
+    // SAFETY: reachable only via a table gated on runtime AVX2 detection;
+    // `f16c_enabled` adds the detected F16C bit.
+    unsafe { scale_round_f16_f16c_imp(out, a) }
+}
+
+#[target_feature(enable = "avx", enable = "f16c")]
+unsafe fn scale_round_f16_f16c_imp(out: &mut [f32], a: f32) {
+    let n = out.len();
+    let nv = n - n % 8;
+    let av = _mm256_set1_ps(a);
+    let mut i = 0;
+    while i < nv {
+        let o = _mm256_loadu_ps(out.as_ptr().add(i));
+        _mm256_storeu_ps(out.as_mut_ptr().add(i), round_f16_256(_mm256_mul_ps(o, av)));
+        i += 8;
+    }
+    while i < n {
+        out[i] = round_f16(out[i] * a);
+        i += 1;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// AVX-512 VNNI tier: `vpdpbusd` dot/tile plus 16-wide AVX-512F f32 and
+// fused-f16 lanes (the byte-widening INT8 P·V multiply has no
+// VNNI-specific instruction and stays on the AVX2 lane).
 // `sage_avx512` is emitted by build.rs on rustc ≥ 1.89, where the
 // AVX-512 intrinsics and target features are stable; older toolchains
 // compile without this tier and top out at AVX2.
@@ -310,5 +404,152 @@ unsafe fn qk_tile_i8_vnni_imp(
             }
         }
         r = rn;
+    }
+}
+
+#[cfg(sage_avx512)]
+pub(super) fn axpy_f32_avx512(out: &mut [f32], x: &[f32], a: f32) {
+    debug_assert!(supported(IsaLevel::Vnni), "vnni kernel on an unsupported host");
+    debug_assert_eq!(out.len(), x.len());
+    // SAFETY: reachable only via a table gated on runtime AVX-512
+    // F/BW/VNNI detection (which implies AVX-512F).
+    unsafe { axpy_f32_avx512_imp(out, x, a) }
+}
+
+#[cfg(sage_avx512)]
+#[target_feature(enable = "avx512f")]
+unsafe fn axpy_f32_avx512_imp(out: &mut [f32], x: &[f32], a: f32) {
+    let n = out.len();
+    let nv = n - n % 16;
+    let av = _mm512_set1_ps(a);
+    let mut i = 0;
+    while i < nv {
+        let o = _mm512_loadu_ps(out.as_ptr().add(i));
+        let xv = _mm512_loadu_ps(x.as_ptr().add(i));
+        // mul then add — same two IEEE ops per lane as the scalar loop
+        _mm512_storeu_ps(out.as_mut_ptr().add(i), _mm512_add_ps(o, _mm512_mul_ps(av, xv)));
+        i += 16;
+    }
+    while i < n {
+        out[i] += a * x[i];
+        i += 1;
+    }
+}
+
+#[cfg(sage_avx512)]
+pub(super) fn scale_f32_avx512(out: &mut [f32], a: f32) {
+    debug_assert!(supported(IsaLevel::Vnni), "vnni kernel on an unsupported host");
+    // SAFETY: reachable only via a table gated on runtime AVX-512
+    // F/BW/VNNI detection (which implies AVX-512F).
+    unsafe { scale_f32_avx512_imp(out, a) }
+}
+
+#[cfg(sage_avx512)]
+#[target_feature(enable = "avx512f")]
+unsafe fn scale_f32_avx512_imp(out: &mut [f32], a: f32) {
+    let n = out.len();
+    let nv = n - n % 16;
+    let av = _mm512_set1_ps(a);
+    let mut i = 0;
+    while i < nv {
+        let o = _mm512_loadu_ps(out.as_ptr().add(i));
+        _mm512_storeu_ps(out.as_mut_ptr().add(i), _mm512_mul_ps(o, av));
+        i += 16;
+    }
+    while i < n {
+        out[i] *= a;
+        i += 1;
+    }
+}
+
+/// 16-lane f32→f16→f32 round-trip, built from two 256-bit F16C
+/// conversions (there is no stable 512-wide `cvtps_ph`): split with
+/// AVX-512F extract/insert, round each half, rejoin. Bit-identical to
+/// `util::f16::round_f16` per lane.
+#[cfg(sage_avx512)]
+#[target_feature(enable = "avx512f", enable = "avx", enable = "f16c")]
+unsafe fn round_f16_512(x: __m512) -> __m512 {
+    let lo = _mm512_castps512_ps256(x);
+    let hi = _mm256_castsi256_ps(_mm512_extracti64x4_epi64::<1>(_mm512_castps_si512(x)));
+    let lo = _mm256_castps_si256(round_f16_256(lo));
+    let hi = _mm256_castps_si256(round_f16_256(hi));
+    _mm512_castsi512_ps(_mm512_inserti64x4::<1>(_mm512_castsi256_si512(lo), hi))
+}
+
+#[cfg(sage_avx512)]
+pub(super) fn pv_f16_step_avx512(o: &mut [f32], p: &[f32], v: &[f32], d: usize) {
+    debug_assert!(supported(IsaLevel::Vnni), "vnni kernel on an unsupported host");
+    debug_assert!(o.len() >= d && v.len() >= p.len() * d);
+    if !cpu::f16c_enabled() {
+        return super::scalar::pv_f16_step(o, p, v, d);
+    }
+    // SAFETY: reachable only via a table gated on runtime AVX-512
+    // F/BW/VNNI detection; `f16c_enabled` adds the detected F16C bit.
+    unsafe { pv_f16_step_avx512_imp(o, p, v, d) }
+}
+
+/// 16-wide variant of [`pv_f16_step_f16c_imp`]: one contraction block in
+/// registers per 16 output channels, f16 round-trips through
+/// [`round_f16_512`].
+#[cfg(sage_avx512)]
+#[target_feature(enable = "avx512f", enable = "avx", enable = "f16c")]
+unsafe fn pv_f16_step_avx512_imp(o: &mut [f32], p: &[f32], v: &[f32], d: usize) {
+    let dv = d - d % 16;
+    let mut c = 0;
+    while c < dv {
+        let mut acc = _mm512_setzero_ps();
+        for (t, &pt) in p.iter().enumerate() {
+            if pt == 0.0 {
+                continue;
+            }
+            let vv = _mm512_loadu_ps(v.as_ptr().add(t * d + c));
+            // mul then add — same two IEEE ops per lane as the axpy walk
+            acc = _mm512_add_ps(acc, _mm512_mul_ps(_mm512_set1_ps(pt), vv));
+        }
+        acc = round_f16_512(acc);
+        let ov = _mm512_loadu_ps(o.as_ptr().add(c));
+        _mm512_storeu_ps(o.as_mut_ptr().add(c), round_f16_512(_mm512_add_ps(ov, acc)));
+        c += 16;
+    }
+    while c < d {
+        let mut acc = 0.0f32;
+        for (t, &pt) in p.iter().enumerate() {
+            if pt != 0.0 {
+                acc += pt * v[t * d + c];
+            }
+        }
+        // software round == F16C round bit-for-bit (pinned in util::f16)
+        acc = round_f16(acc);
+        o[c] = round_f16(o[c] + acc);
+        c += 1;
+    }
+}
+
+#[cfg(sage_avx512)]
+pub(super) fn scale_round_f16_avx512(out: &mut [f32], a: f32) {
+    debug_assert!(supported(IsaLevel::Vnni), "vnni kernel on an unsupported host");
+    if !cpu::f16c_enabled() {
+        return super::scalar::scale_round_f16(out, a);
+    }
+    // SAFETY: reachable only via a table gated on runtime AVX-512
+    // F/BW/VNNI detection; `f16c_enabled` adds the detected F16C bit.
+    unsafe { scale_round_f16_avx512_imp(out, a) }
+}
+
+#[cfg(sage_avx512)]
+#[target_feature(enable = "avx512f", enable = "avx", enable = "f16c")]
+unsafe fn scale_round_f16_avx512_imp(out: &mut [f32], a: f32) {
+    let n = out.len();
+    let nv = n - n % 16;
+    let av = _mm512_set1_ps(a);
+    let mut i = 0;
+    while i < nv {
+        let o = _mm512_loadu_ps(out.as_ptr().add(i));
+        _mm512_storeu_ps(out.as_mut_ptr().add(i), round_f16_512(_mm512_mul_ps(o, av)));
+        i += 16;
+    }
+    while i < n {
+        out[i] = round_f16(out[i] * a);
+        i += 1;
     }
 }

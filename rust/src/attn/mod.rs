@@ -11,8 +11,10 @@
 //! [`registry`] is the kernel dispatch table behind both; underneath it,
 //! [`isa`] dispatches the INT8/f32 inner loops to runtime-detected SIMD
 //! microkernels (`SAGE_ISA` overrides; all tiers bit-identical to
-//! scalar). The legacy `attention(q, k, v, imp, causal)` free function
-//! survives as a deprecated shim.
+//! scalar), and [`pv`] holds the one P·V tile formulation every blocked
+//! kernel (contiguous, prepared, paged) shares. The legacy
+//! `attention(q, k, v, imp, causal)` free function survives as a
+//! deprecated shim.
 //!
 //! Layout: internally tensors are (B, H, N, d); per-(batch, head) planes
 //! are processed independently (parallelized with scoped threads).
@@ -23,6 +25,7 @@ pub mod guard;
 pub mod isa;
 mod plane;
 mod prepared;
+pub mod pv;
 pub mod registry;
 
 pub use api::{AttnSpec, Layout, PreparedKV};

@@ -9,9 +9,10 @@
 //! heap allocation — [`crate::attn::api::AttnSpec`] allocates one
 //! `Scratch` per worker thread and reuses it across every (batch, head)
 //! plane; the per-plane INT8 planes and scale vectors also live here
-//! (filled via [`crate::quant::quantize_into`]). The INT8 arithmetic
-//! itself — whole QKᵀ score tiles, the INT8 P·V lanes and the f32
-//! axpy/rescale steps — dispatches through the
+//! (filled via [`crate::quant::quantize_into`]). The arithmetic itself —
+//! whole QKᵀ score tiles, and the per-tile P·V accumulation via the
+//! shared [`crate::attn::pv`] formulation (fused fp16 contraction steps,
+//! INT8 accumulate, f32 axpy/rescale) — dispatches through the
 //! [`crate::attn::isa`] microkernel tables (AVX2 / AVX-512 VNNI / NEON
 //! dotprod / scalar, selected at runtime, bit-identical across tiers).
 //! [`sage_plane_naive`] is a deliberately *unblocked* row-at-a-time
@@ -103,8 +104,6 @@ pub struct Scratch {
     pub(super) acc: Vec<f32>,
     /// fp16-rounded P̃ row.
     pub(super) p16: Vec<f32>,
-    /// Per-MMA_K partial products (FP16-accumulator simulation).
-    pub(super) part: Vec<f32>,
     /// int32 accumulator lanes (INT8 P·V).
     pub(super) acc_i32: Vec<i32>,
     /// Whole-plane staging: Q with folded softmax scale.
@@ -136,7 +135,6 @@ impl Scratch {
             l: vec![0.0; BLOCK_Q],
             acc: vec![0.0; BLOCK_Q * MAX_HEAD_DIM],
             p16: vec![0.0; BLOCK_KV],
-            part: vec![0.0; MAX_HEAD_DIM],
             acc_i32: vec![0; MAX_HEAD_DIM],
             qbuf: Vec::new(),
             kbuf: Vec::new(),
@@ -156,9 +154,6 @@ impl Scratch {
     pub(super) fn ensure_head_dim(&mut self, d: usize) {
         if self.acc.len() < BLOCK_Q * d {
             self.acc.resize(BLOCK_Q * d, 0.0);
-        }
-        if self.part.len() < d {
-            self.part.resize(d, 0.0);
         }
         if self.acc_i32.len() < d {
             self.acc_i32.resize(d, 0);
@@ -508,7 +503,6 @@ pub fn sage_plane_opt(
         l,
         acc,
         p16,
-        part,
         acc_i32,
         qbuf,
         kbuf,
@@ -584,6 +578,15 @@ pub fn sage_plane_opt(
                 n_kv,
                 d,
             );
+            // this tile's V rows in the P·V mode's representation
+            // (per-channel V scales are whole-plane here, length d)
+            let vtile = match pv {
+                PvMode::Int8 => {
+                    super::pv::PvTile::Int8 { v: &v_i8[j0 * d..jk * d], scales: &v_scales[..d] }
+                }
+                PvMode::Fp16Accum => super::pv::PvTile::F16Accum { v: &v_f16[j0 * d..jk * d] },
+                PvMode::Fp32Accum => super::pv::PvTile::F32Accum { v: &v_f16[j0 * d..jk * d] },
+            };
             // ---- online softmax (fp32) + P·V ----
             for bi in 0..bq {
                 let row = &mut s[bi * BLOCK_KV..bi * BLOCK_KV + bk];
@@ -604,78 +607,9 @@ pub fn sage_plane_opt(
                 lb[bi] = alpha * lb[bi] + row_sum;
                 mb[bi] = m_new;
                 let o = &mut accb[bi * d..(bi + 1) * d];
-                match pv {
-                    PvMode::Int8 => {
-                        // P̃ ∈ [0,1]: static per-block scale 1/127 (§4.3)
-                        let prow = &mut p_i8[..bk];
-                        for (pq, &p) in prow.iter_mut().zip(row.iter()) {
-                            *pq = (p * quant::INT8_MAX).round() as i8;
-                        }
-                        (kern.scale_f32)(o, alpha);
-                        // int32 accumulate over the block (row-major V
-                        // walk through the ISA lane), dequant once
-                        let acc32 = &mut acc_i32[..d];
-                        acc32.fill(0);
-                        for (bj, &pq) in prow.iter().enumerate() {
-                            if pq == 0 {
-                                continue;
-                            }
-                            let vrow = &v_i8[(j0 + bj) * d..(j0 + bj + 1) * d];
-                            (kern.pv_accum_i8)(acc32, vrow, pq as i32);
-                        }
-                        for (oc, (&a, &vs)) in
-                            o.iter_mut().zip(acc32.iter().zip(&v_scales[..d]))
-                        {
-                            *oc += a as f32 * (1.0 / quant::INT8_MAX) * vs;
-                        }
-                    }
-                    PvMode::Fp16Accum => {
-                        // rescale in registers, store rounded to fp16
-                        (kern.scale_f32)(o, alpha);
-                        round_f16_slice(o);
-                        // fp16 operands (P̃ rounded once per row, not per
-                        // output channel); accumulator rounded every
-                        // MMA_K=16 contraction steps (matches fp16_sim.py).
-                        // All roundings go through the F16C-vectorized
-                        // slice helper.
-                        let p16b = &mut p16[..bk];
-                        p16b.copy_from_slice(&row[..bk]);
-                        round_f16_slice(p16b);
-                        let partd = &mut part[..d];
-                        let mut bj = 0;
-                        while bj < bk {
-                            let je = (bj + 16).min(bk);
-                            partd.fill(0.0);
-                            for t in bj..je {
-                                let p = p16b[t];
-                                if p == 0.0 {
-                                    continue;
-                                }
-                                let vrow = &v_f16[(j0 + t) * d..(j0 + t + 1) * d];
-                                (kern.axpy_f32)(partd, vrow, p);
-                            }
-                            round_f16_slice(partd);
-                            for (oc, &pc) in o.iter_mut().zip(partd.iter()) {
-                                *oc += pc;
-                            }
-                            round_f16_slice(o);
-                            bj = je;
-                        }
-                    }
-                    PvMode::Fp32Accum => {
-                        (kern.scale_f32)(o, alpha);
-                        let p16b = &mut p16[..bk];
-                        p16b.copy_from_slice(&row[..bk]);
-                        round_f16_slice(p16b);
-                        for (bj, &p) in p16b.iter().enumerate() {
-                            if p == 0.0 {
-                                continue;
-                            }
-                            let vrow = &v_f16[(j0 + bj) * d..(j0 + bj + 1) * d];
-                            (kern.axpy_f32)(o, vrow, p);
-                        }
-                    }
-                }
+                // shared P·V tile formulation (attn::pv): α-rescale + P̃·V
+                // in the mode's numerics through the fused ISA lanes
+                super::pv::accumulate(kern, &vtile, o, alpha, row, p_i8, p16, acc_i32, d);
             }
             j0 = jk;
         }

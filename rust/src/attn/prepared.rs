@@ -220,8 +220,7 @@ pub(crate) fn sage_plane_prepared(
         "prepared KV supports PerToken/PerBlock Q/K granularity"
     );
     scratch.ensure_head_dim(d);
-    let Scratch { s, s_i32, p_i8, m, l, acc, p16, part, acc_i32, qbuf, q_i8, q_scales, .. } =
-        scratch;
+    let Scratch { s, s_i32, p_i8, m, l, acc, p16, acc_i32, qbuf, q_i8, q_scales, .. } = scratch;
     let kern = isa::kernels();
 
     let scale = opts.scale(d);
@@ -245,6 +244,10 @@ pub(crate) fn sage_plane_prepared(
         while j0 < n_kv {
             let jk = (j0 + BLOCK_KV).min(n_kv);
             let bk = jk - j0;
+            // touch the next tile's K rows while this tile computes
+            if jk < n_kv {
+                isa::prefetch_head(&prep.k_i8[jk * d..]);
+            }
             // ---- S tile from the prepared INT8 K (ISA microkernel) ----
             qk_score_tile(
                 kern,
@@ -263,9 +266,21 @@ pub(crate) fn sage_plane_prepared(
                 n_kv,
                 d,
             );
-            // ---- online softmax (fp32) + P·V ----
-            // per-block V scales for this tile (Int8 mode)
+            // this tile's V rows (per-block V scales in Int8 mode)
             let vs_base = (j0 / BLOCK_KV) * d;
+            let vtile = match pv {
+                PvMode::Int8 => super::pv::PvTile::Int8 {
+                    v: &prep.v_i8[j0 * d..jk * d],
+                    scales: &prep.v_scales[vs_base..vs_base + d],
+                },
+                PvMode::Fp16Accum => {
+                    super::pv::PvTile::F16Accum { v: &prep.v_f16[j0 * d..jk * d] }
+                }
+                PvMode::Fp32Accum => {
+                    super::pv::PvTile::F32Accum { v: &prep.v_f16[j0 * d..jk * d] }
+                }
+            };
+            // ---- online softmax (fp32) + P·V ----
             for bi in 0..bq {
                 let row = &mut s[bi * BLOCK_KV..bi * BLOCK_KV + bk];
                 let m_cur = row.iter().fold(NEG_BIG, |a, &b| a.max(b));
@@ -282,68 +297,8 @@ pub(crate) fn sage_plane_prepared(
                 lb[bi] = alpha * lb[bi] + row_sum;
                 mb[bi] = m_new;
                 let o = &mut accb[bi * d..(bi + 1) * d];
-                match pv {
-                    PvMode::Int8 => {
-                        let prow = &mut p_i8[..bk];
-                        for (pq, &p) in prow.iter_mut().zip(row.iter()) {
-                            *pq = (p * quant::INT8_MAX).round() as i8;
-                        }
-                        (kern.scale_f32)(o, alpha);
-                        let acc32 = &mut acc_i32[..d];
-                        acc32.fill(0);
-                        for (bj, &pq) in prow.iter().enumerate() {
-                            if pq == 0 {
-                                continue;
-                            }
-                            let vrow = &prep.v_i8[(j0 + bj) * d..(j0 + bj + 1) * d];
-                            (kern.pv_accum_i8)(acc32, vrow, pq as i32);
-                        }
-                        let vs = &prep.v_scales[vs_base..vs_base + d];
-                        for (oc, (&a, &vsc)) in o.iter_mut().zip(acc32.iter().zip(vs)) {
-                            *oc += a as f32 * (1.0 / quant::INT8_MAX) * vsc;
-                        }
-                    }
-                    PvMode::Fp16Accum => {
-                        (kern.scale_f32)(o, alpha);
-                        round_f16_slice(o);
-                        let p16b = &mut p16[..bk];
-                        p16b.copy_from_slice(&row[..bk]);
-                        round_f16_slice(p16b);
-                        let partd = &mut part[..d];
-                        let mut bj = 0;
-                        while bj < bk {
-                            let je = (bj + 16).min(bk);
-                            partd.fill(0.0);
-                            for t in bj..je {
-                                let p = p16b[t];
-                                if p == 0.0 {
-                                    continue;
-                                }
-                                let vrow = &prep.v_f16[(j0 + t) * d..(j0 + t + 1) * d];
-                                (kern.axpy_f32)(partd, vrow, p);
-                            }
-                            round_f16_slice(partd);
-                            for (oc, &pc) in o.iter_mut().zip(partd.iter()) {
-                                *oc += pc;
-                            }
-                            round_f16_slice(o);
-                            bj = je;
-                        }
-                    }
-                    PvMode::Fp32Accum => {
-                        (kern.scale_f32)(o, alpha);
-                        let p16b = &mut p16[..bk];
-                        p16b.copy_from_slice(&row[..bk]);
-                        round_f16_slice(p16b);
-                        for (bj, &p) in p16b.iter().enumerate() {
-                            if p == 0.0 {
-                                continue;
-                            }
-                            let vrow = &prep.v_f16[(j0 + bj) * d..(j0 + bj + 1) * d];
-                            (kern.axpy_f32)(o, vrow, p);
-                        }
-                    }
-                }
+                // shared P·V tile formulation (attn::pv)
+                super::pv::accumulate(kern, &vtile, o, alpha, row, p_i8, p16, acc_i32, d);
             }
             j0 = jk;
         }
@@ -656,14 +611,21 @@ impl PagedSegment {
 }
 
 /// Concatenate the raw fp32 K/V rows of a paged plane (full-precision
-/// fallback path, and the requant-every-step serving baseline).
+/// fallback path, and the requant-every-step serving baseline). The
+/// gather is software-pipelined: each page's copy starts the prefetch of
+/// the next page's rows (physical pages are not adjacent, so the
+/// hardware streamer cannot follow the block table on its own).
 pub fn gather_raw(pages: &[&KvPage], n: usize, d: usize) -> (Vec<f32>, Vec<f32>) {
     let mut k = Vec::with_capacity(n * d);
     let mut v = Vec::with_capacity(n * d);
     let mut r = 0;
-    for pg in pages {
+    for (pi, pg) in pages.iter().enumerate() {
         if r >= n {
             break;
+        }
+        if let Some(next) = pages.get(pi + 1) {
+            isa::prefetch_head(&next.k_raw);
+            isa::prefetch_head(&next.v_raw);
         }
         let take = (n - r).min(PAGE_ROWS) * d;
         k.extend_from_slice(&pg.k_raw[..take]);
@@ -695,8 +657,7 @@ pub(crate) fn sage_plane_paged(
         "paged KV supports PerToken/PerBlock Q/K granularity"
     );
     scratch.ensure_head_dim(d);
-    let Scratch { s, s_i32, p_i8, m, l, acc, p16, part, acc_i32, qbuf, q_i8, q_scales, .. } =
-        scratch;
+    let Scratch { s, s_i32, p_i8, m, l, acc, p16, acc_i32, qbuf, q_i8, q_scales, .. } = scratch;
     let kern = isa::kernels();
 
     let scale = opts.scale(d);
@@ -722,6 +683,18 @@ pub(crate) fn sage_plane_paged(
             let bk = jk - j0;
             // page ↔ tile correspondence: PAGE_ROWS == BLOCK_KV
             let pg = pages[j0 / PAGE_ROWS];
+            // decode at long context is a pointer-chasing gather: the
+            // next physical page is not sequential with this one, so
+            // touch its rows now — the S-tile and P·V walks below hide
+            // the latency
+            if let Some(next) = pages.get(j0 / PAGE_ROWS + 1) {
+                isa::prefetch_head(&next.k_i8);
+                isa::prefetch_head(&next.k_scales);
+                match pv {
+                    PvMode::Int8 => isa::prefetch_head(&next.v_i8),
+                    _ => isa::prefetch_head(&next.v_f16),
+                }
+            }
             // ---- S tile from the page's INT8 K (ISA microkernel) ----
             qk_score_tile(
                 kern,
@@ -740,6 +713,14 @@ pub(crate) fn sage_plane_paged(
                 n_kv,
                 d,
             );
+            // this tile's V rows (page-local; per-page V scales in Int8)
+            let vtile = match pv {
+                PvMode::Int8 => {
+                    super::pv::PvTile::Int8 { v: &pg.v_i8[..bk * d], scales: &pg.v_scales[..d] }
+                }
+                PvMode::Fp16Accum => super::pv::PvTile::F16Accum { v: &pg.v_f16[..bk * d] },
+                PvMode::Fp32Accum => super::pv::PvTile::F32Accum { v: &pg.v_f16[..bk * d] },
+            };
             // ---- online softmax (fp32) + P·V ----
             for bi in 0..bq {
                 let row = &mut s[bi * BLOCK_KV..bi * BLOCK_KV + bk];
@@ -757,68 +738,8 @@ pub(crate) fn sage_plane_paged(
                 lb[bi] = alpha * lb[bi] + row_sum;
                 mb[bi] = m_new;
                 let o = &mut accb[bi * d..(bi + 1) * d];
-                match pv {
-                    PvMode::Int8 => {
-                        let prow = &mut p_i8[..bk];
-                        for (pq, &p) in prow.iter_mut().zip(row.iter()) {
-                            *pq = (p * quant::INT8_MAX).round() as i8;
-                        }
-                        (kern.scale_f32)(o, alpha);
-                        let acc32 = &mut acc_i32[..d];
-                        acc32.fill(0);
-                        for (bj, &pq) in prow.iter().enumerate() {
-                            if pq == 0 {
-                                continue;
-                            }
-                            let vrow = &pg.v_i8[bj * d..(bj + 1) * d];
-                            (kern.pv_accum_i8)(acc32, vrow, pq as i32);
-                        }
-                        let vs = &pg.v_scales[..d];
-                        for (oc, (&a, &vsc)) in o.iter_mut().zip(acc32.iter().zip(vs)) {
-                            *oc += a as f32 * (1.0 / quant::INT8_MAX) * vsc;
-                        }
-                    }
-                    PvMode::Fp16Accum => {
-                        (kern.scale_f32)(o, alpha);
-                        round_f16_slice(o);
-                        let p16b = &mut p16[..bk];
-                        p16b.copy_from_slice(&row[..bk]);
-                        round_f16_slice(p16b);
-                        let partd = &mut part[..d];
-                        let mut bj = 0;
-                        while bj < bk {
-                            let je = (bj + 16).min(bk);
-                            partd.fill(0.0);
-                            for t in bj..je {
-                                let p = p16b[t];
-                                if p == 0.0 {
-                                    continue;
-                                }
-                                let vrow = &pg.v_f16[t * d..(t + 1) * d];
-                                (kern.axpy_f32)(partd, vrow, p);
-                            }
-                            round_f16_slice(partd);
-                            for (oc, &pc) in o.iter_mut().zip(partd.iter()) {
-                                *oc += pc;
-                            }
-                            round_f16_slice(o);
-                            bj = je;
-                        }
-                    }
-                    PvMode::Fp32Accum => {
-                        (kern.scale_f32)(o, alpha);
-                        let p16b = &mut p16[..bk];
-                        p16b.copy_from_slice(&row[..bk]);
-                        round_f16_slice(p16b);
-                        for (bj, &p) in p16b.iter().enumerate() {
-                            if p == 0.0 {
-                                continue;
-                            }
-                            let vrow = &pg.v_f16[bj * d..(bj + 1) * d];
-                            (kern.axpy_f32)(o, vrow, p);
-                        }
-                    }
-                }
+                // shared P·V tile formulation (attn::pv)
+                super::pv::accumulate(kern, &vtile, o, alpha, row, p_i8, p16, acc_i32, d);
             }
             j0 = jk;
         }

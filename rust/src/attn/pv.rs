@@ -1,0 +1,164 @@
+//! `attn::pv` — the single P·V accumulation formulation shared by every
+//! blocked kernel (`plane::sage_plane_opt`, `prepared::sage_plane_prepared`
+//! and `prepared::sage_plane_paged` all used to carry private copies of
+//! these inner loops).
+//!
+//! One BLOCK_KV tile of V plus one softmaxed P̃ row go in; the Q row's
+//! output accumulator is α-rescaled and advanced by `P̃ · V` in the
+//! numerics of the selected [`PvMode`](super::PvMode):
+//!
+//! * **Int8** (§4.3) — P̃ quantized to INT8 with the static 1/127 scale,
+//!   i32 accumulation through the ISA `pv_accum_i8` lane, dequantized
+//!   once per tile against V's per-channel scales.
+//! * **Fp16Accum** (§4.4) — FP16 operands *and* an FP16-held accumulator:
+//!   the contraction runs in [`MMA_K`]-step blocks through the fused
+//!   `pv_f16_step` ISA lane, which keeps each block's partials in
+//!   registers and folds the f16 round-trip into the multiply-add (one
+//!   pass over the accumulator where the old composition made three:
+//!   axpy into `part`, round `part`, add + round `o`).
+//! * **Fp32Accum** — FP16 operands, fp32 accumulation (plain axpy).
+//!
+//! [`fp16_tile_unfused`] keeps the original three-pass composition as the
+//! measurable "before" for the `pv_fp16` bench-hotpath lane and as the
+//! differential-fuzz reference; the fused lanes are bit-identical to it
+//! on every tier (see `tests/isa_differential.rs`).
+
+use crate::quant;
+use crate::util::f16::round_f16_slice;
+
+use super::isa;
+
+/// Contraction block length of the simulated FP16 tensor-core MMA: the
+/// accumulator is rounded to f16 once every `MMA_K` P·V steps (matches
+/// the reference `fp16_sim.py` and the paper's mma(f16.f16.f16.f16)
+/// shape, §4.4).
+pub const MMA_K: usize = 16;
+
+/// One BLOCK_KV tile of V in the representation the active
+/// [`PvMode`](super::PvMode) consumes: `v` holds `bk` row-major length-`d`
+/// rows (tile-local — callers slice the plane, the prepared buffer or the
+/// physical page), and Int8 carries the tile's per-channel dequant scales
+/// (length `d`).
+pub enum PvTile<'a> {
+    /// INT8 V rows + per-channel scales (one scale vector per KV block).
+    Int8 { v: &'a [i8], scales: &'a [f32] },
+    /// fp16-rounded V rows, FP16-held accumulator.
+    F16Accum { v: &'a [f32] },
+    /// fp16-rounded V rows, fp32 accumulator.
+    F32Accum { v: &'a [f32] },
+}
+
+/// Advance one Q row's output accumulator `o` (length `d`) by the tile's
+/// `P̃ · V` contribution: `o = α·o + P̃ · V` in the tile's numerics.
+/// `row` is the softmaxed P̃ row (length = tile rows `bk`); `p_i8`,
+/// `p16` and `acc_i32` are caller-owned scratch (≥ `bk`, ≥ `bk`, ≥ `d`).
+#[allow(clippy::too_many_arguments)]
+pub fn accumulate(
+    kern: &isa::Kernels,
+    tile: &PvTile<'_>,
+    o: &mut [f32],
+    alpha: f32,
+    row: &[f32],
+    p_i8: &mut [i8],
+    p16: &mut [f32],
+    acc_i32: &mut [i32],
+    d: usize,
+) {
+    let bk = row.len();
+    match *tile {
+        PvTile::Int8 { v, scales } => {
+            // P̃ ∈ [0,1]: static per-block scale 1/127 (§4.3)
+            let prow = &mut p_i8[..bk];
+            for (pq, &p) in prow.iter_mut().zip(row.iter()) {
+                *pq = (p * quant::INT8_MAX).round() as i8;
+            }
+            (kern.scale_f32)(o, alpha);
+            // int32 accumulate over the block (row-major V walk through
+            // the ISA lane), dequant once
+            let acc32 = &mut acc_i32[..d];
+            acc32.fill(0);
+            for (bj, &pq) in prow.iter().enumerate() {
+                if pq == 0 {
+                    continue;
+                }
+                (kern.pv_accum_i8)(acc32, &v[bj * d..(bj + 1) * d], pq as i32);
+            }
+            for (oc, (&a, &vs)) in o.iter_mut().zip(acc32.iter().zip(&scales[..d])) {
+                *oc += a as f32 * (1.0 / quant::INT8_MAX) * vs;
+            }
+        }
+        PvTile::F16Accum { v } => {
+            // α-rescale with the f16 store folded in (one pass), then the
+            // fused MMA_K-blocked contraction; P̃ rounded once per row,
+            // not per output channel
+            (kern.scale_round_f16)(o, alpha);
+            let p16b = &mut p16[..bk];
+            p16b.copy_from_slice(row);
+            round_f16_slice(p16b);
+            fp16_tile_fused(kern, o, p16b, v, d);
+        }
+        PvTile::F32Accum { v } => {
+            (kern.scale_f32)(o, alpha);
+            let p16b = &mut p16[..bk];
+            p16b.copy_from_slice(row);
+            round_f16_slice(p16b);
+            for (bj, &p) in p16b.iter().enumerate() {
+                if p == 0.0 {
+                    continue;
+                }
+                (kern.axpy_f32)(o, &v[bj * d..(bj + 1) * d], p);
+            }
+        }
+    }
+}
+
+/// FP16-accumulator contraction of a whole tile through the fused
+/// `pv_f16_step` ISA lane: `p` (already f16-rounded) is consumed in
+/// [`MMA_K`]-step blocks, each block's partials held in registers and
+/// rounded into the f16-held `o` exactly once.
+pub fn fp16_tile_fused(kern: &isa::Kernels, o: &mut [f32], p: &[f32], v: &[f32], d: usize) {
+    let bk = p.len();
+    debug_assert!(o.len() >= d && v.len() >= bk * d);
+    let mut bj = 0;
+    while bj < bk {
+        let je = (bj + MMA_K).min(bk);
+        (kern.pv_f16_step)(&mut o[..d], &p[bj..je], &v[bj * d..je * d], d);
+        bj = je;
+    }
+}
+
+/// The original three-pass formulation the fused lane replaced: axpy each
+/// nonzero `p` into `part`, round `part`, add into `o`, round `o` — once
+/// per [`MMA_K`] block. Kept as the bit-identical reference the
+/// differential fuzz pins `pv_f16_step` against, and as the "before" side
+/// of the `pv_fp16` bench-hotpath lane. `part` is caller-owned scratch
+/// (≥ `d`).
+pub fn fp16_tile_unfused(
+    kern: &isa::Kernels,
+    o: &mut [f32],
+    p: &[f32],
+    v: &[f32],
+    part: &mut [f32],
+    d: usize,
+) {
+    let bk = p.len();
+    debug_assert!(o.len() >= d && v.len() >= bk * d && part.len() >= d);
+    let partd = &mut part[..d];
+    let mut bj = 0;
+    while bj < bk {
+        let je = (bj + MMA_K).min(bk);
+        partd.fill(0.0);
+        for (t, &pt) in p.iter().enumerate().take(je).skip(bj) {
+            if pt == 0.0 {
+                continue;
+            }
+            (kern.axpy_f32)(partd, &v[t * d..(t + 1) * d], pt);
+        }
+        round_f16_slice(partd);
+        for (oc, &pc) in o[..d].iter_mut().zip(partd.iter()) {
+            *oc += pc;
+        }
+        round_f16_slice(&mut o[..d]);
+        bj = je;
+    }
+}

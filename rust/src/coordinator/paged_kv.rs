@@ -18,6 +18,7 @@
 
 use std::collections::{HashMap, HashSet};
 
+use crate::attn::isa;
 use crate::attn::{
     gather_raw, AttnImpl, KvPage, PagedSegment, PlaneOpts, PvMode, Scratch, PAGE_ROWS,
 };
@@ -174,6 +175,14 @@ impl PagedKvStore {
             let plane = layer * self.h_kv + qh / group;
             let seg = &segs[plane];
             let pages = self.plane_pages(table, plane, seg.n())?;
+            // warm the first page while the kernel quantizes Q — the
+            // block table just chased HashMap pointers, so the page rows
+            // are a likely cache miss; the tile loop prefetches the rest
+            // (attn::isa::prefetch_head)
+            if let Some(first) = pages.first() {
+                isa::prefetch_head(&first.k_i8);
+                isa::prefetch_head(&first.k_scales);
+            }
             let qh_rows = &q[qh * n_q * self.d..(qh + 1) * n_q * self.d];
             let o = seg.run(scratch, qh_rows, n_q, &pages, opts);
             out[qh * n_q * self.d..(qh + 1) * n_q * self.d].copy_from_slice(&o);

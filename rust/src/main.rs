@@ -19,7 +19,8 @@
 //!   bench-hotpath [--seq 4096]    before/after GFLOPS on the blocked
 //!                                 sage_plane hot path vs the naive loop,
 //!                                 plus the PreparedKV decode lane and the
-//!                                 dot-i8 microkernel lane; with --check
+//!                                 dot-i8 / fused fp16-PV microkernel
+//!                                 lanes; with --check
 //!                                 FILE asserts no-regression against the
 //!                                 checked-in baseline
 //!
@@ -32,8 +33,8 @@ use std::time::Duration;
 use sageattention::adaptive;
 use sageattention::attn::isa::{self, IsaLevel};
 use sageattention::attn::{
-    registry, sage_plane_naive, sage_plane_with, AttnImpl, AttnSpec, KvPage, PagedSegment,
-    PlaneOpts, PvMode, Scratch, BLOCK_Q, PAGE_ROWS,
+    pv, registry, sage_plane_naive, sage_plane_with, AttnImpl, AttnSpec, KvPage, PagedSegment,
+    PlaneOpts, PvMode, Scratch, BLOCK_KV, BLOCK_Q, PAGE_ROWS,
 };
 use sageattention::bench::{bench, bench_budget, f2, pct, sci, Sample, Table};
 use sageattention::coordinator::{
@@ -50,6 +51,7 @@ use sageattention::synth::{
 };
 use sageattention::tensor::{default_threads, parallel_map, parallel_map_with, Tensor};
 use sageattention::util::error::{ensure, Context, Result};
+use sageattention::util::f16::round_f16_slice;
 use sageattention::util::json::Json;
 use sageattention::util::rng::Pcg32;
 
@@ -1145,6 +1147,23 @@ fn kernels_cmd() -> Result<()> {
         ]);
     }
     t.print("registered attention kernels (auto-dispatch priority order)");
+
+    // per-tier P·V lane detail: the f32 vector width and how the fused
+    // fp16-accumulator step performs its f16 round-trip on this host
+    let mut ti = Table::new(&["tier", "f32 lanes", "fp16 P*V step", "paged-KV prefetch"]);
+    for level in IsaLevel::ALL {
+        let Some(kern) = isa::for_level(level) else {
+            continue; // tier not supported on this host
+        };
+        ti.row(&[
+            level.name().to_string(),
+            format!("{}-wide", kern.f32_width),
+            kern.pv_f16_round_desc().to_string(),
+            isa::PREFETCH_DESC.to_string(),
+        ]);
+    }
+    println!();
+    ti.print("P*V microkernel lanes (tiers supported on this host)");
     println!("\nparameterized forms also resolve, e.g. 'SageAttn-B64' or 'fp8(E4M3,E5M2)'");
     println!("SAGE_ISA=scalar|avx2|vnni|neon forces a microkernel tier (bit-identical output)");
     Ok(())
@@ -1157,7 +1176,10 @@ fn kernels_cmd() -> Result<()> {
 /// `sage_plane` call (which re-runs smooth-K + INT8 quantization of the
 /// whole prefix) per token; (3) the serve-decode lane (the same claim at
 /// engine granularity); (4) the dot-i8 microkernel lane — the hardware's
-/// best `attn::isa` SIMD tier vs forced scalar. With --check FILE the
+/// best `attn::isa` SIMD tier vs forced scalar; (5) the fused fp16-PV
+/// lane — the fused `pv_f16_step` microkernel vs the unfused
+/// axpy + slice-round + add composition it replaced (bit-identical
+/// output, so only speed is at stake). With --check FILE the
 /// measured speedups are asserted against the checked-in floors (CI
 /// regression gate); --update FILE rewrites the baseline with the
 /// measured numbers.
@@ -1455,6 +1477,86 @@ fn bench_hotpath(flags: &HashMap<String, String>) -> Result<()> {
         None => println!("\ndot-i8 lane: no SIMD tier on this host (scalar only)"),
     }
 
+    // ---- fused fp16-PV lane: the §4.4 mma(f16.f16.f16.f16) simulation —
+    //      the fused pv_f16_step/scale_round_f16 microkernels vs the
+    //      unfused axpy + slice-round + add composition they replaced.
+    //      Bit-identical by construction (the bit-identity suites gate
+    //      that); this lane gates the speed. One BLOCK_Q-row P tile
+    //      against one BLOCK_KV-row V tile, softmax-shaped P with the
+    //      exact zeros the masked tail produces ----
+    let pv_bk = BLOCK_KV;
+    let pv_rows = BLOCK_Q;
+    let pv_d = 128usize;
+    let mut rng = Pcg32::seeded(99);
+    let mut vtile = vec![0.0f32; pv_bk * pv_d];
+    for x in vtile.iter_mut() {
+        *x = rng.normal();
+    }
+    round_f16_slice(&mut vtile);
+    let mut prows = vec![0.0f32; pv_rows * pv_bk];
+    for x in prows.iter_mut() {
+        let u = rng.normal().abs();
+        *x = if u < 0.3 { 0.0 } else { u };
+    }
+    round_f16_slice(&mut prows);
+    let mut o = vec![0.0f32; pv_rows * pv_d];
+    let mut part = vec![0.0f32; pv_d];
+    let pv_ops = (pv_rows * pv_bk * pv_d * 2) as f64;
+    let mut pv_ratio = None;
+    let mut tpv = Table::new(&["tier", "path", "GFLOPS", "iters"]);
+    for kern in &tiers {
+        let s_fused =
+            bench_budget(&format!("pv-f16 fused {}", kern.level.name()), budget / 4, 10, || {
+                o.fill(0.0);
+                for (r, p) in prows.chunks_exact(pv_bk).enumerate() {
+                    pv::fp16_tile_fused(kern, &mut o[r * pv_d..(r + 1) * pv_d], p, &vtile, pv_d);
+                }
+                std::hint::black_box(&mut o);
+            });
+        let s_unfused =
+            bench_budget(&format!("pv-f16 unfused {}", kern.level.name()), budget / 4, 10, || {
+                o.fill(0.0);
+                for (r, p) in prows.chunks_exact(pv_bk).enumerate() {
+                    pv::fp16_tile_unfused(
+                        kern,
+                        &mut o[r * pv_d..(r + 1) * pv_d],
+                        p,
+                        &vtile,
+                        &mut part,
+                        pv_d,
+                    );
+                }
+                std::hint::black_box(&mut o);
+            });
+        for (s, path) in [(&s_fused, "fused"), (&s_unfused, "unfused")] {
+            tpv.row(&[
+                kern.level.name().to_string(),
+                path.to_string(),
+                f2(pv_ops / s.median_s() / 1e9),
+                s.iters.to_string(),
+            ]);
+        }
+        // gate the ratio only where the fused lane actually uses F16C —
+        // without it the fused step falls back to the scalar round and
+        // the comparison measures nothing
+        if kern.level == hw_best && hw_best != IsaLevel::Scalar && isa::cpu::f16c_enabled() {
+            pv_ratio = Some(s_unfused.median_s() / s_fused.median_s());
+        }
+    }
+    tpv.print("fused fp16-PV lane (pv_f16_step vs axpy+round composition)");
+    match pv_ratio {
+        Some(r) => {
+            println!(
+                "\npv-f16 fused speedup: {r:.2}x ({} fused vs unfused, {}x{} tile, d={pv_d})",
+                hw_best.name(),
+                pv_rows,
+                pv_bk
+            );
+            println!("acceptance bar: >= 1.30x on an F16C-capable host");
+        }
+        None => println!("\npv-f16 lane: no F16C on this host (fused ratio not gated)"),
+    }
+
     // ---- tab09 kernel-accuracy lane (persisted alongside the ratio
     //      floors): same setup as benches/tab09_kernel_accuracy.rs ----
     let acc_measured = tab09_accuracy();
@@ -1486,6 +1588,9 @@ fn bench_hotpath(flags: &HashMap<String, String>) -> Result<()> {
     ];
     if let Some(r) = dot_ratio {
         ratios.push(("dot_i8_simd_over_scalar", r));
+    }
+    if let Some(r) = pv_ratio {
+        ratios.push(("pv_f16_fused_over_unfused", r));
     }
 
     if let Some(path) = flags.get("check") {
@@ -1700,6 +1805,12 @@ fn check_baseline(
                 println!("  SKIP {name}: no SIMD tier on this host");
                 continue;
             }
+            // the fused fp16-PV ratio is only meaningful where the fused
+            // lane uses the F16C round-trip; other hosts skip that floor
+            if name == "pv_f16_fused_over_unfused" {
+                println!("  SKIP {name}: no F16C on this host");
+                continue;
+            }
             sageattention::bail!("baseline floor '{name}' is not a measured ratio");
         };
         let ok = got >= floor;
@@ -1779,6 +1890,7 @@ fn update_baseline(
                 ("prepared_decode_speedup", Json::num(3.0)),
                 ("serve_decode_speedup", Json::num(2.0)),
                 ("dot_i8_simd_over_scalar", Json::num(2.0)),
+                ("pv_f16_fused_over_unfused", Json::num(1.3)),
                 ("prefill_tokens_saved_frac", Json::num(0.5)),
                 ("goodput_under_faults_frac", Json::num(0.9)),
                 ("goodput_under_slo_frac", Json::num(0.9)),

@@ -191,4 +191,54 @@ mod tests {
         assert_eq!(f32_to_f16_bits(f32::NAN) & 0x7C00, 0x7C00);
         assert_ne!(f32_to_f16_bits(f32::NAN) & 0x03FF, 0);
     }
+
+    /// The contract the fused `pv_f16_step`/`scale_round_f16` ISA lanes
+    /// inherit: the dispatched slice round (hardware F16C where
+    /// detected) equals the software per-element round bit-for-bit, on
+    /// every remainder length 0..8 and across the awkward corners of
+    /// the f16 range — subnormals, ±0.0, and values straddling the
+    /// 65504→inf overflow edge. (NaN payloads are excluded: they differ
+    /// by design and never reach the kernels.)
+    #[test]
+    fn slice_round_matches_scalar_round_bit_for_bit() {
+        use crate::util::rng::Pcg32;
+        let specials: &[f32] = &[
+            0.0,
+            -0.0,
+            5.960_464_5e-8, // smallest f16 subnormal
+            -5.960_464_5e-8,
+            2.0e-8, // below the smallest subnormal: rounds to ±0
+            6.097_6e-5, // largest-subnormal neighborhood
+            f32::MIN_POSITIVE,
+            65503.9, // just under f16::MAX
+            65504.0, // f16::MAX exactly
+            65519.9, // rounds down to 65504
+            65520.0, // halfway: rounds to inf
+            -65520.0,
+            1.0e30, // far overflow → inf
+            -1.0e30,
+            1.0 + f32::powi(2.0, -11), // RNE tie at 1.0
+        ];
+        let mut rng = Pcg32::seeded(616);
+        // every remainder length 0..8, plus 8k+r lengths that exercise
+        // full vector chunks ahead of the tail
+        for len in (0..=8usize).chain([9, 15, 16, 17, 23, 31, 64, 71]) {
+            for trial in 0..8 {
+                let xs: Vec<f32> = (0..len)
+                    .map(|i| {
+                        if (i + trial) % 3 == 0 {
+                            specials[(i * 7 + trial) % specials.len()]
+                        } else {
+                            rng.normal() * 1000.0
+                        }
+                    })
+                    .collect();
+                let want: Vec<u32> = xs.iter().map(|&x| round_f16(x).to_bits()).collect();
+                let mut got = xs.clone();
+                round_f16_slice(&mut got);
+                let got: Vec<u32> = got.iter().map(|x| x.to_bits()).collect();
+                assert_eq!(got, want, "len {len} trial {trial} input {xs:?}");
+            }
+        }
+    }
 }

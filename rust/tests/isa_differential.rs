@@ -11,6 +11,8 @@
 use std::process::Command;
 
 use sageattention::attn::isa::{self, IsaLevel, Kernels};
+use sageattention::attn::pv;
+use sageattention::util::f16::{round_f16, round_f16_slice};
 use sageattention::util::rng::Pcg32;
 
 fn rand_i8(rng: &mut Pcg32, n: usize) -> Vec<i8> {
@@ -178,6 +180,127 @@ fn qk_tile_agrees_with_dot_per_pair() {
         for c in 0..bk {
             let want = (scalar.dot_i8)(&q[r * d..(r + 1) * d], &k[c * d..(c + 1) * d]);
             assert_eq!(tile[r * bk + c], want, "tile ({r},{c})");
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Fused fp16-accumulator lanes (pv_f16_step / scale_round_f16)
+// ---------------------------------------------------------------------------
+
+/// A softmax-shaped P̃ block row: non-negative, f16-rounded, with the
+/// exact zeros a masked tail produces (the zero-skip the kernels share).
+fn softmax_like_p(rng: &mut Pcg32, steps: usize) -> Vec<f32> {
+    let mut p: Vec<f32> =
+        (0..steps).map(|i| if i % 3 == 2 { 0.0 } else { rng.normal().abs() }).collect();
+    round_f16_slice(&mut p);
+    p
+}
+
+/// f16-rounded V entries hitting the awkward corners: exact zeros, the
+/// smallest f16 subnormal, magnitudes straddling the 65504→inf overflow
+/// edge (positive-only, so partials can overflow to +inf but never meet
+/// a -inf — no NaN from inf-inf), and ordinary signed normals.
+fn f16_edge_v(rng: &mut Pcg32, n: usize) -> Vec<f32> {
+    let mut v: Vec<f32> = (0..n)
+        .map(|i| match i % 7 {
+            0 => 0.0,
+            1 => 5.960_464_5e-8,
+            2 => 60000.0 + rng.normal().abs() * 6000.0,
+            _ => rng.normal(),
+        })
+        .collect();
+    round_f16_slice(&mut v);
+    v
+}
+
+fn assert_bits_eq(got: &[f32], want: &[f32], ctx: &str) {
+    let gb: Vec<u32> = got.iter().map(|f| f.to_bits()).collect();
+    let wb: Vec<u32> = want.iter().map(|f| f.to_bits()).collect();
+    assert_eq!(gb, wb, "{ctx}: got {got:?} want {want:?}");
+}
+
+#[test]
+fn pv_f16_step_all_tiers_bit_identical() {
+    // d crossing the 4/8/16-wide boundaries with odd tails, short and
+    // full MMA_K step counts, unaligned V slices
+    let scalar = isa::for_level(IsaLevel::Scalar).unwrap();
+    let mut rng = Pcg32::seeded(909);
+    let ds: &[usize] = &[1, 2, 3, 5, 7, 8, 9, 15, 16, 17, 23, 31, 32, 33, 63, 64, 65, 96, 128];
+    for kern in simd_tiers() {
+        for &d in ds {
+            for steps in [1usize, 2, 7, 15, 16] {
+                let p = softmax_like_p(&mut rng, steps);
+                let v = f16_edge_v(&mut rng, steps * d + 3);
+                for off in [0usize, 3] {
+                    let vs = &v[off..off + steps * d];
+                    let mut want: Vec<f32> = (0..d).map(|_| rng.normal()).collect();
+                    round_f16_slice(&mut want);
+                    let mut got = want.clone();
+                    (scalar.pv_f16_step)(&mut want, &p, vs, d);
+                    (kern.pv_f16_step)(&mut got, &p, vs, d);
+                    assert_bits_eq(
+                        &got,
+                        &want,
+                        &format!(
+                            "{} pv_f16_step d={d} steps={steps} off={off}",
+                            kern.level.name()
+                        ),
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn scale_round_f16_all_tiers_match_the_scale_plus_round_composition() {
+    // the fused α-rescale must equal scale_f32 + round_f16_slice — pin
+    // the scalar lane to the composition, then every tier to scalar
+    let scalar = isa::for_level(IsaLevel::Scalar).unwrap();
+    let mut rng = Pcg32::seeded(910);
+    for &n in ODD_LENGTHS {
+        let base = f16_edge_v(&mut rng, n);
+        for a in [0.0f32, -0.0, 1.0, 0.731, -1.5, 1e-3, 300.0, f32::MIN_POSITIVE] {
+            let comp: Vec<f32> = base.iter().map(|&x| round_f16(x * a)).collect();
+            let mut want = base.clone();
+            (scalar.scale_round_f16)(&mut want, a);
+            assert_bits_eq(&want, &comp, &format!("scalar scale_round_f16 n={n} a={a}"));
+            for kern in simd_tiers() {
+                let mut got = base.clone();
+                (kern.scale_round_f16)(&mut got, a);
+                assert_bits_eq(
+                    &got,
+                    &want,
+                    &format!("{} scale_round_f16 n={n} a={a}", kern.level.name()),
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn fused_tile_matches_unfused_composition_on_every_tier() {
+    // whole-tile check through attn::pv: the fused MMA_K-blocked walk
+    // vs the original axpy + slice-round + add composition it replaced,
+    // on every tier including scalar
+    let scalar = isa::for_level(IsaLevel::Scalar).unwrap();
+    let mut rng = Pcg32::seeded(4242);
+    for kern in std::iter::once(scalar).chain(simd_tiers()) {
+        for &(bk, d) in &[(1usize, 13usize), (5, 64), (16, 96), (33, 128), (64, 65)] {
+            let p = softmax_like_p(&mut rng, bk);
+            let v = f16_edge_v(&mut rng, bk * d);
+            let mut o_fused: Vec<f32> = (0..d).map(|_| rng.normal()).collect();
+            round_f16_slice(&mut o_fused);
+            let mut o_unfused = o_fused.clone();
+            let mut part = vec![0.0f32; d];
+            pv::fp16_tile_fused(kern, &mut o_fused, &p, &v, d);
+            pv::fp16_tile_unfused(kern, &mut o_unfused, &p, &v, &mut part, d);
+            assert_bits_eq(
+                &o_fused,
+                &o_unfused,
+                &format!("{} fused-vs-unfused bk={bk} d={d}", kern.level.name()),
+            );
         }
     }
 }
