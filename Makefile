@@ -17,14 +17,20 @@
 #                        traffic-plane smoke (open-loop scenario-mix serve
 #                        with chunked prefill, token streaming, and SLO
 #                        admission; exits nonzero on a silently dropped
-#                        request), and the bench-hotpath no-regression
-#                        check against the checked-in bench_baseline.json
+#                        request), the observability smoke (a traced
+#                        2-replica chaos serve with chunked prefill + SLO
+#                        admission writing a Chrome trace + Prometheus
+#                        metrics, then `sage trace --check` schema
+#                        validation — exits nonzero on orphan spans or
+#                        unaccounted requests), and the bench-hotpath
+#                        no-regression check against the checked-in
+#                        bench_baseline.json
 #                        (speedup floors: blocked-vs-naive, PreparedKV
 #                        decode, serve-decode, dot-i8 SIMD-vs-scalar,
 #                        fused-fp16-PV-vs-unfused, shared-prefix
 #                        prefill-tokens-saved, goodput-under-faults,
-#                        goodput-under-SLO; tab09 kernel-accuracy cosine
-#                        floors)
+#                        goodput-under-SLO, trace-overhead; tab09
+#                        kernel-accuracy cosine floors)
 #   make build           release build only
 #   make test            test suite only
 #   make fmt             rewrite sources with rustfmt
@@ -47,6 +53,11 @@ verify:
 	./target/release/sage serve --backend native --config tiny --plan fp --requests 12 \
 		--replicas 2 --workload mix:chat=0.5,rag=0.3,bursty=0.2 \
 		--prefill-chunk 16 --tick-rows 32 --slo-ttft 12 --slo-tpot 8 --open-loop --seed 7
+	./target/release/sage serve --backend native --config tiny --plan fp --requests 12 \
+		--replicas 2 --faults step_err:0.02,oom:0.05 --prefill-chunk 16 --tick-rows 32 \
+		--slo-ttft 12 --seed 7 --trace /tmp/sage-verify-trace.json \
+		--metrics-out /tmp/sage-verify-metrics.prom
+	./target/release/sage trace /tmp/sage-verify-trace.json --check
 	./target/release/sage chaos --requests 12
 	./target/release/sage bench-hotpath --secs 1 --check bench_baseline.json
 

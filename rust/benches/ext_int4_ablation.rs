@@ -4,13 +4,21 @@
 //! The follow-up paper needs per-thread granularity plus Q smoothing to
 //! make INT4 viable; this ablation quantifies the gap that motivates it:
 //! INT4 per-token collapses on outlier profiles where INT8 stays ≈ exact.
+//!
+//! Each (quantizer, profile) cell is recorded as an [`obs::metrics`]
+//! gauge first; the printed table and the optional `--json PATH` export
+//! render from that one snapshot, so they cannot drift apart.
+//!
+//! [`obs::metrics`]: sageattention::obs::metrics
 
 use sageattention::attn::AttnSpec;
 use sageattention::bench::{pct, Table};
 use sageattention::metrics::cos_sim;
+use sageattention::obs::Obs;
 use sageattention::quant::{fake_quant, FakeQuant, Granularity};
 use sageattention::synth::{make_qkv, Profile};
 use sageattention::tensor::Tensor;
+use sageattention::util::json::Json;
 
 /// Attention with Q,K forced through `kind` after smooth-K; exact PV.
 fn attn_qk_fake(q: &Tensor, k: &Tensor, v: &Tensor, kind: FakeQuant) -> Tensor {
@@ -29,6 +37,12 @@ fn attn_qk_fake(q: &Tensor, k: &Tensor, v: &Tensor, kind: FakeQuant) -> Tensor {
     AttnSpec::exact().run(&q2, &k2, v).unwrap()
 }
 
+/// Value of `--json PATH` style flags passed after `cargo bench -- ...`.
+fn arg_value(flag: &str) -> Option<String> {
+    let args: Vec<String> = std::env::args().collect();
+    args.iter().position(|a| a == flag).and_then(|i| args.get(i + 1).cloned())
+}
+
 fn main() {
     let profiles = [
         ("llama-like", Profile::llama_like()),
@@ -42,9 +56,6 @@ fn main() {
         ("INT4 per-block(128)", FakeQuant::Int4(Granularity::PerBlock(128))),
         ("INT4 per-tensor", FakeQuant::Int4(Granularity::PerTensor)),
     ];
-    let mut headers = vec!["Q,K quantization"];
-    headers.extend(profiles.iter().map(|(n, _)| *n));
-    let mut t = Table::new(&headers);
     let data: Vec<_> = profiles
         .iter()
         .enumerate()
@@ -54,11 +65,28 @@ fn main() {
             (q, k, v, gold)
         })
         .collect();
+
+    // record every (quantizer, profile) cell into the registry
+    let obs = Obs::enabled();
     for (label, kind) in kinds {
-        let mut row = vec![label.to_string()];
-        for (q, k, v, gold) in &data {
+        for ((profile, _), (q, k, v, gold)) in profiles.iter().zip(&data) {
             let o = attn_qk_fake(q, k, v, kind);
-            row.push(pct(cos_sim(&gold.data, &o.data) as f64));
+            let cell = cos_sim(&gold.data, &o.data) as f64;
+            obs.gauge_set(&format!("int4_qk_cos/{label}/{profile}"), cell);
+        }
+    }
+
+    // single source: table cells read back out of the snapshot the
+    // optional JSON export serializes
+    let snap = obs.snapshot();
+    let mut headers = vec!["Q,K quantization"];
+    headers.extend(profiles.iter().map(|(n, _)| *n));
+    let mut t = Table::new(&headers);
+    for (label, _) in kinds {
+        let mut row = vec![label.to_string()];
+        for (profile, _) in &profiles {
+            let name = format!("int4_qk_cos/{label}/{profile}");
+            row.push(pct(snap.registry.gauge(&name).expect("recorded above")));
         }
         t.row(&row);
     }
@@ -66,4 +94,10 @@ fn main() {
     println!("\nreading: plain INT4 loses 1-3 nines everywhere and collapses under");
     println!("severe outliers — the gap SageAttention2's per-thread INT4 + Q-smoothing closes.");
     println!("hardware upside if closed: INT4 tensor cores run 2x INT8 (8x fp16-fp32acc).");
+
+    if let Some(path) = arg_value("--json") {
+        let doc = Json::obj(snap.registry.gauges().map(|(k, v)| (k, Json::num(v))).collect());
+        std::fs::write(&path, format!("{doc}\n")).expect("writing --json output");
+        println!("\nper-cell metrics (same registry as the table) -> {path}");
+    }
 }

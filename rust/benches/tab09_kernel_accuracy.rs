@@ -2,12 +2,20 @@
 //! variants against full precision on N(0,1)-distributed Q, K, V (the
 //! paper's setup for this table), via both the rust-native kernels and —
 //! when artifacts are present — the AOT Pallas kernels through PJRT.
+//!
+//! Every per-config result is recorded into an [`obs::metrics`] registry
+//! first; the human table and the optional `--json PATH` export both
+//! render from that one snapshot, so they cannot drift apart.
+//!
+//! [`obs::metrics`]: sageattention::obs::metrics
 
 use sageattention::attn::AttnSpec;
 use sageattention::bench::{f3, pct, sci, Table};
 use sageattention::metrics::accuracy;
+use sageattention::obs::{Obs, Snapshot};
 use sageattention::runtime::{Runtime, Value};
 use sageattention::tensor::Tensor;
+use sageattention::util::json::Json;
 use sageattention::util::rng::Pcg32;
 
 fn normal_qkv(seed: u64, shape: [usize; 4]) -> (Tensor, Tensor, Tensor) {
@@ -21,30 +29,60 @@ fn normal_qkv(seed: u64, shape: [usize; 4]) -> (Tensor, Tensor, Tensor) {
     (mk(0), mk(1), mk(2))
 }
 
+/// Value of `--json PATH` style flags passed after `cargo bench -- ...`.
+fn arg_value(flag: &str) -> Option<String> {
+    let args: Vec<String> = std::env::args().collect();
+    args.iter().position(|a| a == flag).and_then(|i| args.get(i + 1).cloned())
+}
+
+/// Serialize every recorded gauge — the machine-readable twin of the
+/// printed tables, from the same registry snapshot.
+fn gauges_json(snap: &Snapshot) -> Json {
+    Json::obj(snap.registry.gauges().map(|(k, v)| (k, Json::num(v))).collect())
+}
+
+fn record(obs: &Obs, prefix: &str, config: &str, gold: &[f32], out: &[f32]) {
+    let a = accuracy(gold, out);
+    obs.gauge_set(&format!("{prefix}_cos_sim/{config}"), a.cos_sim as f64);
+    obs.gauge_set(&format!("{prefix}_rel_l1/{config}"), a.rel_l1 as f64);
+    obs.gauge_set(&format!("{prefix}_rmse/{config}"), a.rmse as f64);
+}
+
+/// One table row per config, read back out of the registry snapshot.
+fn accuracy_table(snap: &Snapshot, label: &str, prefix: &str, configs: &[String]) -> Table {
+    let gauge = |name: String| snap.registry.gauge(&name).expect("recorded before rendering");
+    let mut t = Table::new(&[label, "CosSim", "RelL1", "RMSE"]);
+    for name in configs {
+        t.row(&[
+            name.clone(),
+            pct(gauge(format!("{prefix}_cos_sim/{name}"))),
+            f3(gauge(format!("{prefix}_rel_l1/{name}"))),
+            sci(gauge(format!("{prefix}_rmse/{name}"))),
+        ]);
+    }
+    t
+}
+
 fn main() {
+    let obs = Obs::enabled();
     let shape = [2, 8, 1024, 64];
     let (q, k, v) = normal_qkv(9, shape);
     let gold = AttnSpec::exact().run(&q, &k, &v).unwrap();
-
-    let mut t = Table::new(&["attention", "CosSim", "RelL1", "RMSE"]);
-    for name in ["SageAttn-T", "SageAttn-B", "SageAttn-vT", "SageAttn-vB"] {
+    let kernels: Vec<String> =
+        ["SageAttn-T", "SageAttn-B", "SageAttn-vT", "SageAttn-vB"].map(String::from).into();
+    for name in &kernels {
         let o = AttnSpec::by_name(name).unwrap().run(&q, &k, &v).unwrap();
-        let a = accuracy(&gold.data, &o.data);
-        t.row(&[
-            name.to_string(),
-            pct(a.cos_sim as f64),
-            f3(a.rel_l1 as f64),
-            sci(a.rmse as f64),
-        ]);
+        record(&obs, "tab09", name, &gold.data, &o.data);
     }
-    t.print("Table 9: kernel accuracy on N(0,1) QKV (rust-native kernels, 2x8x1024x64)");
+    accuracy_table(&obs.snapshot(), "attention", "tab09", &kernels)
+        .print("Table 9: kernel accuracy on N(0,1) QKV (rust-native kernels, 2x8x1024x64)");
 
     // Same experiment through the AOT Pallas artifacts (smaller shape).
     match Runtime::open(Runtime::default_dir()) {
         Ok(rt) => {
             let (q, k, v) = normal_qkv(10, [1, 2, 256, 64]);
             let gold = AttnSpec::exact().run(&q, &k, &v).unwrap();
-            let mut t = Table::new(&["artifact", "CosSim", "RelL1", "RMSE"]);
+            let mut ran: Vec<String> = Vec::new();
             for name in [
                 "attn_sage_t_1x2x256x64",
                 "attn_sage_b_1x2x256x64",
@@ -65,18 +103,20 @@ fn main() {
                         Value::from_tensor(&v),
                     ])
                     .unwrap();
-                let a = accuracy(&gold.data, out[0].as_f32().unwrap());
-                t.row(&[
-                    name.to_string(),
-                    pct(a.cos_sim as f64),
-                    f3(a.rel_l1 as f64),
-                    sci(a.rmse as f64),
-                ]);
+                record(&obs, "tab09_pjrt", name, &gold.data, out[0].as_f32().unwrap());
+                ran.push(name.to_string());
             }
-            t.print("Table 9 (AOT Pallas kernels via PJRT, 1x2x256x64)");
+            accuracy_table(&obs.snapshot(), "artifact", "tab09_pjrt", &ran)
+                .print("Table 9 (AOT Pallas kernels via PJRT, 1x2x256x64)");
         }
         Err(e) => println!("\n(artifacts unavailable, PJRT half skipped: {e})"),
     }
     println!("\npaper shape: -T/-B at CosSim ≈ 1.0 with RMSE ~1e-4..1e-3;");
     println!("-vT/-vB slightly worse (softmax-quantized P); all four usable.");
+
+    if let Some(path) = arg_value("--json") {
+        let doc = gauges_json(&obs.snapshot());
+        std::fs::write(&path, format!("{doc}\n")).expect("writing --json output");
+        println!("\nper-config metrics (same registry as the tables) -> {path}");
+    }
 }

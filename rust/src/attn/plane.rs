@@ -26,6 +26,7 @@
 //! window and softmax-scale knobs the [`crate::attn::api`] surface
 //! exposes.
 
+use crate::obs::phase::{Phase, PhaseTimer};
 use crate::quant::{self, Fp8Format, Granularity};
 use crate::util::f16::{round_f16, round_f16_slice};
 
@@ -123,6 +124,10 @@ pub struct Scratch {
     /// INT8 V plane + per-channel scales (Int8 P·V mode).
     pub(super) v_i8: Vec<i8>,
     pub(super) v_scales: Vec<f32>,
+    /// Sampled kernel phase profiler ([`crate::obs::PhaseTimer`]).
+    /// Disabled (a dead branch per phase) unless armed via
+    /// [`Scratch::set_phase_timer`].
+    pub(super) timer: PhaseTimer,
 }
 
 impl Scratch {
@@ -146,7 +151,28 @@ impl Scratch {
             k_scales: Vec::new(),
             v_i8: Vec::new(),
             v_scales: Vec::new(),
+            timer: PhaseTimer::disabled(),
         }
+    }
+
+    /// Arm (or disarm) the sampled kernel phase profiler. On sampled
+    /// plane calls the blocked sage kernels time their quantization,
+    /// QKᵀ-tile, online-softmax, P·V and fp16-round phases into it —
+    /// the measured mirror of the paper's Figure 2 latency breakdown.
+    pub fn set_phase_timer(&mut self, timer: PhaseTimer) {
+        self.timer = timer;
+    }
+
+    /// Whether a phase profiler is armed.
+    pub fn phase_timer_enabled(&self) -> bool {
+        self.timer.is_enabled()
+    }
+
+    /// Drain accumulated phase nanoseconds and the sampled-plane count,
+    /// keeping the sampling cadence armed (feed to
+    /// [`crate::obs::Obs::add_phase`]).
+    pub fn take_phase_ns(&mut self) -> ([u64; crate::obs::PHASE_COUNT], u64) {
+        self.timer.take()
     }
 
     /// Grow the d-sized buffers for planes wider than [`MAX_HEAD_DIM`]
@@ -514,12 +540,15 @@ pub fn sage_plane_opt(
         k_scales,
         v_i8,
         v_scales,
+        timer,
     } = scratch;
     let kern = isa::kernels();
+    timer.begin_plane();
 
     // ---- quantize Q (with folded softmax scale) and K (after smooth-K),
     //      all into scratch-owned buffers (zero per-plane allocation) ----
     let scale = opts.scale(d);
+    let t_quant = timer.section();
     qbuf.clear();
     qbuf.extend(q.iter().map(|&x| x * scale));
     let k_src: &[f32] = if smooth {
@@ -530,14 +559,21 @@ pub fn sage_plane_opt(
     };
     quant::quantize_into(qbuf, n_q, d, qk_gran, q_i8, q_scales);
     quant::quantize_into(k_src, n_kv, d, qk_gran, k_i8, k_scales);
+    timer.commit(Phase::Quant, t_quant);
 
     // ---- quantize / round V per P·V mode ----
     match pv {
-        PvMode::Int8 => quant::quant_per_channel_into(v, n_kv, d, v_i8, v_scales),
+        PvMode::Int8 => {
+            let t0 = timer.section();
+            quant::quant_per_channel_into(v, n_kv, d, v_i8, v_scales);
+            timer.commit(Phase::Quant, t0);
+        }
         _ => {
+            let t0 = timer.section();
             vbuf.clear();
             vbuf.extend_from_slice(v);
             round_f16_slice(vbuf);
+            timer.commit(Phase::F16Round, t0);
         }
     }
     let v_f16: &[f32] = vbuf;
@@ -561,6 +597,7 @@ pub fn sage_plane_opt(
             let bk = jk - j0;
             // ---- S tile: mma(u8.u8.s32) via the ISA tile microkernel,
             //      then dequant + mask into `s` ----
+            let t_qk = timer.section();
             qk_score_tile(
                 kern,
                 opts,
@@ -578,6 +615,7 @@ pub fn sage_plane_opt(
                 n_kv,
                 d,
             );
+            timer.commit(Phase::QkTile, t_qk);
             // this tile's V rows in the P·V mode's representation
             // (per-channel V scales are whole-plane here, length d)
             let vtile = match pv {
@@ -589,6 +627,7 @@ pub fn sage_plane_opt(
             };
             // ---- online softmax (fp32) + P·V ----
             for bi in 0..bq {
+                let t_sm = timer.section();
                 let row = &mut s[bi * BLOCK_KV..bi * BLOCK_KV + bk];
                 let m_cur = row.iter().fold(NEG_BIG, |a, &b| a.max(b));
                 let m_new = mb[bi].max(m_cur);
@@ -596,6 +635,7 @@ pub fn sage_plane_opt(
                     // fully-masked row (causal_limit == 0): skip so it
                     // stays zero like the exact/naive references instead
                     // of exp(0)-weighting every masked key
+                    timer.commit(Phase::Softmax, t_sm);
                     continue;
                 }
                 let alpha = (mb[bi] - m_new).exp();
@@ -606,10 +646,13 @@ pub fn sage_plane_opt(
                 }
                 lb[bi] = alpha * lb[bi] + row_sum;
                 mb[bi] = m_new;
+                timer.commit(Phase::Softmax, t_sm);
                 let o = &mut accb[bi * d..(bi + 1) * d];
                 // shared P·V tile formulation (attn::pv): α-rescale + P̃·V
                 // in the mode's numerics through the fused ISA lanes
+                let t_pv = timer.section();
                 super::pv::accumulate(kern, &vtile, o, alpha, row, p_i8, p16, acc_i32, d);
+                timer.commit(Phase::Pv, t_pv);
             }
             j0 = jk;
         }

@@ -25,6 +25,7 @@
 //! incrementally are **bit-identical** — the invariant
 //! `tests/api_scenarios.rs` pins down.
 
+use crate::obs::phase::Phase;
 use crate::quant::{self, Granularity};
 use crate::util::error::Result;
 use crate::util::f16::round_f16_slice;
@@ -220,13 +221,20 @@ pub(crate) fn sage_plane_prepared(
         "prepared KV supports PerToken/PerBlock Q/K granularity"
     );
     scratch.ensure_head_dim(d);
-    let Scratch { s, s_i32, p_i8, m, l, acc, p16, acc_i32, qbuf, q_i8, q_scales, .. } = scratch;
+    let Scratch { s, s_i32, p_i8, m, l, acc, p16, acc_i32, qbuf, q_i8, q_scales, timer, .. } =
+        scratch;
     let kern = isa::kernels();
+    timer.begin_plane();
 
+    // prepared KV carries quantized K and rounded V already: the only
+    // quantization on this path is Q (the decode-side ψ of §3's
+    // quantize-once pipeline), so the f16-round phase never fires here
     let scale = opts.scale(d);
+    let t_quant = timer.section();
     qbuf.clear();
     qbuf.extend(q.iter().map(|&x| x * scale));
     quant::quantize_into(qbuf, n_q, d, qk_gran, q_i8, q_scales);
+    timer.commit(Phase::Quant, t_quant);
 
     let mut out = vec![0.0f32; n_q * d];
 
@@ -249,6 +257,7 @@ pub(crate) fn sage_plane_prepared(
                 isa::prefetch_head(&prep.k_i8[jk * d..]);
             }
             // ---- S tile from the prepared INT8 K (ISA microkernel) ----
+            let t_qk = timer.section();
             qk_score_tile(
                 kern,
                 opts,
@@ -266,6 +275,7 @@ pub(crate) fn sage_plane_prepared(
                 n_kv,
                 d,
             );
+            timer.commit(Phase::QkTile, t_qk);
             // this tile's V rows (per-block V scales in Int8 mode)
             let vs_base = (j0 / BLOCK_KV) * d;
             let vtile = match pv {
@@ -282,10 +292,12 @@ pub(crate) fn sage_plane_prepared(
             };
             // ---- online softmax (fp32) + P·V ----
             for bi in 0..bq {
+                let t_sm = timer.section();
                 let row = &mut s[bi * BLOCK_KV..bi * BLOCK_KV + bk];
                 let m_cur = row.iter().fold(NEG_BIG, |a, &b| a.max(b));
                 let m_new = mb[bi].max(m_cur);
                 if m_new == NEG_BIG {
+                    timer.commit(Phase::Softmax, t_sm);
                     continue;
                 }
                 let alpha = (mb[bi] - m_new).exp();
@@ -296,9 +308,12 @@ pub(crate) fn sage_plane_prepared(
                 }
                 lb[bi] = alpha * lb[bi] + row_sum;
                 mb[bi] = m_new;
+                timer.commit(Phase::Softmax, t_sm);
                 let o = &mut accb[bi * d..(bi + 1) * d];
                 // shared P·V tile formulation (attn::pv)
+                let t_pv = timer.section();
                 super::pv::accumulate(kern, &vtile, o, alpha, row, p_i8, p16, acc_i32, d);
+                timer.commit(Phase::Pv, t_pv);
             }
             j0 = jk;
         }
@@ -657,13 +672,19 @@ pub(crate) fn sage_plane_paged(
         "paged KV supports PerToken/PerBlock Q/K granularity"
     );
     scratch.ensure_head_dim(d);
-    let Scratch { s, s_i32, p_i8, m, l, acc, p16, acc_i32, qbuf, q_i8, q_scales, .. } = scratch;
+    let Scratch { s, s_i32, p_i8, m, l, acc, p16, acc_i32, qbuf, q_i8, q_scales, timer, .. } =
+        scratch;
     let kern = isa::kernels();
+    timer.begin_plane();
 
+    // pages carry quantized K / rounded V already — Q is the only
+    // per-call quantization, as in the prepared-plane kernel above
     let scale = opts.scale(d);
+    let t_quant = timer.section();
     qbuf.clear();
     qbuf.extend(q.iter().map(|&x| x * scale));
     quant::quantize_into(qbuf, n_q, d, qk_gran, q_i8, q_scales);
+    timer.commit(Phase::Quant, t_quant);
 
     let mut out = vec![0.0f32; n_q * d];
 
@@ -696,6 +717,7 @@ pub(crate) fn sage_plane_paged(
                 }
             }
             // ---- S tile from the page's INT8 K (ISA microkernel) ----
+            let t_qk = timer.section();
             qk_score_tile(
                 kern,
                 opts,
@@ -713,6 +735,7 @@ pub(crate) fn sage_plane_paged(
                 n_kv,
                 d,
             );
+            timer.commit(Phase::QkTile, t_qk);
             // this tile's V rows (page-local; per-page V scales in Int8)
             let vtile = match pv {
                 PvMode::Int8 => {
@@ -723,10 +746,12 @@ pub(crate) fn sage_plane_paged(
             };
             // ---- online softmax (fp32) + P·V ----
             for bi in 0..bq {
+                let t_sm = timer.section();
                 let row = &mut s[bi * BLOCK_KV..bi * BLOCK_KV + bk];
                 let m_cur = row.iter().fold(NEG_BIG, |a, &b| a.max(b));
                 let m_new = mb[bi].max(m_cur);
                 if m_new == NEG_BIG {
+                    timer.commit(Phase::Softmax, t_sm);
                     continue;
                 }
                 let alpha = (mb[bi] - m_new).exp();
@@ -737,9 +762,12 @@ pub(crate) fn sage_plane_paged(
                 }
                 lb[bi] = alpha * lb[bi] + row_sum;
                 mb[bi] = m_new;
+                timer.commit(Phase::Softmax, t_sm);
                 let o = &mut accb[bi * d..(bi + 1) * d];
                 // shared P·V tile formulation (attn::pv)
+                let t_pv = timer.section();
                 super::pv::accumulate(kern, &vtile, o, alpha, row, p_i8, p16, acc_i32, d);
+                timer.commit(Phase::Pv, t_pv);
             }
             j0 = jk;
         }

@@ -184,6 +184,12 @@ pub trait EngineBackend: Send {
     fn pending_prefill_rows(&self) -> usize {
         0
     }
+
+    /// Attach an observability handle: the backend stamps `replica` on
+    /// its engine-level trace events (prefill chunks, decode steps) and
+    /// arms the sampled kernel phase profiler. Default: ignored (pjrt —
+    /// the artifact executes opaquely; there is nothing to instrument).
+    fn set_obs(&mut self, _obs: crate::obs::Obs, _replica: u32) {}
 }
 
 #[derive(Clone, Debug, Default)]

@@ -27,6 +27,7 @@ use crate::attn::{
     exact_plane_opt, fp8_plane_opt, guard, online_plane_opt, registry, sage_plane_opt, AttnImpl,
     PlaneOpts, Scratch, PAGE_ROWS,
 };
+use crate::obs::{EventKind, Obs, PhaseTimer, NO_ID, NO_REPLICA};
 use crate::quant::Granularity;
 use crate::runtime::{ModelCfg, Value};
 use crate::tensor::{default_threads, parallel_map};
@@ -78,8 +79,18 @@ pub struct NativeEngine {
     /// `step` drains it chunk-by-chunk under the per-tick row budget,
     /// interleaved with decode.
     chunk: Option<ChunkCfg>,
+    /// Observability handle ([`Obs::disabled`] = every emit is one dead
+    /// branch) and the replica id stamped on engine-level trace events.
+    obs: Obs,
+    replica: u32,
     pub stats: EngineStats,
 }
+
+/// Kernel phase profiling samples one plane call in this many (per
+/// scratch, i.e. per engine thread) — dense enough for a stable Figure-2
+/// style breakdown, sparse enough that the sampled run stays within the
+/// `trace_overhead_frac` floor.
+const PHASE_SAMPLE_EVERY: u32 = 8;
 
 impl NativeEngine {
     /// Default decode-slot count (pjrt slots come from the artifact's
@@ -136,6 +147,8 @@ impl NativeEngine {
             scratch: Scratch::new(),
             poison_armed: false,
             chunk: None,
+            obs: Obs::disabled(),
+            replica: NO_REPLICA,
             stats: EngineStats::default(),
         })
     }
@@ -529,8 +542,17 @@ impl EngineBackend for NativeEngine {
                 return Err(e);
             }
         };
-        self.stats.prefill_time += t0.elapsed();
+        let dur = t0.elapsed();
+        self.stats.prefill_time += dur;
         self.stats.prefills += 1;
+        self.obs.emit(
+            self.replica,
+            req.id,
+            EventKind::Prefill {
+                rows: (toks.len() - prefix_len) as u32,
+                dur_ns: dur.as_nanos() as u64,
+            },
+        );
         if let Some(c) = self.cache.as_mut() {
             c.insert(&toks, req.id, kv, &mut self.paged)?;
         }
@@ -542,6 +564,7 @@ impl EngineBackend for NativeEngine {
             None => {
                 let mut rng = Pcg32::seeded(req.params.seed ^ req.id);
                 let first = sample(&logits, req.params.temperature, &mut rng);
+                self.obs.emit(self.replica, req.id, EventKind::FirstToken);
                 (Instant::now(), rng, vec![first], 0)
             }
         };
@@ -570,6 +593,7 @@ impl EngineBackend for NativeEngine {
         }
         let t0 = Instant::now();
         let live_at_entry = self.live_slots();
+        let tokens_at_entry = self.stats.tokens_generated;
 
         // --- chunked-prefill phase: drain pending prompts chunk-by-chunk
         // under the per-tick row budget, before (and never instead of)
@@ -620,7 +644,13 @@ impl EngineBackend for NativeEngine {
                     }
                     Err(e) => return Err(e),
                 };
-                self.stats.prefill_time += tp.elapsed();
+                let dur = tp.elapsed();
+                self.stats.prefill_time += dur;
+                self.obs.emit(
+                    self.replica,
+                    id,
+                    EventKind::PrefillChunk { rows: rows as u32, dur_ns: dur.as_nanos() as u64 },
+                );
                 let s = self.slots[b].as_mut().expect("slot checked live above");
                 s.pending_prefill.drain(..rows);
                 s.pos += rows;
@@ -657,6 +687,7 @@ impl EngineBackend for NativeEngine {
                     s.next_token = first;
                     s.first_token_at = Instant::now();
                     self.stats.tokens_generated += 1;
+                    self.obs.emit(self.replica, id, EventKind::FirstToken);
                 } else {
                     s.next_token = *s.generated.last().expect("generated checked non-empty");
                 }
@@ -782,9 +813,24 @@ impl EngineBackend for NativeEngine {
                 self.slots[b] = None;
             }
         }
-        self.stats.decode_time += t0.elapsed();
+        let dur = t0.elapsed();
+        self.stats.decode_time += dur;
         self.stats.decode_steps += 1;
         self.stats.occupancy_sum += live_at_entry as f64 / self.batch as f64;
+        if self.obs.is_enabled() {
+            self.obs.emit(
+                self.replica,
+                NO_ID,
+                EventKind::DecodeStep {
+                    live: live_at_entry as u32,
+                    tokens: (self.stats.tokens_generated - tokens_at_entry) as u32,
+                    dur_ns: dur.as_nanos() as u64,
+                },
+            );
+            // flush the scratch's sampled kernel phase accumulators
+            let (ns, samples) = self.scratch.take_phase_ns();
+            self.obs.add_phase(&ns, samples);
+        }
         Ok(outcome)
     }
 
@@ -868,6 +914,21 @@ impl EngineBackend for NativeEngine {
 
     fn pending_prefill_rows(&self) -> usize {
         self.slots.iter().flatten().map(|s| s.pending_prefill.len()).sum()
+    }
+
+    /// Engine-level spans (prefill / prefill chunk / decode step / first
+    /// token) are stamped with `replica`; the scratch's sampled kernel
+    /// phase profiler is armed (or disarmed) to match, and its
+    /// accumulators are flushed into `obs` once per [`Self::step`].
+    fn set_obs(&mut self, obs: Obs, replica: u32) {
+        let timer = if obs.is_enabled() {
+            PhaseTimer::sampled(PHASE_SAMPLE_EVERY)
+        } else {
+            PhaseTimer::disabled()
+        };
+        self.scratch.set_phase_timer(timer);
+        self.obs = obs;
+        self.replica = replica;
     }
 }
 

@@ -179,6 +179,13 @@ impl Engine {
     pub fn pending_prefill_rows(&self) -> usize {
         self.backend.pending_prefill_rows()
     }
+
+    /// Attach an observability handle (see [`EngineBackend::set_obs`]):
+    /// engine-level spans stamp `replica` and the kernel phase profiler
+    /// arms on backends that support it.
+    pub fn set_obs(&mut self, obs: crate::obs::Obs, replica: u32) {
+        self.backend.set_obs(obs, replica)
+    }
 }
 
 /// The scheduler admits through its engine: cached-prefix credit shrinks

@@ -228,6 +228,10 @@ impl EngineBackend for FaultingBackend {
     fn pending_prefill_rows(&self) -> usize {
         self.inner.pending_prefill_rows()
     }
+
+    fn set_obs(&mut self, obs: crate::obs::Obs, replica: u32) {
+        self.inner.set_obs(obs, replica)
+    }
 }
 
 #[cfg(test)]

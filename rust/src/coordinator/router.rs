@@ -18,6 +18,7 @@ use std::fmt;
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
+use crate::obs::{EventKind, Obs, NO_ID, NO_REPLICA};
 use crate::util::error::{ensure, Result};
 
 use super::fault::is_crash;
@@ -404,6 +405,9 @@ pub struct Fleet {
     /// request's first token is the tick its ledger count went
     /// positive.
     ledger: Option<Arc<Mutex<StreamLedger>>>,
+    /// Shared observability handle (see [`Fleet::set_obs`]); the
+    /// disabled default is a no-op on every emission site.
+    obs: Obs,
 }
 
 impl Fleet {
@@ -434,7 +438,21 @@ impl Fleet {
             shed: 0,
             route_refusals: 0,
             ledger: None,
+            obs: Obs::disabled(),
         }
+    }
+
+    /// Attach an observability handle fleet-wide: every replica's
+    /// scheduler (and through it the engine's kernel phase profiler)
+    /// shares the same `obs`, while the fleet itself stamps the virtual
+    /// tick and emits the fleet-level lifecycle spans — submit,
+    /// dispatch, shed, retry, failover, crash, breaker-open — that no
+    /// single replica can see.
+    pub fn set_obs(&mut self, obs: Obs) {
+        for sup in &mut self.replicas {
+            sup.sched.set_obs(obs.clone(), sup.id as u32, true);
+        }
+        self.obs = obs;
     }
 
     pub fn submit(&mut self, req: Request) {
@@ -448,6 +466,8 @@ impl Fleet {
     /// there — not at tick 0 when the workload was generated.
     pub fn submit_at(&mut self, req: Request, due: u64) {
         self.submitted += 1;
+        let kind = EventKind::Submit { prompt_len: req.prompt.len() as u32 };
+        self.obs.emit(NO_REPLICA, req.id, kind);
         self.meta.insert(
             req.id,
             Meta {
@@ -529,6 +549,19 @@ impl Fleet {
     }
 
     fn record_terminal(&mut self, resp: Response) {
+        // fleet-level terminals (shed, deadline sweep, retry-budget
+        // exhaustion, whole-fleet-down) never pass through a replica
+        // scheduler's `record_response`, so this is their one and only
+        // trace-emission site — exactly-once terminal spans
+        let kind = match resp.finish {
+            FinishReason::DeadlineExceeded => EventKind::DeadlineCancel,
+            FinishReason::Shed => EventKind::Shed,
+            FinishReason::MaxTokens | FinishReason::StopToken => {
+                EventKind::Finish { tokens: resp.tokens.len() as u32 }
+            }
+            FinishReason::Failed | FinishReason::Rejected => EventKind::Fail,
+        };
+        self.obs.emit(NO_REPLICA, resp.id, kind);
         if let Some(m) = self.meta.get_mut(&resp.id) {
             m.done = true;
             if !m.slo.is_empty() && m.slo_met.is_none() {
@@ -565,10 +598,18 @@ impl Fleet {
     fn stamp_first_tokens(&mut self) {
         let Some(ledger) = &self.ledger else { return };
         let ledger = ledger.lock().expect("stream ledger poisoned");
+        let mut stamped = 0u64;
         for (&id, m) in self.meta.iter_mut() {
             if m.first_token_tick.is_none() && ledger.streamed_of(id) > 0 {
                 m.first_token_tick = Some(self.now);
+                stamped += 1;
             }
+        }
+        drop(ledger);
+        if stamped > 0 {
+            // the fleet-side TTFT clock; must agree with the scheduler-
+            // side `ttft_us` histogram count (pinned by a tier-1 test)
+            self.obs.counter_add("fleet_first_tokens", stamped);
         }
     }
 
@@ -639,6 +680,7 @@ impl Fleet {
     /// supervision policy to each outcome.
     pub fn tick(&mut self) -> Result<()> {
         self.now += 1;
+        self.obs.set_tick(self.now);
         // breaker cooldowns elapse at the top of the tick
         for sup in &mut self.replicas {
             if let Breaker::Open { until } = sup.breaker {
@@ -693,7 +735,9 @@ impl Fleet {
                 }
             }
             match self.router.route(&mut self.replicas, &p.req) {
-                Ok(_) => {}
+                Ok(r) => {
+                    self.obs.emit(r as u32, p.req.id, EventKind::Dispatch);
+                }
                 Err(RouteError::NoReplicas | RouteError::AllRefused) => {
                     // typed route error → requeue with backoff, never drop
                     self.route_refusals += 1;
@@ -742,9 +786,15 @@ impl Fleet {
                         // drain() scoops the queue too.
                         sup.crashed = true;
                         sup.breaker = Breaker::Open { until: u64::MAX };
+                        let replica = sup.id as u32;
                         let orphans = sup.sched.drain()?;
+                        self.obs.emit(replica, NO_ID, EventKind::Crash);
                         self.failed_over += orphans.len() as u64;
                         for req in orphans {
+                            // the new home is unknown until re-dispatch;
+                            // the next Dispatch span carries the target
+                            let kind = EventKind::Failover { to: NO_REPLICA };
+                            self.obs.emit(replica, req.id, kind);
                             self.pending.push_back(Pending { req, not_before: self.now + 1 });
                         }
                     } else {
@@ -760,7 +810,9 @@ impl Fleet {
                         {
                             sup.breaker =
                                 Breaker::Open { until: self.now + self.cfg.breaker_cooldown };
+                            self.obs.emit(sup.id as u32, NO_ID, EventKind::BreakerOpen);
                         }
+                        let replica = sup.id as u32;
                         let drained = sup.sched.drain()?;
                         for req in drained {
                             let Some(m) = self.meta.get_mut(&req.id) else { continue };
@@ -777,6 +829,8 @@ impl Fleet {
                                 ));
                             } else {
                                 self.retried += 1;
+                                let attempt = m.retries;
+                                self.obs.emit(replica, req.id, EventKind::Retry { attempt });
                                 let backoff =
                                     self.cfg.backoff_base.max(1).saturating_pow(m.retries);
                                 self.pending
@@ -851,6 +905,27 @@ impl Fleet {
         for m in self.meta.values() {
             report.retries_hist[(m.retries as usize).min(buckets - 1)] += 1;
         }
+        // absorb the fleet counters into the shared metrics registry so
+        // exporters see one source of truth (replica-level counters are
+        // published by each scheduler's `into_report`)
+        let fleet_counters = [
+            ("fleet_submitted", report.submitted),
+            ("fleet_served", report.served),
+            ("fleet_failed", report.failed),
+            ("fleet_cancelled_deadline", report.cancelled_deadline),
+            ("fleet_shed", report.shed),
+            ("fleet_retried", report.retried),
+            ("fleet_failed_over", report.failed_over),
+            ("fleet_route_refusals", self.route_refusals),
+            ("fleet_slo_tracked", report.slo_tracked),
+            ("fleet_slo_met", report.slo_met),
+        ];
+        for (name, v) in fleet_counters {
+            if v > 0 {
+                self.obs.counter_add(name, v);
+            }
+        }
+        self.obs.gauge_set("fleet_ticks", report.ticks as f64);
         Ok(report)
     }
 }

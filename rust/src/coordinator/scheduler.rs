@@ -11,6 +11,7 @@
 //! the error path and a supervisor can re-drive or fail over the queue.
 
 use crate::attn::guard::is_nonfinite_err;
+use crate::obs::{EventKind, Obs, NO_REPLICA};
 use crate::util::error::{bail, Result};
 
 use crate::metrics::LatencyStats;
@@ -119,11 +120,27 @@ pub struct Scheduler {
     /// Per-token streaming receiver; shared so one fleet-level ledger
     /// can audit every replica's stream.
     sink: Option<Arc<Mutex<dyn TokenSink>>>,
+    /// Observability handle (disabled = every emit is one dead branch)
+    /// and the replica id stamped on scheduler lifecycle events.
+    obs: Obs,
+    replica: u32,
+    /// Under a fleet, arrival (`Submit`) belongs to the fleet driver —
+    /// the scheduler only sees requests at dispatch time.
+    fleet_managed: bool,
 }
 
 impl Scheduler {
     pub fn new(batcher: Batcher, kv: KvCacheManager, engine: Engine) -> Scheduler {
-        Scheduler { batcher, kv, engine, report: SchedulerReport::default(), sink: None }
+        Scheduler {
+            batcher,
+            kv,
+            engine,
+            report: SchedulerReport::default(),
+            sink: None,
+            obs: Obs::disabled(),
+            replica: NO_REPLICA,
+            fleet_managed: false,
+        }
     }
 
     /// Install a streaming sink: every token the engine samples from
@@ -132,7 +149,25 @@ impl Scheduler {
         self.sink = Some(sink);
     }
 
+    /// Attach an observability handle: lifecycle events stamp `replica`,
+    /// terminal latency samples record into the shared `ttft_us` /
+    /// `queue_us` / `tpot_us` / `e2e_us` histograms (the single TTFT
+    /// clock both the scheduler report and the fleet ledger read), and
+    /// the engine arms its kernel phase profiler. `fleet_managed`
+    /// suppresses `Submit` events — the fleet records arrival when the
+    /// request enters the system, before dispatch.
+    pub fn set_obs(&mut self, obs: Obs, replica: u32, fleet_managed: bool) {
+        self.engine.set_obs(obs.clone(), replica);
+        self.obs = obs;
+        self.replica = replica;
+        self.fleet_managed = fleet_managed;
+    }
+
     pub fn submit(&mut self, req: Request) {
+        if !self.fleet_managed {
+            let kind = EventKind::Submit { prompt_len: req.prompt.len() as u32 };
+            self.obs.emit(self.replica, req.id, kind);
+        }
         self.batcher.push(req);
     }
 
@@ -156,7 +191,10 @@ impl Scheduler {
             let mut iter = admitted.drain(..);
             while let Some(req) = iter.next() {
                 match self.engine.add_request(&req, &mut self.kv) {
-                    Ok(true) => {}
+                    Ok(true) => {
+                        let kind = EventKind::Admit { resumed: req.resume.is_some() };
+                        self.obs.emit(self.replica, req.id, kind);
+                    }
                     Ok(false) => {
                         // the engine bounced an admission the batcher had
                         // already reserved blocks for (full after all, a
@@ -166,6 +204,7 @@ impl Scheduler {
                         // these would leak their blocks forever
                         bounced = true;
                         self.report.requeued += 1;
+                        self.obs.emit(self.replica, req.id, EventKind::Requeue);
                         let rest: Vec<Request> = std::iter::once(req).chain(iter).collect();
                         for r in rest.into_iter().rev() {
                             let _ = self.kv.release(r.id);
@@ -184,6 +223,7 @@ impl Scheduler {
                             let mut retry = req;
                             retry.degraded = true;
                             self.report.degraded_fallbacks += 1;
+                            self.obs.emit(self.replica, retry.id, EventKind::Degrade);
                             bounced = true; // suppress the stall bail
                             self.batcher.push_front(retry);
                         } else {
@@ -253,10 +293,12 @@ impl Scheduler {
         //    numeric-guard evictions flagged for the fp path
         for req in outcome.preempted {
             self.report.preemptions += 1;
+            self.obs.emit(self.replica, req.id, EventKind::Preempt);
             self.batcher.push_front(req);
         }
         for req in outcome.degraded {
             self.report.degraded_fallbacks += 1;
+            self.obs.emit(self.replica, req.id, EventKind::Degrade);
             self.batcher.push_front(req);
         }
         // 4. release finished sequences' logical KV blocks (backends
@@ -275,7 +317,12 @@ impl Scheduler {
 
     /// Record telemetry for one terminal response. Latency stats cover
     /// successful attempts only — failure/cancellation responses carry
-    /// no meaningful latency and would skew the percentiles.
+    /// no meaningful latency and would skew the percentiles. This is
+    /// the *only* place a terminal trace event is emitted and the only
+    /// writer of the shared latency histograms — every other layer
+    /// (fleet ledgers included) funnels terminals through here, which
+    /// is what keeps one request = one terminal span and one TTFT
+    /// sample per served request.
     fn record_response(&mut self, resp: &Response) {
         match resp.finish {
             FinishReason::MaxTokens | FinishReason::StopToken => {
@@ -295,10 +342,27 @@ impl Scheduler {
                     (resp.e2e_ms * 1000.0) as u64,
                 ));
                 self.report.tokens_out += resp.tokens.len() as u64;
+                self.obs.record_us("ttft_us", (resp.ttft_ms * 1000.0) as u64);
+                self.obs.record_us("queue_us", (resp.queue_ms.max(0.0) * 1000.0) as u64);
+                if let Some(tpot) = resp.tpot_ms {
+                    self.obs.record_us("tpot_us", (tpot.max(0.0) * 1000.0) as u64);
+                }
+                self.obs.record_us("e2e_us", (resp.e2e_ms * 1000.0) as u64);
+                let kind = EventKind::Finish { tokens: resp.tokens.len() as u32 };
+                self.obs.emit(self.replica, resp.id, kind);
             }
-            FinishReason::DeadlineExceeded => self.report.cancelled_deadline += 1,
-            FinishReason::Shed => self.report.shed += 1,
-            FinishReason::Failed | FinishReason::Rejected => self.report.failed += 1,
+            FinishReason::DeadlineExceeded => {
+                self.report.cancelled_deadline += 1;
+                self.obs.emit(self.replica, resp.id, EventKind::DeadlineCancel);
+            }
+            FinishReason::Shed => {
+                self.report.shed += 1;
+                self.obs.emit(self.replica, resp.id, EventKind::Shed);
+            }
+            FinishReason::Failed | FinishReason::Rejected => {
+                self.report.failed += 1;
+                self.obs.emit(self.replica, resp.id, EventKind::Fail);
+            }
         }
     }
 
@@ -347,6 +411,38 @@ impl Scheduler {
         }
     }
 
+    /// Mirror the report's counters into the shared metrics registry at
+    /// report time, so the exported surface (Prometheus text, trace
+    /// `otherData.metrics`) carries exactly what the human tables print.
+    /// Counters are monotone and replicas share one registry, so a
+    /// fleet's registry holds the across-replica sums.
+    fn publish_report_metrics(&self) {
+        if !self.obs.is_enabled() {
+            return;
+        }
+        let r = &self.report;
+        for (name, v) in [
+            ("served", r.served()),
+            ("tokens_out", r.tokens_out),
+            ("preemptions", r.preemptions),
+            ("requeued", r.requeued),
+            ("failed", r.failed),
+            ("shed", r.shed),
+            ("cancelled_deadline", r.cancelled_deadline),
+            ("degraded_fallbacks", r.degraded_fallbacks),
+            ("faults_injected", r.injected),
+            ("prefix_lookups", r.prefix_lookups),
+            ("prefix_hits", r.prefix_hits),
+            ("prefill_tokens_saved", r.prefill_tokens_saved),
+            ("cache_evictions", r.cache_evictions),
+            ("cow_copies", r.cow_copies),
+        ] {
+            if v > 0 {
+                self.obs.counter_add(name, v);
+            }
+        }
+    }
+
     /// Drive to completion and return the report.
     pub fn run_to_completion(mut self) -> Result<SchedulerReport> {
         let t0 = std::time::Instant::now();
@@ -355,12 +451,14 @@ impl Scheduler {
         }
         self.report.wall_s = t0.elapsed().as_secs_f64();
         self.absorb_engine_stats();
+        self.publish_report_metrics();
         Ok(self.report)
     }
 
     pub fn into_report(mut self, wall_s: f64) -> SchedulerReport {
         self.report.wall_s = wall_s;
         self.absorb_engine_stats();
+        self.publish_report_metrics();
         std::mem::take(&mut self.report)
     }
 }

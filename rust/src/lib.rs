@@ -27,6 +27,7 @@ pub mod attn;
 pub mod bench;
 pub mod coordinator;
 pub mod metrics;
+pub mod obs;
 pub mod perfmodel;
 pub mod quant;
 pub mod runtime;

@@ -11,6 +11,11 @@
 //!                                 (breakers, retries, crash failover)
 //!   chaos [--faults SPEC] [...]   deterministic chaos soak: same seed →
 //!                                 identical fault schedule and responses
+//!   trace FILE [--check]          analyze a `serve --trace` file: per-request
+//!                                 critical paths + the kernel-phase latency
+//!                                 share table (paper Fig. 2); --check exits
+//!                                 non-zero on orphan spans or unaccounted
+//!                                 requests
 //!   calibrate [--out plan.json]   §4.5 adaptive-quantization calibration
 //!   accuracy [--profile P]        kernel accuracy vs full precision
 //!   speed [--device 4090]         cost-model kernel speed sweep
@@ -43,6 +48,7 @@ use sageattention::coordinator::{
     RoutingPolicy, Scheduler, SchedulerReport, SloTargets, TrafficCfg,
 };
 use sageattention::metrics::{accuracy, attention_ops, LatencyStats};
+use sageattention::obs::{export, Obs, PhaseTimer, DEFAULT_EVENT_CAPACITY};
 use sageattention::perfmodel::{predict_tops, AttnKernel, DeviceSpec, Workpoint};
 use sageattention::quant::Granularity;
 use sageattention::runtime::{ModelCfg, Runtime, Value};
@@ -68,7 +74,7 @@ subcommands:
                  [--workload mixed|shared|chat|rag|bursty|mix:chat=0.6,rag=0.4]
                  [--faults SPEC] [--ttft-deadline T] [--total-deadline T]
                  [--prefill-chunk R] [--tick-rows R] [--slo-ttft T] [--slo-tpot T]
-                 [--open-loop]
+                 [--open-loop] [--trace FILE] [--metrics-out FILE]
                  (--prefix-cache: radix prefix cache + CoW forking, native only;
                   --workload shared: every prompt opens with one system prompt;
                   scenario names / mix:... draw from the traffic-plane scenario
@@ -81,12 +87,19 @@ subcommands:
                   --slo-ttft/--slo-tpot set per-request targets in virtual ticks
                   and enable SLO shedding + goodput-under-SLO reporting;
                   --open-loop replays Poisson arrival times instead of
-                  submitting everything at tick 0)
+                  submitting everything at tick 0. Observability: --trace
+                  writes a Chrome/Perfetto trace of every request's lifecycle
+                  spans + engine work, --metrics-out writes a Prometheus text
+                  snapshot; both arm the sampled kernel phase profiler)
   chaos          [--config C] [--plan P] [--requests N] [--seed S] [--replicas N]
                  [--slots N] [--kv-blocks N] [--route rr|least|power2]
                  [--faults SPEC] [--ttft-deadline T] [--total-deadline T]
                  deterministic chaos soak: runs the faulted fleet twice with the
                  same seed and asserts identical fault schedules and responses
+  trace          FILE [--check]        analyze a `serve --trace` file: per-request
+                 critical paths and the kernel-phase latency share table
+                 (paper Fig. 2); --check exits non-zero on orphan spans,
+                 multiple terminals, or unaccounted requests
   calibrate      [--layers N] [--profile P] [--out FILE] [--seed S]
   accuracy       [--profile P] [--seq N] [--headdim D] [--kernel NAME]
   speed          [--device 4090|3090] [--headdim D] [--causal]
@@ -104,7 +117,7 @@ fn main() {
         println!("{USAGE}");
         return;
     }
-    let (cmd, flags) = match parse(&args) {
+    let (cmd, pos, flags) = match parse(&args) {
         Ok(parsed) => parsed,
         Err(msg) => usage_error(&msg),
     };
@@ -134,6 +147,8 @@ fn main() {
             "slo-ttft",
             "slo-tpot",
             "open-loop",
+            "trace",
+            "metrics-out",
         ],
         "chaos" => &[
             "config",
@@ -148,6 +163,7 @@ fn main() {
             "ttft-deadline",
             "total-deadline",
         ],
+        "trace" => &["file", "check"],
         "calibrate" => &["layers", "profile", "out", "seed"],
         "accuracy" => &["profile", "seq", "headdim", "kernel"],
         "speed" => &["device", "headdim", "causal"],
@@ -172,6 +188,13 @@ fn main() {
         println!("{USAGE}");
         return;
     }
+    // only `trace` takes a positional (the file to analyze)
+    if !pos.is_empty() && cmd != "trace" {
+        usage_error(&format!("unexpected positional argument '{}'", pos[0]));
+    }
+    if pos.len() > 1 {
+        usage_error(&format!("trace takes one file, got '{}' too", pos[1]));
+    }
     let mut keys: Vec<&String> = flags.keys().collect();
     keys.sort(); // deterministic error messages regardless of HashMap order
     for key in keys {
@@ -180,8 +203,9 @@ fn main() {
             usage_error(&format!("unknown flag '--{key}' for subcommand '{cmd}'"));
         }
         // only bare boolean switches may omit a value; `--out --seed 7`
-        // style mistakes are misuse, not a runtime error
-        let boolean = BOOLEAN_FLAGS.contains(&key.as_str());
+        // style mistakes are misuse, not a runtime error (`--check` is a
+        // switch on `trace` but takes a baseline FILE on bench-hotpath)
+        let boolean = BOOLEAN_FLAGS.contains(&key.as_str()) || (cmd == "trace" && key == "check");
         if val.is_empty() && !boolean {
             usage_error(&format!("flag '--{key}' requires a value"));
         }
@@ -195,6 +219,7 @@ fn main() {
         "smoke" => smoke(&flags),
         "serve" => serve(&flags),
         "chaos" => chaos(&flags),
+        "trace" => trace_cmd(&pos, &flags),
         "calibrate" => calibrate(&flags),
         "accuracy" => accuracy_cmd(&flags),
         "speed" => speed(&flags),
@@ -215,12 +240,17 @@ fn usage_error(msg: &str) -> ! {
     std::process::exit(2);
 }
 
-/// Split argv into (subcommand, --key value flags). A `--flag` followed by
-/// another `--flag` (or nothing) is boolean-valued (empty string). Errors
-/// on a missing subcommand, stray positionals, and duplicate flags.
-fn parse(args: &[String]) -> std::result::Result<(String, HashMap<String, String>), String> {
+/// Split argv into (subcommand, positionals, --key value flags). A
+/// `--flag` followed by another `--flag` (or nothing) is boolean-valued
+/// (empty string). Errors on a missing subcommand and duplicate flags;
+/// positionals after the subcommand are collected for the caller to
+/// validate (only `trace` accepts one).
+type Parsed = (String, Vec<String>, HashMap<String, String>);
+
+fn parse(args: &[String]) -> std::result::Result<Parsed, String> {
     let mut flags = HashMap::new();
     let mut cmd: Option<String> = None;
+    let mut positionals = Vec::new();
     let mut i = 0;
     while i < args.len() {
         let arg = &args[i];
@@ -249,11 +279,12 @@ fn parse(args: &[String]) -> std::result::Result<(String, HashMap<String, String
             cmd = Some("help".to_owned());
             i += 1;
         } else {
-            return Err(format!("unexpected positional argument '{arg}'"));
+            positionals.push(arg.clone());
+            i += 1;
         }
     }
     match cmd {
-        Some(c) => Ok((c, flags)),
+        Some(c) => Ok((c, positionals, flags)),
         None => Err("missing subcommand".to_owned()),
     }
 }
@@ -412,6 +443,17 @@ fn serve(flags: &HashMap<String, String>) -> Result<()> {
     // (virtual time: breaker cooldowns / backoff / deadlines replay
     // deterministically from --seed); deadlines are virtual-tick-based
     // and only meaningful there
+    // observability: either export flag arms the shared handle (ring
+    // recorder + metrics registry + sampled kernel phase profiler); with
+    // neither, every emission site stays on its disabled no-op branch
+    let trace_out = flags.get("trace").cloned();
+    let metrics_out = flags.get("metrics-out").cloned();
+    let obs = if trace_out.is_some() || metrics_out.is_some() {
+        Obs::with_capacity(DEFAULT_EVENT_CAPACITY)
+    } else {
+        Obs::disabled()
+    };
+
     let faults = parse_faults_flag(flags);
     let traffic = parse_traffic_flags(flags);
     let deadlines = parse_deadline_flags(flags);
@@ -469,8 +511,10 @@ fn serve(flags: &HashMap<String, String>) -> Result<()> {
             fleet_cfg,
             traffic,
             fleet_mix.as_ref(),
+            obs.clone(),
         )?;
         print_fleet_report(&report, &spec, policy);
+        write_obs_outputs(&obs, trace_out.as_deref(), metrics_out.as_deref())?;
         ensure!(
             report.fully_accounted(),
             "fleet dropped {} request(s) without a terminal response",
@@ -538,6 +582,11 @@ fn serve(flags: &HashMap<String, String>) -> Result<()> {
             EngineReplica::new(id, Scheduler::new(Batcher::new(BatchPolicy::Fifo), kv, engine))
         })
         .collect();
+    for rep in &mut reps {
+        // thread-per-replica: each scheduler owns its own submit/finish
+        // spans (no fleet above it), all funneled into one shared ring
+        rep.sched.set_obs(obs.clone(), rep.id as u32, false);
+    }
 
     // shared workload: half the context window is one system prompt every
     // request opens with; suffix lengths shrink to keep prompt + budget
@@ -634,13 +683,11 @@ fn serve(flags: &HashMap<String, String>) -> Result<()> {
          ({tok_s:.1} tok/s)"
     );
     println!(
-        "TTFT p50/p99: {:.1}/{:.1} ms   TPOT p50/p99: {:.1}/{:.1} ms   \
-         queue delay p50: {:.1} ms",
-        fleet_ttft.percentile(50.0),
-        fleet_ttft.percentile(99.0),
-        fleet_tpot.percentile(50.0),
-        fleet_tpot.percentile(99.0),
-        fleet_queue.percentile(50.0)
+        "TTFT p50/p95/p99: {} ms   TPOT p50/p95/p99: {} ms   \
+         queue delay p50/p95/p99: {} ms",
+        percentile_triple(&fleet_ttft),
+        percentile_triple(&fleet_tpot),
+        percentile_triple(&fleet_queue)
     );
     if total_preempt > 0 || total_requeued > 0 {
         println!(
@@ -658,7 +705,38 @@ fn serve(flags: &HashMap<String, String>) -> Result<()> {
             hit_rate * 100.0
         );
     }
+    write_obs_outputs(&obs, trace_out.as_deref(), metrics_out.as_deref())?;
     ensure!(total_resp == n_req, "fleet served {total_resp} of {n_req} routed requests");
+    Ok(())
+}
+
+/// `p50/p95/p99` rendering for the serve report latency lines.
+fn percentile_triple(s: &LatencyStats) -> String {
+    format!("{:.1}/{:.1}/{:.1}", s.percentile(50.0), s.percentile(95.0), s.percentile(99.0))
+}
+
+/// Write the `--trace` / `--metrics-out` exports from the shared handle.
+fn write_obs_outputs(
+    obs: &Obs,
+    trace_out: Option<&str>,
+    metrics_out: Option<&str>,
+) -> Result<()> {
+    if let Some(path) = trace_out {
+        let doc = export::chrome_trace(&obs.events(), &obs.snapshot());
+        std::fs::write(path, format!("{doc}\n"))
+            .with_context(|| format!("writing trace {path}"))?;
+        let snap = obs.snapshot();
+        println!(
+            "trace: {} events ({} dropped) -> {path} \
+             (load in Perfetto, or `sage trace {path}`)",
+            snap.events_recorded, snap.events_dropped
+        );
+    }
+    if let Some(path) = metrics_out {
+        std::fs::write(path, export::prometheus(&obs.snapshot()))
+            .with_context(|| format!("writing metrics {path}"))?;
+        println!("metrics: Prometheus text exposition -> {path}");
+    }
     Ok(())
 }
 
@@ -767,6 +845,7 @@ fn run_faulted_fleet(
     fleet_cfg: FleetCfg,
     traffic: TrafficCfg,
     mix: Option<&ScenarioMix>,
+    obs: Obs,
 ) -> Result<FleetReport> {
     let cfg = ModelCfg::builtin(config)
         .with_context(|| format!("'{config}' is not a built-in config (tiny|small)"))?;
@@ -780,6 +859,7 @@ fn run_faulted_fleet(
     }
     let sizes = scheds[0].engine.prefill_sizes();
     let mut fleet = Fleet::new(scheds, policy, fleet_cfg);
+    fleet.set_obs(obs);
     // streaming is always on in the fleet path: TTFT is first-streamed-
     // token time and the ledger proves no duplicate/gap across failover
     fleet.enable_streaming();
@@ -867,14 +947,23 @@ fn print_fleet_report(rep: &FleetReport, spec: &FaultSpec, policy: RoutingPolicy
         );
     }
     let mut queue_delay = LatencyStats::default();
+    let (mut ttft, mut tpot) = (LatencyStats::default(), LatencyStats::default());
     for r in &rep.replicas {
         queue_delay.merge(&r.queue_delay);
+        ttft.merge(&r.ttft);
+        tpot.merge(&r.tpot);
+    }
+    if !ttft.is_empty() {
+        println!(
+            "TTFT p50/p95/p99: {} ms   TPOT p50/p95/p99: {} ms",
+            percentile_triple(&ttft),
+            percentile_triple(&tpot)
+        );
     }
     if !queue_delay.is_empty() {
         println!(
-            "queue delay (arrival→admission) p50/p99: {:.1}/{:.1} ms",
-            queue_delay.percentile(50.0),
-            queue_delay.percentile(99.0)
+            "queue delay (arrival→admission) p50/p95/p99: {} ms",
+            percentile_triple(&queue_delay)
         );
     }
     // latency stats (replica-side) cover first-success attempts only;
@@ -968,6 +1057,7 @@ fn chaos(flags: &HashMap<String, String>) -> Result<()> {
             FleetCfg::default(),
             TrafficCfg::default(),
             None,
+            Obs::disabled(),
         )
     };
     let a = run()?;
@@ -1012,6 +1102,81 @@ fn chaos(flags: &HashMap<String, String>) -> Result<()> {
         a.injected,
         a.responses.len()
     );
+    Ok(())
+}
+
+/// `sage trace FILE` — re-read an emitted Chrome trace and print each
+/// request's critical path (submit → admit → first token → terminal)
+/// plus the kernel-phase latency share table, the serving-stack analog
+/// of the paper's Figure 2 "which phase dominates" breakdown. With
+/// `--check`, exit non-zero on any well-formedness problem: orphan
+/// spans, missing or duplicate terminals, accounting mismatches, or
+/// dropped events.
+fn trace_cmd(pos: &[String], flags: &HashMap<String, String>) -> Result<()> {
+    let file = match (pos.first(), flags.get("file")) {
+        (Some(p), _) => p.as_str(),
+        (None, Some(f)) => f.as_str(),
+        (None, None) => usage_error("trace needs a file: `sage trace out.json` (or --file)"),
+    };
+    let text =
+        std::fs::read_to_string(file).with_context(|| format!("reading trace {file}"))?;
+    let doc = Json::parse(&text).with_context(|| format!("parsing {file}"))?;
+    let rep = export::analyze(&doc)?;
+
+    let fmt_opt = |v: Option<f64>| v.map_or("-".to_owned(), |v| format!("{v:.2}"));
+    let mut t = Table::new(&[
+        "req", "prompt", "queue ms", "ttft ms", "total ms", "chunks", "preempt", "retries",
+        "terminal",
+    ]);
+    for r in &rep.requests {
+        t.row(&[
+            r.id.to_string(),
+            r.prompt_len.to_string(),
+            fmt_opt(r.admit_us.map(|a| (a - r.submit_us) / 1e3)),
+            fmt_opt(r.first_token_us.map(|f| (f - r.submit_us) / 1e3)),
+            format!("{:.2}", (r.terminal_us - r.submit_us) / 1e3),
+            r.chunks.to_string(),
+            r.preempts.to_string(),
+            r.retries.to_string(),
+            r.terminal.clone(),
+        ]);
+    }
+    t.print(&format!("per-request critical paths ({file})"));
+
+    let total_ns: u64 = rep.phases.iter().map(|&(_, ns)| ns).sum();
+    if total_ns > 0 {
+        let mut tp = Table::new(&["phase", "ns", "share"]);
+        for (name, ns) in &rep.phases {
+            tp.row(&[name.clone(), ns.to_string(), pct(*ns as f64 / total_ns as f64)]);
+        }
+        tp.print(&format!(
+            "kernel phase latency share ({} sampled planes; cf. paper Fig. 2)",
+            rep.phase_samples
+        ));
+    } else {
+        println!("\nno sampled kernel phases in this trace (engine profiling was off)");
+    }
+
+    println!(
+        "\n{} submitted, {} reached a terminal; {} event(s) dropped",
+        rep.submitted,
+        rep.requests.len(),
+        rep.events_dropped
+    );
+    if !rep.problems.is_empty() {
+        println!("\n{} problem(s):", rep.problems.len());
+        for p in &rep.problems {
+            println!("  - {p}");
+        }
+    }
+    if flags.contains_key("check") {
+        ensure!(
+            rep.problems.is_empty(),
+            "trace check failed: {} problem(s) (listed above)",
+            rep.problems.len()
+        );
+        println!("trace check OK: every submitted request is accounted for");
+    }
     Ok(())
 }
 
@@ -1557,6 +1722,49 @@ fn bench_hotpath(flags: &HashMap<String, String>) -> Result<()> {
         None => println!("\npv-f16 lane: no F16C on this host (fused ratio not gated)"),
     }
 
+    // ---- trace-overhead lane: cost of the sampled kernel-phase timer
+    //      on a decode-shaped plane. The gated number is a *fraction*
+    //      (throughput with the timer armed / with it off), so 1.00 is
+    //      free and the bar is >= 0.97. Rounds are interleaved and the
+    //      max taken: a ~3% bar cannot survive scheduler noise in a
+    //      single paired measurement ----
+    let n_ov = n0.min(1024).max(BLOCK_KV);
+    let kh_ov = &k.head(0, 0)[..n_ov * d];
+    let vh_ov = &v.head(0, 0)[..n_ov * d];
+    let q_ov = &q.head(0, 0)[(n_ov - 1) * d..n_ov * d];
+    let mut ov_scratch = Scratch::new();
+    let mut ov_run = |timer: PhaseTimer, label: &str| -> f64 {
+        ov_scratch.set_phase_timer(timer);
+        bench_budget(label, budget / 8, 10, || {
+            let out = sage_plane_with(
+                &mut ov_scratch,
+                q_ov,
+                kh_ov,
+                vh_ov,
+                1,
+                n_ov,
+                d,
+                gran,
+                PvMode::Fp16Accum,
+                true,
+                false,
+            );
+            std::hint::black_box(out);
+        })
+        .median_s()
+    };
+    let mut overhead_frac = 0.0f64;
+    for round in 0..3 {
+        let t_off = ov_run(PhaseTimer::disabled(), &format!("trace-overhead/off r{round}"));
+        let t_on = ov_run(PhaseTimer::sampled(8), &format!("trace-overhead/on r{round}"));
+        overhead_frac = overhead_frac.max(t_off / t_on);
+    }
+    println!(
+        "\ntrace-overhead: {overhead_frac:.3}x throughput with the sampled phase timer armed \
+         (decode plane, N={n_ov}, every-8th-plane sampling)"
+    );
+    println!("acceptance bar: trace_overhead_frac >= 0.97 (observability must be ~free)");
+
     // ---- tab09 kernel-accuracy lane (persisted alongside the ratio
     //      floors): same setup as benches/tab09_kernel_accuracy.rs ----
     let acc_measured = tab09_accuracy();
@@ -1585,6 +1793,7 @@ fn bench_hotpath(flags: &HashMap<String, String>) -> Result<()> {
         ("prefill_tokens_saved_frac", shared_frac),
         ("goodput_under_faults_frac", goodput_frac),
         ("goodput_under_slo_frac", slo_frac),
+        ("trace_overhead_frac", overhead_frac),
     ];
     if let Some(r) = dot_ratio {
         ratios.push(("dot_i8_simd_over_scalar", r));
@@ -1692,6 +1901,7 @@ fn faulted_serve_lane() -> Result<(f64, FleetReport)> {
             fleet_cfg,
             TrafficCfg::default(),
             None,
+            Obs::disabled(),
         )
     };
     let control = run(&clean)?;
@@ -1739,6 +1949,7 @@ fn slo_serve_lane() -> Result<(f64, FleetReport)> {
         fleet_cfg,
         traffic,
         Some(&mix),
+        Obs::disabled(),
     )?;
     ensure!(
         report.fully_accounted(),
@@ -1894,6 +2105,7 @@ fn update_baseline(
                 ("prefill_tokens_saved_frac", Json::num(0.5)),
                 ("goodput_under_faults_frac", Json::num(0.9)),
                 ("goodput_under_slo_frac", Json::num(0.9)),
+                ("trace_overhead_frac", Json::num(0.97)),
             ])
         });
     let acc_floors = existing

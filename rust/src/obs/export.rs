@@ -1,0 +1,522 @@
+//! `obs::export` — Chrome-trace JSON, Prometheus text, and the trace
+//! checker/analyzer behind `sage trace`.
+//!
+//! The Chrome trace ("Trace Event Format", the object-with-`traceEvents`
+//! flavor Perfetto and `chrome://tracing` both load) lays the run on two
+//! kinds of rows: **pid 0** holds one thread per request id — a complete
+//! `"X"` span from submit to its terminal event with every lifecycle
+//! transition as an instant on the same row — and **pid 1+r** holds
+//! replica `r`'s engine work (prefill chunks and decode steps as `"X"`
+//! spans with real durations). `otherData` carries the accounting
+//! totals, the sampled kernel-phase nanoseconds and a metrics snapshot,
+//! so one file answers both "where did this request's latency go?" and
+//! "which phase dominates a plane?" (the paper's Figure 2 question).
+//!
+//! Everything here round-trips through [`crate::util::json::Json`]:
+//! [`analyze`] re-reads an emitted file and replays the same
+//! well-formedness rules `sage trace --check` enforces — no second
+//! schema to drift.
+
+use std::collections::BTreeMap;
+
+use crate::util::error::{Context, Result};
+use crate::util::json::Json;
+
+use super::trace::{Event, EventKind, NO_ID, NO_REPLICA};
+use super::{Phase, Snapshot};
+
+/// Quantiles every histogram exports, everywhere.
+pub const QUANTILES: [(f64, &str); 3] = [(0.5, "0.5"), (0.95, "0.95"), (0.99, "0.99")];
+
+fn kind_args(ev: &Event) -> Vec<(&'static str, Json)> {
+    let mut args = vec![
+        ("kind", Json::str(ev.kind.name())),
+        ("seq", Json::num(ev.seq as f64)),
+        ("tick", Json::num(ev.tick as f64)),
+    ];
+    if ev.id != NO_ID {
+        args.push(("id", Json::num(ev.id as f64)));
+    }
+    match ev.kind {
+        EventKind::Submit { prompt_len } => args.push(("prompt_len", Json::num(prompt_len as f64))),
+        EventKind::PrefillChunk { rows, .. } | EventKind::Prefill { rows, .. } => {
+            args.push(("rows", Json::num(rows as f64)))
+        }
+        EventKind::DecodeStep { live, tokens, .. } => {
+            args.push(("live", Json::num(live as f64)));
+            args.push(("tokens", Json::num(tokens as f64)));
+        }
+        EventKind::Admit { resumed } => args.push(("resumed", Json::Bool(resumed))),
+        EventKind::Retry { attempt } => args.push(("attempt", Json::num(attempt as f64))),
+        EventKind::Failover { to } => args.push(("to", Json::num(to as f64))),
+        EventKind::Finish { tokens } => args.push(("tokens", Json::num(tokens as f64))),
+        _ => {}
+    }
+    args
+}
+
+fn dur_ns_of(kind: EventKind) -> Option<u64> {
+    match kind {
+        EventKind::PrefillChunk { dur_ns, .. }
+        | EventKind::Prefill { dur_ns, .. }
+        | EventKind::DecodeStep { dur_ns, .. } => Some(dur_ns),
+        _ => None,
+    }
+}
+
+/// Build the Chrome-trace document from a drained event stream plus the
+/// metrics/phase snapshot.
+pub fn chrome_trace(events: &[Event], snap: &Snapshot) -> Json {
+    let mut rows: Vec<Json> = Vec::new();
+    let mut replicas: Vec<u32> = Vec::new();
+
+    // pid 0 = one row per request: synthesized submit→terminal span
+    rows.push(Json::obj(vec![
+        ("ph", Json::str("M")),
+        ("pid", Json::num(0.0)),
+        ("name", Json::str("process_name")),
+        ("args", Json::obj(vec![("name", Json::str("requests"))])),
+    ]));
+    let mut by_id: BTreeMap<u64, Vec<&Event>> = BTreeMap::new();
+    for ev in events {
+        if ev.id != NO_ID {
+            by_id.entry(ev.id).or_default().push(ev);
+        }
+        if ev.replica != NO_REPLICA && !replicas.contains(&ev.replica) {
+            replicas.push(ev.replica);
+        }
+    }
+    for (&id, evs) in &by_id {
+        let submit = evs.iter().find(|e| matches!(e.kind, EventKind::Submit { .. }));
+        let terminal = evs.iter().find(|e| e.kind.is_terminal());
+        let first = submit.map_or(evs[0].nanos, |e| e.nanos);
+        let last = terminal.map_or(evs[evs.len() - 1].nanos, |e| e.nanos);
+        let mut args = vec![("terminal", Json::str(terminal.map_or("open", |e| e.kind.name())))];
+        if let Some(e) = submit {
+            if let EventKind::Submit { prompt_len } = e.kind {
+                args.push(("prompt_len", Json::num(prompt_len as f64)));
+            }
+        }
+        rows.push(Json::obj(vec![
+            ("ph", Json::str("X")),
+            ("name", Json::str(format!("req-{id}"))),
+            ("cat", Json::str("request")),
+            ("pid", Json::num(0.0)),
+            ("tid", Json::num(id as f64)),
+            ("ts", Json::num(first as f64 / 1e3)),
+            ("dur", Json::num(last.saturating_sub(first) as f64 / 1e3)),
+            ("args", Json::obj(args)),
+        ]));
+    }
+
+    replicas.sort_unstable();
+    for &r in &replicas {
+        rows.push(Json::obj(vec![
+            ("ph", Json::str("M")),
+            ("pid", Json::num(r as f64 + 1.0)),
+            ("name", Json::str("process_name")),
+            ("args", Json::obj(vec![("name", Json::str(format!("replica-{r}")))])),
+        ]));
+    }
+
+    for ev in events {
+        let args = Json::obj(kind_args(ev));
+        let row = match dur_ns_of(ev.kind) {
+            // engine work: a real-duration span on the replica's row
+            Some(dur_ns) => {
+                let pid = if ev.replica == NO_REPLICA { 0.0 } else { ev.replica as f64 + 1.0 };
+                Json::obj(vec![
+                    ("ph", Json::str("X")),
+                    ("name", Json::str(ev.kind.name())),
+                    ("cat", Json::str("engine")),
+                    ("pid", Json::num(pid)),
+                    ("tid", Json::num(if ev.id == NO_ID { 0.0 } else { ev.id as f64 })),
+                    ("ts", Json::num(ev.nanos.saturating_sub(dur_ns) as f64 / 1e3)),
+                    ("dur", Json::num(dur_ns as f64 / 1e3)),
+                    ("args", args),
+                ])
+            }
+            // lifecycle transition: an instant on the request's row (or
+            // the replica's row for request-less fleet events)
+            None => {
+                let (pid, tid) = if ev.id == NO_ID {
+                    (if ev.replica == NO_REPLICA { 0.0 } else { ev.replica as f64 + 1.0 }, 0.0)
+                } else {
+                    (0.0, ev.id as f64)
+                };
+                Json::obj(vec![
+                    ("ph", Json::str("i")),
+                    ("name", Json::str(ev.kind.name())),
+                    ("cat", Json::str("lifecycle")),
+                    ("s", Json::str("t")),
+                    ("pid", Json::num(pid)),
+                    ("tid", Json::num(tid)),
+                    ("ts", Json::num(ev.nanos as f64 / 1e3)),
+                    ("args", args),
+                ])
+            }
+        };
+        rows.push(row);
+    }
+
+    let acct = accounting(events);
+    Json::obj(vec![
+        ("traceEvents", Json::Arr(rows)),
+        (
+            "otherData",
+            Json::obj(vec![
+                ("schema", Json::num(1.0)),
+                ("accounting", acct),
+                (
+                    "events",
+                    Json::obj(vec![
+                        ("recorded", Json::num(snap.events_recorded as f64)),
+                        ("dropped", Json::num(snap.events_dropped as f64)),
+                    ]),
+                ),
+                ("phases", phases_json(snap)),
+                ("metrics", metrics_json(snap)),
+            ]),
+        ),
+    ])
+}
+
+fn accounting(events: &[Event]) -> Json {
+    let (mut submitted, mut finished, mut shed, mut failed, mut cancelled) = (0u64, 0, 0, 0, 0);
+    for ev in events {
+        match ev.kind {
+            EventKind::Submit { .. } => submitted += 1,
+            EventKind::Finish { .. } => finished += 1,
+            EventKind::Shed => shed += 1,
+            EventKind::Fail => failed += 1,
+            EventKind::DeadlineCancel => cancelled += 1,
+            _ => {}
+        }
+    }
+    Json::obj(vec![
+        ("submitted", Json::num(submitted as f64)),
+        ("finished", Json::num(finished as f64)),
+        ("shed", Json::num(shed as f64)),
+        ("failed", Json::num(failed as f64)),
+        ("cancelled", Json::num(cancelled as f64)),
+    ])
+}
+
+fn phases_json(snap: &Snapshot) -> Json {
+    let mut pairs: Vec<(&str, Json)> = Phase::ALL
+        .iter()
+        .map(|&p| (p.name(), Json::num(snap.phase_ns[p as usize] as f64)))
+        .collect();
+    pairs.push(("sampled_planes", Json::num(snap.phase_samples as f64)));
+    Json::obj(pairs)
+}
+
+fn metrics_json(snap: &Snapshot) -> Json {
+    let reg = &snap.registry;
+    let counters = Json::obj(reg.counters().map(|(k, v)| (k, Json::num(v as f64))).collect());
+    let gauges = Json::obj(reg.gauges().map(|(k, v)| (k, Json::num(v))).collect());
+    let histos = Json::obj(
+        reg.histos()
+            .map(|(k, h)| {
+                let mut fields = vec![
+                    ("count", Json::num(h.count() as f64)),
+                    ("sum", Json::num(h.sum() as f64)),
+                    ("max", Json::num(h.max() as f64)),
+                ];
+                for &(q, label) in &QUANTILES {
+                    fields.push((label, Json::num(h.quantile(q) as f64)));
+                }
+                (k, Json::obj(fields))
+            })
+            .collect(),
+    );
+    Json::obj(vec![("counters", counters), ("gauges", gauges), ("histograms", histos)])
+}
+
+/// Prometheus text exposition of a snapshot (counters, gauges,
+/// histograms as summaries, kernel phases as a labeled counter family).
+pub fn prometheus(snap: &Snapshot) -> String {
+    fn sanitize(name: &str) -> String {
+        name.chars().map(|c| if c.is_ascii_alphanumeric() || c == ':' { c } else { '_' }).collect()
+    }
+    let mut out = String::new();
+    let reg = &snap.registry;
+    for (name, v) in reg.counters() {
+        let n = sanitize(name);
+        out.push_str(&format!("# TYPE sage_{n} counter\nsage_{n} {v}\n"));
+    }
+    for (name, v) in reg.gauges() {
+        let n = sanitize(name);
+        out.push_str(&format!("# TYPE sage_{n} gauge\nsage_{n} {v}\n"));
+    }
+    for (name, h) in reg.histos() {
+        let n = sanitize(name);
+        out.push_str(&format!("# TYPE sage_{n} summary\n"));
+        for &(q, label) in &QUANTILES {
+            out.push_str(&format!("sage_{n}{{quantile=\"{label}\"}} {}\n", h.quantile(q)));
+        }
+        out.push_str(&format!("sage_{n}_sum {}\nsage_{n}_count {}\n", h.sum(), h.count()));
+    }
+    if snap.phase_samples > 0 {
+        out.push_str("# TYPE sage_kernel_phase_ns counter\n");
+        for &p in &Phase::ALL {
+            out.push_str(&format!(
+                "sage_kernel_phase_ns{{phase=\"{}\"}} {}\n",
+                p.name(),
+                snap.phase_ns[p as usize]
+            ));
+        }
+        out.push_str("# TYPE sage_kernel_sampled_planes counter\n");
+        out.push_str(&format!("sage_kernel_sampled_planes {}\n", snap.phase_samples));
+    }
+    out
+}
+
+/// Per-request critical path reconstructed from a trace file.
+#[derive(Debug, Clone)]
+pub struct ReqPath {
+    pub id: u64,
+    pub prompt_len: u64,
+    pub submit_us: f64,
+    pub admit_us: Option<f64>,
+    pub first_token_us: Option<f64>,
+    pub terminal_us: f64,
+    pub terminal: String,
+    pub chunks: u64,
+    pub chunk_rows: u64,
+    pub preempts: u64,
+    pub retries: u64,
+}
+
+/// What [`analyze`] extracts from an emitted trace file.
+#[derive(Debug, Clone)]
+pub struct TraceReport {
+    pub requests: Vec<ReqPath>,
+    /// (phase name, sampled nanoseconds), kernel phases in slot order.
+    pub phases: Vec<(String, u64)>,
+    pub phase_samples: u64,
+    pub submitted: u64,
+    pub events_dropped: u64,
+    /// Well-formedness violations; empty == the trace passes `--check`.
+    pub problems: Vec<String>,
+}
+
+/// Parse + validate an emitted Chrome trace: every request id must open
+/// with `submit` and close with exactly one terminal event, the
+/// `otherData` accounting must equal what the events imply, and no
+/// events may have been dropped. Structural schema violations are hard
+/// errors; per-request violations are collected in
+/// [`TraceReport::problems`] so `--check` can list all of them.
+pub fn analyze(doc: &Json) -> Result<TraceReport> {
+    let events = doc
+        .get("traceEvents")
+        .and_then(Json::as_arr)
+        .context("trace file has no traceEvents array")?;
+    let other = doc.get("otherData").context("trace file has no otherData")?;
+
+    struct Acc {
+        prompt_len: u64,
+        submit: Option<f64>,
+        admit: Option<f64>,
+        first_token: Option<f64>,
+        terminals: Vec<(String, f64)>,
+        last_us: f64,
+        chunks: u64,
+        chunk_rows: u64,
+        preempts: u64,
+        retries: u64,
+    }
+    let mut by_id: BTreeMap<u64, Acc> = BTreeMap::new();
+    for row in events {
+        let Some(args) = row.get("args") else { continue };
+        let Some(kind) = args.get("kind").and_then(Json::as_str) else { continue };
+        let Some(id) = args.get("id").and_then(Json::as_f64) else { continue };
+        let ts = row.get("ts").and_then(Json::as_f64).context("event missing ts")?;
+        let a = by_id.entry(id as u64).or_insert(Acc {
+            prompt_len: 0,
+            submit: None,
+            admit: None,
+            first_token: None,
+            terminals: Vec::new(),
+            last_us: ts,
+            chunks: 0,
+            chunk_rows: 0,
+            preempts: 0,
+            retries: 0,
+        });
+        a.last_us = a.last_us.max(ts);
+        match kind {
+            "submit" => {
+                a.submit = Some(ts);
+                a.prompt_len = args.get("prompt_len").and_then(Json::as_f64).unwrap_or(0.0) as u64;
+            }
+            "admit" if a.admit.is_none() => a.admit = Some(ts),
+            "first_token" if a.first_token.is_none() => a.first_token = Some(ts),
+            "prefill_chunk" => {
+                a.chunks += 1;
+                a.chunk_rows += args.get("rows").and_then(Json::as_f64).unwrap_or(0.0) as u64;
+            }
+            "preempt" => a.preempts += 1,
+            "retry" => a.retries += 1,
+            "finish" | "shed" | "fail" | "deadline_cancel" => {
+                a.terminals.push((kind.to_string(), ts));
+            }
+            _ => {}
+        }
+    }
+
+    let mut problems = Vec::new();
+    let mut requests = Vec::new();
+    let (mut n_finished, mut n_shed, mut n_failed, mut n_cancelled) = (0u64, 0u64, 0u64, 0u64);
+    for (&id, a) in &by_id {
+        let Some(submit_us) = a.submit else {
+            problems.push(format!("orphan spans: request {id} has events but no submit"));
+            continue;
+        };
+        match a.terminals.len() {
+            0 => {
+                problems.push(format!("unaccounted request: {id} submitted but never terminated"));
+                continue;
+            }
+            1 => {}
+            n => problems.push(format!("request {id} has {n} terminal events")),
+        }
+        let (terminal, terminal_us) = a.terminals[0].clone();
+        if terminal_us < submit_us {
+            problems.push(format!("request {id} terminates before it is submitted"));
+        }
+        match terminal.as_str() {
+            "finish" => n_finished += 1,
+            "shed" => n_shed += 1,
+            "fail" => n_failed += 1,
+            _ => n_cancelled += 1,
+        }
+        requests.push(ReqPath {
+            id,
+            prompt_len: a.prompt_len,
+            submit_us,
+            admit_us: a.admit,
+            first_token_us: a.first_token,
+            terminal_us,
+            terminal,
+            chunks: a.chunks,
+            chunk_rows: a.chunk_rows,
+            preempts: a.preempts,
+            retries: a.retries,
+        });
+    }
+
+    let acct = other.get("accounting").context("otherData missing accounting")?;
+    let get = |k: &str| -> Result<u64> {
+        let v = acct.get(k).and_then(Json::as_f64);
+        Ok(v.with_context(|| format!("accounting missing {k}"))? as u64)
+    };
+    let submitted = get("submitted")?;
+    for (key, computed) in [
+        ("finished", n_finished),
+        ("shed", n_shed),
+        ("failed", n_failed),
+        ("cancelled", n_cancelled),
+    ] {
+        let recorded = get(key)?;
+        if recorded != computed {
+            problems.push(format!("accounting.{key} = {recorded} but the events show {computed}"));
+        }
+    }
+    if submitted != by_id.values().filter(|a| a.submit.is_some()).count() as u64 {
+        problems.push(format!(
+            "accounting.submitted = {submitted} but {} submit events present",
+            by_id.values().filter(|a| a.submit.is_some()).count()
+        ));
+    }
+    let terminal_total = n_finished + n_shed + n_failed + n_cancelled;
+    if terminal_total != submitted {
+        problems.push(format!(
+            "unaccounted requests: {submitted} submitted, only {terminal_total} reached a terminal"
+        ));
+    }
+
+    let events_dropped = other
+        .path("events.dropped")
+        .and_then(Json::as_f64)
+        .context("otherData missing events.dropped")? as u64;
+    if events_dropped > 0 {
+        problems.push(format!("{events_dropped} events dropped (ring too small for this run)"));
+    }
+
+    let phases_obj = other.get("phases").context("otherData missing phases")?;
+    let mut phases = Vec::new();
+    for &p in &Phase::ALL {
+        let ns = phases_obj.get(p.name()).and_then(Json::as_f64).unwrap_or(0.0) as u64;
+        phases.push((p.name().to_string(), ns));
+    }
+    let phase_samples =
+        phases_obj.get("sampled_planes").and_then(Json::as_f64).unwrap_or(0.0) as u64;
+
+    Ok(TraceReport { requests, phases, phase_samples, submitted, events_dropped, problems })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::Obs;
+
+    fn seeded_obs() -> Obs {
+        let obs = Obs::enabled();
+        obs.emit(0, 1, EventKind::Submit { prompt_len: 8 });
+        obs.emit(0, 1, EventKind::Admit { resumed: false });
+        obs.emit(0, 1, EventKind::PrefillChunk { rows: 8, dur_ns: 1000 });
+        obs.emit(0, 1, EventKind::FirstToken);
+        obs.emit(0, NO_ID, EventKind::DecodeStep { live: 1, tokens: 1, dur_ns: 500 });
+        obs.emit(0, 1, EventKind::Finish { tokens: 4 });
+        obs.emit(0, 2, EventKind::Submit { prompt_len: 4 });
+        obs.emit(0, 2, EventKind::Shed);
+        obs
+    }
+
+    #[test]
+    fn round_trip_is_well_formed() {
+        let obs = seeded_obs();
+        let doc = chrome_trace(&obs.events(), &obs.snapshot());
+        let text = format!("{doc}");
+        let parsed = Json::parse(&text).expect("emitted trace parses");
+        let rep = analyze(&parsed).expect("schema-valid");
+        assert!(rep.problems.is_empty(), "problems: {:?}", rep.problems);
+        assert_eq!(rep.submitted, 2);
+        assert_eq!(rep.requests.len(), 2);
+        let r1 = rep.requests.iter().find(|r| r.id == 1).unwrap();
+        assert_eq!(r1.terminal, "finish");
+        assert_eq!(r1.chunks, 1);
+        assert_eq!(r1.chunk_rows, 8);
+        assert!(r1.first_token_us.is_some());
+    }
+
+    #[test]
+    fn missing_terminal_is_flagged() {
+        let obs = Obs::enabled();
+        obs.emit(0, 9, EventKind::Submit { prompt_len: 4 });
+        let doc = chrome_trace(&obs.events(), &obs.snapshot());
+        let rep = analyze(&doc).expect("structurally valid");
+        assert!(rep.problems.iter().any(|p| p.contains("never terminated")));
+    }
+
+    #[test]
+    fn orphan_span_is_flagged() {
+        let obs = Obs::enabled();
+        obs.emit(0, 5, EventKind::FirstToken);
+        let doc = chrome_trace(&obs.events(), &obs.snapshot());
+        let rep = analyze(&doc).expect("structurally valid");
+        assert!(rep.problems.iter().any(|p| p.contains("orphan")));
+    }
+
+    #[test]
+    fn prometheus_exposition_has_series() {
+        let obs = seeded_obs();
+        obs.counter_add("served", 1);
+        obs.record_us("ttft_us", 1234);
+        let text = prometheus(&obs.snapshot());
+        assert!(text.contains("# TYPE sage_served counter"));
+        assert!(text.contains("sage_ttft_us{quantile=\"0.5\"}"));
+        assert!(text.contains("sage_ttft_us_count 1"));
+    }
+}

@@ -1,0 +1,270 @@
+//! `obs::metrics` — counters, gauges and log-bucketed histograms.
+//!
+//! The registry absorbs the numbers that used to live only as hand-
+//! rolled fields on `SchedulerReport` / `FleetReport` / `FaultStats`:
+//! every report counter is mirrored here at report time, so one
+//! queryable, exportable surface (Prometheus text, trace `otherData`)
+//! carries everything the human tables print. Latency distributions are
+//! first-class: [`Histo`] is a log-linear bucketed histogram (8
+//! sub-buckets per power-of-two octave, fixed 496-slot array) with
+//! interpolated p50/p95/p99 and exact count/sum/max — recording is a
+//! shift, a mask and an array increment, never an allocation.
+
+use std::collections::BTreeMap;
+
+const SUB_BITS: u32 = 3;
+const SUB: u64 = 1 << SUB_BITS; // 8 sub-buckets per octave
+const N_BUCKETS: usize = ((64 - SUB_BITS as u64) + 1) as usize * SUB as usize;
+
+/// Log-linear bucketed histogram over `u64` values (microseconds by
+/// convention for latency series). Relative bucket error ≤ 1/8.
+#[derive(Clone, Debug)]
+pub struct Histo {
+    buckets: Vec<u64>, // N_BUCKETS slots, allocated once at creation
+    count: u64,
+    sum: u64,
+    max: u64,
+    min: u64,
+}
+
+fn bucket_of(v: u64) -> usize {
+    if v < SUB {
+        return v as usize;
+    }
+    let o = 63 - v.leading_zeros() as u64; // floor log2, >= SUB_BITS
+    let sub = (v >> (o - SUB_BITS as u64)) & (SUB - 1);
+    ((o - SUB_BITS as u64 + 1) * SUB + sub) as usize
+}
+
+fn bucket_low(i: usize) -> u64 {
+    let (g, sub) = (i as u64 / SUB, i as u64 % SUB);
+    if g == 0 {
+        sub
+    } else {
+        (SUB + sub) << (g - 1)
+    }
+}
+
+fn bucket_width(i: usize) -> u64 {
+    let g = i as u64 / SUB;
+    if g == 0 {
+        1
+    } else {
+        1 << (g - 1)
+    }
+}
+
+impl Default for Histo {
+    fn default() -> Self {
+        Histo::new()
+    }
+}
+
+impl Histo {
+    pub fn new() -> Histo {
+        Histo { buckets: vec![0; N_BUCKETS], count: 0, sum: 0, max: 0, min: u64::MAX }
+    }
+
+    pub fn record(&mut self, v: u64) {
+        self.buckets[bucket_of(v)] += 1;
+        self.count += 1;
+        self.sum = self.sum.saturating_add(v);
+        self.max = self.max.max(v);
+        self.min = self.min.min(v);
+    }
+
+    pub fn merge(&mut self, other: &Histo) {
+        for (a, b) in self.buckets.iter_mut().zip(other.buckets.iter()) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum = self.sum.saturating_add(other.sum);
+        self.max = self.max.max(other.max);
+        self.min = self.min.min(other.min);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn sum(&self) -> u64 {
+        self.sum
+    }
+
+    pub fn max(&self) -> u64 {
+        if self.count == 0 {
+            0
+        } else {
+            self.max
+        }
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+
+    /// Interpolated quantile (`q` in [0,1]): walk buckets to the one
+    /// holding the q-th sample, interpolate linearly inside it, clamp to
+    /// the exact observed max. Empty histogram → 0.
+    pub fn quantile(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let rank = (q.clamp(0.0, 1.0) * self.count as f64).ceil().max(1.0) as u64;
+        let mut seen = 0u64;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            if seen + c >= rank {
+                let frac = (rank - seen) as f64 / c as f64;
+                let est = bucket_low(i) as f64 + bucket_width(i) as f64 * frac;
+                return (est as u64).min(self.max).max(self.min);
+            }
+            seen += c;
+        }
+        self.max
+    }
+}
+
+/// Named metrics: monotone counters, last-write gauges, histograms.
+/// `BTreeMap` keys give deterministic export order.
+#[derive(Clone, Debug, Default)]
+pub struct Registry {
+    counters: BTreeMap<String, u64>,
+    gauges: BTreeMap<String, f64>,
+    histos: BTreeMap<String, Histo>,
+}
+
+impl Registry {
+    pub fn counter_add(&mut self, name: &str, n: u64) {
+        match self.counters.get_mut(name) {
+            Some(c) => *c += n,
+            None => {
+                self.counters.insert(name.to_string(), n);
+            }
+        }
+    }
+
+    pub fn gauge_set(&mut self, name: &str, v: f64) {
+        match self.gauges.get_mut(name) {
+            Some(g) => *g = v,
+            None => {
+                self.gauges.insert(name.to_string(), v);
+            }
+        }
+    }
+
+    /// Record one value (µs by convention) into the named histogram.
+    pub fn record(&mut self, name: &str, v: u64) {
+        match self.histos.get_mut(name) {
+            Some(h) => h.record(v),
+            None => {
+                let mut h = Histo::new();
+                h.record(v);
+                self.histos.insert(name.to_string(), h);
+            }
+        }
+    }
+
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.get(name).copied().unwrap_or(0)
+    }
+
+    pub fn gauge(&self, name: &str) -> Option<f64> {
+        self.gauges.get(name).copied()
+    }
+
+    pub fn histo(&self, name: &str) -> Option<&Histo> {
+        self.histos.get(name)
+    }
+
+    pub fn counters(&self) -> impl Iterator<Item = (&str, u64)> {
+        self.counters.iter().map(|(k, &v)| (k.as_str(), v))
+    }
+
+    pub fn gauges(&self) -> impl Iterator<Item = (&str, f64)> {
+        self.gauges.iter().map(|(k, &v)| (k.as_str(), v))
+    }
+
+    pub fn histos(&self) -> impl Iterator<Item = (&str, &Histo)> {
+        self.histos.iter().map(|(k, v)| (k.as_str(), v))
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.counters.is_empty() && self.gauges.is_empty() && self.histos.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn buckets_are_contiguous_and_monotone() {
+        let mut prev = 0usize;
+        for v in 0u64..4096 {
+            let b = bucket_of(v);
+            assert!(b == prev || b == prev + 1, "gap at v={v}: {prev} -> {b}");
+            assert!(bucket_low(b) <= v, "low({b}) > {v}");
+            assert!(v < bucket_low(b) + bucket_width(b), "v={v} past bucket {b}");
+            prev = b;
+        }
+        assert!(bucket_of(u64::MAX) < N_BUCKETS);
+    }
+
+    #[test]
+    fn small_values_are_exact() {
+        for v in 0u64..16 {
+            assert_eq!(bucket_low(bucket_of(v)), v);
+        }
+    }
+
+    #[test]
+    fn quantiles_bracket_uniform_data() {
+        let mut h = Histo::new();
+        for v in 1..=1000u64 {
+            h.record(v);
+        }
+        let p50 = h.quantile(0.5);
+        let p99 = h.quantile(0.99);
+        assert!((400..=625).contains(&p50), "p50 {p50}");
+        assert!((900..=1000).contains(&p99), "p99 {p99}");
+        assert_eq!(h.max(), 1000);
+        assert_eq!(h.count(), 1000);
+    }
+
+    #[test]
+    fn merge_matches_combined_recording() {
+        let mut a = Histo::new();
+        let mut b = Histo::new();
+        let mut both = Histo::new();
+        for v in 0..100u64 {
+            a.record(v * 3);
+            both.record(v * 3);
+            b.record(v * 7 + 1);
+            both.record(v * 7 + 1);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), both.count());
+        assert_eq!(a.sum(), both.sum());
+        assert_eq!(a.max(), both.max());
+        assert_eq!(a.quantile(0.5), both.quantile(0.5));
+    }
+
+    #[test]
+    fn registry_round_trip() {
+        let mut r = Registry::default();
+        r.counter_add("served", 3);
+        r.counter_add("served", 2);
+        r.gauge_set("occupancy", 0.5);
+        r.record("ttft_us", 1200);
+        assert_eq!(r.counter("served"), 5);
+        assert_eq!(r.gauge("occupancy"), Some(0.5));
+        assert_eq!(r.histo("ttft_us").unwrap().count(), 1);
+    }
+}

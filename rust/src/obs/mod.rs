@@ -1,0 +1,254 @@
+//! `obs` — runtime-gated tracing, metrics and kernel profiling.
+//!
+//! One cheap handle, [`Obs`], threads through every layer of the stack:
+//! the fleet driver, the scheduler, the engine backends and (via the
+//! [`PhaseTimer`] riding in each kernel `Scratch`) the attention hot
+//! path. A **disabled** handle is `Option::None` — every emit site is a
+//! single branch, no clock read, no lock, no allocation — so the
+//! serving and kernel paths carry instrumentation at no measurable cost
+//! (the `trace_overhead_frac` bench-hotpath lane gates this at ≥ 0.97).
+//!
+//! An **enabled** handle shares one preallocated event ring
+//! ([`trace::Ring`]), one metrics [`Registry`], and fixed-slot atomic
+//! phase accumulators behind an `Arc`. Recording an event takes an
+//! uncontended mutex (the virtual-time fleet driver is single-threaded;
+//! the thread-per-replica serve loop emits a handful of events per tick,
+//! orders of magnitude below kernel work); kernel phase timing never
+//! touches the ring — it accumulates in the thread-confined `Scratch`
+//! timer and is flushed into the shared atomics once per engine step.
+//!
+//! Deliberately **not** a global: tests run concurrently in one process,
+//! and a process-global recorder would cross-pollute their event
+//! streams. Every run that wants observability builds its own handle
+//! and passes clones down.
+
+pub mod export;
+pub mod metrics;
+pub mod phase;
+pub mod trace;
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::time::{Duration, Instant};
+
+pub use metrics::{Histo, Registry};
+pub use phase::{Phase, PhaseTimer, PHASE_COUNT};
+pub use trace::{Event, EventKind, DEFAULT_EVENT_CAPACITY, NO_ID, NO_REPLICA};
+
+struct Inner {
+    ring: trace::Ring,
+    reg: Registry,
+}
+
+struct Shared {
+    start: Instant,
+    tick: AtomicU64,
+    phase_ns: [AtomicU64; PHASE_COUNT],
+    phase_samples: AtomicU64,
+    inner: Mutex<Inner>,
+}
+
+/// Handle to one observability domain (or to nothing). Clone freely;
+/// clones share the same ring/registry/accumulators.
+#[derive(Clone, Default)]
+pub struct Obs(Option<Arc<Shared>>);
+
+/// Point-in-time copy of everything the registry and phase accumulators
+/// hold — what the exporters consume.
+#[derive(Clone)]
+pub struct Snapshot {
+    pub registry: Registry,
+    pub phase_ns: [u64; PHASE_COUNT],
+    pub phase_samples: u64,
+    pub events_recorded: u64,
+    pub events_dropped: u64,
+}
+
+impl Snapshot {
+    /// Total sampled kernel nanoseconds across phases.
+    pub fn phase_total_ns(&self) -> u64 {
+        self.phase_ns.iter().sum()
+    }
+}
+
+impl Obs {
+    /// The no-op handle: every emit site reduces to one branch.
+    pub fn disabled() -> Obs {
+        Obs(None)
+    }
+
+    /// An enabled recorder with the default event capacity.
+    pub fn enabled() -> Obs {
+        Obs::with_capacity(DEFAULT_EVENT_CAPACITY)
+    }
+
+    /// An enabled recorder holding at most `cap` events.
+    pub fn with_capacity(cap: usize) -> Obs {
+        Obs(Some(Arc::new(Shared {
+            start: Instant::now(),
+            tick: AtomicU64::new(0),
+            phase_ns: Default::default(),
+            phase_samples: AtomicU64::new(0),
+            inner: Mutex::new(Inner {
+                ring: trace::Ring::with_capacity(cap),
+                reg: Registry::default(),
+            }),
+        })))
+    }
+
+    #[inline]
+    pub fn is_enabled(&self) -> bool {
+        self.0.is_some()
+    }
+
+    fn lock(sh: &Shared) -> MutexGuard<'_, Inner> {
+        // a panicking holder must not silence every later export
+        sh.inner.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Advance the shared virtual clock stamped onto events (the fleet
+    /// driver's tick; advisory outside virtual-time runs).
+    #[inline]
+    pub fn set_tick(&self, tick: u64) {
+        if let Some(sh) = &self.0 {
+            sh.tick.store(tick, Ordering::Relaxed);
+        }
+    }
+
+    pub fn tick(&self) -> u64 {
+        self.0.as_ref().map_or(0, |sh| sh.tick.load(Ordering::Relaxed))
+    }
+
+    /// Record one lifecycle event (no-op when disabled).
+    #[inline]
+    pub fn emit(&self, replica: u32, id: u64, kind: EventKind) {
+        let Some(sh) = &self.0 else { return };
+        let ev = Event {
+            seq: 0, // assigned by the ring
+            tick: sh.tick.load(Ordering::Relaxed),
+            nanos: sh.start.elapsed().as_nanos() as u64,
+            replica,
+            id,
+            kind,
+        };
+        Self::lock(sh).ring.push(ev);
+    }
+
+    #[inline]
+    pub fn counter_add(&self, name: &str, n: u64) {
+        if let Some(sh) = &self.0 {
+            Self::lock(sh).reg.counter_add(name, n);
+        }
+    }
+
+    #[inline]
+    pub fn gauge_set(&self, name: &str, v: f64) {
+        if let Some(sh) = &self.0 {
+            Self::lock(sh).reg.gauge_set(name, v);
+        }
+    }
+
+    /// Record `v` µs into the named histogram (no-op when disabled).
+    #[inline]
+    pub fn record_us(&self, name: &str, us: u64) {
+        if let Some(sh) = &self.0 {
+            Self::lock(sh).reg.record(name, us);
+        }
+    }
+
+    #[inline]
+    pub fn record_duration(&self, name: &str, d: Duration) {
+        self.record_us(name, d.as_micros() as u64);
+    }
+
+    /// Fold a drained [`PhaseTimer`] into the shared accumulators
+    /// (atomic adds — safe from any engine thread).
+    pub fn add_phase(&self, ns: &[u64; PHASE_COUNT], samples: u64) {
+        let Some(sh) = &self.0 else { return };
+        for (slot, &v) in sh.phase_ns.iter().zip(ns.iter()) {
+            if v > 0 {
+                slot.fetch_add(v, Ordering::Relaxed);
+            }
+        }
+        if samples > 0 {
+            sh.phase_samples.fetch_add(samples, Ordering::Relaxed);
+        }
+    }
+
+    /// All recorded events, in emission (seq) order.
+    pub fn events(&self) -> Vec<Event> {
+        self.0.as_ref().map_or_else(Vec::new, |sh| Self::lock(sh).ring.events().to_vec())
+    }
+
+    /// Copy out the registry + phase accumulators.
+    pub fn snapshot(&self) -> Snapshot {
+        match &self.0 {
+            None => Snapshot {
+                registry: Registry::default(),
+                phase_ns: [0; PHASE_COUNT],
+                phase_samples: 0,
+                events_recorded: 0,
+                events_dropped: 0,
+            },
+            Some(sh) => {
+                let g = Self::lock(sh);
+                let mut phase_ns = [0u64; PHASE_COUNT];
+                for (o, s) in phase_ns.iter_mut().zip(sh.phase_ns.iter()) {
+                    *o = s.load(Ordering::Relaxed);
+                }
+                Snapshot {
+                    registry: g.reg.clone(),
+                    phase_ns,
+                    phase_samples: sh.phase_samples.load(Ordering::Relaxed),
+                    events_recorded: g.ring.recorded(),
+                    events_dropped: g.ring.dropped(),
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_records_nothing() {
+        let obs = Obs::disabled();
+        obs.emit(0, 1, EventKind::Shed);
+        obs.counter_add("x", 1);
+        obs.record_us("h", 5);
+        obs.add_phase(&[1; PHASE_COUNT], 1);
+        assert!(!obs.is_enabled());
+        assert!(obs.events().is_empty());
+        let s = obs.snapshot();
+        assert!(s.registry.is_empty());
+        assert_eq!(s.phase_total_ns(), 0);
+    }
+
+    #[test]
+    fn clones_share_state() {
+        let obs = Obs::enabled();
+        let other = obs.clone();
+        obs.set_tick(7);
+        other.emit(2, 42, EventKind::FirstToken);
+        other.counter_add("served", 1);
+        let evs = obs.events();
+        assert_eq!(evs.len(), 1);
+        assert_eq!(evs[0].tick, 7);
+        assert_eq!(evs[0].id, 42);
+        assert_eq!(obs.snapshot().registry.counter("served"), 1);
+    }
+
+    #[test]
+    fn phase_flush_accumulates() {
+        let obs = Obs::enabled();
+        let mut ns = [0u64; PHASE_COUNT];
+        ns[Phase::QkTile as usize] = 100;
+        obs.add_phase(&ns, 2);
+        obs.add_phase(&ns, 1);
+        let s = obs.snapshot();
+        assert_eq!(s.phase_ns[Phase::QkTile as usize], 200);
+        assert_eq!(s.phase_samples, 3);
+    }
+}

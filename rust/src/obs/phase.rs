@@ -1,0 +1,201 @@
+//! `obs::phase` — sampled per-phase timing of the attention hot path.
+//!
+//! The paper's opening claim (PAPER.md §1, Figure 2) is a latency-share
+//! argument: attention dominates end-to-end time at long sequence, so an
+//! 8-bit attention kernel moves the whole pipeline. Crediting that claim
+//! — and the per-kernel wins stacked on top of it — needs the same
+//! breakdown *inside* the kernel: how much of a plane call goes to
+//!
+//! * [`Phase::Quant`] — smoothing K and per-block INT8 quantization of
+//!   Q/K (paper §3.2, the ΔS=7° trick that keeps 8-bit QK accurate),
+//! * [`Phase::QkTile`] — the `mma(s8.s8.s32)` score tiles (§4.2–4.3),
+//! * [`Phase::Softmax`] — the per-row online-softmax rescale,
+//! * [`Phase::Pv`] — the P̃·V accumulation in the selected
+//!   [`PvMode`](crate::attn::PvMode) numerics (INT8 §4.3, fused
+//!   FP16-accumulator §4.4),
+//! * [`Phase::F16Round`] — the explicit fp16 round-trip of V at plane
+//!   entry (the mma(f16.f16.f32) operand precision of §4.4; the rounds
+//!   folded *inside* the fused P·V lanes bill to [`Phase::Pv`]).
+//!
+//! The timer is **sampled, not per-element**: it rides in
+//! [`Scratch`](crate::attn::Scratch) and times every `every`-th plane
+//! call end to end, so the zero-allocation and bit-identity guarantees
+//! of the kernels are untouched (timing reads a clock; it never changes
+//! what the kernel computes) and the disabled path is a single branch
+//! per plane call. Accumulated nanoseconds are flushed into
+//! [`Obs`](super::Obs) by whoever owns the scratch (the native engine
+//! after each step, the bench lanes at the end of a run).
+
+use std::time::Instant;
+
+/// Number of instrumented kernel phases (fixed-slot accumulators — no
+/// lookup, no allocation).
+pub const PHASE_COUNT: usize = 5;
+
+/// One instrumented phase of a blocked attention plane call.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Phase {
+    /// Smooth-K + per-block INT8 quantization of Q/K (and V on the
+    /// int8-PV path). Paper §3.2 / §4.2.
+    Quant = 0,
+    /// One BLOCK_Q×BLOCK_KV `mma(s8.s8.s32)` score tile (§4.2–4.3).
+    QkTile = 1,
+    /// Per-row online-softmax max/exp/rescale bookkeeping.
+    Softmax = 2,
+    /// P̃·V accumulation (INT8 §4.3 / fused FP16-accumulator §4.4).
+    Pv = 3,
+    /// fp16 round-trip of V at plane entry (§4.4 operand precision).
+    F16Round = 4,
+}
+
+impl Phase {
+    /// All phases, in slot order.
+    pub const ALL: [Phase; PHASE_COUNT] =
+        [Phase::Quant, Phase::QkTile, Phase::Softmax, Phase::Pv, Phase::F16Round];
+
+    /// Stable export name (trace JSON / Prometheus label).
+    pub fn name(self) -> &'static str {
+        match self {
+            Phase::Quant => "quant",
+            Phase::QkTile => "qk_tile",
+            Phase::Softmax => "softmax",
+            Phase::Pv => "pv",
+            Phase::F16Round => "f16_round",
+        }
+    }
+}
+
+/// Sampled phase timer owned by a kernel [`Scratch`](crate::attn::Scratch).
+///
+/// `every == 0` means disabled: [`begin_plane`](PhaseTimer::begin_plane)
+/// is one branch, [`section`](PhaseTimer::section) returns `None`, and
+/// no clock is ever read. When enabled, every `every`-th plane call is
+/// *active*: its sections read `Instant::now()` around each phase and
+/// accumulate nanoseconds into fixed slots. Sampling is at plane-call
+/// granularity so an active plane is timed coherently (all its phases
+/// from the same call) and inactive planes pay only the `active` check.
+#[derive(Clone, Debug)]
+pub struct PhaseTimer {
+    every: u32,
+    calls: u32,
+    active: bool,
+    ns: [u64; PHASE_COUNT],
+    samples: u64,
+}
+
+impl Default for PhaseTimer {
+    fn default() -> Self {
+        PhaseTimer::disabled()
+    }
+}
+
+impl PhaseTimer {
+    /// A timer that never samples (the default in every `Scratch`).
+    pub const fn disabled() -> PhaseTimer {
+        PhaseTimer { every: 0, calls: 0, active: false, ns: [0; PHASE_COUNT], samples: 0 }
+    }
+
+    /// Time every `every`-th plane call (`every = 1` times all of them).
+    pub fn sampled(every: u32) -> PhaseTimer {
+        PhaseTimer { every: every.max(1), ..PhaseTimer::disabled() }
+    }
+
+    pub fn is_enabled(&self) -> bool {
+        self.every > 0
+    }
+
+    /// Mark the start of one plane call and decide whether it is
+    /// sampled. Disabled timers take the early return.
+    #[inline]
+    pub fn begin_plane(&mut self) {
+        if self.every == 0 {
+            return;
+        }
+        self.calls += 1;
+        if self.calls >= self.every {
+            self.calls = 0;
+            self.active = true;
+            self.samples += 1;
+        } else {
+            self.active = false;
+        }
+    }
+
+    /// Open a timed section: `Some(now)` on an active plane, `None`
+    /// otherwise. Pair with [`commit`](PhaseTimer::commit).
+    #[inline]
+    pub fn section(&self) -> Option<Instant> {
+        if self.active {
+            Some(Instant::now())
+        } else {
+            None
+        }
+    }
+
+    /// Close a section opened by [`section`](PhaseTimer::section),
+    /// crediting the elapsed time to `phase`. `None` (inactive plane)
+    /// is a no-op.
+    #[inline]
+    pub fn commit(&mut self, phase: Phase, t0: Option<Instant>) {
+        if let Some(t0) = t0 {
+            self.ns[phase as usize] += t0.elapsed().as_nanos() as u64;
+        }
+    }
+
+    /// Drain accumulated (per-phase nanoseconds, sampled plane calls),
+    /// resetting both. Sampling cadence is preserved.
+    pub fn take(&mut self) -> ([u64; PHASE_COUNT], u64) {
+        let out = (self.ns, self.samples);
+        self.ns = [0; PHASE_COUNT];
+        self.samples = 0;
+        out
+    }
+
+    /// Accumulated totals without draining.
+    pub fn totals(&self) -> (&[u64; PHASE_COUNT], u64) {
+        (&self.ns, self.samples)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_never_samples() {
+        let mut t = PhaseTimer::disabled();
+        for _ in 0..100 {
+            t.begin_plane();
+            assert!(t.section().is_none());
+        }
+        assert_eq!(t.take(), ([0; PHASE_COUNT], 0));
+    }
+
+    #[test]
+    fn sampling_cadence() {
+        let mut t = PhaseTimer::sampled(4);
+        let mut active = 0;
+        for _ in 0..16 {
+            t.begin_plane();
+            if t.section().is_some() {
+                active += 1;
+            }
+        }
+        assert_eq!(active, 4);
+        let (_, samples) = t.take();
+        assert_eq!(samples, 4);
+    }
+
+    #[test]
+    fn commit_accumulates_into_slot() {
+        let mut t = PhaseTimer::sampled(1);
+        t.begin_plane();
+        let s = t.section();
+        assert!(s.is_some());
+        t.commit(Phase::QkTile, s);
+        let (ns, samples) = t.take();
+        assert_eq!(samples, 1);
+        assert!(ns[Phase::QkTile as usize] > 0);
+        assert_eq!(ns[Phase::Quant as usize], 0);
+    }
+}

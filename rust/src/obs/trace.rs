@@ -1,0 +1,188 @@
+//! `obs::trace` — typed lifecycle events in a preallocated ring.
+//!
+//! Every layer of the serving stack emits the same small, `Copy`
+//! [`Event`] record: request lifecycle transitions from the fleet and
+//! scheduler (submit → dispatch/shed → admit → prefill chunk N → first
+//! token → preempt/degrade/failover → finish), and per-step engine spans
+//! (decode step, prefill chunk) from the native backend. Events carry a
+//! monotone sequence number, the virtual tick of the fleet driver, and
+//! wall nanoseconds since the recorder was created — the pair the
+//! Chrome-trace exporter needs to lay spans on a timeline and the
+//! determinism tests need to replay (ticks and sequence are seeded-
+//! deterministic under the virtual-time driver; nanos are masked).
+//!
+//! The ring is **preallocated**: recording an event never allocates.
+//! When the ring is full, *new* events are dropped (and counted) rather
+//! than overwriting old ones — dropping the oldest would silently
+//! orphan `Submit` spans and make every later well-formedness check
+//! lie. `sage trace --check` fails a trace with a nonzero drop count.
+
+/// Sentinel for events not tied to a request (engine-level spans).
+pub const NO_ID: u64 = u64::MAX;
+
+/// Sentinel for events not tied to a replica.
+pub const NO_REPLICA: u32 = u32::MAX;
+
+/// Default ring capacity (events); ~48 B each.
+pub const DEFAULT_EVENT_CAPACITY: usize = 1 << 16;
+
+/// What happened. Payloads are small and `Copy` — everything else
+/// (latency distributions, counters) belongs in [`super::metrics`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EventKind {
+    /// Request entered the system (fleet arrival or direct submit).
+    Submit { prompt_len: u32 },
+    /// Fleet handed the request to a replica's scheduler.
+    Dispatch,
+    /// Engine accepted the request into a decode slot (`resumed` when
+    /// this is a re-admission after preemption/degrade/failover).
+    Admit { resumed: bool },
+    /// Admission bounced (no slot / no KV) and the request requeued.
+    Requeue,
+    /// One chunked-prefill chunk executed (`rows` prompt rows).
+    PrefillChunk { rows: u32, dur_ns: u64 },
+    /// One unchunked prefill executed (whole prompt in one call).
+    Prefill { rows: u32, dur_ns: u64 },
+    /// First output token of the request left the engine.
+    FirstToken,
+    /// One engine decode step over `live` slots emitting `tokens`.
+    DecodeStep { live: u32, tokens: u32, dur_ns: u64 },
+    /// Preempted for KV blocks; will requeue and resume.
+    Preempt,
+    /// Evicted by the numeric guard; retries on the fp path.
+    Degrade,
+    /// Fleet retried the request after a transient replica error.
+    Retry { attempt: u32 },
+    /// Fleet rerouted the request off a crashed replica.
+    Failover { to: u32 },
+    /// Replica crashed (terminal backend failure).
+    Crash,
+    /// Circuit breaker opened on a replica.
+    BreakerOpen,
+    /// Terminal: shed by SLO admission control.
+    Shed,
+    /// Terminal: cancelled by deadline sweep.
+    DeadlineCancel,
+    /// Terminal: failed (retry budget exhausted / rejected).
+    Fail,
+    /// Terminal: served to completion with `tokens` output tokens.
+    Finish { tokens: u32 },
+}
+
+impl EventKind {
+    /// Stable export name (trace JSON `args.kind`).
+    pub fn name(self) -> &'static str {
+        match self {
+            EventKind::Submit { .. } => "submit",
+            EventKind::Dispatch => "dispatch",
+            EventKind::Admit { .. } => "admit",
+            EventKind::Requeue => "requeue",
+            EventKind::PrefillChunk { .. } => "prefill_chunk",
+            EventKind::Prefill { .. } => "prefill",
+            EventKind::FirstToken => "first_token",
+            EventKind::DecodeStep { .. } => "decode_step",
+            EventKind::Preempt => "preempt",
+            EventKind::Degrade => "degrade",
+            EventKind::Retry { .. } => "retry",
+            EventKind::Failover { .. } => "failover",
+            EventKind::Crash => "crash",
+            EventKind::BreakerOpen => "breaker_open",
+            EventKind::Shed => "shed",
+            EventKind::DeadlineCancel => "deadline_cancel",
+            EventKind::Fail => "fail",
+            EventKind::Finish { .. } => "finish",
+        }
+    }
+
+    /// Terminal lifecycle states — exactly one per request id in a
+    /// well-formed trace.
+    pub fn is_terminal(self) -> bool {
+        matches!(
+            self,
+            EventKind::Shed | EventKind::DeadlineCancel | EventKind::Fail | EventKind::Finish { .. }
+        )
+    }
+}
+
+/// One recorded event. `seq` is a global monotone counter (drain order
+/// == emission order under the single-threaded virtual-time driver);
+/// `tick` is the fleet's virtual clock (0 outside fleet runs); `nanos`
+/// is wall time since the recorder was created.
+#[derive(Clone, Copy, Debug)]
+pub struct Event {
+    pub seq: u64,
+    pub tick: u64,
+    pub nanos: u64,
+    pub replica: u32,
+    pub id: u64,
+    pub kind: EventKind,
+}
+
+/// Preallocated event buffer: push never allocates, overflow drops the
+/// *newest* event and counts it.
+#[derive(Debug)]
+pub(crate) struct Ring {
+    buf: Vec<Event>,
+    dropped: u64,
+    seq: u64,
+}
+
+impl Ring {
+    pub(crate) fn with_capacity(cap: usize) -> Ring {
+        Ring { buf: Vec::with_capacity(cap.max(1)), dropped: 0, seq: 0 }
+    }
+
+    pub(crate) fn push(&mut self, mut ev: Event) {
+        ev.seq = self.seq;
+        self.seq += 1;
+        if self.buf.len() < self.buf.capacity() {
+            self.buf.push(ev);
+        } else {
+            self.dropped += 1;
+        }
+    }
+
+    pub(crate) fn events(&self) -> &[Event] {
+        &self.buf
+    }
+
+    pub(crate) fn recorded(&self) -> u64 {
+        self.buf.len() as u64
+    }
+
+    pub(crate) fn dropped(&self) -> u64 {
+        self.dropped
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev() -> Event {
+        Event { seq: 0, tick: 0, nanos: 0, replica: NO_REPLICA, id: NO_ID, kind: EventKind::Shed }
+    }
+
+    #[test]
+    fn ring_assigns_monotone_seq() {
+        let mut r = Ring::with_capacity(8);
+        for _ in 0..3 {
+            r.push(ev());
+        }
+        let seqs: Vec<u64> = r.events().iter().map(|e| e.seq).collect();
+        assert_eq!(seqs, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn ring_drops_newest_on_overflow() {
+        let mut r = Ring::with_capacity(2);
+        for _ in 0..5 {
+            r.push(ev());
+        }
+        assert_eq!(r.recorded(), 2);
+        assert_eq!(r.dropped(), 3);
+        // the survivors are the oldest two
+        assert_eq!(r.events()[0].seq, 0);
+        assert_eq!(r.events()[1].seq, 1);
+    }
+}
